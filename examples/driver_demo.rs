@@ -1,0 +1,80 @@
+//! Linux dmaengine driver walkthrough (paper §II-E), narrated.
+//!
+//! ```bash
+//! cargo run --release --example driver_demo
+//! ```
+//!
+//! Demonstrates the four driver steps against the simulated SoC:
+//! prepare (descriptor allocation + population), commit (FIFO
+//! chaining), submit (CSR write or deferral past `max_chains`), and
+//! the interrupt handler (completion callbacks + stored-chain
+//! scheduling) — including the deferred-chain path.
+
+use idmac::dmac::{Dmac, DmacConfig};
+use idmac::driver::DmaDriver;
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::soc::Soc;
+use idmac::workload::map;
+
+fn main() -> idmac::Result<()> {
+    let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+    // max_chains = 1 to exercise the stored-chain path.
+    let mut drv = DmaDriver::new(map::DESC_BASE, map::DESC_SIZE, 1);
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 32 << 10, 0xD12);
+
+    println!("step 1 — prepare: allocate + populate chained descriptors");
+    let mut cookies = Vec::new();
+    let mut txs = Vec::new();
+    for i in 0..3u64 {
+        let tx = drv.prep_memcpy(map::DST_BASE + i * (8 << 10), map::SRC_BASE + i * (8 << 10), 8 << 10)?;
+        println!("  tx {} -> {} descriptor(s) at {:#x}", tx.cookie, tx.descs.len(), tx.descs[0].0);
+        txs.push(tx);
+    }
+
+    println!("step 2 — commit: chain transactions FIFO");
+    for tx in txs {
+        cookies.push(drv.tx_submit(tx));
+    }
+
+    println!("step 3 — submit: issue_pending() writes the CSR (or stores the chain)");
+    let now = soc.now();
+    drv.issue_pending(&mut soc.sys, now);
+    println!(
+        "  active chains: {}, stored chains: {} (max_chains = {})",
+        drv.active_chains(),
+        drv.stored_chains(),
+        drv.max_chains
+    );
+    // A second batch while the first is still running -> stored.
+    let tx = drv.prep_memcpy(map::DST_BASE + (24 << 10), map::SRC_BASE, 4 << 10)?;
+    cookies.push(drv.tx_submit(tx));
+    let now = soc.now();
+    drv.issue_pending(&mut soc.sys, now);
+    println!(
+        "  after second issue_pending: active {}, stored {}",
+        drv.active_chains(),
+        drv.stored_chains()
+    );
+    assert_eq!(drv.stored_chains(), 1, "second chain must be deferred");
+
+    println!("step 4 — interrupt handler: callbacks + stored-chain scheduling");
+    let stats = soc.run(|sys, _cpu, now| drv.irq_handler(sys, now))?;
+    for c in &cookies {
+        assert!(drv.is_complete(*c), "cookie {c}");
+    }
+    let fired = drv.take_completed();
+    println!(
+        "  {} IRQs handled, {} cookies completed {:?}",
+        drv.irqs_handled,
+        fired.len(),
+        fired
+    );
+    println!(
+        "\ndriver_demo OK: {} transfers in {} cycles, {} PLIC claims",
+        stats.completions.len(),
+        stats.end_cycle,
+        soc.cpu.claims
+    );
+    Ok(())
+}

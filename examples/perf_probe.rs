@@ -1,0 +1,36 @@
+//! §Perf probe: long single-system runs isolate the per-cycle cost of
+//! the simulation loop from process startup and memory allocation.
+use idmac::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig};
+use idmac::mem::LatencyProfile;
+use idmac::tb::System;
+use idmac::workload::map;
+use std::time::Instant;
+
+fn long_chain(n: usize, size: u32) -> ChainBuilder {
+    // Round-robin over a small payload window so memory stays compact.
+    let mut cb = ChainBuilder::new();
+    for i in 0..n as u64 {
+        let s = map::SRC_BASE + (i % 64) * 4096;
+        let d = map::DST_BASE + (i % 64) * 4096;
+        cb.push_at(map::DESC_BASE + (i % 65536) * 32, Descriptor::new(s, d, size));
+    }
+    cb
+}
+
+fn main() {
+    for (name, cfg, profile, size, n) in [
+        ("spec/ddr3/64B", DmacConfig::speculation(), LatencyProfile::Ddr3, 64u32, 50_000usize),
+        ("base/ideal/64B", DmacConfig::base(), LatencyProfile::Ideal, 64, 50_000),
+        ("scaled/deep/64B", DmacConfig::scaled(), LatencyProfile::UltraDeep, 64, 50_000),
+        ("spec/ddr3/4KiB", DmacConfig::speculation(), LatencyProfile::Ddr3, 4096, 10_000),
+    ] {
+        let mut sys = System::new(profile, Dmac::new(cfg));
+        let cb = long_chain(n, size);
+        sys.load_and_launch(0, &cb);
+        let t0 = Instant::now();
+        let stats = sys.run_until_idle().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{name:<16} {} cycles in {:.3}s = {:.1} Mcycles/s ({:.0} ns/cycle)",
+            stats.end_cycle, dt, stats.end_cycle as f64/dt/1e6, dt*1e9/stats.end_cycle as f64);
+    }
+}

@@ -1,0 +1,62 @@
+//! Quickstart: launch one descriptor chain on the DMAC and watch it
+//! move bytes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the paper's Fig. 3 testbench (latency-configurable memory +
+//! fair RR arbiter + our DMAC in the `speculation` configuration),
+//! writes a 4-descriptor chain into simulated DRAM through the
+//! backdoor, launches it with a single CSR write, and verifies the
+//! payload plus the in-memory completion stamps.
+
+use idmac::dmac::{descriptor, ChainBuilder, Descriptor, Dmac, DmacConfig};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::tb::System;
+
+fn main() -> idmac::Result<()> {
+    // 1. A DDR3-latency memory system with our DMAC attached.
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+
+    // 2. Source payload: 4 KiB of patterned bytes.
+    fill_pattern(&mut sys.mem, 0x0040_0000, 4096, 42);
+
+    // 3. A chain of four 1-KiB transfers; the last one raises an IRQ.
+    let mut chain = ChainBuilder::new();
+    for i in 0..4u64 {
+        let d = Descriptor::new(0x0040_0000 + i * 1024, 0x0090_0000 + i * 1024, 1024);
+        let d = if i == 3 { d.with_irq() } else { d };
+        chain.push_at(0x0010_0000 + i * 32, d);
+    }
+
+    // 4. Backdoor-load the chain, write its head address to the CSR.
+    sys.load_and_launch(0, &chain);
+
+    // 5. Run to completion.
+    let stats = sys.run_until_idle()?;
+
+    // 6. Verify: payload moved, descriptors stamped, IRQ raised.
+    assert_eq!(
+        sys.mem.backdoor_read(0x0040_0000, 4096).to_vec(),
+        sys.mem.backdoor_read(0x0090_0000, 4096).to_vec(),
+    );
+    for i in 0..4u64 {
+        assert!(descriptor::is_completed(&sys.mem, 0x0010_0000 + i * 32));
+    }
+    println!(
+        "quickstart OK: {} transfers ({} bytes) in {} cycles, {} IRQ(s), \
+         steady-state utilization {:.3}",
+        stats.completions.len(),
+        stats.completions.iter().map(|c| c.bytes).sum::<u64>(),
+        stats.end_cycle,
+        stats.irqs,
+        stats.steady_utilization(),
+    );
+    println!(
+        "speculation: {} hits, {} misses ({} wasted descriptor beats)",
+        stats.spec_hits, stats.spec_misses, stats.wasted_desc_beats
+    );
+    Ok(())
+}

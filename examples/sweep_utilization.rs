@@ -1,0 +1,45 @@
+//! Regenerate the full Fig. 4 + Fig. 5 sweep set from the public API —
+//! the figure-producing driver a downstream user would adapt.
+//!
+//! ```bash
+//! cargo run --release --example sweep_utilization [-- --csv]
+//! ```
+//!
+//! With `--csv`, emits machine-readable rows (size, series, value) for
+//! external plotting instead of the aligned tables.
+
+use idmac::mem::LatencyProfile;
+use idmac::report::experiments as exp;
+
+fn main() -> idmac::Result<()> {
+    let csv = std::env::args().any(|a| a == "--csv");
+    let figures = [
+        ("fig4a", LatencyProfile::Ideal),
+        ("fig4b", LatencyProfile::Ddr3),
+        ("fig4c", LatencyProfile::UltraDeep),
+    ];
+    for (name, profile) in figures {
+        let series = exp::fig4(profile);
+        if csv {
+            for (col, ys) in &series.columns {
+                for (x, y) in series.x.iter().zip(ys) {
+                    println!("{name},{col},{x},{y:.6}");
+                }
+            }
+        } else {
+            series.print();
+            println!();
+        }
+    }
+    let series = exp::fig5();
+    if csv {
+        for (col, ys) in &series.columns {
+            for (x, y) in series.x.iter().zip(ys) {
+                println!("fig5,{col},{x},{y:.6}");
+            }
+        }
+    } else {
+        series.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: irregular row gather.
+
+The paper motivates the DMAC with sparse/irregular ML transfers (Kumar et
+al., scatter-gather for graph analytics; embedding lookups).  This kernel
+is that payload: gather ``len(idx)`` rows of an embedding table into a
+dense output.  One grid step per gathered row — the same one-descriptor-
+per-step structure as the DMAC's chain walk, and the BlockSpec-free
+whole-array refs model the HBM-resident table with a VMEM-sized row move
+per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(idx_ref, table_ref, o_ref):
+    i = pl.program_id(0)
+    r = idx_ref[i]
+    row = pl.load(table_ref, (pl.dslice(r, 1), slice(None)))
+    pl.store(o_ref, (pl.dslice(i, 1), slice(None)), row)
+
+
+def gather_rows(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather rows ``table[idx]`` with one grid step per row.
+
+    Args:
+      table: ``(rows, cols)`` embedding table.
+      idx: ``(n,)`` int32 row indices (must be in-range; not clamped).
+
+    Returns:
+      ``(n, cols)`` gathered rows.
+    """
+    if table.ndim != 2:
+        raise ValueError(f"table must be 2-D, got {table.shape}")
+    if idx.ndim != 1:
+        raise ValueError(f"idx must be 1-D, got {idx.shape}")
+    (n,) = idx.shape
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(n,),
+        out_shape=jax.ShapeDtypeStruct((n, table.shape[1]), table.dtype),
+        interpret=True,
+    )(idx, table)

@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernels (and, transitively, the Rust
+cycle simulator's payload path) are validated against.  ``copy_engine_ref``
+uses a sequential ``lax.scan`` so that chained descriptors observe
+earlier writes — the same in-order semantics as the DMAC.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def copy_engine_ref(mem: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Sequentially apply line copies ``mem[dst[i]] = mem[src[i]]``."""
+
+    def step(carry, sd):
+        s, d = sd
+        line = lax.dynamic_slice(carry, (s, 0), (1, carry.shape[1]))
+        carry = lax.dynamic_update_slice(carry, line, (d, 0))
+        return carry, ()
+
+    out, _ = lax.scan(step, mem, (src, dst))
+    return out
+
+
+def gather_rows_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Vectorized gather ``table[idx]``."""
+    return jnp.take(table, idx, axis=0)

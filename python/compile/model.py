@@ -1,0 +1,116 @@
+"""L2 JAX compute graph for the iDMA DMAC reproduction.
+
+Three entry points, each AOT-lowered once by ``aot.py`` and loaded from
+Rust via PJRT (Python is never on the simulation path):
+
+* ``exec_chain``     — execute a descriptor chain over a memory image
+                       (calls the L1 Pallas ``copy_engine`` kernel).
+                       This is the *payload oracle*: the Rust cycle
+                       simulator's final memory image must match it.
+* ``gather_payload`` — the sparse ML gather payload the paper motivates
+                       irregular transfers with (L1 ``gather`` kernel).
+* ``utilization``    — the closed-form steady-state bus-utilization
+                       model (Eq. 1 ideal curve + our DMAC + the
+                       LogiCORE baseline), the analytic cross-check
+                       series plotted next to the cycle-simulated
+                       curves in the Fig. 4/5 benches.
+
+The analytic model mirrors ``rust/src/model/utilization.rs`` — the two
+implementations are cross-checked in ``rust/tests/runtime_oracle.rs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.copy_engine import copy_engine
+from compile.kernels.gather import gather_rows
+
+# Bus geometry: 64-bit data bus => 8-byte beats; our descriptor is 256
+# bits (4 beats), the LogiCORE descriptor is 13x32-bit words fetched over
+# a 32-bit port (13 bus slots).  See DESIGN.md §6 for the calibration.
+BYTES_PER_BEAT = 8.0
+DESC_BEATS_OURS = 4.0
+DESC_BEATS_LOGICORE = 13.0
+FRONTEND_OVERHEAD_OURS = 2.0  # parse + backend-enqueue stages
+FRONTEND_OVERHEAD_LOGICORE = 7.0  # 32-bit port packing + engine start
+LOGICORE_PROC = 8.0  # serialized per-descriptor processing
+LOGICORE_ENGINE_OVERHEAD = 4.0  # per-transfer engine overhead (beats)
+
+
+def exec_chain(mem: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Run a (fixed-length, identity-padded) descriptor chain over ``mem``."""
+    return copy_engine(mem, src, dst)
+
+
+def gather_payload(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather embedding rows — the paper's irregular ML payload."""
+    return gather_rows(table, idx)
+
+
+def _beats(n):
+    return jnp.ceil(n / BYTES_PER_BEAT)
+
+
+def ideal_utilization(sizes):
+    """Eq. 1: the descriptor-fetch-limited ideal, u = n / (n + 32)."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    return sizes / (sizes + 32.0)
+
+
+def rf_rb_ours(latency):
+    """Our frontend's read-request -> backend-handoff latency (cycles)."""
+    return 2.0 * latency + DESC_BEATS_OURS + FRONTEND_OVERHEAD_OURS
+
+
+def rf_rb_logicore(latency):
+    """LogiCORE descriptor read round-trip (cycles)."""
+    return 2.0 * latency + DESC_BEATS_LOGICORE + FRONTEND_OVERHEAD_LOGICORE
+
+
+def chase_ours(latency):
+    """Chase interval of our frontend: the ``next`` field arrives in the
+    second descriptor beat (``2L + 1`` after the AR) and the next fetch
+    is issued the same cycle (paper §II-C)."""
+    return 2.0 * latency + 1.0
+
+
+def utilization_ours(sizes, latency, in_flight, prefetch, hit_rate):
+    """Steady-state utilization of our DMAC.
+
+    ``prefetch == 0`` models the ``base`` configuration (strictly
+    serialized pointer chase); ``prefetch > 0`` pipelines up to
+    ``min(prefetch, in_flight)`` descriptor fetches, paying a full
+    round-trip drain plus the flushed fetch beats on a misprediction
+    (probability ``1 - hit_rate``).
+    """
+    sizes = jnp.asarray(sizes, jnp.float32)
+    payload = _beats(sizes)
+    work = DESC_BEATS_OURS + payload
+    serial = chase_ours(latency)
+    depth = jnp.maximum(jnp.minimum(prefetch, in_flight), 1.0)
+    pipelined = serial / depth + (1.0 - hit_rate) * serial
+    issue = jnp.where(prefetch > 0.0, pipelined, serial)
+    waste = jnp.where(prefetch > 0.0, (1.0 - hit_rate) * depth * DESC_BEATS_OURS, 0.0)
+    period = jnp.maximum(work + waste, issue)
+    return payload / period
+
+
+def utilization_logicore(sizes, latency):
+    """Steady-state utilization of the LogiCORE IP DMA baseline."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    payload = _beats(sizes)
+    work = DESC_BEATS_LOGICORE + payload + LOGICORE_ENGINE_OVERHEAD
+    serial = rf_rb_logicore(latency) + LOGICORE_PROC
+    period = jnp.maximum(work, serial)
+    return payload / period
+
+
+def utilization(sizes, latency, in_flight, prefetch, hit_rate):
+    """(ideal, ours, logicore) utilization series — the AOT entry point."""
+    return (
+        ideal_utilization(sizes),
+        utilization_ours(sizes, latency, in_flight, prefetch, hit_rate),
+        utilization_logicore(sizes, latency),
+    )

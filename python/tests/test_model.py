@@ -1,0 +1,118 @@
+"""L2 analytic utilization model: invariants + paper anchor points.
+
+These properties pin the *shape* of the curves the Fig. 4/5 benches
+regenerate: ideal is Eq. 1, utilization never exceeds ideal, prefetching
+helps monotonically in hit rate, and the paper's headline ratios at 64 B
+come out in the right band.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+SIZES = jnp.asarray([8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096], jnp.float32)
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def test_ideal_matches_eq1():
+    got = np.asarray(model.ideal_utilization(SIZES))
+    want = np.asarray(SIZES) / (np.asarray(SIZES) + 32.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    latency=st.floats(1, 128),
+    in_flight=st.integers(1, 32),
+    prefetch=st.integers(0, 32),
+    hit=st.floats(0, 1),
+)
+def test_ours_never_exceeds_ideal(latency, in_flight, prefetch, hit):
+    u = np.asarray(
+        model.utilization_ours(SIZES, latency, float(in_flight), float(prefetch), hit)
+    )
+    ideal = np.asarray(model.ideal_utilization(SIZES))
+    assert (u <= ideal + 1e-6).all()
+    assert (u > 0).all()
+
+
+@settings(**SETTINGS)
+@given(latency=st.floats(1, 128))
+def test_logicore_never_exceeds_ideal(latency):
+    u = np.asarray(model.utilization_logicore(SIZES, latency))
+    ideal = np.asarray(model.ideal_utilization(SIZES))
+    assert (u <= ideal + 1e-6).all()
+    assert (u > 0).all()
+
+
+@settings(**SETTINGS)
+@given(latency=st.floats(1, 128), in_flight=st.integers(1, 32), prefetch=st.integers(1, 32))
+def test_hit_rate_monotone(latency, in_flight, prefetch):
+    lo = np.asarray(model.utilization_ours(SIZES, latency, float(in_flight), float(prefetch), 0.0))
+    hi = np.asarray(model.utilization_ours(SIZES, latency, float(in_flight), float(prefetch), 1.0))
+    assert (hi >= lo - 1e-6).all()
+
+
+@settings(**SETTINGS)
+@given(latency=st.floats(1, 128), in_flight=st.integers(1, 32))
+def test_prefetch_beats_base_at_full_hit_rate(latency, in_flight):
+    base = np.asarray(model.utilization_ours(SIZES, latency, float(in_flight), 0.0, 1.0))
+    spec = np.asarray(model.utilization_ours(SIZES, latency, float(in_flight), float(in_flight), 1.0))
+    assert (spec >= base - 1e-6).all()
+
+
+@settings(**SETTINGS)
+@given(latency=st.floats(1, 128))
+def test_ours_base_beats_logicore(latency):
+    ours = np.asarray(model.utilization_ours(SIZES, latency, 4.0, 0.0, 1.0))
+    lc = np.asarray(model.utilization_logicore(SIZES, latency))
+    assert (ours >= lc - 1e-6).all()
+
+
+def _at64(u):
+    return float(np.asarray(u)[np.asarray(SIZES) == 64.0][0])
+
+
+def test_paper_anchor_ideal_memory_64B():
+    """Fig. 4a: base hits ideal in ideal memory; ~2.5x over LogiCORE @64 B."""
+    base = _at64(model.utilization_ours(SIZES, 1.0, 4.0, 0.0, 1.0))
+    ideal = _at64(model.ideal_utilization(SIZES))
+    lc = _at64(model.utilization_logicore(SIZES, 1.0))
+    assert abs(base - ideal) < 1e-6
+    assert 2.0 < base / lc < 3.0  # paper: 2.5x
+
+
+def test_paper_anchor_ddr3_crossovers():
+    """Fig. 4b: ideal from 256 B without and 64 B with prefetching."""
+    sizes = np.asarray(SIZES)
+    ideal = np.asarray(model.ideal_utilization(SIZES))
+    base = np.asarray(model.utilization_ours(SIZES, 13.0, 4.0, 0.0, 1.0))
+    spec = np.asarray(model.utilization_ours(SIZES, 13.0, 4.0, 4.0, 1.0))
+    base_cross = sizes[np.isclose(base, ideal, rtol=1e-5)].min()
+    spec_cross = sizes[np.isclose(spec, ideal, rtol=1e-5)].min()
+    assert base_cross == 256.0
+    assert spec_cross <= 64.0
+
+
+def test_paper_anchor_ddr3_64B_ratios():
+    """Fig. 4b @64 B: paper reports 1.7x (base) and 3.9x (speculation)."""
+    lc = _at64(model.utilization_logicore(SIZES, 13.0))
+    base = _at64(model.utilization_ours(SIZES, 13.0, 4.0, 0.0, 1.0))
+    spec = _at64(model.utilization_ours(SIZES, 13.0, 4.0, 4.0, 1.0))
+    assert 1.4 < base / lc < 2.1  # paper: 1.7x
+    assert 3.0 < spec / lc < 5.0  # paper: 3.9x (model lands ~4.5x)
+
+
+def test_paper_anchor_table4_rf_rb():
+    """Table IV rf-rb: ours 8/32/206; LogiCORE 22/48/222 (±2 cycles)."""
+    for lat, want in [(1.0, 8.0), (13.0, 32.0), (100.0, 206.0)]:
+        assert float(model.rf_rb_ours(lat)) == want
+    for lat, want in [(1.0, 22.0), (13.0, 48.0), (100.0, 222.0)]:
+        assert abs(float(model.rf_rb_logicore(lat)) - want) <= 2.0
+
+
+def test_utilization_tuple_entry_point():
+    ideal, ours, lc = model.utilization(SIZES, 13.0, 4.0, 4.0, 1.0)
+    assert ideal.shape == ours.shape == lc.shape == SIZES.shape

@@ -1,0 +1,38 @@
+//! Shared bench harness (criterion is not vendored offline; each bench
+//! is a `harness = false` binary that prints the regenerated table or
+//! figure, the paper-vs-measured comparison, and wall-clock timing).
+
+use std::time::Instant;
+
+pub struct BenchTimer {
+    name: &'static str,
+    start: Instant,
+}
+
+impl BenchTimer {
+    pub fn start(name: &'static str) -> Self {
+        println!("=== bench: {name} ===");
+        Self { name, start: Instant::now() }
+    }
+
+    pub fn finish(self, simulated_cycles: u64) {
+        let dt = self.start.elapsed().as_secs_f64();
+        if simulated_cycles > 0 {
+            println!(
+                "[{}] wall {:.2}s, {} simulated cycles, {:.1} Mcycles/s",
+                self.name,
+                dt,
+                simulated_cycles,
+                simulated_cycles as f64 / dt / 1e6
+            );
+        } else {
+            println!("[{}] wall {:.2}s", self.name, dt);
+        }
+    }
+}
+
+/// Print a paper-vs-measured ratio line with a band verdict.
+pub fn check_ratio(label: &str, measured: f64, paper: f64, lo: f64, hi: f64) {
+    let verdict = if measured >= lo && measured <= hi { "OK (shape holds)" } else { "DEVIATION (see EXPERIMENTS.md)" };
+    println!("{label}: measured {measured:.2}x vs paper {paper:.2}x — {verdict}");
+}

@@ -1,0 +1,38 @@
+//! Regenerates paper Fig. 4a: steady-state bus utilization vs transfer
+//! size in an **ideal (1-cycle) memory system**.
+//!
+//! Paper claims reproduced here: the `base` configuration achieves the
+//! ideal steady-state utilization ū = n/(n+32) for any bus-aligned
+//! transfer size, and improves on the LogiCORE IP DMA by ~2.5x at 64 B.
+
+mod common;
+
+use common::{check_ratio, BenchTimer};
+use idmac::mem::LatencyProfile;
+use idmac::model::ideal_utilization;
+use idmac::report::experiments::{self as exp, paper};
+
+fn main() {
+    let t = BenchTimer::start("fig4a_ideal_memory");
+    exp::table1().print();
+    let series = exp::fig4(LatencyProfile::Ideal);
+    series.print();
+
+    let base64 = series.at("base", 64.0).unwrap();
+    let lc64 = series.at("LogiCORE", 64.0).unwrap();
+    check_ratio(
+        "base/LogiCORE @64B (ideal memory)",
+        base64 / lc64,
+        paper::FIG4A_64B_RATIO,
+        1.8,
+        3.2,
+    );
+    // Base tracks the Eq. 1 ideal for every bus-aligned size.
+    let mut max_gap: f64 = 0.0;
+    for &n in exp::FIG_SIZES.iter() {
+        let u = series.at("base", n as f64).unwrap();
+        max_gap = max_gap.max((ideal_utilization(n as f64) - u).abs());
+    }
+    println!("max |base - ideal| over sweep: {max_gap:.4} (paper: base == ideal)");
+    t.finish(0);
+}

@@ -1,0 +1,47 @@
+//! Regenerates paper Fig. 4b: utilization vs transfer size with the
+//! **Genesys-2 DDR3 latency (13 cycles)**.
+//!
+//! Paper claims reproduced here: ideal steady-state utilization from
+//! 256 B without and from 64 B with prefetching; up to 1.7x (base) and
+//! 3.9x (speculation) over the LogiCORE at 64 B.
+
+mod common;
+
+use common::{check_ratio, BenchTimer};
+use idmac::mem::LatencyProfile;
+use idmac::model::ideal_utilization;
+use idmac::report::experiments::{self as exp, paper};
+
+fn main() {
+    let t = BenchTimer::start("fig4b_ddr3_memory");
+    exp::table1().print();
+    let series = exp::fig4(LatencyProfile::Ddr3);
+    series.print();
+
+    let lc64 = series.at("LogiCORE", 64.0).unwrap();
+    check_ratio(
+        "base/LogiCORE @64B (DDR3)",
+        series.at("base", 64.0).unwrap() / lc64,
+        paper::FIG4B_64B_RATIO_BASE,
+        1.4,
+        2.4,
+    );
+    check_ratio(
+        "speculation/LogiCORE @64B (DDR3)",
+        series.at("speculation", 64.0).unwrap() / lc64,
+        paper::FIG4B_64B_RATIO_SPEC,
+        3.0,
+        5.2,
+    );
+    // Crossover sizes: where each config first reaches ideal.
+    for name in ["base", "speculation"] {
+        let cross = exp::FIG_SIZES
+            .iter()
+            .find(|&&n| {
+                (series.at(name, n as f64).unwrap() - ideal_utilization(n as f64)).abs() < 0.01
+            })
+            .copied();
+        println!("{name}: ideal from {cross:?} B (paper: base 256 B, speculation 64 B)");
+    }
+    t.finish(0);
+}

@@ -1,0 +1,60 @@
+//! Regenerates paper Fig. 4c: utilization vs transfer size in an
+//! **ultra-deep memory system (100 cycles)**.
+//!
+//! Paper claims reproduced here: the `scaled` configuration (24
+//! descriptors in flight, 24 speculation slots) achieves near-ideal
+//! steady-state utilization even at 100-cycle latency (paper: ideal
+//! from 128 B; our simulator reaches it from 64 B), extending the lead
+//! over the LogiCORE at 64 B transfers.
+//!
+//! Known divergence (EXPERIMENTS.md §Fig.4c): the paper reports 3.6x
+//! at 64 B; our strictly-serialized LogiCORE model collapses harder at
+//! L = 100 than the real IP, so the measured ratio is far larger.  The
+//! shape — who wins and where the crossover falls — holds.
+
+mod common;
+
+use common::{check_ratio, BenchTimer};
+use idmac::mem::LatencyProfile;
+use idmac::model::ideal_utilization;
+use idmac::report::experiments::{self as exp, paper};
+
+fn main() {
+    let t = BenchTimer::start("fig4c_ultradeep_memory");
+    exp::table1().print();
+    let series = exp::fig4(LatencyProfile::UltraDeep);
+    series.print();
+
+    let lc64 = series.at("LogiCORE", 64.0).unwrap();
+    let scaled64 = series.at("scaled", 64.0).unwrap();
+    check_ratio(
+        "scaled/LogiCORE @64B (ultra-deep)",
+        scaled64 / lc64,
+        paper::FIG4C_64B_RATIO,
+        paper::FIG4C_64B_RATIO,
+        f64::INFINITY,
+    );
+    println!(
+        "note: ratio >> paper's 3.6x because the baseline model chases strictly \
+         serialized descriptors; see EXPERIMENTS.md §Fig.4c"
+    );
+    // Ablation: grant the baseline a contiguous-BD-ring fetch-ahead of
+    // its 4 in-flight descriptors (analytic model) — the ratio falls
+    // back into the paper's band, quantifying the divergence.
+    let m = idmac::model::UtilizationModel::new(100.0, 4, 0, 1.0);
+    let lc_ring = m.logicore_ring(64.0, 4.0);
+    println!(
+        "ablation: LogiCORE w/ ring fetch-ahead x4 (analytic) @64B: {:.3} -> ratio {:.1}x \
+         (paper: 3.6x)",
+        lc_ring,
+        scaled64 / lc_ring
+    );
+    let cross = exp::FIG_SIZES
+        .iter()
+        .find(|&&n| {
+            (series.at("scaled", n as f64).unwrap() - ideal_utilization(n as f64)).abs() < 0.01
+        })
+        .copied();
+    println!("scaled: ideal from {cross:?} B (paper: 128 B)");
+    t.finish(0);
+}

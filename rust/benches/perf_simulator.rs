@@ -1,0 +1,55 @@
+//! Simulator performance bench (§Perf in EXPERIMENTS.md): simulated
+//! Mcycles/s of the L3 hot loop across representative workloads.  This
+//! is the harness used for the optimization pass — not a paper figure.
+
+mod common;
+
+use common::BenchTimer;
+use idmac::dmac::DmacConfig;
+use idmac::mem::LatencyProfile;
+use idmac::report::experiments as exp;
+use idmac::workload::Sweep;
+use std::time::Instant;
+
+fn bench_case(name: &str, cfg: DmacConfig, profile: LatencyProfile, sweep: Sweep) -> (u64, f64) {
+    // Warm-up run, then 3 timed repetitions; report best.
+    let _ = exp::run_ours(cfg, profile, sweep);
+    let mut best = f64::INFINITY;
+    let mut cycles = 0;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let stats = exp::run_ours(cfg, profile, sweep);
+        let dt = t0.elapsed().as_secs_f64();
+        cycles = stats.end_cycle;
+        best = best.min(dt);
+    }
+    println!(
+        "{name:<40} {cycles:>9} cycles  {:>7.1} Mcycles/s  ({:.4}s)",
+        cycles as f64 / best / 1e6,
+        best
+    );
+    (cycles, best)
+}
+
+fn main() {
+    let t = BenchTimer::start("perf_simulator");
+    let mut total_cycles = 0u64;
+    let mut total_time = 0.0f64;
+    for (name, cfg, profile, sweep) in [
+        ("base/ideal/64B x1000", DmacConfig::base(), LatencyProfile::Ideal, Sweep::new(1000, 64)),
+        ("spec/ddr3/64B x1000", DmacConfig::speculation(), LatencyProfile::Ddr3, Sweep::new(1000, 64)),
+        ("scaled/deep/64B x1000", DmacConfig::scaled(), LatencyProfile::UltraDeep, Sweep::new(1000, 64)),
+        ("scaled/ddr3/4KiB x500", DmacConfig::scaled(), LatencyProfile::Ddr3, Sweep::new(500, 4096)),
+        ("base/ideal/8B x2000", DmacConfig::base(), LatencyProfile::Ideal, Sweep::new(2000, 8)),
+    ] {
+        let (c, s) = bench_case(name, cfg, profile, sweep);
+        total_cycles += c;
+        total_time += s;
+    }
+    println!(
+        "aggregate: {:.1} Mcycles/s over {} simulated cycles",
+        total_cycles as f64 / total_time / 1e6,
+        total_cycles
+    );
+    t.finish(total_cycles);
+}

@@ -1,0 +1,43 @@
+//! Regenerates paper Table II: ASIC area (kGE) and achievable clock
+//! frequency per configuration (GF12LP+ typical corner model), plus
+//! the paper's linear area fit A = 20.30 + 5.28d + 1.94s and the
+//! under-10%-of-CVA6 scalability check.
+
+mod common;
+
+use common::BenchTimer;
+use idmac::model::AreaModel;
+use idmac::report::experiments::{self as exp, paper};
+
+fn main() {
+    let t = BenchTimer::start("table2_area_timing");
+    exp::table2().print();
+
+    let mut max_area_err: f64 = 0.0;
+    let mut max_clk_err: f64 = 0.0;
+    for (cfg, (_, _, _, p_total, p_ghz)) in
+        idmac::dmac::DmacConfig::paper_configs().into_iter().zip(paper::TABLE2)
+    {
+        let r = AreaModel::report(cfg.in_flight, cfg.prefetch);
+        max_area_err = max_area_err.max((r.total_kge - p_total).abs() / p_total);
+        max_clk_err = max_clk_err.max((r.clock_ghz - p_ghz).abs() / p_ghz);
+    }
+    println!("max area error vs paper: {:.1}% (fit residual)", max_area_err * 100.0);
+    println!("max clock error vs paper: {:.1}%", max_clk_err * 100.0);
+    println!(
+        "speculation adds {:.1} kGE (paper: 8.3 kGE)",
+        AreaModel::total_kge(4, 4) - AreaModel::total_kge(4, 0)
+    );
+    println!(
+        "scaled config is {:.1}% of a CVA6 core (paper: <10%)",
+        AreaModel::fraction_of_cva6(24, 24) * 100.0
+    );
+    // Area linearity sweep — the "easily scaled" claim.
+    println!("\narea sweep A(d, s) [kGE]:");
+    for d in [4usize, 8, 16, 24, 32] {
+        let row: Vec<String> =
+            [0usize, 4, 8, 16, 24].iter().map(|&s| format!("{:>6.1}", AreaModel::total_kge(d, s))).collect();
+        println!("  d={d:>2}: {}", row.join(" "));
+    }
+    t.finish(0);
+}

@@ -1,0 +1,44 @@
+//! Regenerates paper Table III: FPGA resources (Kintex-7 @200 MHz
+//! model) for the three DMAC configurations and the LogiCORE IP DMA,
+//! plus the headline resource-reduction claims.
+
+mod common;
+
+use common::BenchTimer;
+use idmac::model::FpgaModel;
+use idmac::report::experiments::{self as exp};
+
+fn main() {
+    let t = BenchTimer::start("table3_fpga_resources");
+    exp::table3().print();
+
+    let spec = FpgaModel::ours(4, 4);
+    let base = FpgaModel::ours(4, 0);
+    let scaled = FpgaModel::ours(24, 24);
+    let (lut_red, ff_red) = FpgaModel::reduction_vs_logicore(spec);
+    println!(
+        "speculation vs LogiCORE: {:.1}% fewer LUTs, {:.1}% fewer FFs \
+         (paper headline: 11% / 23%)",
+        lut_red * 100.0,
+        ff_red * 100.0
+    );
+    let (lut_b, ff_b) = FpgaModel::reduction_vs_logicore(base);
+    println!(
+        "base vs LogiCORE: {:.2}% fewer LUTs, {:.1}% fewer FFs (paper: 6.25% / 39.8%)",
+        lut_b * 100.0,
+        ff_b * 100.0
+    );
+    let (socl, socf) = FpgaModel::soc_fraction(base);
+    println!(
+        "base as fraction of the CVA6 SoC: {:.1}% LUTs, {:.1}% FFs (paper: 3.3% / 5.3%)",
+        socl * 100.0,
+        socf * 100.0
+    );
+    println!(
+        "scaled vs base: {:.2}x LUTs, {:.2}x FFs (paper: 2.59x / 3.67x)",
+        scaled.luts as f64 / base.luts as f64,
+        scaled.ffs as f64 / base.ffs as f64
+    );
+    println!("block RAMs: ours = 0 in every configuration (paper headline)");
+    t.finish(0);
+}

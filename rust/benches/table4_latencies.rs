@@ -1,0 +1,55 @@
+//! Regenerates paper Table IV: in-system latencies between the CSR
+//! write, the frontend's descriptor read, the backend's payload read,
+//! and the read→write datapath, for the `scaled` configuration vs the
+//! LogiCORE at 1 / 13 / 100-cycle memory latency.
+//!
+//! Paper headline reproduced here: 3 vs 10 cycles `i-rf` (3.33x) and
+//! the 2.75x / 1.5x / 1.08x `rf-rb` improvements — overall the
+//! abstract's "1.66x less latency launching transfers".
+
+mod common;
+
+use common::BenchTimer;
+use idmac::dmac::DmacConfig;
+use idmac::mem::LatencyProfile;
+use idmac::report::experiments::{self as exp, paper};
+
+fn main() {
+    let t = BenchTimer::start("table4_latencies");
+    exp::table4().print();
+
+    let profiles = [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep];
+    let mut max_dev = 0u64;
+    for (i, p) in profiles.into_iter().enumerate() {
+        let ours = exp::probe_ours(DmacConfig::scaled(), p);
+        let lc = exp::probe_logicore(p);
+        max_dev = max_dev
+            .max(ours.rf_rb.abs_diff(paper::TABLE4_RF_RB_OURS[i]))
+            .max(lc.rf_rb.abs_diff(paper::TABLE4_RF_RB_LC[i]));
+        println!(
+            "rf-rb improvement @L={}: {:.2}x (paper: {:.2}x)",
+            p.cycles(),
+            lc.rf_rb as f64 / ours.rf_rb as f64,
+            paper::TABLE4_RF_RB_LC[i] as f64 / paper::TABLE4_RF_RB_OURS[i] as f64,
+        );
+    }
+    let ours = exp::probe_ours(DmacConfig::scaled(), LatencyProfile::Ideal);
+    let lc = exp::probe_logicore(LatencyProfile::Ideal);
+    println!(
+        "i-rf improvement: {:.2}x (paper: 3.33x); r-w: {} vs {} (paper: 1 vs 1)",
+        lc.i_rf as f64 / ours.i_rf as f64,
+        ours.r_w,
+        lc.r_w
+    );
+    // Abstract headline: launch latency = i-rf + rf-rb at DDR3.
+    let o = exp::probe_ours(DmacConfig::scaled(), LatencyProfile::Ddr3);
+    let l = exp::probe_logicore(LatencyProfile::Ddr3);
+    println!(
+        "launch latency (i-rf + rf-rb, DDR3): {} vs {} = {:.2}x less (paper: 1.66x)",
+        o.i_rf + o.rf_rb,
+        l.i_rf + l.rf_rb,
+        (l.i_rf + l.rf_rb) as f64 / (o.i_rf + o.rf_rb) as f64
+    );
+    println!("max |measured - paper| over Table IV: {max_dev} cycles (documented: ±2)");
+    t.finish(0);
+}

@@ -1,0 +1,7 @@
+//! Baseline comparator: a behavioural model of the Xilinx LogiCORE IP
+//! AXI DMA v7.1 [7], the off-the-shelf descriptor DMAC the paper
+//! compares against.
+
+pub mod logicore;
+
+pub use logicore::{LcChainBuilder, LcConfig, LogiCore, LC_DESC_BYTES, LC_DESC_WORDS};

@@ -1,0 +1,155 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline vendor
+//! set).  Flags are `--name value` or `--name=value`; the first
+//! non-flag token is the subcommand.
+
+use crate::dmac::DmacConfig;
+use crate::mem::LatencyProfile;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err(Error::Cli("bare `--` is not supported".into()));
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key} expects a number, got `{v}`"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// `--config base|speculation|scaled|dxs` (d,s as `8x4`).
+    pub fn dmac_config(&self) -> Result<DmacConfig> {
+        match self.get_or("config", "speculation").as_str() {
+            "base" => Ok(DmacConfig::base()),
+            "speculation" => Ok(DmacConfig::speculation()),
+            "scaled" => Ok(DmacConfig::scaled()),
+            other => {
+                if let Some((d, s)) = other.split_once('x') {
+                    let d = d.parse().map_err(|_| Error::Cli(format!("bad config `{other}`")))?;
+                    let s = s.parse().map_err(|_| Error::Cli(format!("bad config `{other}`")))?;
+                    Ok(DmacConfig::custom(d, s))
+                } else {
+                    Err(Error::Cli(format!(
+                        "unknown --config `{other}` (base|speculation|scaled|DxS)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// `--latency ideal|ddr3|ultradeep|<cycles>`.
+    pub fn latency(&self) -> Result<LatencyProfile> {
+        match self.get_or("latency", "ddr3").as_str() {
+            "ideal" => Ok(LatencyProfile::Ideal),
+            "ddr3" => Ok(LatencyProfile::Ddr3),
+            "ultradeep" | "deep" => Ok(LatencyProfile::UltraDeep),
+            other => other
+                .parse::<u32>()
+                .map(LatencyProfile::Custom)
+                .map_err(|_| Error::Cli(format!("unknown --latency `{other}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("fig4 --latency ddr3 --size=64 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig4"));
+        assert_eq!(a.get("latency"), Some("ddr3"));
+        assert_eq!(a.get("size"), Some("64"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 42 --rate 0.75");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 0.75);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --n abc").get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn config_presets_and_custom() {
+        assert_eq!(parse("x --config base").dmac_config().unwrap(), DmacConfig::base());
+        assert_eq!(parse("x").dmac_config().unwrap(), DmacConfig::speculation());
+        let c = parse("x --config 8x2").dmac_config().unwrap();
+        assert_eq!((c.in_flight, c.prefetch), (8, 2));
+        assert!(parse("x --config bogus").dmac_config().is_err());
+    }
+
+    #[test]
+    fn latency_profiles() {
+        assert_eq!(parse("x --latency ideal").latency().unwrap(), LatencyProfile::Ideal);
+        assert_eq!(parse("x --latency 37").latency().unwrap(), LatencyProfile::Custom(37));
+        assert!(parse("x --latency never").latency().is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run one two");
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Compile-time parameter sets of the DMAC (paper Table I).
+
+/// Parameters of the DMAC (the paper's compile-time configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DmacConfig {
+    /// Descriptors in flight: bounds outstanding descriptor fetches
+    /// plus transfers queued to the backend (Table I column 2).
+    pub in_flight: usize,
+    /// Speculative prefetch depth; 0 disables the prefetcher
+    /// (Table I column 3).
+    pub prefetch: usize,
+    /// CSR-write to first descriptor AR issue, in cycles (Table IV
+    /// `i-rf` = 3 for our DMAC).
+    pub launch_latency: u32,
+    /// Execute transfers strictly one at a time in the backend.  Not a
+    /// paper configuration — used by semantics tests whose chains have
+    /// inter-transfer data dependences (the paper's DMAC, like the
+    /// hardware, does not order payloads of distinct descriptors).
+    pub strict_order: bool,
+}
+
+impl DmacConfig {
+    /// Table I `base`: 4 descriptors in flight, prefetching disabled.
+    /// Closely matches the LogiCORE IP DMA default configuration.
+    pub fn base() -> Self {
+        Self { in_flight: 4, prefetch: 0, launch_latency: 3, strict_order: false }
+    }
+
+    /// Table I `speculation`: `base` + 4 speculation slots.
+    pub fn speculation() -> Self {
+        Self { prefetch: 4, ..Self::base() }
+    }
+
+    /// Table I `scaled`: 24 descriptors in flight, 24 slots.
+    pub fn scaled() -> Self {
+        Self { in_flight: 24, prefetch: 24, ..Self::base() }
+    }
+
+    /// Custom sweep point (area-model fits, ablations).
+    pub fn custom(in_flight: usize, prefetch: usize) -> Self {
+        Self { in_flight, prefetch, ..Self::base() }
+    }
+
+    pub fn with_strict_order(mut self) -> Self {
+        self.strict_order = true;
+        self
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.in_flight, self.prefetch) {
+            (4, 0) => "base",
+            (4, 4) => "speculation",
+            (24, 24) => "scaled",
+            _ => "custom",
+        }
+    }
+
+    /// All paper configurations, in Table I order.
+    pub fn paper_configs() -> [DmacConfig; 3] {
+        [Self::base(), Self::speculation(), Self::scaled()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let b = DmacConfig::base();
+        assert_eq!((b.in_flight, b.prefetch), (4, 0));
+        let s = DmacConfig::speculation();
+        assert_eq!((s.in_flight, s.prefetch), (4, 4));
+        let x = DmacConfig::scaled();
+        assert_eq!((x.in_flight, x.prefetch), (24, 24));
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(DmacConfig::base().name(), "base");
+        assert_eq!(DmacConfig::speculation().name(), "speculation");
+        assert_eq!(DmacConfig::scaled().name(), "scaled");
+        assert_eq!(DmacConfig::custom(8, 2).name(), "custom");
+    }
+
+    #[test]
+    fn launch_latency_matches_table4() {
+        assert_eq!(DmacConfig::scaled().launch_latency, 3);
+    }
+}

@@ -1,0 +1,58 @@
+//! The controller interface the testbench/SoC drives.
+//!
+//! Both our DMAC and the LogiCORE baseline implement this trait, so the
+//! OOC testbench (paper Fig. 3) and the SoC model are generic over the
+//! device under test.
+//!
+//! Per-cycle protocol (enforced by `tb::System::tick`):
+//!
+//! 1. `on_r_beat` / `on_b` — deliver memory responses for this cycle.
+//! 2. `step` — advance internal state machines; this is where the
+//!    frontend reacts to a received `next` field, so a misprediction
+//!    can enqueue the corrective fetch *in the same cycle* (paper
+//!    §II-C's no-added-latency property).
+//! 3. `wants_ar`/`pop_ar` and `wants_w`/`pop_w` — arbitration: the
+//!    testbench grants at most one AR and one W beat per cycle across
+//!    all ports (fair round-robin).
+
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::mem::latency::BResp;
+use crate::sim::{Cycle, RunStats};
+
+pub trait Controller {
+    /// Memory-mapped CSR write: launch the chain headed at `desc_addr`.
+    fn csr_write(&mut self, now: Cycle, desc_addr: u64);
+
+    /// Deliver a read-data beat returned by the memory system.
+    fn on_r_beat(&mut self, now: Cycle, beat: RBeat);
+
+    /// Deliver a write response.
+    fn on_b(&mut self, now: Cycle, b: BResp);
+
+    /// Advance one cycle of internal state.
+    fn step(&mut self, now: Cycle);
+
+    /// Does `port` want to issue a read request this cycle?
+    fn wants_ar(&self, port: Port) -> bool;
+
+    /// Pop the granted read request (called at most once per grant).
+    fn pop_ar(&mut self, now: Cycle, port: Port) -> Option<ReadReq>;
+
+    /// Does `port` want to issue a write beat this cycle?
+    fn wants_w(&self, port: Port) -> bool;
+
+    /// Pop the granted write beat.
+    fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat>;
+
+    /// Manager ports of this controller, in arbitration order.
+    fn ports(&self) -> &'static [Port];
+
+    /// All queues drained and no transfer in flight.
+    fn idle(&self) -> bool;
+
+    fn stats(&self) -> &RunStats;
+    fn take_stats(&mut self) -> RunStats;
+
+    /// Number of IRQ edges raised since the last call.
+    fn take_irq(&mut self) -> u64;
+}

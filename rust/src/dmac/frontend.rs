@@ -1,0 +1,614 @@
+//! The DMA frontend: CSR launch queue, descriptor request logic with
+//! speculative prefetching (paper §II-A, §II-C), and feedback logic.
+//!
+//! Speculation protocol (paper §II-C):
+//!
+//! * When a chain is launched at address `A`, the request logic fetches
+//!   `A` and speculatively requests up to `prefetch` descriptors at the
+//!   sequential addresses `A+32, A+64, …`.
+//! * The `next` field arrives in the *second* beat of a descriptor
+//!   (Listing 1 layout), so the chase/commit decision is taken as soon
+//!   as that beat lands — not after the full descriptor.
+//! * On a hit (`next` equals the oldest speculative address) the slot
+//!   is committed and one speculation slot frees up.
+//! * On a miss, all speculative slots are discarded — fetches that were
+//!   already granted keep streaming and their beats are dropped (and
+//!   accounted as wasted bus traffic); fetches still waiting for the
+//!   AR grant are cancelled for free — and the correct fetch is
+//!   enqueued *in the same cycle*, so a misprediction adds zero latency
+//!   over the prefetch-disabled configuration.
+
+use super::backend::Backend;
+use super::config::DmacConfig;
+use super::descriptor::{Descriptor, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN};
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::mem::latency::BResp;
+use crate::sim::{Cycle, RunStats};
+use std::collections::VecDeque;
+
+/// One outstanding (or grant-pending) descriptor fetch.
+#[derive(Debug, Clone)]
+struct FetchSlot {
+    addr: u64,
+    speculative: bool,
+    /// Misprediction flush: beats of this fetch are ignored on arrival.
+    discard: bool,
+    /// AR has been granted; beats will arrive for this slot in order.
+    granted: bool,
+    beats_seen: u32,
+    data: [u8; DESC_BYTES as usize],
+}
+
+/// A fully parsed transfer on its way to the backend.
+#[derive(Debug, Clone, Copy)]
+pub struct ParsedTransfer {
+    pub source: u64,
+    pub destination: u64,
+    pub length: u32,
+    pub irq: bool,
+    pub desc_addr: u64,
+}
+
+/// Completion write-back in flight (feedback logic).
+#[derive(Debug, Clone, Copy)]
+struct Writeback {
+    desc_addr: u64,
+    irq: bool,
+}
+
+#[derive(Debug)]
+pub struct Frontend {
+    cfg: DmacConfig,
+    /// CSR launch queue: (eligible_cycle, chain head address).
+    csr_queue: VecDeque<(Cycle, u64)>,
+    /// Outstanding fetches in AR-issue order (memory serves FIFO, so
+    /// beats arrive in this order as well).
+    fetches: VecDeque<FetchSlot>,
+    /// Parsed descriptors pipelining toward the backend: (ready_at, t).
+    handoff: VecDeque<(Cycle, ParsedTransfer)>,
+    /// A chain is being walked (its end-of-chain not yet seen).
+    chain_active: bool,
+    /// Chase target that could not be fetched because the in-flight
+    /// window was full; issued by `step` as soon as a slot frees.
+    pending_chase: Option<u64>,
+    /// Address of the last speculated (or chased) descriptor; the next
+    /// speculative fetch goes to `spec_tail + 32`.
+    spec_tail: u64,
+    /// Completion write-backs waiting for the W channel.
+    wb_queue: VecDeque<Writeback>,
+    /// Write-backs with their W beat issued, keyed by tag.
+    wb_outstanding: Vec<(u64, Writeback)>,
+    wb_next_tag: u64,
+    irq_edges: u64,
+    // §Perf: incremental occupancy counters — the request logic runs
+    // every cycle, and O(window) rescans of the fetch queue were the
+    // top profile entry (see EXPERIMENTS.md §Perf).
+    live_count: usize,
+    spec_count: usize,
+    /// Granted slots form a strict prefix of `fetches` (grants are
+    /// in-order, removals are pop_front of granted or mid-queue removal
+    /// of *ungranted* slots only), so this is the index of the first
+    /// ungranted slot.
+    granted_count: usize,
+}
+
+impl Frontend {
+    pub fn new(cfg: DmacConfig) -> Self {
+        Self {
+            cfg,
+            csr_queue: VecDeque::new(),
+            fetches: VecDeque::new(),
+            handoff: VecDeque::new(),
+            chain_active: false,
+            pending_chase: None,
+            spec_tail: END_OF_CHAIN,
+            wb_queue: VecDeque::new(),
+            wb_outstanding: Vec::new(),
+            wb_next_tag: 0,
+            irq_edges: 0,
+            live_count: 0,
+            spec_count: 0,
+            granted_count: 0,
+        }
+    }
+
+    pub fn config(&self) -> DmacConfig {
+        self.cfg
+    }
+
+    /// Memory-mapped CSR write (paper §II-A).  The address becomes
+    /// eligible for the request logic after the launch pipeline
+    /// (`launch_latency` covers Table IV's `i-rf`).
+    pub fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
+        self.csr_queue.push_back((now + self.cfg.launch_latency as Cycle, desc_addr));
+    }
+
+    fn spec_outstanding(&self) -> usize {
+        debug_assert_eq!(
+            self.spec_count,
+            self.fetches.iter().filter(|f| f.speculative && !f.discard).count()
+        );
+        self.spec_count
+    }
+
+    fn live_fetches(&self) -> usize {
+        debug_assert_eq!(
+            self.live_count,
+            self.fetches.iter().filter(|f| !f.discard).count()
+        );
+        self.live_count
+    }
+
+    /// Descriptors inside the in-flight window: being fetched or parsed
+    /// and waiting for backend handoff.  The Table I "descriptors
+    /// in-flight" parameter bounds this window — without the bound the
+    /// frontend would run arbitrarily far ahead of the engine.
+    fn fetch_window(&self) -> usize {
+        self.live_fetches() + self.handoff.len()
+    }
+
+    fn can_fetch(&self) -> bool {
+        self.fetch_window() < self.cfg.in_flight
+    }
+
+    fn enqueue_fetch(&mut self, addr: u64, speculative: bool) {
+        self.live_count += 1;
+        if speculative {
+            self.spec_count += 1;
+        }
+        self.fetches.push_back(FetchSlot {
+            addr,
+            speculative,
+            discard: false,
+            granted: false,
+            beats_seen: 0,
+            data: [0; DESC_BYTES as usize],
+        });
+    }
+
+    /// Issue speculative fetches up to the configured depth (§II-C).
+    fn top_up_speculation(&mut self) {
+        if self.cfg.prefetch == 0 || !self.chain_active || self.spec_tail == END_OF_CHAIN {
+            return;
+        }
+        while self.spec_outstanding() < self.cfg.prefetch && self.can_fetch() {
+            let addr = self.spec_tail.wrapping_add(DESC_BYTES);
+            self.enqueue_fetch(addr, true);
+            self.spec_tail = addr;
+        }
+    }
+
+    /// Flush every speculative slot (misprediction or end-of-chain).
+    /// Grant-pending slots are removed outright (their AR never went
+    /// out); granted slots keep streaming and their beats are dropped.
+    fn flush_speculation(&mut self) {
+        if self.spec_count == 0 {
+            return;
+        }
+        let mut live = self.live_count;
+        let mut spec = self.spec_count;
+        self.fetches.retain_mut(|f| {
+            if f.speculative && !f.discard {
+                live -= 1;
+                spec -= 1;
+                if f.granted {
+                    f.discard = true;
+                    true
+                } else {
+                    false
+                }
+            } else {
+                true
+            }
+        });
+        self.live_count = live;
+        self.spec_count = spec;
+    }
+
+    /// React to the `next` field of the descriptor at the head of the
+    /// chain walk (paper §II-C): commit / flush+chase / end chain.
+    fn on_next_field(&mut self, next: u64, stats: &mut RunStats) {
+        if next == END_OF_CHAIN {
+            // End-of-chain flushes like a miss but is not counted as a
+            // misprediction (Fig. 5 hit rates are a chain-layout
+            // property; the mandatory flush at the end is not).
+            if self.spec_outstanding() > 0 {
+                stats.eoc_flushes += 1;
+            }
+            self.flush_speculation();
+            self.chain_active = false;
+            self.spec_tail = END_OF_CHAIN;
+            return;
+        }
+        // The oldest live speculative slot is the prediction for this
+        // `next` (slots are committed strictly in chain order).
+        let oldest_spec = if self.spec_count == 0 {
+            None
+        } else {
+            self.fetches.iter().position(|f| f.speculative && !f.discard)
+        };
+        match oldest_spec {
+            Some(i) if self.fetches[i].addr == next => {
+                self.fetches[i].speculative = false;
+                self.spec_count -= 1;
+                stats.spec_hits += 1;
+            }
+            Some(_) => {
+                stats.spec_misses += 1;
+                self.flush_speculation();
+                // Same-cycle corrective fetch: enqueued now, granted by
+                // the AR arbiter later this same cycle.
+                self.chase(next);
+            }
+            None => {
+                // Prefetch disabled (or exhausted): serialized chase.
+                self.chase(next);
+            }
+        }
+        self.top_up_speculation();
+    }
+
+    /// Fetch the confirmed next descriptor, or park it if the
+    /// in-flight window is exhausted (issued again from `step`).
+    fn chase(&mut self, next: u64) {
+        debug_assert!(self.pending_chase.is_none());
+        if self.can_fetch() {
+            self.enqueue_fetch(next, false);
+            self.spec_tail = next;
+        } else {
+            self.pending_chase = Some(next);
+        }
+    }
+
+    /// Deliver one descriptor-fetch beat from the memory system.
+    pub fn on_desc_beat(&mut self, now: Cycle, beat: RBeat, stats: &mut RunStats) {
+        let slot = self
+            .fetches
+            .front_mut()
+            .expect("R beat with no outstanding descriptor fetch");
+        debug_assert!(slot.granted, "R beat for ungranted fetch");
+        debug_assert_eq!(slot.beats_seen, beat.beat, "descriptor beats out of order");
+        let off = beat.beat as usize * 8;
+        slot.data[off..off + 8].copy_from_slice(&beat.data);
+        slot.beats_seen += 1;
+        let discard = slot.discard;
+        let addr = slot.addr;
+        if discard {
+            stats.wasted_desc_beats += 1;
+        }
+        // Beat 1 carries the `next` field (Listing 1): chase decision
+        // happens the cycle this beat is received.
+        if !discard && beat.beat == 1 {
+            let next = u64::from_le_bytes(slot.data[8..16].try_into().unwrap());
+            self.on_next_field(next, stats);
+        }
+        if beat.last {
+            // Re-borrow: on_next_field may have mutated the queue, but
+            // the front slot is never removed by it.
+            let slot = self.fetches.pop_front().unwrap();
+            self.granted_count -= 1;
+            debug_assert_eq!(slot.addr, addr);
+            if !discard {
+                self.live_count -= 1;
+                let d = Descriptor::from_bytes(&slot.data);
+                // Parse register + handoff queue + backend issue stage:
+                // calibrates Table IV rf-rb to exactly 2L + 6.
+                self.handoff.push_back((
+                    now + 3,
+                    ParsedTransfer {
+                        source: d.source,
+                        destination: d.destination,
+                        length: d.length,
+                        irq: d.irq_enabled(),
+                        desc_addr: addr,
+                    },
+                ));
+            }
+        }
+    }
+
+    /// Feedback logic input: the backend finished the transfer whose
+    /// descriptor lives at `desc_addr` (paper §II-A, §II-D).
+    pub fn on_transfer_complete(&mut self, _now: Cycle, desc_addr: u64, irq: bool) {
+        self.wb_queue.push_back(Writeback { desc_addr, irq });
+    }
+
+    /// B response for a completion write-back: the descriptor stamp is
+    /// in memory; signal the IRQ if configured.
+    pub fn on_writeback_b(&mut self, _now: Cycle, b: BResp, _stats: &mut RunStats) {
+        let idx = self
+            .wb_outstanding
+            .iter()
+            .position(|(t, _)| *t == b.tag)
+            .expect("B for unknown write-back");
+        let (_, wb) = self.wb_outstanding.swap_remove(idx);
+        if wb.irq {
+            self.irq_edges += 1;
+        }
+    }
+
+    /// Advance one cycle: launch eligible chains and push parsed
+    /// descriptors into the backend queue.
+    pub fn step(&mut self, now: Cycle, backend: &mut Backend, stats: &mut RunStats) {
+        // Handoff pipeline into the backend queue (bounded in_flight);
+        // drained first so the freed window slots are usable below.
+        while let Some(&(ready, t)) = self.handoff.front() {
+            if ready > now || !backend.has_space() {
+                break;
+            }
+            self.handoff.pop_front();
+            backend.accept(now, t);
+            let _ = stats;
+        }
+        // Parked chase gets priority over fresh speculation.
+        if let Some(next) = self.pending_chase {
+            if self.can_fetch() {
+                self.pending_chase = None;
+                self.enqueue_fetch(next, false);
+                self.spec_tail = next;
+            }
+        }
+        // Chain launch: strictly one active chain walk at a time; the
+        // CSR queue allows software to enqueue further chains (§II-A).
+        if !self.chain_active && self.pending_chase.is_none() {
+            if let Some(&(eligible, addr)) = self.csr_queue.front() {
+                if eligible <= now && self.can_fetch() {
+                    self.csr_queue.pop_front();
+                    self.chain_active = true;
+                    self.spec_tail = addr;
+                    self.enqueue_fetch(addr, false);
+                }
+            }
+        }
+        if self.chain_active {
+            self.top_up_speculation();
+        }
+    }
+
+    pub fn wants_ar(&self) -> bool {
+        debug_assert_eq!(
+            self.granted_count,
+            self.fetches.iter().take_while(|f| f.granted).count(),
+            "granted slots must form a prefix"
+        );
+        self.granted_count < self.fetches.len()
+    }
+
+    pub fn pop_ar(&mut self, _now: Cycle, stats: &mut RunStats) -> Option<ReadReq> {
+        let idx = self.granted_count;
+        let slot = self.fetches.get_mut(idx)?;
+        debug_assert!(!slot.granted);
+        slot.granted = true;
+        self.granted_count += 1;
+        stats.desc_beats += Descriptor::fetch_beats() as u64;
+        Some(ReadReq::new(
+            Port::Frontend,
+            slot.addr,
+            slot.addr,
+            Descriptor::fetch_beats(),
+        ))
+    }
+
+    pub fn wants_w(&self) -> bool {
+        !self.wb_queue.is_empty()
+    }
+
+    pub fn pop_w(&mut self, _now: Cycle, stats: &mut RunStats) -> Option<WriteBeat> {
+        let wb = self.wb_queue.pop_front()?;
+        let tag = self.wb_next_tag;
+        self.wb_next_tag += 1;
+        self.wb_outstanding.push((tag, wb));
+        stats.writeback_beats += 1;
+        Some(WriteBeat {
+            port: Port::Frontend,
+            tag,
+            addr: wb.desc_addr,
+            data: COMPLETION_STAMP.to_le_bytes(),
+            bytes: 8,
+            last: true,
+        })
+    }
+
+    pub fn idle(&self) -> bool {
+        self.csr_queue.is_empty()
+            && self.fetches.is_empty()
+            && self.handoff.is_empty()
+            && self.pending_chase.is_none()
+            && self.wb_queue.is_empty()
+            && self.wb_outstanding.is_empty()
+            && !self.chain_active
+    }
+
+    pub fn take_irq(&mut self) -> u64 {
+        std::mem::take(&mut self.irq_edges)
+    }
+
+    /// Diagnostics for tests: (live fetches, speculative outstanding).
+    pub fn fetch_occupancy(&self) -> (usize, usize) {
+        (self.live_fetches(), self.spec_outstanding())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fe(prefetch: usize) -> Frontend {
+        Frontend::new(DmacConfig::custom(4, prefetch))
+    }
+
+    fn grant_all(f: &mut Frontend, stats: &mut RunStats) -> Vec<u64> {
+        let mut addrs = Vec::new();
+        while let Some(req) = f.pop_ar(0, stats) {
+            addrs.push(req.addr);
+        }
+        addrs
+    }
+
+    fn deliver_desc(f: &mut Frontend, now: Cycle, d: &Descriptor, stats: &mut RunStats) {
+        let bytes = d.to_bytes();
+        for i in 0..4u32 {
+            let mut data = [0u8; 8];
+            data.copy_from_slice(&bytes[i as usize * 8..i as usize * 8 + 8]);
+            f.on_desc_beat(
+                now,
+                RBeat { port: Port::Frontend, tag: 0, beat: i, last: i == 3, data, bytes: 8 },
+                stats,
+            );
+        }
+    }
+
+    #[test]
+    fn launch_respects_launch_latency() {
+        let mut f = fe(0);
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(5, 0x1000);
+        f.step(7, &mut b, &mut s);
+        assert!(!f.wants_ar(), "not eligible before launch_latency");
+        f.step(8, &mut b, &mut s); // 5 + 3
+        assert!(f.wants_ar());
+        let req = f.pop_ar(8, &mut s).unwrap();
+        assert_eq!(req.addr, 0x1000);
+        assert_eq!(req.beats, 4);
+    }
+
+    #[test]
+    fn prefetch_issues_sequential_speculative_fetches() {
+        let mut f = fe(4);
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        // in_flight=4 caps live fetches: head + 3 speculative.
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs, vec![0x1000, 0x1020, 0x1040, 0x1060]);
+        assert_eq!(f.fetch_occupancy(), (4, 3));
+    }
+
+    #[test]
+    fn hit_commits_and_tops_up() {
+        let mut f = fe(4);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        grant_all(&mut f, &mut s);
+        // Descriptor at 0x1000 points at 0x1020 — the speculated addr.
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x1020);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(s.spec_hits, 1);
+        assert_eq!(s.spec_misses, 0);
+        // Once the parsed head drains to the backend (handoff pipe is
+        // 3 cycles), the freed window slot is topped up at 0x1080.
+        f.step(14, &mut b, &mut s);
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs, vec![0x1080]);
+    }
+
+    #[test]
+    fn miss_flushes_and_issues_same_cycle() {
+        let mut f = fe(4);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        grant_all(&mut f, &mut s);
+        // next points somewhere else entirely.
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x5000);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(s.spec_misses, 1);
+        // Corrective fetch + new speculation from 0x5020 are pending
+        // immediately (same-cycle AR issue is possible).
+        assert!(f.wants_ar());
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs[0], 0x5000, "corrective fetch first");
+        assert!(addrs.contains(&0x5020));
+    }
+
+    #[test]
+    fn mispredicted_granted_slots_discard_their_beats() {
+        let mut f = fe(2);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        grant_all(&mut f, &mut s); // 0x1000 + spec 0x1020, 0x1040 granted
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x7000);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        // The two granted speculative fetches stream 8 wasted beats.
+        let junk = Descriptor::new(0, 0, 0);
+        deliver_desc(&mut f, 12, &junk, &mut s);
+        deliver_desc(&mut f, 16, &junk, &mut s);
+        assert_eq!(s.wasted_desc_beats, 8);
+        // Only the real transfer was handed off.
+        assert_eq!(f.handoff.len(), 1);
+    }
+
+    #[test]
+    fn ungranted_speculation_is_cancelled_for_free() {
+        let mut f = fe(4);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        // Grant only the head fetch; speculative slots stay pending.
+        let req = f.pop_ar(3, &mut s).unwrap();
+        assert_eq!(req.addr, 0x1000);
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x7000);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(s.spec_misses, 1);
+        assert_eq!(s.wasted_desc_beats, 0, "cancelled fetches cost nothing");
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs[0], 0x7000);
+    }
+
+    #[test]
+    fn end_of_chain_stops_fetching() {
+        let mut f = fe(4);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let _ = f.pop_ar(3, &mut s).unwrap();
+        let d = Descriptor::new(0x8000, 0x9000, 64); // next = EOC
+        deliver_desc(&mut f, 10, &d, &mut s);
+        f.step(11, &mut b, &mut s);
+        // Handoff drains to the backend; nothing further to fetch.
+        f.step(12, &mut b, &mut s);
+        assert!(!f.wants_ar());
+        assert!(!f.chain_active);
+    }
+
+    #[test]
+    fn writeback_stamps_and_raises_irq_after_b() {
+        let mut f = fe(0);
+        let mut s = RunStats::default();
+        f.on_transfer_complete(50, 0x1000, true);
+        assert!(f.wants_w());
+        let w = f.pop_w(51, &mut s).unwrap();
+        assert_eq!(w.addr, 0x1000);
+        assert_eq!(w.data, [0xFF; 8]);
+        assert!(w.last);
+        assert_eq!(f.take_irq(), 0, "IRQ only after the stamp lands");
+        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        assert_eq!(f.take_irq(), 1);
+        assert_eq!(f.take_irq(), 0);
+    }
+
+    #[test]
+    fn base_config_chases_serially() {
+        let mut f = fe(0);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let _ = f.pop_ar(3, &mut s);
+        assert!(!f.wants_ar(), "no speculation in base config");
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x2000);
+        deliver_desc(&mut f, 9, &d, &mut s);
+        assert!(f.wants_ar(), "chase issued on next-field receipt");
+        assert_eq!(f.pop_ar(9, &mut s).unwrap().addr, 0x2000);
+        assert_eq!(s.spec_hits + s.spec_misses, 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! The paper's DMAC: descriptor format, DMA frontend (request logic,
+//! speculative prefetching, feedback logic) and DMA backend (the iDMA
+//! engine of Kurth et al. [14]).
+//!
+//! The module mirrors Fig. 1: a memory-mapped CSR accepts descriptor
+//! addresses; the *request logic* fetches 256-bit descriptors through
+//! the frontend's AXI manager port (speculatively prefetching ahead);
+//! parsed transfers are handed to the *backend*, which executes the
+//! linear copy; the *feedback logic* overwrites the first 8 bytes of a
+//! completed descriptor with all-ones and optionally raises an IRQ.
+
+pub mod backend;
+pub mod config;
+pub mod controller;
+pub mod descriptor;
+pub mod frontend;
+
+pub use backend::Backend;
+pub use config::DmacConfig;
+pub use controller::Controller;
+pub use descriptor::{ChainBuilder, Descriptor, DESC_BYTES, END_OF_CHAIN};
+pub use frontend::Frontend;
+
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::mem::latency::BResp;
+use crate::sim::{Cycle, RunStats};
+
+/// Our DMAC: frontend + backend glued through the handoff and
+/// completion queues (Fig. 1).
+#[derive(Debug)]
+pub struct Dmac {
+    pub frontend: Frontend,
+    pub backend: Backend,
+    stats: RunStats,
+}
+
+impl Dmac {
+    pub fn new(cfg: DmacConfig) -> Self {
+        Self {
+            frontend: Frontend::new(cfg),
+            backend: Backend::new(cfg.in_flight, cfg.strict_order, 0),
+            stats: RunStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> DmacConfig {
+        self.frontend.config()
+    }
+}
+
+impl Controller for Dmac {
+    fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
+        self.frontend.csr_write(now, desc_addr);
+    }
+
+    fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
+        match beat.port {
+            Port::Frontend => self.frontend.on_desc_beat(now, beat, &mut self.stats),
+            Port::Backend => self.backend.on_payload_beat(now, beat, &mut self.stats),
+            p => panic!("unexpected R beat for port {p:?} at our DMAC"),
+        }
+    }
+
+    fn on_b(&mut self, now: Cycle, b: BResp) {
+        match b.port {
+            Port::Frontend => self.frontend.on_writeback_b(now, b, &mut self.stats),
+            Port::Backend => self.backend.on_write_b(now, b, &mut self.stats),
+            p => panic!("unexpected B for port {p:?} at our DMAC"),
+        }
+    }
+
+    fn step(&mut self, now: Cycle) {
+        // Backend first: completions produced this cycle feed the
+        // frontend's feedback logic in the same cycle.
+        self.backend.step(now, &mut self.stats);
+        for done in self.backend.drain_completions() {
+            self.stats.record_completion(done.cycle, done.bytes);
+            self.frontend.on_transfer_complete(now, done.desc_addr, done.irq);
+        }
+        self.frontend.step(now, &mut self.backend, &mut self.stats);
+    }
+
+    fn wants_ar(&self, port: Port) -> bool {
+        match port {
+            Port::Frontend => self.frontend.wants_ar(),
+            Port::Backend => self.backend.wants_ar(),
+            _ => false,
+        }
+    }
+
+    fn pop_ar(&mut self, now: Cycle, port: Port) -> Option<ReadReq> {
+        match port {
+            Port::Frontend => self.frontend.pop_ar(now, &mut self.stats),
+            Port::Backend => self.backend.pop_ar(now, &mut self.stats),
+            _ => None,
+        }
+    }
+
+    fn wants_w(&self, port: Port) -> bool {
+        match port {
+            Port::Frontend => self.frontend.wants_w(),
+            Port::Backend => self.backend.wants_w(),
+            _ => false,
+        }
+    }
+
+    fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat> {
+        match port {
+            Port::Frontend => self.frontend.pop_w(now, &mut self.stats),
+            Port::Backend => self.backend.pop_w(now, &mut self.stats),
+            _ => None,
+        }
+    }
+
+    fn ports(&self) -> &'static [Port] {
+        &[Port::Frontend, Port::Backend]
+    }
+
+    fn idle(&self) -> bool {
+        self.frontend.idle() && self.backend.idle()
+    }
+
+    fn stats(&self) -> &RunStats {
+        &self.stats
+    }
+
+    fn take_stats(&mut self) -> RunStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    fn take_irq(&mut self) -> u64 {
+        self.frontend.take_irq()
+    }
+}

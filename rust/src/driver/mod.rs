@@ -1,0 +1,22 @@
+//! Linux driver model (paper §II-E).
+//!
+//! The paper ships a Linux `dmaengine` driver implementing the *memcpy*
+//! API.  This module reproduces the driver's protocol against the
+//! simulated SoC:
+//!
+//! 1. **prepare** (`device_prep_dma_memcpy`): allocate one or more
+//!    chained descriptors and populate `source`, `destination`,
+//!    `length`, `config`; if a transfer needs several descriptors,
+//!    only the last has IRQ signalling enabled.
+//! 2. **commit** (`tx_submit`): chain committed transfers FIFO into a
+//!    new chain.
+//! 3. **submit** (`issue_pending`): if fewer than the maximum number
+//!    of allowed chains are running, schedule the chain with a CSR
+//!    write; otherwise store it for later.
+//! 4. **interrupt handler**: on IRQ, detect completed chains through
+//!    the in-memory completion stamps, schedule completion callbacks,
+//!    decrement the active count, and launch stored chains.
+
+pub mod dmaengine;
+
+pub use dmaengine::{Cookie, DmaDriver, Tx};

@@ -1,0 +1,56 @@
+//! # idmac — reproduction of the iDMA descriptor-DMAC paper
+//!
+//! Cycle-level reproduction of *"A Direct Memory Access Controller
+//! (DMAC) for Irregular Data Transfers on RISC-V Linux Systems"*
+//! (Benz, Vanoni, Rogenmoser, Benini, 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the DMAC microarchitecture and everything it
+//!   is evaluated against: beat-level AXI4 bus ([`axi`]), latency-
+//!   configurable memory ([`mem`]), our descriptor DMAC with
+//!   speculative prefetching ([`dmac`]), the LogiCORE IP DMA baseline
+//!   ([`baseline`]), the OOC testbench ([`tb`]), a CVA6-like SoC with
+//!   PLIC ([`soc`]), the Linux dmaengine-style driver model
+//!   ([`driver`]), analytic area/timing/utilization models ([`model`]),
+//!   workload generators ([`workload`]) and table printers ([`report`]).
+//! * **L2/L1 (python/, build-time only)** — a JAX compute graph +
+//!   Pallas kernels AOT-lowered to HLO text; the [`runtime`] module
+//!   loads those artifacts through PJRT and cross-checks the
+//!   simulator's payload movement against them.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod axi;
+pub mod baseline;
+pub mod cli;
+pub mod dmac;
+pub mod driver;
+pub mod mem;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod soc;
+pub mod tb;
+pub mod testutil;
+pub mod workload;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("simulation exceeded cycle budget of {budget} cycles (model deadlock?)")]
+    CycleBudgetExceeded { budget: u64 },
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("cli error: {0}")]
+    Cli(String),
+    #[error("driver error: {0}")]
+    Driver(String),
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

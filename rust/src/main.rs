@@ -1,0 +1,198 @@
+//! `idmac` — the leader binary: regenerate any paper table/figure,
+//! run sweeps, and cross-check the simulator against the PJRT oracle.
+//!
+//! ```text
+//! idmac fig4 [--latency ideal|ddr3|ultradeep|<cycles>]
+//! idmac fig5
+//! idmac table1|table2|table3|table4
+//! idmac sweep --config base|speculation|scaled|DxS --latency … --size N
+//!             [--transfers N] [--hit-rate F]
+//! idmac oracle-check [--artifacts DIR] [--chains N]
+//! idmac soc-demo [--latency …]
+//! idmac all     # every table + figure in paper order
+//! ```
+
+use idmac::cli::Args;
+use idmac::dmac::DmacConfig;
+use idmac::mem::LatencyProfile;
+use idmac::report::experiments as exp;
+use idmac::workload::Sweep;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> idmac::Result<()> {
+    match args.command.as_deref() {
+        Some("fig4") => {
+            exp::table1().print();
+            exp::fig4(args.latency()?).print();
+        }
+        Some("fig5") => {
+            exp::table1().print();
+            exp::fig5().print();
+        }
+        Some("table1") => exp::table1().print(),
+        Some("table2") => exp::table2().print(),
+        Some("table3") => exp::table3().print(),
+        Some("table4") => exp::table4().print(),
+        Some("sweep") => sweep(args)?,
+        Some("oracle-check") => oracle_check(args)?,
+        Some("soc-demo") => soc_demo(args)?,
+        Some("all") => {
+            exp::table1().print();
+            exp::table2().print();
+            exp::table3().print();
+            exp::table4().print();
+            for p in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
+                exp::fig4(p).print();
+            }
+            exp::fig5().print();
+        }
+        Some(other) => {
+            return Err(idmac::Error::Cli(format!("unknown command `{other}`\n{USAGE}")));
+        }
+        None => {
+            println!("{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+const USAGE: &str =
+    "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|oracle-check|soc-demo|all> [flags]";
+
+fn sweep(args: &Args) -> idmac::Result<()> {
+    let cfg = args.dmac_config()?;
+    let profile = args.latency()?;
+    let size = args.get_usize("size", 64)? as u32;
+    let transfers = args.get_usize("transfers", exp::CHAIN_LEN)?;
+    let hit_rate = args.get_f64("hit-rate", 1.0)?;
+    let sweep = Sweep::new(transfers, size);
+    let stats = if hit_rate >= 1.0 {
+        exp::run_ours(cfg, profile, sweep)
+    } else {
+        exp::run_ours_hitrate(cfg, profile, sweep, hit_rate, 0x51)
+    };
+    let lc = exp::run_logicore(profile, sweep);
+    let ideal = idmac::model::ideal_utilization(size as f64);
+    println!(
+        "config={} latency={} size={}B transfers={} hit_rate={:.2}",
+        cfg.name(),
+        profile.name(),
+        size,
+        transfers,
+        hit_rate
+    );
+    println!(
+        "ours: utilization={:.3} (ideal {:.3}); spec hits/misses {}/{}; wasted desc beats {}",
+        stats.steady_utilization(),
+        ideal,
+        stats.spec_hits,
+        stats.spec_misses,
+        stats.wasted_desc_beats
+    );
+    println!(
+        "LogiCORE: utilization={:.3}; improvement {:.2}x",
+        lc.steady_utilization(),
+        stats.steady_utilization() / lc.steady_utilization()
+    );
+    Ok(())
+}
+
+fn oracle_check(args: &Args) -> idmac::Result<()> {
+    use idmac::mem::backdoor::{dump_lines, fill_pattern};
+    use idmac::runtime::oracle::LineChain;
+    use idmac::runtime::{Artifacts, ChainOracle};
+    use idmac::tb::System;
+    use idmac::testutil::SplitMix64;
+    use idmac::workload::map;
+
+    let dir = args.get_or("artifacts", &Artifacts::default_dir().to_string_lossy());
+    let chains = args.get_usize("chains", 8)?;
+    let arts = Artifacts::load(&dir)?;
+    let oracle = ChainOracle::new(&arts);
+    let mut rng = SplitMix64::new(0x0C0F_FEE0);
+    for case in 0..chains {
+        let mut sys = System::new(
+            LatencyProfile::Ddr3,
+            idmac::dmac::Dmac::new(DmacConfig::speculation()),
+        );
+        fill_pattern(&mut sys.mem, map::ARENA_BASE, map::ARENA_LINES * 64, case as u32);
+        let before = dump_lines(&sys.mem, map::ARENA_BASE, map::ARENA_LINES);
+        // Race-free random line chain: sources from the lower half,
+        // unique destinations in the upper half (overlapped backend
+        // execution == sequential semantics; DESIGN.md §4).
+        let mut chain = LineChain::default();
+        let mut cb = idmac::dmac::ChainBuilder::new();
+        let mut dsts: Vec<usize> = (512..1024).collect();
+        rng.shuffle(&mut dsts);
+        let n = rng.range(16, 128) as usize;
+        for (i, &dst) in dsts[..n].iter().enumerate() {
+            let src = rng.below(512) as usize;
+            chain.push(src, dst);
+            cb.push_at(
+                map::DESC_BASE + i as u64 * 32,
+                idmac::dmac::Descriptor::new(
+                    map::ARENA_BASE + src as u64 * 64,
+                    map::ARENA_BASE + dst as u64 * 64,
+                    64,
+                ),
+            );
+        }
+        sys.load_and_launch(0, &cb);
+        sys.run_until_idle()?;
+        oracle.check_against_sim(&before, &chain, &sys.mem, map::ARENA_BASE)?;
+        println!("oracle case {case}: {n} descriptors OK");
+    }
+    println!("oracle-check PASSED: simulator payload movement == Pallas copy_engine kernel");
+    Ok(())
+}
+
+fn soc_demo(args: &Args) -> idmac::Result<()> {
+    use idmac::driver::DmaDriver;
+    use idmac::mem::backdoor::fill_pattern;
+    use idmac::soc::Soc;
+    use idmac::workload::map;
+
+    let profile = args.latency()?;
+    let mut soc = Soc::new(profile, idmac::dmac::Dmac::new(DmacConfig::speculation()));
+    let mut drv = DmaDriver::new(map::DESC_BASE, map::DESC_SIZE, 2);
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 64 << 10, 7);
+    let mut cookies = Vec::new();
+    for i in 0..4u64 {
+        let tx = drv.prep_memcpy(
+            map::DST_BASE + i * (16 << 10),
+            map::SRC_BASE + i * (16 << 10),
+            16 << 10,
+        )?;
+        cookies.push(drv.tx_submit(tx));
+        drv.issue_pending(&mut soc.sys, 0);
+    }
+    let stats = soc.run(|sys, _cpu, now| drv.irq_handler(sys, now))?;
+    for c in &cookies {
+        assert!(drv.is_complete(*c), "cookie {c} incomplete");
+    }
+    println!(
+        "soc-demo: {} transfers, {} cycles, {} IRQs, utilization {:.3}",
+        stats.completions.len(),
+        stats.end_cycle,
+        stats.irqs,
+        stats.steady_utilization()
+    );
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Latency-configurable memory system (paper §III-A, Fig. 3).
+//!
+//! The paper evaluates against three memory profiles: *ideal* (1-cycle
+//! SRAM), *DDR3 main memory* (13 cycles, Genesys-2 conditions) and
+//! *ultra-deep* (100 cycles, large-NoC SoC).  The model applies the
+//! configured latency once on the request path and once on the
+//! response path (`rf-rb = 2L + beats + overhead`, which calibrates
+//! Table IV — see DESIGN.md §6) and serves one read-data beat and one
+//! write beat per cycle, which is the bandwidth wall all utilization
+//! curves are measured against.
+
+pub mod backdoor;
+pub mod latency;
+
+pub use latency::{LatencyProfile, Memory};

@@ -1,0 +1,128 @@
+//! ASIC area and timing model (paper Table II, GF12LP+ @ 0.8 V, 25 °C).
+//!
+//! The paper publishes its own linear area fit, `A = 20.30 + 5.28·d +
+//! 1.94·s kGE` (d = descriptors in flight, s = speculation slots), and
+//! three synthesis anchor points.  We regenerate Table II from the fit
+//! plus a critical-path model fitted through the anchors:
+//!
+//! * backend ≈ `11.0 + 1.1·d` kGE (matches 15.4 / 14.7 / 37.3 within
+//!   the anchors' spread), frontend = total − backend;
+//! * clock period ≈ `0.585 + 0.0470·log2(1 + s)` ns, i.e. the
+//!   speculation-slot CAM dominates timing: 1.71 / 1.44 / 1.245 GHz vs
+//!   the paper's 1.71 / 1.44 / 1.23 (−1.2 % worst case, documented in
+//!   EXPERIMENTS.md).
+//!
+//! These are *models of reported numbers*, not measurements — the
+//! substitution is documented in DESIGN.md §2.
+
+/// The paper's published linear fit coefficients (kGE).
+pub const AREA_CONST: f64 = 20.30;
+pub const AREA_PER_IN_FLIGHT: f64 = 5.28;
+pub const AREA_PER_SPEC_SLOT: f64 = 1.94;
+
+/// CVA6 core area reference: the paper states the scaled DMAC is below
+/// 10 % of the core's area; we fix the reference used for that check.
+pub const CVA6_AREA_KGE: f64 = 2000.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaReport {
+    pub frontend_kge: f64,
+    pub backend_kge: f64,
+    pub total_kge: f64,
+    pub clock_ghz: f64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AreaModel;
+
+impl AreaModel {
+    /// Paper's own fit: total DMAC area in kGE.
+    pub fn total_kge(in_flight: usize, prefetch: usize) -> f64 {
+        AREA_CONST + AREA_PER_IN_FLIGHT * in_flight as f64 + AREA_PER_SPEC_SLOT * prefetch as f64
+    }
+
+    /// Backend share of the area (buffering scales with in-flight).
+    pub fn backend_kge(in_flight: usize) -> f64 {
+        11.0 + 1.1 * in_flight as f64
+    }
+
+    /// Achievable clock in GHz (typical corner).
+    pub fn clock_ghz(prefetch: usize) -> f64 {
+        let period_ns = 0.585 + 0.0470 * (1.0 + prefetch as f64).log2();
+        1.0 / period_ns
+    }
+
+    pub fn report(in_flight: usize, prefetch: usize) -> AreaReport {
+        let total = Self::total_kge(in_flight, prefetch);
+        let backend = Self::backend_kge(in_flight).min(total);
+        AreaReport {
+            frontend_kge: total - backend,
+            backend_kge: backend,
+            total_kge: total,
+            clock_ghz: Self::clock_ghz(prefetch),
+        }
+    }
+
+    /// The paper's scalability check: DMAC under 10 % of a CVA6 core.
+    pub fn fraction_of_cva6(in_flight: usize, prefetch: usize) -> f64 {
+        Self::total_kge(in_flight, prefetch) / CVA6_AREA_KGE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Paper Table II anchors: (d, s, total kGE, clock GHz).
+    const ANCHORS: [(usize, usize, f64, f64); 3] = [
+        (4, 0, 41.2, 1.71),
+        (4, 4, 49.5, 1.44),
+        (24, 24, 188.4, 1.23),
+    ];
+
+    #[test]
+    fn area_fit_matches_table2_within_3pct() {
+        for (d, s, want, _) in ANCHORS {
+            let got = AreaModel::total_kge(d, s);
+            let err = (got - want).abs() / want;
+            assert!(err < 0.03, "({d},{s}): got {got:.1}, want {want}");
+        }
+    }
+
+    #[test]
+    fn clock_matches_table2_within_2pct() {
+        for (_, s, _, want) in ANCHORS {
+            let got = AreaModel::clock_ghz(s);
+            let err = (got - want).abs() / want;
+            assert!(err < 0.02, "s={s}: got {got:.3}, want {want}");
+        }
+    }
+
+    #[test]
+    fn speculation_adds_about_8kge() {
+        // Paper: "enabling prefetching adds 8.3 kGE".
+        let delta = AreaModel::total_kge(4, 4) - AreaModel::total_kge(4, 0);
+        assert!((delta - 8.3).abs() < 0.6, "delta = {delta:.2}");
+    }
+
+    #[test]
+    fn backend_split_near_anchors() {
+        assert!((AreaModel::backend_kge(4) - 15.4).abs() < 0.1);
+        assert!((AreaModel::backend_kge(24) - 37.3).abs() < 0.2);
+    }
+
+    #[test]
+    fn area_is_linear_in_d_and_s() {
+        let a = AreaModel::total_kge(4, 0);
+        let b = AreaModel::total_kge(5, 0);
+        let c = AreaModel::total_kge(6, 0);
+        assert!(((b - a) - (c - b)).abs() < 1e-9);
+        let x = AreaModel::total_kge(4, 1);
+        assert!((x - a - AREA_PER_SPEC_SLOT).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_is_under_10pct_of_cva6() {
+        assert!(AreaModel::fraction_of_cva6(24, 24) < 0.10);
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytic models of the paper's evaluation: ideal/steady-state bus
+//! utilization (Eq. 1 and the closed-form model mirrored in
+//! `python/compile/model.py`), ASIC area + timing (Table II) and FPGA
+//! resources (Table III).
+
+pub mod area;
+pub mod fpga;
+pub mod utilization;
+
+pub use area::{AreaModel, AreaReport};
+pub use fpga::{FpgaModel, FpgaReport};
+pub use utilization::{ideal_utilization, rf_rb_logicore, rf_rb_ours, UtilizationModel};

@@ -1,0 +1,169 @@
+//! Report rendering: aligned tables (paper tables) and x/y series
+//! (paper figures) printed to stdout, with paper-vs-measured ratio
+//! columns.  No plotting dependencies exist offline, so figures print
+//! as column series — the same rows a plotting script would consume.
+
+pub mod experiments;
+
+/// A paper-style table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers));
+        let sep: Vec<String> = w.iter().map(|&n| "-".repeat(n)).collect();
+        out.push_str(&line(&sep));
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// A figure rendered as columns: x plus one column per series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<f64>,
+    pub columns: Vec<(String, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, x: Vec<f64>) -> Self {
+        Self { title: title.to_string(), x_label: x_label.to_string(), x, columns: Vec::new() }
+    }
+
+    pub fn column(&mut self, name: &str, ys: Vec<f64>) -> &mut Self {
+        assert_eq!(ys.len(), self.x.len(), "series length mismatch for {name}");
+        self.columns.push((name.to_string(), ys));
+        self
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut headers = vec![self.x_label.as_str()];
+        for (name, _) in &self.columns {
+            headers.push(name);
+        }
+        let mut t = Table::new(&self.title, &headers);
+        for (i, &x) in self.x.iter().enumerate() {
+            let mut row = vec![format_num(x)];
+            for (_, ys) in &self.columns {
+                row.push(format!("{:.3}", ys[i]));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    pub fn print(&self) {
+        self.to_table().print();
+    }
+
+    /// Value of column `name` at `x` (exact match).
+    pub fn at(&self, name: &str, x: f64) -> Option<f64> {
+        let i = self.x.iter().position(|&v| v == x)?;
+        let (_, ys) = self.columns.iter().find(|(n, _)| n == name)?;
+        Some(ys[i])
+    }
+}
+
+fn format_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long-header", "c"]);
+        t.row_str(&["1", "2", "333333"]);
+        let r = t.render();
+        assert!(r.contains("## T"));
+        assert!(r.contains("| 1 "));
+        assert!(r.lines().count() == 4);
+        // All data lines the same width.
+        let lens: Vec<usize> = r.lines().skip(1).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row_str(&["1"]);
+    }
+
+    #[test]
+    fn series_lookup() {
+        let mut s = Series::new("F", "n", vec![8.0, 64.0]);
+        s.column("u", vec![0.1, 0.5]);
+        assert_eq!(s.at("u", 64.0), Some(0.5));
+        assert_eq!(s.at("u", 65.0), None);
+        assert_eq!(s.at("v", 64.0), None);
+    }
+
+    #[test]
+    fn series_to_table_rows() {
+        let mut s = Series::new("F", "n", vec![8.0, 64.0]);
+        s.column("u", vec![0.1, 0.5]);
+        let t = s.to_table();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1][0], "64");
+    }
+}

@@ -1,0 +1,106 @@
+//! Artifact registry: locate, compile and cache the AOT executables.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids — see
+//! /opt/xla-example/README.md.
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Fixed AOT shapes (must match `python/compile/aot.py`).
+pub const MEM_LINES: usize = 1024;
+pub const LINE_WORDS: usize = 16;
+pub const CHAIN_LEN: usize = 256;
+pub const TABLE_ROWS: usize = 2048;
+pub const TABLE_COLS: usize = 16;
+pub const GATHER_N: usize = 512;
+pub const UTIL_POINTS: usize = 10;
+
+pub struct Artifacts {
+    pub client: xla::PjRtClient,
+    pub copy_engine: xla::PjRtLoadedExecutable,
+    pub gather: xla::PjRtLoadedExecutable,
+    pub util_model: xla::PjRtLoadedExecutable,
+    pub dir: PathBuf,
+}
+
+impl Artifacts {
+    /// Default artifact directory: `$IDMAC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("IDMAC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile all three artifacts from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Err(Error::Artifact(format!(
+                "no manifest at {} — run `make artifacts` first",
+                manifest.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            if !path.exists() {
+                return Err(Error::Artifact(format!("missing artifact {}", path.display())));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(Self {
+            copy_engine: compile("copy_engine.hlo.txt")?,
+            gather: compile("gather.hlo.txt")?,
+            util_model: compile("util_model.hlo.txt")?,
+            client,
+            dir,
+        })
+    }
+
+    /// Load from the default directory (skip-friendly for tests:
+    /// returns Err rather than panicking when artifacts are absent).
+    pub fn load_default() -> Result<Self> {
+        Self::load(Self::default_dir())
+    }
+
+    /// Execute `exe` with literal inputs; unwrap the 1-output tuple
+    /// convention used by `aot.py` into a vector of literals.
+    pub fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let msg = match Artifacts::load("/nonexistent/path") {
+            Err(e) => format!("{e}"),
+            Ok(_) => panic!("load of nonexistent dir succeeded"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // (Set/unset of env vars is process-global; keep it hermetic.)
+        let prev = std::env::var_os("IDMAC_ARTIFACTS");
+        std::env::set_var("IDMAC_ARTIFACTS", "/tmp/idmac-art");
+        assert_eq!(Artifacts::default_dir(), PathBuf::from("/tmp/idmac-art"));
+        match prev {
+            Some(v) => std::env::set_var("IDMAC_ARTIFACTS", v),
+            None => std::env::remove_var("IDMAC_ARTIFACTS"),
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and execute them from Rust.
+//!
+//! Python never runs at simulation time — the HLO-text artifacts are
+//! compiled once per process on the PJRT CPU client and then invoked
+//! as the *payload oracle*: the cycle simulator's final memory image
+//! must equal what the L2 JAX graph (backed by the L1 Pallas kernels)
+//! computes for the same descriptor chain.
+
+pub mod artifacts;
+pub mod oracle;
+
+pub use artifacts::Artifacts;
+pub use oracle::{ChainOracle, UtilModelOracle};

@@ -1,0 +1,185 @@
+//! Payload oracles over the AOT artifacts.
+//!
+//! [`ChainOracle`] executes a line-granular descriptor chain through
+//! the Pallas `copy_engine` kernel (AOT artifact) and compares the
+//! result against the cycle simulator's final memory image — the
+//! three-layer composition check.  [`UtilModelOracle`] evaluates the
+//! L2 analytic utilization model and is cross-checked against the Rust
+//! reimplementation in `model::utilization`.
+
+use super::artifacts::{Artifacts, CHAIN_LEN, GATHER_N, LINE_WORDS, MEM_LINES, UTIL_POINTS};
+use crate::mem::backdoor::dump_lines;
+use crate::mem::Memory;
+use crate::{Error, Result};
+
+/// A line-granular descriptor chain (each descriptor moves one 64 B
+/// line), the unit the `copy_engine` artifact was lowered for.
+#[derive(Debug, Clone, Default)]
+pub struct LineChain {
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+}
+
+impl LineChain {
+    pub fn push(&mut self, src_line: usize, dst_line: usize) {
+        assert!(src_line < MEM_LINES && dst_line < MEM_LINES);
+        self.src.push(src_line as i32);
+        self.dst.push(dst_line as i32);
+    }
+
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+}
+
+pub struct ChainOracle<'a> {
+    artifacts: &'a Artifacts,
+}
+
+impl<'a> ChainOracle<'a> {
+    pub fn new(artifacts: &'a Artifacts) -> Self {
+        Self { artifacts }
+    }
+
+    /// Execute `chain` over `image` ((MEM_LINES x LINE_WORDS) i32) via
+    /// the Pallas kernel.  Chains shorter than the artifact's fixed
+    /// length are padded with identity descriptors (src == dst == 0).
+    pub fn exec_chain(&self, image: &[i32], chain: &LineChain) -> Result<Vec<i32>> {
+        if image.len() != MEM_LINES * LINE_WORDS {
+            return Err(Error::Artifact(format!(
+                "image must be {}x{} i32, got {}",
+                MEM_LINES,
+                LINE_WORDS,
+                image.len()
+            )));
+        }
+        if chain.len() > CHAIN_LEN {
+            return Err(Error::Artifact(format!(
+                "chain length {} exceeds artifact capacity {CHAIN_LEN}",
+                chain.len()
+            )));
+        }
+        let mut src = chain.src.clone();
+        let mut dst = chain.dst.clone();
+        src.resize(CHAIN_LEN, 0);
+        dst.resize(CHAIN_LEN, 0); // src == dst == 0 is the identity pad
+        let mem_lit = xla::Literal::vec1(image).reshape(&[MEM_LINES as i64, LINE_WORDS as i64])?;
+        let src_lit = xla::Literal::vec1(&src);
+        let dst_lit = xla::Literal::vec1(&dst);
+        let out = Artifacts::run(&self.artifacts.copy_engine, &[mem_lit, src_lit, dst_lit])?;
+        Ok(out[0].to_vec::<i32>()?)
+    }
+
+    /// Dump the simulator's line arena and compare against the oracle
+    /// prediction for the same chain.  Returns the first mismatching
+    /// line on failure.
+    pub fn check_against_sim(
+        &self,
+        before: &[i32],
+        chain: &LineChain,
+        mem: &Memory,
+        arena_base: u64,
+    ) -> Result<()> {
+        let want = self.exec_chain(before, chain)?;
+        let got = dump_lines(mem, arena_base, MEM_LINES);
+        if want == got {
+            return Ok(());
+        }
+        let line = want
+            .chunks(LINE_WORDS)
+            .zip(got.chunks(LINE_WORDS))
+            .position(|(w, g)| w != g)
+            .unwrap();
+        Err(Error::Artifact(format!(
+            "simulator/oracle divergence at line {line}: oracle {:?} vs sim {:?}",
+            &want[line * LINE_WORDS..line * LINE_WORDS + 4],
+            &got[line * LINE_WORDS..line * LINE_WORDS + 4],
+        )))
+    }
+
+    /// Run the gather artifact: `table` is (TABLE_ROWS x TABLE_COLS)
+    /// f32, `idx` up to GATHER_N indices (padded with 0).
+    pub fn gather(&self, table: &[f32], idx: &[u32]) -> Result<Vec<f32>> {
+        if idx.len() > GATHER_N {
+            return Err(Error::Artifact(format!(
+                "gather size {} exceeds artifact capacity {GATHER_N}",
+                idx.len()
+            )));
+        }
+        let mut padded: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+        padded.resize(GATHER_N, 0);
+        let table_lit = xla::Literal::vec1(table).reshape(&[
+            super::artifacts::TABLE_ROWS as i64,
+            super::artifacts::TABLE_COLS as i64,
+        ])?;
+        let idx_lit = xla::Literal::vec1(&padded);
+        let out = Artifacts::run(&self.artifacts.gather, &[table_lit, idx_lit])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// The analytic utilization model evaluated through PJRT.
+pub struct UtilModelOracle<'a> {
+    artifacts: &'a Artifacts,
+}
+
+#[derive(Debug, Clone)]
+pub struct UtilCurves {
+    pub ideal: Vec<f32>,
+    pub ours: Vec<f32>,
+    pub logicore: Vec<f32>,
+}
+
+impl<'a> UtilModelOracle<'a> {
+    pub fn new(artifacts: &'a Artifacts) -> Self {
+        Self { artifacts }
+    }
+
+    pub fn eval(
+        &self,
+        sizes: &[f32; UTIL_POINTS],
+        latency: f32,
+        in_flight: f32,
+        prefetch: f32,
+        hit_rate: f32,
+    ) -> Result<UtilCurves> {
+        let out = Artifacts::run(
+            &self.artifacts.util_model,
+            &[
+                xla::Literal::vec1(sizes.as_slice()),
+                xla::Literal::scalar(latency),
+                xla::Literal::scalar(in_flight),
+                xla::Literal::scalar(prefetch),
+                xla::Literal::scalar(hit_rate),
+            ],
+        )?;
+        Ok(UtilCurves {
+            ideal: out[0].to_vec::<f32>()?,
+            ours: out[1].to_vec::<f32>()?,
+            logicore: out[2].to_vec::<f32>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chain_bounds_checked() {
+        let mut c = LineChain::default();
+        c.push(0, 1023);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn line_chain_rejects_oob() {
+        let mut c = LineChain::default();
+        c.push(0, 1024);
+    }
+}

@@ -1,0 +1,63 @@
+//! Deterministic cycle-stepped simulation kernel.
+//!
+//! Every hardware model in this crate is advanced by a single-threaded,
+//! fixed-order `tick` loop: one call == one AXI clock cycle.  There is no
+//! event wheel and no async runtime on the hot path — the per-cycle cost
+//! is a handful of queue operations, which is what lets the Fig. 4/5
+//! sweeps simulate hundreds of millions of cycles in seconds (see
+//! EXPERIMENTS.md §Perf).
+
+pub mod stats;
+
+pub use stats::{RunStats, SteadyWindow};
+
+/// Simulation time in clock cycles.
+pub type Cycle = u64;
+
+/// Guard against runaway simulations (a deadlock in a model shows up as
+/// a hang otherwise).  Exceeding the budget is a model bug, not a
+/// workload property, so it panics in tests and errors in the CLI.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleBudget {
+    pub max_cycles: Cycle,
+}
+
+impl Default for CycleBudget {
+    fn default() -> Self {
+        // Generous: the deepest sweep (4 KiB x 100-cycle latency x long
+        // chains) finishes well under 10M cycles.
+        Self { max_cycles: 200_000_000 }
+    }
+}
+
+impl CycleBudget {
+    pub fn check(&self, now: Cycle) -> crate::Result<()> {
+        if now >= self.max_cycles {
+            Err(crate::Error::CycleBudgetExceeded { budget: self.max_cycles })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_passes_below_limit() {
+        let b = CycleBudget { max_cycles: 10 };
+        assert!(b.check(9).is_ok());
+    }
+
+    #[test]
+    fn budget_fails_at_limit() {
+        let b = CycleBudget { max_cycles: 10 };
+        assert!(b.check(10).is_err());
+    }
+
+    #[test]
+    fn default_budget_is_large() {
+        assert!(CycleBudget::default().max_cycles >= 1_000_000);
+    }
+}

@@ -1,0 +1,181 @@
+//! Run statistics and steady-state utilization measurement.
+//!
+//! The paper measures *steady-state* bus utilization at the DMA
+//! backend's AXI manager interface, counting only useful payload
+//! traffic and suppressing cold-start effects (§III-A).  We reproduce
+//! that definition by time-stamping the completion of every transfer
+//! and computing payload-beat throughput over the middle half of the
+//! chain (`[N/4, 3N/4)` completions).
+
+use super::Cycle;
+
+/// Completion record of a single linear transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    /// Cycle at which the transfer's write-back to memory completed.
+    pub cycle: Cycle,
+    /// Payload bytes moved by this transfer.
+    pub bytes: u64,
+}
+
+/// Steady-state measurement window over a completion log.
+#[derive(Debug, Clone, Copy)]
+pub struct SteadyWindow {
+    pub start_cycle: Cycle,
+    pub end_cycle: Cycle,
+    pub bytes: u64,
+    pub transfers: usize,
+}
+
+impl SteadyWindow {
+    /// Steady-state bus utilization: payload beats per cycle at the
+    /// backend manager port (64-bit bus => 8 bytes per beat).
+    pub fn utilization(&self, bytes_per_beat: u64) -> f64 {
+        let cycles = self.end_cycle.saturating_sub(self.start_cycle);
+        if cycles == 0 {
+            return 0.0;
+        }
+        (self.bytes as f64 / bytes_per_beat as f64) / cycles as f64
+    }
+}
+
+/// Aggregate statistics of a simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub completions: Vec<Completion>,
+    /// Total descriptor-fetch beats issued by the frontend (incl. wasted).
+    pub desc_beats: u64,
+    /// Descriptor-fetch beats that were speculatively fetched and then
+    /// discarded on a misprediction.
+    pub wasted_desc_beats: u64,
+    /// Payload read beats at the backend manager interface.
+    pub payload_read_beats: u64,
+    /// Payload write beats at the backend manager interface.
+    pub payload_write_beats: u64,
+    /// Completion write-back beats issued by the frontend feedback path.
+    pub writeback_beats: u64,
+    /// Number of speculative prefetch hits / misses observed.
+    pub spec_hits: u64,
+    pub spec_misses: u64,
+    /// Mandatory speculation flushes at end-of-chain (not counted as
+    /// mispredictions).
+    pub eoc_flushes: u64,
+    /// Total IRQs raised.
+    pub irqs: u64,
+    /// Final simulation cycle.
+    pub end_cycle: Cycle,
+}
+
+impl RunStats {
+    pub fn record_completion(&mut self, cycle: Cycle, bytes: u64) {
+        self.completions.push(Completion { cycle, bytes });
+    }
+
+    /// Measurement window over the middle half of the completion log,
+    /// mirroring the paper's cold-start suppression.  Returns `None`
+    /// when the chain is too short to have a steady state (< 8
+    /// transfers).
+    pub fn steady_window(&self) -> Option<SteadyWindow> {
+        let n = self.completions.len();
+        if n < 8 {
+            return None;
+        }
+        let lo = n / 4;
+        let hi = (3 * n) / 4;
+        let start_cycle = self.completions[lo].cycle;
+        let end_cycle = self.completions[hi].cycle;
+        let bytes = self.completions[lo + 1..=hi].iter().map(|c| c.bytes).sum();
+        Some(SteadyWindow { start_cycle, end_cycle, bytes, transfers: hi - lo })
+    }
+
+    /// Steady-state utilization on a 64-bit bus, or whole-run
+    /// utilization for short chains.
+    pub fn steady_utilization(&self) -> f64 {
+        match self.steady_window() {
+            Some(w) => w.utilization(8),
+            None => {
+                let bytes: u64 = self.completions.iter().map(|c| c.bytes).sum();
+                let end = self.completions.last().map(|c| c.cycle).unwrap_or(0);
+                if end == 0 {
+                    0.0
+                } else {
+                    (bytes as f64 / 8.0) / end as f64
+                }
+            }
+        }
+    }
+
+    /// Observed prefetch hit rate, if any speculation was resolved.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.spec_hits + self.spec_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.spec_hits as f64 / total as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_with(n: usize, period: Cycle, bytes: u64) -> RunStats {
+        let mut s = RunStats::default();
+        for i in 1..=n {
+            s.record_completion(i as Cycle * period, bytes);
+        }
+        s
+    }
+
+    #[test]
+    fn steady_utilization_of_uniform_stream() {
+        // 64-byte transfers completing every 12 cycles => 8 beats / 12.
+        let s = stats_with(64, 12, 64);
+        let u = s.steady_utilization();
+        assert!((u - 8.0 / 12.0).abs() < 1e-9, "u = {u}");
+    }
+
+    #[test]
+    fn short_chain_falls_back_to_whole_run() {
+        let s = stats_with(4, 10, 80);
+        // 4 * 10 beats over 40 cycles => 1.0
+        assert!((s.steady_utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_is_zero() {
+        assert_eq!(RunStats::default().steady_utilization(), 0.0);
+    }
+
+    #[test]
+    fn window_excludes_cold_start() {
+        let mut s = RunStats::default();
+        // Cold start: first 16 transfers are slow (period 100), rest fast.
+        for i in 1..=16u64 {
+            s.record_completion(i * 100, 64);
+        }
+        for i in 1..=48u64 {
+            s.record_completion(1600 + i * 12, 64);
+        }
+        let u = s.steady_utilization();
+        assert!((u - 8.0 / 12.0).abs() < 0.05, "u = {u}");
+    }
+
+    #[test]
+    fn hit_rate_none_without_speculation() {
+        assert!(RunStats::default().hit_rate().is_none());
+        let mut s = RunStats::default();
+        s.spec_hits = 3;
+        s.spec_misses = 1;
+        assert_eq!(s.hit_rate(), Some(0.75));
+    }
+
+    #[test]
+    fn window_utilization_respects_beat_size() {
+        let s = stats_with(64, 8, 64);
+        let w = s.steady_window().unwrap();
+        assert!((w.utilization(8) - 1.0).abs() < 1e-9);
+        assert!((w.utilization(16) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,63 @@
+//! CVA6-hart stand-in: the part of the core the DMAC evaluation
+//! touches — issuing MMIO CSR writes and taking external interrupts
+//! through the PLIC with a realistic trap/claim delay.
+
+use super::Plic;
+use crate::sim::Cycle;
+
+#[derive(Debug, Clone)]
+pub struct Cpu {
+    /// Cycles from an IRQ becoming pending to the hart claiming it
+    /// (trap entry + PLIC claim read over the interconnect).
+    pub irq_claim_delay: Cycle,
+    next_claim_at: Cycle,
+    pub claims: u64,
+}
+
+impl Default for Cpu {
+    fn default() -> Self {
+        Self { irq_claim_delay: 20, next_claim_at: 0, claims: 0 }
+    }
+}
+
+impl Cpu {
+    /// Attempt to claim a pending interrupt, modelling the trap delay
+    /// by refusing claims that would be "too soon" after the last.
+    pub fn maybe_claim(&mut self, plic: &mut Plic, now: Cycle) -> Option<u32> {
+        if plic.pending() == 0 || now < self.next_claim_at {
+            return None;
+        }
+        let src = plic.claim()?;
+        self.claims += 1;
+        self.next_claim_at = now + self.irq_claim_delay;
+        Some(src)
+    }
+
+    pub fn complete(&mut self, plic: &mut Plic, source: u32) {
+        plic.complete(source);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_rate_limited_by_trap_delay() {
+        let mut cpu = Cpu { irq_claim_delay: 10, ..Default::default() };
+        let mut plic = Plic::new();
+        plic.raise(5);
+        assert_eq!(cpu.maybe_claim(&mut plic, 0), Some(5));
+        cpu.complete(&mut plic, 5);
+        plic.raise(5);
+        assert_eq!(cpu.maybe_claim(&mut plic, 5), None, "inside trap window");
+        assert_eq!(cpu.maybe_claim(&mut plic, 10), Some(5));
+    }
+
+    #[test]
+    fn nothing_to_claim() {
+        let mut cpu = Cpu::default();
+        let mut plic = Plic::new();
+        assert_eq!(cpu.maybe_claim(&mut plic, 100), None);
+    }
+}

@@ -1,0 +1,135 @@
+//! SoC integration (paper §II-D, Fig. 2): the DMAC inside a CVA6-based
+//! 64-bit RISC-V system — a CPU model issuing MMIO configuration
+//! writes, the memory interconnect, and the Platform-Level Interrupt
+//! Controller (PLIC) the DMAC's IRQ line is routed to.
+
+pub mod cpu;
+pub mod plic;
+
+pub use cpu::Cpu;
+pub use plic::Plic;
+
+use crate::dmac::Controller;
+use crate::mem::LatencyProfile;
+use crate::sim::{Cycle, RunStats};
+use crate::tb::System;
+
+/// The DMAC's interrupt source id at the PLIC (paper: "we occupy one
+/// new IRQ channel at the system's PLIC").
+pub const DMAC_IRQ_SOURCE: u32 = 5;
+
+/// The in-system integration: the OOC testbench plus CPU + PLIC.
+pub struct Soc<C: Controller> {
+    pub sys: System<C>,
+    pub cpu: Cpu,
+    pub plic: Plic,
+    irqs_routed: u64,
+}
+
+impl<C: Controller> Soc<C> {
+    pub fn new(profile: LatencyProfile, ctrl: C) -> Self {
+        Self {
+            sys: System::new(profile, ctrl),
+            cpu: Cpu::default(),
+            plic: Plic::new(),
+            irqs_routed: 0,
+        }
+    }
+
+    pub fn now(&self) -> Cycle {
+        self.sys.now()
+    }
+
+    /// One SoC clock: testbench tick + IRQ routing to the PLIC.
+    pub fn tick(&mut self) {
+        self.sys.tick();
+        // Route new DMAC IRQ edges through the PLIC gateway.
+        let edges = self.sys.irqs_seen - self.irqs_routed;
+        for _ in 0..edges {
+            self.plic.raise(DMAC_IRQ_SOURCE);
+        }
+        self.irqs_routed = self.sys.irqs_seen;
+    }
+
+    /// Run until the memory system and DMAC drain, servicing IRQs via
+    /// `handler` (the registered driver interrupt handler).  The
+    /// handler may schedule further launches on `sys`.
+    pub fn run<F>(&mut self, mut handler: F) -> crate::Result<RunStats>
+    where
+        F: FnMut(&mut System<C>, &mut Cpu, Cycle),
+    {
+        let mut settle = 0;
+        while settle < 4 {
+            crate::sim::CycleBudget::default().check(self.sys.now())?;
+            if self.sys.is_idle() && self.plic.pending() == 0 {
+                settle += 1;
+            } else {
+                settle = 0;
+            }
+            self.tick();
+            // CPU claims and services one interrupt per claim window.
+            let now = self.sys.now();
+            if let Some(src) = self.cpu.maybe_claim(&mut self.plic, now) {
+                debug_assert_eq!(src, DMAC_IRQ_SOURCE);
+                handler(&mut self.sys, &mut self.cpu, now);
+                self.cpu.complete(&mut self.plic, src);
+            }
+        }
+        let mut stats = self.sys.ctrl.take_stats();
+        stats.end_cycle = self.sys.now();
+        stats.irqs = self.sys.irqs_seen;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmac::{Dmac, DmacConfig};
+    use crate::mem::backdoor::fill_pattern;
+    use crate::workload::Sweep;
+
+    #[test]
+    fn irq_reaches_the_plic_and_handler_runs() {
+        let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+        fill_pattern(&mut soc.sys.mem, crate::workload::map::SRC_BASE, 256, 1);
+        let sweep = Sweep::new(4, 64);
+        soc.sys.load_and_launch(0, &sweep.chain());
+        let mut handled = 0;
+        let stats = soc.run(|_sys, _cpu, _now| handled += 1).unwrap();
+        assert_eq!(stats.completions.len(), 4);
+        assert_eq!(stats.irqs, 1, "only the last descriptor signals");
+        assert_eq!(handled, 1);
+    }
+
+    #[test]
+    fn handler_can_chain_new_work() {
+        let mut soc = Soc::new(LatencyProfile::Ideal, Dmac::new(DmacConfig::base()));
+        fill_pattern(&mut soc.sys.mem, crate::workload::map::SRC_BASE, 256, 2);
+        soc.sys.load_and_launch(0, &Sweep::new(2, 64).chain());
+        let mut launched_more = false;
+        let stats = soc
+            .run(|sys, _cpu, now| {
+                if !launched_more {
+                    launched_more = true;
+                    // Second chain at a different descriptor base.
+                    let mut cb = crate::dmac::ChainBuilder::new();
+                    cb.push_at(
+                        0x8000,
+                        crate::dmac::Descriptor::new(
+                            crate::workload::map::SRC_BASE,
+                            crate::workload::map::DST_BASE + 0x10000,
+                            64,
+                        )
+                        .with_irq(),
+                    );
+                    let head = cb.write_to(&mut sys.mem);
+                    sys.schedule_launch(now + 10, head);
+                }
+            })
+            .unwrap();
+        assert!(launched_more);
+        assert_eq!(stats.completions.len(), 3);
+        assert_eq!(stats.irqs, 2);
+    }
+}

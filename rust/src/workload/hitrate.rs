@@ -1,0 +1,108 @@
+//! Chain layouts with a controlled speculative prefetch hit rate
+//! (paper Fig. 5).
+//!
+//! The prefetcher speculates that descriptor *i+1* lives at
+//! `addr(i) + 32`.  The generator therefore realizes a target hit rate
+//! by placing each next descriptor either at the predicted sequential
+//! address (hit) or two slots further (miss) — the skipped slots are
+//! real memory that speculative fetches will read and discard, exactly
+//! the "fetching data that is directly discarded" contention the paper
+//! describes (§II-C).
+
+use super::map;
+use super::Sweep;
+use crate::dmac::{ChainBuilder, Descriptor, DESC_BYTES};
+use crate::testutil::SplitMix64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HitRateLayout {
+    pub sweep: Sweep,
+    pub hit_rate: f64,
+    pub seed: u64,
+}
+
+impl HitRateLayout {
+    pub fn new(sweep: Sweep, hit_rate: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&hit_rate));
+        Self { sweep, hit_rate, seed }
+    }
+
+    /// Build the chain.  Returns the builder and the *designed* hit
+    /// rate actually realized by the random draws (for reporting).
+    pub fn chain(&self) -> (ChainBuilder, f64) {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut cb = ChainBuilder::new();
+        let stride = (self.sweep.size as u64).next_multiple_of(map::LINE_BYTES);
+        let mut cursor = map::DESC_BASE;
+        let mut hits = 0usize;
+        let n = self.sweep.transfers;
+        for i in 0..n as u64 {
+            let d = Descriptor::new(
+                map::SRC_BASE + i * stride,
+                map::DST_BASE + i * stride,
+                self.sweep.size,
+            );
+            let d = if i + 1 == n as u64 { d.with_irq() } else { d };
+            cb.push_at(cursor, d);
+            if i + 1 < n as u64 {
+                if rng.chance(self.hit_rate) {
+                    hits += 1;
+                    cursor += DESC_BYTES;
+                } else {
+                    // Miss: skip two predicted slots.
+                    cursor += 3 * DESC_BYTES;
+                }
+            }
+        }
+        assert!(
+            cursor < map::DESC_BASE + map::DESC_SIZE,
+            "descriptor pool overflow: shrink the chain"
+        );
+        let designed = if n > 1 { hits as f64 / (n - 1) as f64 } else { 1.0 };
+        (cb, designed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_hit_rate_is_sequential() {
+        let (cb, designed) = HitRateLayout::new(Sweep::new(32, 64), 1.0, 1).chain();
+        assert_eq!(designed, 1.0);
+        for w in cb.addrs().windows(2) {
+            assert_eq!(w[1], w[0] + 32);
+        }
+    }
+
+    #[test]
+    fn zero_hit_rate_never_sequential() {
+        let (cb, designed) = HitRateLayout::new(Sweep::new(32, 64), 0.0, 2).chain();
+        assert_eq!(designed, 0.0);
+        for w in cb.addrs().windows(2) {
+            assert_ne!(w[1], w[0] + 32);
+        }
+    }
+
+    #[test]
+    fn intermediate_rate_is_close_to_target() {
+        let (_, designed) = HitRateLayout::new(Sweep::new(512, 64), 0.75, 3).chain();
+        assert!((designed - 0.75).abs() < 0.08, "designed = {designed}");
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let a = HitRateLayout::new(Sweep::new(64, 64), 0.5, 7).chain().0;
+        let b = HitRateLayout::new(Sweep::new(64, 64), 0.5, 7).chain().0;
+        assert_eq!(a.addrs(), b.addrs());
+    }
+
+    #[test]
+    fn addresses_stay_in_pool() {
+        let (cb, _) = HitRateLayout::new(Sweep::new(4096, 64), 0.0, 9).chain();
+        for &a in cb.addrs() {
+            assert!(a >= map::DESC_BASE && a < map::DESC_BASE + map::DESC_SIZE);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Workload generators: the "random streams of descriptors" of the
+//! paper's OOC testbench (§III-A), with controllable transfer size and
+//! chain layout (prefetch hit rate), plus the sparse ML payloads the
+//! paper motivates irregular transfers with.
+
+pub mod hitrate;
+pub mod sparse;
+pub mod tensor;
+
+pub use hitrate::HitRateLayout;
+pub use sparse::SparseGather;
+pub use tensor::TensorCopy;
+
+use crate::baseline::LcChainBuilder;
+use crate::dmac::{ChainBuilder, Descriptor};
+
+/// Shared memory map used by every generated workload (16 MiB DRAM).
+pub mod map {
+    /// Descriptor pool (ours: 32 B stride; LogiCORE: 64 B stride).
+    pub const DESC_BASE: u64 = 0x0010_0000;
+    pub const DESC_SIZE: u64 = 0x0030_0000;
+    /// Source payload arena.
+    pub const SRC_BASE: u64 = 0x0040_0000;
+    /// Destination payload arena.
+    pub const DST_BASE: u64 = 0x0090_0000;
+    /// Line-granular oracle arena (1024 x 64 B, the AOT image shape).
+    pub const ARENA_BASE: u64 = 0x00F0_0000;
+    pub const ARENA_LINES: usize = 1024;
+    pub const LINE_BYTES: u64 = 64;
+}
+
+/// A uniform sweep workload: `transfers` linear transfers of `size`
+/// bytes each, with disjoint source/destination windows (race-free, so
+/// overlapped backend execution is semantically equal to sequential).
+#[derive(Debug, Clone, Copy)]
+pub struct Sweep {
+    pub transfers: usize,
+    pub size: u32,
+}
+
+impl Sweep {
+    pub fn new(transfers: usize, size: u32) -> Self {
+        Self { transfers, size }
+    }
+
+    fn stride(&self) -> u64 {
+        (self.size as u64).next_multiple_of(map::LINE_BYTES)
+    }
+
+    /// Sequentially laid-out chain (100 % prefetch hit rate).
+    pub fn chain(&self) -> ChainBuilder {
+        let mut cb = ChainBuilder::new();
+        let stride = self.stride();
+        for i in 0..self.transfers as u64 {
+            let d = Descriptor::new(
+                map::SRC_BASE + i * stride,
+                map::DST_BASE + i * stride,
+                self.size,
+            );
+            let d = if i + 1 == self.transfers as u64 { d.with_irq() } else { d };
+            cb.push_at(map::DESC_BASE + i * 32, d);
+        }
+        cb
+    }
+
+    /// Same transfers for the LogiCORE baseline (64 B BD stride).
+    pub fn lc_chain(&self) -> LcChainBuilder {
+        let mut cb = LcChainBuilder::new();
+        let stride = self.stride();
+        for i in 0..self.transfers as u64 {
+            let d = crate::baseline::logicore::LcDescriptor::new(
+                map::SRC_BASE + i * stride,
+                map::DST_BASE + i * stride,
+                self.size,
+            );
+            let d = if i + 1 == self.transfers as u64 { d.with_irq() } else { d };
+            cb.push_at(map::DESC_BASE + i * 64, d);
+        }
+        cb
+    }
+
+    /// Total payload bytes of the workload.
+    pub fn payload_bytes(&self) -> u64 {
+        self.transfers as u64 * self.size as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_is_sequential_and_disjoint() {
+        let s = Sweep::new(16, 64);
+        let cb = s.chain();
+        assert_eq!(cb.len(), 16);
+        let addrs = cb.addrs();
+        for w in addrs.windows(2) {
+            assert_eq!(w[1], w[0] + 32, "sequential layout");
+        }
+        // Sources and destinations never overlap.
+        for d in cb.descriptors() {
+            assert!(d.source + d.length as u64 <= map::DST_BASE);
+            assert!(d.destination >= map::DST_BASE);
+        }
+    }
+
+    #[test]
+    fn only_last_descriptor_raises_irq() {
+        let cb = Sweep::new(4, 128).chain();
+        let descs = cb.descriptors();
+        assert!(descs[..3].iter().all(|d| !d.irq_enabled()));
+        assert!(descs[3].irq_enabled());
+    }
+
+    #[test]
+    fn lc_chain_uses_64b_stride() {
+        let s = Sweep::new(4, 64);
+        let _ = s.lc_chain(); // push_at asserts 64 B alignment
+    }
+
+    #[test]
+    fn payload_accounting() {
+        assert_eq!(Sweep::new(10, 256).payload_bytes(), 2560);
+    }
+}

@@ -1,0 +1,143 @@
+//! Sparse / irregular payloads: the workloads the paper's introduction
+//! motivates (Kumar et al. [2]: scatter-gather for large-scale graph
+//! analytics; embedding lookups in ML).
+//!
+//! A [`SparseGather`] is a list of random row indices into an embedding
+//! table; as a DMAC workload every lookup is one fine-grained (64 B)
+//! linear transfer — the exact regime where descriptor overhead
+//! dominates and the paper's contribution pays off.  The same trace
+//! maps 1:1 onto the AOT `gather.hlo.txt` artifact, which is how the
+//! end-to-end example cross-checks payload correctness through PJRT.
+
+use super::map;
+use crate::dmac::{ChainBuilder, Descriptor};
+use crate::mem::Memory;
+use crate::testutil::SplitMix64;
+
+/// Matches the AOT artifact shapes (`python/compile/aot.py`).
+pub const TABLE_ROWS: usize = 2048;
+pub const TABLE_COLS: usize = 16;
+pub const GATHER_N: usize = 512;
+pub const ROW_BYTES: u64 = (TABLE_COLS * 4) as u64; // f32 rows, 64 B
+
+/// Embedding table location in simulated DRAM.
+pub const TABLE_BASE: u64 = 0x0050_0000;
+/// Gather output buffer.
+pub const OUT_BASE: u64 = map::DST_BASE;
+
+#[derive(Debug, Clone)]
+pub struct SparseGather {
+    pub indices: Vec<u32>,
+}
+
+impl SparseGather {
+    /// `n` random lookups (n <= GATHER_N to fit the AOT artifact).
+    pub fn random(n: usize, seed: u64) -> Self {
+        assert!(n <= GATHER_N, "artifact is lowered for {GATHER_N} lookups");
+        let mut rng = SplitMix64::new(seed);
+        let indices = (0..n).map(|_| rng.below(TABLE_ROWS as u64) as u32).collect();
+        Self { indices }
+    }
+
+    /// A power-law-ish trace (hot rows dominate), closer to real
+    /// embedding access patterns than uniform sampling.
+    pub fn skewed(n: usize, seed: u64) -> Self {
+        assert!(n <= GATHER_N);
+        let mut rng = SplitMix64::new(seed);
+        let indices = (0..n)
+            .map(|_| {
+                // min of two uniforms biases toward low (hot) rows.
+                let a = rng.below(TABLE_ROWS as u64);
+                let b = rng.below(TABLE_ROWS as u64);
+                a.min(b) as u32
+            })
+            .collect();
+        Self { indices }
+    }
+
+    /// Deterministic f32 table value for (row, col): position-dependent
+    /// so any misplaced row is detectable.
+    pub fn table_value(row: usize, col: usize) -> f32 {
+        (row * TABLE_COLS + col) as f32 * 0.5 - 100.0
+    }
+
+    /// Backdoor-install the embedding table into simulated DRAM.
+    pub fn install_table(mem: &mut Memory) {
+        let mut bytes = Vec::with_capacity(TABLE_ROWS * ROW_BYTES as usize);
+        for r in 0..TABLE_ROWS {
+            for c in 0..TABLE_COLS {
+                bytes.extend_from_slice(&Self::table_value(r, c).to_le_bytes());
+            }
+        }
+        mem.backdoor_write(TABLE_BASE, &bytes);
+    }
+
+    /// Descriptor chain performing the gather: one 64 B transfer per
+    /// lookup, destination rows packed densely at [`OUT_BASE`].
+    pub fn chain(&self) -> ChainBuilder {
+        let mut cb = ChainBuilder::new();
+        let n = self.indices.len();
+        for (i, &row) in self.indices.iter().enumerate() {
+            let d = Descriptor::new(
+                TABLE_BASE + row as u64 * ROW_BYTES,
+                OUT_BASE + i as u64 * ROW_BYTES,
+                ROW_BYTES as u32,
+            );
+            let d = if i + 1 == n { d.with_irq() } else { d };
+            cb.push_at(map::DESC_BASE + i as u64 * 32, d);
+        }
+        cb
+    }
+
+    /// Expected gathered rows (the pure-Rust oracle; the PJRT artifact
+    /// is the cross-check of record).
+    pub fn expected_rows(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.indices.len() * TABLE_COLS);
+        for &row in &self.indices {
+            for c in 0..TABLE_COLS {
+                out.push(Self::table_value(row as usize, c));
+            }
+        }
+        out
+    }
+
+    /// Read the gathered rows back out of simulated DRAM.
+    pub fn read_result(&self, mem: &Memory) -> Vec<f32> {
+        let raw = mem.backdoor_read(OUT_BASE, self.indices.len() * ROW_BYTES as usize);
+        raw.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmac::{Dmac, DmacConfig};
+    use crate::mem::LatencyProfile;
+    use crate::tb::System;
+
+    #[test]
+    fn indices_in_range() {
+        let g = SparseGather::random(512, 1);
+        assert!(g.indices.iter().all(|&i| (i as usize) < TABLE_ROWS));
+    }
+
+    #[test]
+    fn skewed_is_biased_low() {
+        let g = SparseGather::skewed(512, 2);
+        let mean = g.indices.iter().map(|&i| i as f64).sum::<f64>() / 512.0;
+        assert!(mean < TABLE_ROWS as f64 / 2.5, "mean = {mean}");
+    }
+
+    #[test]
+    fn dmac_executes_the_gather() {
+        let g = SparseGather::random(64, 3);
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+        SparseGather::install_table(&mut sys.mem);
+        sys.load_and_launch(0, &g.chain());
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.completions.len(), 64);
+        assert_eq!(g.read_result(&sys.mem), g.expected_rows());
+    }
+}

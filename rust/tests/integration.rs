@@ -1,0 +1,268 @@
+//! Integration tests over the full OOC testbench: chains, payload
+//! correctness across sizes/alignments/latencies, speculation
+//! behaviour, IRQ semantics, baseline comparisons, and the paper's
+//! headline anchors.
+
+use idmac::baseline::{LcConfig, LogiCore};
+use idmac::dmac::{descriptor, ChainBuilder, Descriptor, Dmac, DmacConfig};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::model::ideal_utilization;
+use idmac::report::experiments as exp;
+use idmac::tb::System;
+use idmac::workload::{map, HitRateLayout, Sweep};
+
+fn run_sweep(cfg: DmacConfig, profile: LatencyProfile, n: usize, size: u32) -> idmac::sim::RunStats {
+    exp::run_ours(cfg, profile, Sweep::new(n, size))
+}
+
+#[test]
+fn payload_correct_across_sizes_and_latencies() {
+    for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::Custom(37)] {
+        for size in [1u32, 7, 8, 63, 64, 65, 256, 1000, 4096] {
+            let mut sys = System::new(profile, Dmac::new(DmacConfig::speculation()));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 8192, size);
+            let mut cb = ChainBuilder::new();
+            cb.push_at(map::DESC_BASE, Descriptor::new(map::SRC_BASE, map::DST_BASE, size));
+            sys.load_and_launch(0, &cb);
+            let stats = sys.run_until_idle().unwrap();
+            assert_eq!(stats.completions.len(), 1, "size={size}");
+            assert_eq!(
+                sys.mem.backdoor_read(map::SRC_BASE, size as usize).to_vec(),
+                sys.mem.backdoor_read(map::DST_BASE, size as usize).to_vec(),
+                "size={size} profile={profile:?}"
+            );
+            // Bytes beyond the transfer are untouched.
+            assert_eq!(
+                sys.mem.backdoor_read(map::DST_BASE + size as u64, 8)[0..8],
+                [0u8; 8],
+                "overrun at size={size}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_configs_move_identical_data() {
+    // The three Table I configurations are performance points, not
+    // semantics: final memory must be identical.
+    let mut images = Vec::new();
+    for cfg in DmacConfig::paper_configs() {
+        let sweep = Sweep::new(32, 192);
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 256, 11);
+        sys.load_and_launch(0, &sweep.chain());
+        sys.run_until_idle().unwrap();
+        images.push(sys.mem.backdoor_read(map::DST_BASE, 32 * 256).to_vec());
+    }
+    assert_eq!(images[0], images[1]);
+    assert_eq!(images[1], images[2]);
+}
+
+#[test]
+fn logicore_and_ours_agree_on_payload() {
+    let sweep = Sweep::new(16, 128);
+    let mut a = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::base()));
+    fill_pattern(&mut a.mem, map::SRC_BASE, 16 * 128, 5);
+    a.load_and_launch(0, &sweep.chain());
+    a.run_until_idle().unwrap();
+
+    let mut b = System::new(LatencyProfile::Ddr3, LogiCore::new(LcConfig::default()));
+    fill_pattern(&mut b.mem, map::SRC_BASE, 16 * 128, 5);
+    let head = sweep.lc_chain().write_to(&mut b.mem);
+    b.schedule_launch(0, head);
+    b.run_until_idle().unwrap();
+
+    assert_eq!(
+        a.mem.backdoor_read(map::DST_BASE, 16 * 128).to_vec(),
+        b.mem.backdoor_read(map::DST_BASE, 16 * 128).to_vec()
+    );
+}
+
+#[test]
+fn completion_stamps_every_descriptor() {
+    let sweep = Sweep::new(24, 64);
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::scaled()));
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 2048, 3);
+    sys.load_and_launch(0, &sweep.chain());
+    sys.run_until_idle().unwrap();
+    for (i, &addr) in sweep.chain().addrs().iter().enumerate() {
+        assert!(descriptor::is_completed(&sys.mem, addr), "descriptor {i}");
+    }
+}
+
+#[test]
+fn irq_only_from_flagged_descriptors() {
+    let stats = run_sweep(DmacConfig::speculation(), LatencyProfile::Ideal, 12, 64);
+    assert_eq!(stats.irqs, 1, "only the last descriptor is flagged");
+    assert_eq!(stats.completions.len(), 12);
+}
+
+#[test]
+fn multiple_chains_queue_through_the_csr() {
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 4096, 8);
+    // Two chains at separate descriptor bases, launched back to back.
+    let mut c1 = ChainBuilder::new();
+    let mut c2 = ChainBuilder::new();
+    for i in 0..4u64 {
+        c1.push_at(
+            map::DESC_BASE + i * 32,
+            Descriptor::new(map::SRC_BASE + i * 64, map::DST_BASE + i * 64, 64),
+        );
+        c2.push_at(
+            map::DESC_BASE + 0x1000 + i * 32,
+            Descriptor::new(map::SRC_BASE + 1024 + i * 64, map::DST_BASE + 1024 + i * 64, 64),
+        );
+    }
+    let h1 = c1.write_to(&mut sys.mem);
+    let h2 = c2.write_to(&mut sys.mem);
+    sys.schedule_launch(0, h1);
+    sys.schedule_launch(1, h2); // queued while chain 1 runs
+    let stats = sys.run_until_idle().unwrap();
+    assert_eq!(stats.completions.len(), 8);
+    for base in [0u64, 1024] {
+        assert_eq!(
+            sys.mem.backdoor_read(map::SRC_BASE + base, 256).to_vec(),
+            sys.mem.backdoor_read(map::DST_BASE + base, 256).to_vec()
+        );
+    }
+}
+
+#[test]
+fn dependent_chain_with_strict_order_backend() {
+    // A shift chain where descriptor i reads what descriptor i-1
+    // wrote: needs the strict-order backend (the hardware does not
+    // order payloads across descriptors; see DESIGN.md).
+    let mut sys = System::new(
+        LatencyProfile::Ideal,
+        Dmac::new(DmacConfig::base().with_strict_order()),
+    );
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 64, 21);
+    let mut cb = ChainBuilder::new();
+    // line0 -> line1 -> line2 -> line3 (each copies the previous copy).
+    for i in 0..3u64 {
+        cb.push_at(
+            map::DESC_BASE + i * 32,
+            Descriptor::new(map::SRC_BASE + i * 64, map::SRC_BASE + (i + 1) * 64, 64),
+        );
+    }
+    sys.load_and_launch(0, &cb);
+    sys.run_until_idle().unwrap();
+    let line0 = sys.mem.backdoor_read(map::SRC_BASE, 64).to_vec();
+    for i in 1..4u64 {
+        assert_eq!(sys.mem.backdoor_read(map::SRC_BASE + i * 64, 64).to_vec(), line0, "line {i}");
+    }
+}
+
+#[test]
+fn sequential_layout_never_mispredicts() {
+    let stats = run_sweep(DmacConfig::speculation(), LatencyProfile::Ddr3, 64, 64);
+    assert_eq!(stats.spec_misses, 0);
+    assert!(stats.spec_hits >= 50, "hits = {}", stats.spec_hits);
+    assert!(stats.hit_rate().unwrap() > 0.99);
+}
+
+#[test]
+fn scattered_layout_mispredicts_everywhere() {
+    let stats = exp::run_ours_hitrate(
+        DmacConfig::speculation(),
+        LatencyProfile::Ddr3,
+        Sweep::new(64, 64),
+        0.0,
+        7,
+    );
+    assert_eq!(stats.spec_hits, 0);
+    assert!(stats.spec_misses >= 60);
+    assert!(stats.wasted_desc_beats > 0, "flushed fetches cost bus beats");
+}
+
+#[test]
+fn hit_rate_sweep_is_monotone_in_utilization() {
+    let mut last = f64::MAX;
+    for (i, hr) in [1.0, 0.5, 0.0].into_iter().enumerate() {
+        let u = exp::run_ours_hitrate(
+            DmacConfig::speculation(),
+            LatencyProfile::Ddr3,
+            Sweep::new(exp::CHAIN_LEN, 64),
+            hr,
+            100 + i as u64,
+        )
+        .steady_utilization();
+        assert!(u <= last + 0.02, "hit rate {hr}: {u} vs previous {last}");
+        last = u;
+    }
+}
+
+#[test]
+fn paper_anchor_fig4a_64b() {
+    let base = run_sweep(DmacConfig::base(), LatencyProfile::Ideal, exp::CHAIN_LEN, 64)
+        .steady_utilization();
+    let lc = exp::run_logicore(LatencyProfile::Ideal, Sweep::new(exp::CHAIN_LEN, 64))
+        .steady_utilization();
+    assert!((base - ideal_utilization(64.0)).abs() < 0.01, "base={base}");
+    let ratio = base / lc;
+    assert!((2.0..3.0).contains(&ratio), "paper: 2.5x, measured {ratio:.2}x");
+}
+
+#[test]
+fn paper_anchor_fig4c_scaled_near_ideal_in_deep_memory() {
+    let u = run_sweep(DmacConfig::scaled(), LatencyProfile::UltraDeep, exp::CHAIN_LEN, 128)
+        .steady_utilization();
+    assert!((u - ideal_utilization(128.0)).abs() < 0.02, "u={u} (paper: ideal from 128 B)");
+}
+
+#[test]
+fn utilization_never_exceeds_ideal_curve() {
+    // Full-length chains: with short chains a deep fetch-ahead window
+    // (scaled = 24) front-loads descriptor traffic outside the steady
+    // window and overestimates utilization.
+    for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3] {
+        for cfg in DmacConfig::paper_configs() {
+            for size in [8u32, 64, 512] {
+                let u = run_sweep(cfg, profile, exp::CHAIN_LEN, size).steady_utilization();
+                assert!(
+                    u <= ideal_utilization(size as f64) + 0.02,
+                    "{} {profile:?} {size}B: {u}",
+                    cfg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_hit_rate_tracks_base_configuration() {
+    // §II-C: mispredictions add no latency; the only cost is discarded
+    // fetch traffic.
+    let base = run_sweep(DmacConfig::base(), LatencyProfile::Ddr3, exp::CHAIN_LEN, 64)
+        .steady_utilization();
+    let h0 = exp::run_ours_hitrate(
+        DmacConfig::speculation(),
+        LatencyProfile::Ddr3,
+        Sweep::new(exp::CHAIN_LEN, 64),
+        0.0,
+        3,
+    )
+    .steady_utilization();
+    assert!(h0 <= base + 0.01, "no-penalty property: {h0} vs {base}");
+    assert!(h0 >= base * 0.7, "contention alone cannot halve throughput: {h0} vs {base}");
+}
+
+#[test]
+fn hitrate_layout_realized_hit_rate_matches_stats() {
+    let layout = HitRateLayout::new(Sweep::new(256, 64), 0.5, 9);
+    let (_, designed) = layout.chain();
+    let stats = exp::run_ours_hitrate(
+        DmacConfig::speculation(),
+        LatencyProfile::Ddr3,
+        Sweep::new(256, 64),
+        0.5,
+        9,
+    );
+    let observed = stats.hit_rate().unwrap();
+    assert!(
+        (observed - designed).abs() < 0.05,
+        "designed {designed:.3} vs observed {observed:.3}"
+    );
+}

@@ -1,0 +1,207 @@
+//! Property-based tests (in-tree `testutil::forall` framework) over the
+//! coordinator's invariants: routing, batching, state management,
+//! payload integrity, and speculation accounting under randomized
+//! workloads, configurations and memory latencies.
+
+use idmac::dmac::{descriptor, ChainBuilder, Descriptor, Dmac, DmacConfig};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::model::ideal_utilization;
+use idmac::tb::System;
+use idmac::testutil::{forall, SplitMix64};
+use idmac::workload::map;
+
+const CASES: u64 = 30;
+
+/// Random race-free chain: unique destination slots, sources drawn
+/// from a disjoint region, random sizes.
+fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
+    let n = rng.range(2, 40) as usize;
+    let mut cb = ChainBuilder::new();
+    let mut meta = Vec::new();
+    let mut dst_slots: Vec<u64> = (0..64).collect();
+    rng.shuffle(&mut dst_slots);
+    let mut desc_addr = map::DESC_BASE;
+    for i in 0..n {
+        let size = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
+        let src = map::SRC_BASE + rng.below(32) * 4096;
+        let dst = map::DST_BASE + dst_slots[i] * 4096;
+        let d = Descriptor::new(src, dst, size);
+        let d = if i + 1 == n { d.with_irq() } else { d };
+        cb.push_at(desc_addr, d);
+        meta.push((src, dst, size));
+        // Random (but monotone, collision-free) descriptor placement:
+        // exercises both hits and misses of the prefetcher.
+        desc_addr += 32 * rng.range(1, 4);
+    }
+    (cb, meta)
+}
+
+fn random_config(rng: &mut SplitMix64) -> DmacConfig {
+    let in_flight = rng.range(1, 32) as usize;
+    let prefetch = rng.range(0, 32) as usize;
+    DmacConfig::custom(in_flight, prefetch)
+}
+
+fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
+    LatencyProfile::Custom(rng.range(1, 120) as u32)
+}
+
+#[test]
+fn prop_every_chain_completes_and_moves_payload() {
+    forall(CASES, |rng| {
+        let (cb, meta) = random_chain(rng);
+        let cfg = random_config(rng);
+        let mut sys = System::new(random_profile(rng), Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, rng.next_u64() as u32);
+        sys.load_and_launch(0, &cb);
+        let stats = sys.run_until_idle().unwrap();
+        // Batching/state invariant: one completion per descriptor.
+        assert_eq!(stats.completions.len(), meta.len());
+        // Routing invariant: every payload landed at its destination.
+        for (src, dst, size) in meta {
+            assert_eq!(
+                sys.mem.backdoor_read(src, size as usize).to_vec(),
+                sys.mem.backdoor_read(dst, size as usize).to_vec(),
+                "cfg={cfg:?}"
+            );
+        }
+        // Feedback invariant: every descriptor carries the stamp.
+        for &addr in cb.addrs() {
+            assert!(descriptor::is_completed(&sys.mem, addr));
+        }
+        // Exactly one IRQ (only the last descriptor is flagged).
+        assert_eq!(stats.irqs, 1);
+    });
+}
+
+#[test]
+fn prop_final_memory_independent_of_configuration() {
+    // The speculative prefetcher must never change *what* moves, only
+    // *when* — any two configurations yield identical final memory.
+    forall(CASES, |rng| {
+        let (cb, _) = random_chain(rng);
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let mut images = Vec::new();
+        for cfg in [DmacConfig::base(), DmacConfig::speculation(), random_config(rng)] {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            sys.run_until_idle().unwrap();
+            images.push(sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec());
+        }
+        assert_eq!(images[0], images[1]);
+        assert_eq!(images[1], images[2]);
+    });
+}
+
+#[test]
+fn prop_speculation_accounting_consistent() {
+    forall(CASES, |rng| {
+        let (cb, meta) = random_chain(rng);
+        let cfg = DmacConfig::custom(rng.range(2, 16) as usize, rng.range(1, 16) as usize);
+        let mut sys = System::new(random_profile(rng), Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, 1);
+        sys.load_and_launch(0, &cb);
+        let stats = sys.run_until_idle().unwrap();
+        // Each non-head descriptor resolves exactly one prediction
+        // (hit or miss) — unless speculation was starved, which can
+        // only reduce the count.
+        assert!(
+            stats.spec_hits + stats.spec_misses <= meta.len() as u64 - 1,
+            "hits {} + misses {} vs chain {}",
+            stats.spec_hits,
+            stats.spec_misses,
+            meta.len()
+        );
+        // Wasted beats only exist if something was flushed.
+        if stats.wasted_desc_beats > 0 {
+            assert!(stats.spec_misses + stats.eoc_flushes > 0);
+        }
+        // Total fetched beats ≥ 4 per executed descriptor.
+        assert!(stats.desc_beats >= 4 * meta.len() as u64);
+    });
+}
+
+#[test]
+fn prop_utilization_bounded_by_ideal() {
+    forall(CASES, |rng| {
+        let size = *rng.pick(&[8u32, 16, 64, 256, 1024]);
+        // Long chain relative to the fetch-ahead window, so the steady
+        // window sees representative descriptor traffic (cf. the note
+        // in integration::utilization_never_exceeds_ideal_curve).
+        let n = 200;
+        let cfg = DmacConfig::custom(rng.range(1, 12) as usize, rng.range(0, 12) as usize);
+        let profile = random_profile(rng);
+        let sweep = idmac::workload::Sweep::new(n, size);
+        let stats = idmac::report::experiments::run_ours(cfg, profile, sweep);
+        let u = stats.steady_utilization();
+        assert!(
+            u <= ideal_utilization(size as f64) + 0.02,
+            "{cfg:?} {profile:?} {size}B: u={u}"
+        );
+        assert!(u > 0.0);
+    });
+}
+
+#[test]
+fn prop_deeper_prefetch_never_slower_at_full_hit_rate() {
+    forall(15, |rng| {
+        let lat = rng.range(4, 80) as u32;
+        let size = *rng.pick(&[32u32, 64, 128]);
+        let sweep = idmac::workload::Sweep::new(96, size);
+        let profile = LatencyProfile::Custom(lat);
+        let d = rng.range(4, 16) as usize;
+        let shallow = idmac::report::experiments::run_ours(
+            DmacConfig::custom(d, 1),
+            profile,
+            sweep,
+        )
+        .steady_utilization();
+        let deep = idmac::report::experiments::run_ours(
+            DmacConfig::custom(d, d),
+            profile,
+            sweep,
+        )
+        .steady_utilization();
+        assert!(
+            deep >= shallow - 0.02,
+            "lat={lat} size={size} d={d}: deep {deep} vs shallow {shallow}"
+        );
+    });
+}
+
+#[test]
+fn prop_overlapping_src_dst_within_transfer_is_exact_copy() {
+    // A transfer whose destination equals its source must be an exact
+    // no-op (read-before-write within the engine's r->w pipe).
+    forall(10, |rng| {
+        let size = *rng.pick(&[64u32, 128, 512]);
+        let mut sys = System::new(random_profile(rng), Dmac::new(DmacConfig::base()));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 4096, 77);
+        let before = sys.mem.backdoor_read(map::SRC_BASE, 4096).to_vec();
+        let mut cb = ChainBuilder::new();
+        cb.push_at(map::DESC_BASE, Descriptor::new(map::SRC_BASE, map::SRC_BASE, size));
+        sys.load_and_launch(0, &cb);
+        sys.run_until_idle().unwrap();
+        assert_eq!(sys.mem.backdoor_read(map::SRC_BASE, 4096).to_vec(), before);
+    });
+}
+
+#[test]
+fn prop_simulator_is_deterministic() {
+    forall(10, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let profile = random_profile(rng);
+        let run = |cb: &ChainBuilder| {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, 5);
+            sys.load_and_launch(0, cb);
+            let stats = sys.run_until_idle().unwrap();
+            (stats.end_cycle, stats.spec_hits, stats.spec_misses, stats.desc_beats)
+        };
+        assert_eq!(run(&cb), run(&cb), "two identical runs must match cycle-for-cycle");
+    });
+}

@@ -1,0 +1,155 @@
+//! Three-layer composition tests: the Rust cycle simulator (L3) is
+//! cross-checked against the AOT-compiled JAX/Pallas artifacts (L2/L1)
+//! through PJRT.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when artifacts are absent so `cargo test` stays
+//! runnable from a fresh checkout.
+
+use idmac::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig};
+use idmac::mem::backdoor::{dump_lines, fill_pattern};
+use idmac::mem::LatencyProfile;
+use idmac::model::UtilizationModel;
+use idmac::runtime::oracle::LineChain;
+use idmac::runtime::{Artifacts, ChainOracle, UtilModelOracle};
+use idmac::tb::System;
+use idmac::testutil::SplitMix64;
+use idmac::workload::{map, SparseGather};
+
+fn artifacts() -> Option<Artifacts> {
+    match Artifacts::load_default() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn random_line_case(
+    rng: &mut SplitMix64,
+    profile: LatencyProfile,
+    cfg: DmacConfig,
+) -> (System<Dmac>, Vec<i32>, LineChain) {
+    let mut sys = System::new(profile, Dmac::new(cfg));
+    fill_pattern(&mut sys.mem, map::ARENA_BASE, map::ARENA_LINES * 64, rng.next_u64() as u32);
+    let before = dump_lines(&sys.mem, map::ARENA_BASE, map::ARENA_LINES);
+    let mut chain = LineChain::default();
+    let mut cb = ChainBuilder::new();
+    let mut dsts: Vec<usize> = (512..1024).collect();
+    rng.shuffle(&mut dsts);
+    let n = rng.range(8, 200) as usize;
+    for (i, &dst) in dsts[..n].iter().enumerate() {
+        let src = rng.below(512) as usize;
+        chain.push(src, dst);
+        cb.push_at(
+            map::DESC_BASE + i as u64 * 32,
+            Descriptor::new(
+                map::ARENA_BASE + src as u64 * 64,
+                map::ARENA_BASE + dst as u64 * 64,
+                64,
+            ),
+        );
+    }
+    sys.load_and_launch(0, &cb);
+    sys.run_until_idle().unwrap();
+    (sys, before, chain)
+}
+
+#[test]
+fn simulator_matches_pallas_copy_engine() {
+    let Some(arts) = artifacts() else { return };
+    let oracle = ChainOracle::new(&arts);
+    let mut rng = SplitMix64::new(0x7E57);
+    for case in 0..6 {
+        let cfg = [DmacConfig::base(), DmacConfig::speculation(), DmacConfig::scaled()]
+            [case % 3];
+        let (sys, before, chain) = random_line_case(&mut rng, LatencyProfile::Ddr3, cfg);
+        oracle
+            .check_against_sim(&before, &chain, &sys.mem, map::ARENA_BASE)
+            .unwrap_or_else(|e| panic!("case {case} ({}): {e}", cfg.name()));
+    }
+}
+
+#[test]
+fn oracle_detects_corruption() {
+    // Negative control: a deliberately corrupted image must fail.
+    let Some(arts) = artifacts() else { return };
+    let oracle = ChainOracle::new(&arts);
+    let mut rng = SplitMix64::new(0xBAD);
+    let (mut sys, before, chain) =
+        random_line_case(&mut rng, LatencyProfile::Ideal, DmacConfig::base());
+    // Flip one byte in a destination line.
+    let victim = map::ARENA_BASE + (512 + 7) * 64;
+    let b = sys.mem.backdoor_read(victim, 1)[0];
+    sys.mem.backdoor_write(victim, &[b ^ 0xFF]);
+    assert!(oracle.check_against_sim(&before, &chain, &sys.mem, map::ARENA_BASE).is_err());
+}
+
+#[test]
+fn empty_chain_is_identity_through_the_kernel() {
+    let Some(arts) = artifacts() else { return };
+    let oracle = ChainOracle::new(&arts);
+    let image: Vec<i32> = (0..1024 * 16).map(|i| i as i32).collect();
+    let out = oracle.exec_chain(&image, &LineChain::default()).unwrap();
+    assert_eq!(out, image);
+}
+
+#[test]
+fn chain_capacity_is_enforced() {
+    let Some(arts) = artifacts() else { return };
+    let oracle = ChainOracle::new(&arts);
+    let image = vec![0i32; 1024 * 16];
+    let mut chain = LineChain::default();
+    for _ in 0..257 {
+        chain.push(0, 1);
+    }
+    assert!(oracle.exec_chain(&image, &chain).is_err());
+}
+
+#[test]
+fn gather_artifact_matches_sim_and_rust_oracle() {
+    let Some(arts) = artifacts() else { return };
+    let oracle = ChainOracle::new(&arts);
+    let trace = SparseGather::random(512, 0x6A7);
+    // Simulator path.
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+    SparseGather::install_table(&mut sys.mem);
+    sys.load_and_launch(0, &trace.chain());
+    sys.run_until_idle().unwrap();
+    let sim = trace.read_result(&sys.mem);
+    // PJRT path.
+    let mut table = Vec::new();
+    for r in 0..idmac::workload::sparse::TABLE_ROWS {
+        for c in 0..idmac::workload::sparse::TABLE_COLS {
+            table.push(SparseGather::table_value(r, c));
+        }
+    }
+    let pjrt = oracle.gather(&table, &trace.indices).unwrap();
+    assert_eq!(sim, pjrt[..sim.len()]);
+}
+
+#[test]
+fn util_model_artifact_matches_rust_reimplementation() {
+    let Some(arts) = artifacts() else { return };
+    let oracle = UtilModelOracle::new(&arts);
+    let sizes: [f32; 10] = [8., 16., 32., 64., 128., 256., 512., 1024., 2048., 4096.];
+    for (lat, d, s, h) in [(1.0f32, 4, 0, 1.0f32), (13.0, 4, 4, 1.0), (100.0, 24, 24, 0.5)] {
+        let curves = oracle.eval(&sizes, lat, d as f32, s as f32, h).unwrap();
+        let rust = UtilizationModel::new(lat as f64, d, s, h as f64);
+        for (i, &n) in sizes.iter().enumerate() {
+            let want_ideal = idmac::model::ideal_utilization(n as f64);
+            assert!((curves.ideal[i] as f64 - want_ideal).abs() < 1e-5);
+            assert!(
+                (curves.ours[i] as f64 - rust.ours(n as f64)).abs() < 1e-4,
+                "ours mismatch at n={n} lat={lat}: jax {} vs rust {}",
+                curves.ours[i],
+                rust.ours(n as f64)
+            );
+            assert!(
+                (curves.logicore[i] as f64 - rust.logicore(n as f64)).abs() < 1e-4,
+                "logicore mismatch at n={n}"
+            );
+        }
+    }
+}
