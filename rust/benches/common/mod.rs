@@ -32,6 +32,9 @@ impl BenchTimer {
 }
 
 /// Print a paper-vs-measured ratio line with a band verdict.
+/// (Not every bench target uses it — `mod common` is compiled per
+/// bench, so the unused copies must not trip `-D warnings`.)
+#[allow(dead_code)]
 pub fn check_ratio(label: &str, measured: f64, paper: f64, lo: f64, hi: f64) {
     let verdict = if measured >= lo && measured <= hi { "OK (shape holds)" } else { "DEVIATION (see EXPERIMENTS.md)" };
     println!("{label}: measured {measured:.2}x vs paper {paper:.2}x — {verdict}");

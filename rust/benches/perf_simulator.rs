@@ -1,6 +1,9 @@
 //! Simulator performance bench (§Perf in EXPERIMENTS.md): simulated
-//! Mcycles/s of the L3 hot loop across representative workloads.  This
-//! is the harness used for the optimization pass — not a paper figure.
+//! Mcycles/s of the L3 hot loop across representative workloads, in
+//! both execution modes — the naive per-cycle tick loop and the
+//! event-horizon fast-forward scheduler — plus the Fig. 4c grid
+//! before/after comparison.  Emits `BENCH_sim_throughput.json` so the
+//! perf trajectory is tracked PR over PR.  Not a paper figure.
 
 mod common;
 
@@ -8,47 +11,126 @@ use common::BenchTimer;
 use idmac::dmac::DmacConfig;
 use idmac::mem::LatencyProfile;
 use idmac::report::experiments as exp;
+use idmac::report::{ThroughputEntry, ThroughputReport};
 use idmac::workload::Sweep;
-use std::time::Instant;
 
-fn bench_case(name: &str, cfg: DmacConfig, profile: LatencyProfile, sweep: Sweep) -> (u64, f64) {
-    // Warm-up run, then 3 timed repetitions; report best.
-    let _ = exp::run_ours(cfg, profile, sweep);
-    let mut best = f64::INFINITY;
-    let mut cycles = 0;
+struct Case {
+    name: &'static str,
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    sweep: Sweep,
+}
+
+/// Warm-up run, then 3 timed repetitions; report best.
+fn bench_case(case: &Case, naive: bool, report: &mut ThroughputReport) -> (u64, f64) {
+    let _ = exp::run_ours_timed(case.cfg, case.profile, case.sweep, naive);
+    let mut best: Option<exp::TimedRun> = None;
     for _ in 0..3 {
-        let t0 = Instant::now();
-        let stats = exp::run_ours(cfg, profile, sweep);
-        let dt = t0.elapsed().as_secs_f64();
-        cycles = stats.end_cycle;
-        best = best.min(dt);
+        let r = exp::run_ours_timed(case.cfg, case.profile, case.sweep, naive);
+        if best.as_ref().map_or(true, |b| r.wall_seconds < b.wall_seconds) {
+            best = Some(r);
+        }
     }
+    let best = best.unwrap();
+    let cycles = best.stats.end_cycle;
+    let mode = if naive { "naive" } else { "fast_forward" };
     println!(
-        "{name:<40} {cycles:>9} cycles  {:>7.1} Mcycles/s  ({:.4}s)",
-        cycles as f64 / best / 1e6,
-        best
+        "{:<40} {cycles:>9} cycles  {:>8.1} Mcycles/s  ({:.4}s, {} jumps, {} skipped) [{mode}]",
+        case.name,
+        cycles as f64 / best.wall_seconds.max(1e-9) / 1e6,
+        best.wall_seconds,
+        best.ff_jumps,
+        best.ff_skipped_cycles,
     );
-    (cycles, best)
+    report.push(ThroughputEntry {
+        label: case.name.into(),
+        profile: case.profile.name(),
+        config: case.cfg.name().into(),
+        mode,
+        simulated_cycles: cycles,
+        wall_seconds: best.wall_seconds,
+        ff_jumps: best.ff_jumps,
+        ff_skipped_cycles: best.ff_skipped_cycles,
+    });
+    (cycles, best.wall_seconds)
 }
 
 fn main() {
     let t = BenchTimer::start("perf_simulator");
+    let cases = [
+        Case {
+            name: "base/ideal/64B x1000",
+            cfg: DmacConfig::base(),
+            profile: LatencyProfile::Ideal,
+            sweep: Sweep::new(1000, 64),
+        },
+        Case {
+            name: "spec/ddr3/64B x1000",
+            cfg: DmacConfig::speculation(),
+            profile: LatencyProfile::Ddr3,
+            sweep: Sweep::new(1000, 64),
+        },
+        Case {
+            name: "scaled/deep/64B x1000",
+            cfg: DmacConfig::scaled(),
+            profile: LatencyProfile::UltraDeep,
+            sweep: Sweep::new(1000, 64),
+        },
+        Case {
+            name: "base/deep/64B x1000",
+            cfg: DmacConfig::base(),
+            profile: LatencyProfile::UltraDeep,
+            sweep: Sweep::new(1000, 64),
+        },
+        Case {
+            name: "scaled/ddr3/4KiB x500",
+            cfg: DmacConfig::scaled(),
+            profile: LatencyProfile::Ddr3,
+            sweep: Sweep::new(500, 4096),
+        },
+        Case {
+            name: "base/ideal/8B x2000",
+            cfg: DmacConfig::base(),
+            profile: LatencyProfile::Ideal,
+            sweep: Sweep::new(2000, 8),
+        },
+    ];
+
+    let mut report = ThroughputReport::new();
     let mut total_cycles = 0u64;
-    let mut total_time = 0.0f64;
-    for (name, cfg, profile, sweep) in [
-        ("base/ideal/64B x1000", DmacConfig::base(), LatencyProfile::Ideal, Sweep::new(1000, 64)),
-        ("spec/ddr3/64B x1000", DmacConfig::speculation(), LatencyProfile::Ddr3, Sweep::new(1000, 64)),
-        ("scaled/deep/64B x1000", DmacConfig::scaled(), LatencyProfile::UltraDeep, Sweep::new(1000, 64)),
-        ("scaled/ddr3/4KiB x500", DmacConfig::scaled(), LatencyProfile::Ddr3, Sweep::new(500, 4096)),
-        ("base/ideal/8B x2000", DmacConfig::base(), LatencyProfile::Ideal, Sweep::new(2000, 8)),
-    ] {
-        let (c, s) = bench_case(name, cfg, profile, sweep);
-        total_cycles += c;
-        total_time += s;
+    let mut total_fast = 0.0f64;
+    for case in &cases {
+        let (_, naive_wall) = bench_case(case, true, &mut report);
+        let (cycles, fast_wall) = bench_case(case, false, &mut report);
+        report.push_speedup(case.name, naive_wall, fast_wall);
+        println!(
+            "{:<40} fast-forward speedup {:.2}x",
+            case.name,
+            naive_wall / fast_wall.max(1e-9)
+        );
+        total_cycles += cycles;
+        total_fast += fast_wall;
+    }
+
+    // The acceptance measurement: the full Fig. 4c (ultra-deep) grid,
+    // serial, naive vs fast-forward (same emitter as the CLI's
+    // `bench-throughput`, so the JSON schema stays in one place).
+    let (g_naive, g_fast) =
+        exp::push_grid_comparison(&mut report, "fig4c-grid", LatencyProfile::UltraDeep);
+    println!(
+        "fig4c grid (ultra-deep): naive {g_naive:.3}s vs fast-forward {g_fast:.3}s \
+         = {:.2}x (target: >= 3x)",
+        g_naive / g_fast.max(1e-9)
+    );
+
+    let out = idmac::report::throughput::BENCH_FILE;
+    match report.write(out) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
     }
     println!(
-        "aggregate: {:.1} Mcycles/s over {} simulated cycles",
-        total_cycles as f64 / total_time / 1e6,
+        "aggregate (fast-forward): {:.1} Mcycles/s over {} simulated cycles",
+        total_cycles as f64 / total_fast.max(1e-9) / 1e6,
         total_cycles
     );
     t.finish(total_cycles);

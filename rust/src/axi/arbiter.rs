@@ -7,6 +7,7 @@
 //! starve the others.
 
 use super::Port;
+use crate::sim::{Cycle, Tickable};
 
 #[derive(Debug, Clone)]
 pub struct Arbiter {
@@ -42,6 +43,16 @@ impl Arbiter {
 
     pub fn grants(&self) -> u64 {
         self.grants
+    }
+}
+
+impl Tickable for Arbiter {
+    fn tick(&mut self, _now: Cycle) {}
+
+    /// Combinational: grants are made the cycle they are requested, so
+    /// the arbiter itself never schedules future work.
+    fn next_event(&self) -> Option<Cycle> {
+        None
     }
 }
 

@@ -9,6 +9,7 @@
 //! traffic).
 
 use super::Port;
+use crate::sim::{Cycle, Tickable};
 
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PortCounters {
@@ -31,6 +32,13 @@ impl BusMonitor {
 
     pub fn tick(&mut self) {
         self.cycles += 1;
+    }
+
+    /// Account `cycles` clock cycles at once — used by the event-
+    /// horizon scheduler when it fast-forwards across dead cycles, so
+    /// occupancy denominators stay identical to the naive tick loop.
+    pub fn advance(&mut self, cycles: u64) {
+        self.cycles += cycles;
     }
 
     pub fn count_read_beat(&mut self, port: Port, bytes: u32) {
@@ -61,6 +69,17 @@ impl BusMonitor {
     /// Total beats across all ports (read + write channels).
     pub fn total_beats(&self) -> u64 {
         self.counters.iter().map(|c| c.read_beats + c.write_beats).sum()
+    }
+}
+
+impl Tickable for BusMonitor {
+    fn tick(&mut self, _now: Cycle) {
+        BusMonitor::tick(self);
+    }
+
+    /// Purely observational: never initiates work.
+    fn next_event(&self) -> Option<Cycle> {
+        None
     }
 }
 

@@ -28,7 +28,7 @@ use crate::dmac::frontend::ParsedTransfer;
 use crate::dmac::Controller;
 use crate::mem::latency::BResp;
 use crate::mem::Memory;
-use crate::sim::{Cycle, RunStats};
+use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 use std::collections::VecDeque;
 
 /// 13 x 32-bit words = 416 bits.
@@ -145,7 +145,7 @@ impl LcChainBuilder {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct FetchInFlight {
     addr: u64,
     words_seen: u32,
@@ -154,7 +154,7 @@ struct FetchInFlight {
 
 /// The baseline controller (implements the same [`Controller`]
 /// interface as our DMAC, so the Fig. 3 testbench drives both).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct LogiCore {
     cfg: LcConfig,
     csr_queue: VecDeque<(Cycle, u64)>,
@@ -198,6 +198,29 @@ impl LogiCore {
 
     fn busy_with_chain(&self) -> bool {
         self.fetch.is_some() || self.pending_fetch.is_some() || self.ar_ready.is_some()
+    }
+}
+
+impl Tickable for LogiCore {
+    fn tick(&mut self, now: Cycle) {
+        Controller::step(self, now);
+    }
+
+    /// An AR-ready fetch or queued write-back retries the shared
+    /// channels every cycle (immediate); the launch pipeline, the
+    /// serialized chase and the descriptor→engine handoff carry
+    /// scheduled cycles.  The chase and launch entries are conservative
+    /// — both are additionally gated on window/chain state, which can
+    /// only wake the scheduler early.  A descriptor fetch streaming
+    /// beats is input-driven: the memory owns those events.
+    fn next_event(&self) -> Option<Cycle> {
+        if self.ar_ready.is_some() || !self.wb_queue.is_empty() {
+            return Some(0);
+        }
+        let mut h = self.csr_queue.front().map(|&(at, _)| at);
+        h = EventHorizon::merge(h, self.pending_fetch.map(|(at, _)| at));
+        h = EventHorizon::merge(h, self.handoff.front().map(|&(at, _)| at));
+        EventHorizon::merge(h, self.backend.next_event())
     }
 }
 

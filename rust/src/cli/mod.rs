@@ -91,6 +91,31 @@ impl Args {
         }
     }
 
+    /// `--threads N`: worker count for the parallel sweep executor.
+    /// Applied by exporting `IDMAC_THREADS`, which
+    /// `report::parallel::worker_threads` reads at each grid launch.
+    pub fn apply_threads(&self) -> Result<()> {
+        match self.get("threads") {
+            None => Ok(()),
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    Error::Cli(format!("--threads expects a positive integer, got `{v}`"))
+                })?;
+                if n == 0 {
+                    return Err(Error::Cli("--threads must be >= 1".into()));
+                }
+                std::env::set_var("IDMAC_THREADS", n.to_string());
+                Ok(())
+            }
+        }
+    }
+
+    /// `--naive`: run the per-cycle reference loop instead of the
+    /// event-horizon scheduler (throughput comparisons).
+    pub fn naive(&self) -> bool {
+        self.get_bool("naive")
+    }
+
     /// `--latency ideal|ddr3|ultradeep|<cycles>`.
     pub fn latency(&self) -> Result<LatencyProfile> {
         match self.get_or("latency", "ddr3").as_str() {
@@ -151,5 +176,18 @@ mod tests {
     fn positional_args() {
         let a = parse("run one two");
         assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn threads_flag_validation() {
+        assert!(parse("x --threads 0").apply_threads().is_err());
+        assert!(parse("x --threads two").apply_threads().is_err());
+        assert!(parse("x").apply_threads().is_ok(), "absent flag is a no-op");
+    }
+
+    #[test]
+    fn naive_flag() {
+        assert!(parse("x --naive").naive());
+        assert!(!parse("x").naive());
     }
 }

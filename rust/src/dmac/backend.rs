@@ -11,7 +11,7 @@
 use super::frontend::ParsedTransfer;
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT};
 use crate::mem::latency::BResp;
-use crate::sim::{Cycle, RunStats};
+use crate::sim::{Cycle, EventHorizon, MonotonicQueue, RunStats, Tickable};
 use std::collections::VecDeque;
 
 /// AXI4 bursts are capped at 256 beats.
@@ -38,7 +38,7 @@ pub struct TransferDone {
     pub irq: bool,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Backend {
     capacity: usize,
     strict_order: bool,
@@ -46,8 +46,9 @@ pub struct Backend {
     port: Port,
     /// Transfers accepted and not yet fully read (in order).
     active: VecDeque<Active>,
-    /// Write beats waiting on the 1-cycle r→w datapath: (ready, beat, bytes_of_transfer_done_after_this_beat is tracked via `last`).
-    write_pipe: VecDeque<(Cycle, WriteBeat, u64)>,
+    /// Write beats waiting on the 1-cycle r→w datapath, keyed by the
+    /// cycle they become issuable.
+    write_pipe: MonotonicQueue<WriteBeat>,
     /// Transfers whose last W beat is issued, awaiting the B response.
     awaiting_b: Vec<(u64, Active)>,
     completions: Vec<TransferDone>,
@@ -75,7 +76,7 @@ impl Backend {
             start_overhead,
             port,
             active: VecDeque::new(),
-            write_pipe: VecDeque::new(),
+            write_pipe: MonotonicQueue::new(),
             awaiting_b: Vec::new(),
             completions: Vec::new(),
             next_id: 0,
@@ -192,7 +193,7 @@ impl Backend {
             last,
         };
         // Table IV r-w: one cycle between reading and writing the data.
-        self.write_pipe.push_back((now + 1, w, a.id));
+        self.write_pipe.push_at(now + 1, w);
         if last {
             let done = self.active.remove(idx).unwrap();
             self.awaiting_b.push((done.id, done));
@@ -204,14 +205,9 @@ impl Backend {
     }
 
     pub fn pop_w(&mut self, now: Cycle, stats: &mut RunStats) -> Option<WriteBeat> {
-        match self.write_pipe.front() {
-            Some(&(ready, _, _)) if ready <= now => {
-                let (_, w, _) = self.write_pipe.pop_front().unwrap();
-                stats.payload_write_beats += 1;
-                Some(w)
-            }
-            _ => None,
-        }
+        let w = self.write_pipe.pop_ready(now)?;
+        stats.payload_write_beats += 1;
+        Some(w)
     }
 
     /// B response of the last write beat: the transfer is complete.
@@ -241,6 +237,36 @@ impl Backend {
             && self.write_pipe.is_empty()
             && self.awaiting_b.is_empty()
             && self.completions.is_empty()
+    }
+
+    /// Earliest cycle the engine acts without new input: undrained
+    /// completions are immediate work, the r→w datapath has a scheduled
+    /// issue cycle, and queued transfers become read-eligible at their
+    /// `eligible_at` (conservative in strict-order mode: the scan
+    /// ignores the oldest-everywhere gate, which only ever wakes the
+    /// scheduler early, never late).  Transfers awaiting their B
+    /// response are input-driven — the memory model owns that event.
+    pub fn next_event(&self) -> Option<Cycle> {
+        if !self.completions.is_empty() {
+            return Some(0);
+        }
+        let mut h = self.write_pipe.next_at();
+        if self.reads_pending > 0 {
+            let eligible = self
+                .active
+                .iter()
+                .filter(|a| a.read_issued < a.t.length as u64)
+                .map(|a| a.eligible_at)
+                .min();
+            h = EventHorizon::merge(h, eligible);
+        }
+        h
+    }
+}
+
+impl Tickable for Backend {
+    fn next_event(&self) -> Option<Cycle> {
+        Backend::next_event(self)
     }
 }
 
@@ -374,5 +400,24 @@ mod tests {
         b.accept(0, xfer(0x200, 0x300, 8));
         assert!(!b.has_space());
         assert_eq!(b.occupancy(), 2);
+    }
+
+    #[test]
+    fn next_event_follows_the_engine_pipeline() {
+        let mut b = Backend::new(4, false, 3);
+        let mut s = RunStats::default();
+        assert_eq!(b.next_event(), None, "idle engine");
+        b.accept(10, xfer(0, 0x100, 8));
+        assert_eq!(b.next_event(), Some(13), "start overhead gates the read");
+        let _ = b.pop_ar(13, &mut s).unwrap();
+        assert_eq!(b.next_event(), None, "waiting on memory only");
+        b.on_payload_beat(20, beat(0, 0, true), &mut s);
+        assert_eq!(b.next_event(), Some(21), "r->w datapath");
+        let _ = b.pop_w(21, &mut s).unwrap();
+        assert_eq!(b.next_event(), None, "awaiting B is input-driven");
+        b.on_write_b(30, BResp { port: Port::Backend, tag: 0 }, &mut s);
+        assert_eq!(b.next_event(), Some(0), "undrained completion is immediate work");
+        b.drain_completions();
+        assert_eq!(b.next_event(), None);
     }
 }

@@ -17,9 +17,13 @@
 
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
 use crate::mem::latency::BResp;
-use crate::sim::{Cycle, RunStats};
+use crate::sim::{Cycle, RunStats, Tickable};
 
-pub trait Controller {
+/// Every controller is also [`Tickable`]: `next_event` reports the
+/// earliest cycle its internal state machines act without new memory
+/// responses, which is what lets `tb::System` fast-forward across dead
+/// latency windows (see `sim::tickable`).
+pub trait Controller: Tickable {
     /// Memory-mapped CSR write: launch the chain headed at `desc_addr`.
     fn csr_write(&mut self, now: Cycle, desc_addr: u64);
 

@@ -23,7 +23,7 @@ use super::config::DmacConfig;
 use super::descriptor::{Descriptor, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN};
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
 use crate::mem::latency::BResp;
-use crate::sim::{Cycle, RunStats};
+use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 use std::collections::VecDeque;
 
 /// One outstanding (or grant-pending) descriptor fetch.
@@ -56,7 +56,7 @@ struct Writeback {
     irq: bool,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Frontend {
     cfg: DmacConfig,
     /// CSR launch queue: (eligible_cycle, chain head address).
@@ -427,6 +427,36 @@ impl Frontend {
     pub fn fetch_occupancy(&self) -> (usize, usize) {
         (self.live_fetches(), self.spec_outstanding())
     }
+
+    /// Earliest cycle the frontend acts without new input.  Grant-
+    /// pending fetches, a parked chase and queued write-backs are
+    /// immediate work (they retry the shared AR/W channels every
+    /// cycle); launches and the parse→handoff pipe carry scheduled
+    /// cycles.  Fetches already granted and write-backs already issued
+    /// are input-driven — the memory's response pipes own those events.
+    /// The launch entry is conservative: eligibility is also gated by
+    /// chain/window state, so the reported cycle can only be early,
+    /// never late.
+    pub fn next_event(&self) -> Option<Cycle> {
+        if self.granted_count < self.fetches.len()
+            || self.pending_chase.is_some()
+            || !self.wb_queue.is_empty()
+        {
+            return Some(0);
+        }
+        EventHorizon::merge(
+            self.csr_queue.front().map(|&(at, _)| at),
+            self.handoff.front().map(|&(at, _)| at),
+        )
+    }
+}
+
+impl Tickable for Frontend {
+    // `tick` stays the default no-op: the frontend steps through
+    // `Frontend::step`, which needs the backend queue and run stats.
+    fn next_event(&self) -> Option<Cycle> {
+        Frontend::next_event(self)
+    }
 }
 
 #[cfg(test)]
@@ -594,6 +624,25 @@ mod tests {
         f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
         assert_eq!(f.take_irq(), 1);
         assert_eq!(f.take_irq(), 0);
+    }
+
+    #[test]
+    fn next_event_reports_launch_and_handoff_deadlines() {
+        let mut f = fe(0);
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        assert_eq!(f.next_event(), None, "idle frontend");
+        f.csr_write(5, 0x1000);
+        assert_eq!(f.next_event(), Some(8), "launch pipeline deadline");
+        f.step(8, &mut b, &mut s);
+        assert_eq!(f.next_event(), Some(0), "grant-pending fetch is immediate");
+        let _ = f.pop_ar(8, &mut s).unwrap();
+        assert_eq!(f.next_event(), None, "granted fetch waits on memory");
+        let d = Descriptor::new(0x8000, 0x9000, 64);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(f.next_event(), Some(13), "parse->handoff pipe");
+        f.step(13, &mut b, &mut s);
+        assert_eq!(f.next_event(), None);
     }
 
     #[test]

@@ -23,11 +23,11 @@ pub use frontend::Frontend;
 
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
 use crate::mem::latency::BResp;
-use crate::sim::{Cycle, RunStats};
+use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 
 /// Our DMAC: frontend + backend glued through the handoff and
 /// completion queues (Fig. 1).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Dmac {
     pub frontend: Frontend,
     pub backend: Backend,
@@ -45,6 +45,16 @@ impl Dmac {
 
     pub fn config(&self) -> DmacConfig {
         self.frontend.config()
+    }
+}
+
+impl Tickable for Dmac {
+    fn tick(&mut self, now: Cycle) {
+        Controller::step(self, now);
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        EventHorizon::merge(self.frontend.next_event(), self.backend.next_event())
     }
 }
 

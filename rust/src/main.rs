@@ -6,11 +6,16 @@
 //! idmac fig5
 //! idmac table1|table2|table3|table4
 //! idmac sweep --config base|speculation|scaled|DxS --latency … --size N
-//!             [--transfers N] [--hit-rate F]
+//!             [--transfers N] [--hit-rate F] [--naive]
+//! idmac bench-throughput [--out FILE]   # writes BENCH_sim_throughput.json
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
 //! idmac all     # every table + figure in paper order
 //! ```
+//!
+//! Global flags: `--threads N` caps the parallel sweep executor,
+//! `--naive` selects the per-cycle reference loop over the
+//! event-horizon scheduler where applicable.
 
 use idmac::cli::Args;
 use idmac::dmac::DmacConfig;
@@ -37,6 +42,7 @@ fn main() {
 }
 
 fn run(args: &Args) -> idmac::Result<()> {
+    args.apply_threads()?;
     match args.command.as_deref() {
         Some("fig4") => {
             exp::table1().print();
@@ -51,6 +57,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("table3") => exp::table3().print(),
         Some("table4") => exp::table4().print(),
         Some("sweep") => sweep(args)?,
+        Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
         Some("soc-demo") => soc_demo(args)?,
         Some("all") => {
@@ -73,8 +80,8 @@ fn run(args: &Args) -> idmac::Result<()> {
     Ok(())
 }
 
-const USAGE: &str =
-    "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|oracle-check|soc-demo|all> [flags]";
+const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|bench-throughput|\
+                     oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
 
 fn sweep(args: &Args) -> idmac::Result<()> {
     let cfg = args.dmac_config()?;
@@ -82,21 +89,24 @@ fn sweep(args: &Args) -> idmac::Result<()> {
     let size = args.get_usize("size", 64)? as u32;
     let transfers = args.get_usize("transfers", exp::CHAIN_LEN)?;
     let hit_rate = args.get_f64("hit-rate", 1.0)?;
+    let naive = args.naive();
     let sweep = Sweep::new(transfers, size);
-    let stats = if hit_rate >= 1.0 {
-        exp::run_ours(cfg, profile, sweep)
+    let timed = if hit_rate >= 1.0 {
+        exp::run_ours_timed(cfg, profile, sweep, naive)
     } else {
-        exp::run_ours_hitrate(cfg, profile, sweep, hit_rate, 0x51)
+        exp::run_ours_hitrate_timed(cfg, profile, sweep, hit_rate, 0x51, naive)
     };
+    let stats = &timed.stats;
     let lc = exp::run_logicore(profile, sweep);
     let ideal = idmac::model::ideal_utilization(size as f64);
     println!(
-        "config={} latency={} size={}B transfers={} hit_rate={:.2}",
+        "config={} latency={} size={}B transfers={} hit_rate={:.2} mode={}",
         cfg.name(),
         profile.name(),
         size,
         transfers,
-        hit_rate
+        hit_rate,
+        if naive { "naive" } else { "fast-forward" },
     );
     println!(
         "ours: utilization={:.3} (ideal {:.3}); spec hits/misses {}/{}; wasted desc beats {}",
@@ -111,6 +121,38 @@ fn sweep(args: &Args) -> idmac::Result<()> {
         lc.steady_utilization(),
         stats.steady_utilization() / lc.steady_utilization()
     );
+    // §Perf: wall-clock simulator throughput of this sweep.
+    println!(
+        "sim throughput: {} cycles in {:.4}s = {:.1} Mcycles/s \
+         ({} fast-forward jumps, {} dead cycles skipped)",
+        stats.end_cycle,
+        timed.wall_seconds,
+        stats.end_cycle as f64 / timed.wall_seconds.max(1e-9) / 1e6,
+        timed.ff_jumps,
+        timed.ff_skipped_cycles,
+    );
+    Ok(())
+}
+
+/// Measure simulated-cycles-per-second across the three memory
+/// profiles, naive vs fast-forward, and emit `BENCH_sim_throughput.json`
+/// so the perf trajectory is tracked PR over PR (EXPERIMENTS.md §Perf).
+fn bench_throughput(args: &Args) -> idmac::Result<()> {
+    use idmac::report::ThroughputReport;
+
+    let out = args.get_or("out", idmac::report::throughput::BENCH_FILE);
+    let mut report = ThroughputReport::new();
+    for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
+        let label = format!("fig4-grid/{}", profile.name());
+        let (naive_s, fast_s) = exp::push_grid_comparison(&mut report, &label, profile);
+        println!(
+            "{label:<40} naive {naive_s:>8.3}s  fast-forward {fast_s:>8.3}s  \
+             speedup {:.2}x",
+            naive_s / fast_s.max(1e-9)
+        );
+    }
+    report.write(&out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

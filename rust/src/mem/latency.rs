@@ -1,7 +1,7 @@
 //! The latency-configurable memory model.
 
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT};
-use crate::sim::Cycle;
+use crate::sim::{Cycle, EventHorizon, MonotonicQueue, Tickable};
 use std::collections::VecDeque;
 
 /// The paper's three memory-system profiles (§III-A).
@@ -37,15 +37,10 @@ impl LatencyProfile {
     }
 }
 
-#[derive(Debug, Clone, Copy)]
-struct ScheduledBeat {
-    deliver_at: Cycle,
-    beat: RBeat,
-}
-
+/// A write beat travelling the request pipe; its apply cycle is the
+/// schedule key of the monotonic queue that carries it.
 #[derive(Debug, Clone, Copy)]
 struct ScheduledWrite {
-    apply_at: Cycle,
     addr: u64,
     data: [u8; 8],
     bytes: u32,
@@ -94,10 +89,14 @@ pub struct Memory {
     r_pending_beats: usize,
     r_rr: usize,
     /// Served beats in flight on the response pipe (service order, so
-    /// delivery times are monotone).
-    r_out: VecDeque<ScheduledBeat>,
-    w_queue: VecDeque<ScheduledWrite>,
-    b_queue: VecDeque<(Cycle, BResp)>,
+    /// delivery times are monotone — one serve per cycle, constant L).
+    r_out: MonotonicQueue<RBeat>,
+    /// Write beats in flight on the request pipe, keyed by apply cycle.
+    /// Monotone pop: a cycle's drain costs O(writes due), independent
+    /// of how many writes are outstanding behind a deep latency.
+    w_queue: MonotonicQueue<ScheduledWrite>,
+    /// B responses in flight on the response pipe.
+    b_queue: MonotonicQueue<BResp>,
     last_w_cycle: Option<Cycle>,
     pub reads_accepted: u64,
     pub writes_accepted: u64,
@@ -111,9 +110,9 @@ impl Memory {
             r_pending: Vec::new(),
             r_pending_beats: 0,
             r_rr: 0,
-            r_out: VecDeque::new(),
-            w_queue: VecDeque::new(),
-            b_queue: VecDeque::new(),
+            r_out: MonotonicQueue::new(),
+            w_queue: MonotonicQueue::new(),
+            b_queue: MonotonicQueue::new(),
             last_w_cycle: None,
             reads_accepted: 0,
             writes_accepted: 0,
@@ -183,9 +182,9 @@ impl Memory {
                 let m = end - b.addr as usize;
                 data[..m].copy_from_slice(&self.bytes[b.addr as usize..end]);
             }
-            self.r_out.push_back(ScheduledBeat {
-                deliver_at: now + self.latency,
-                beat: RBeat {
+            self.r_out.push_at(
+                now + self.latency,
+                RBeat {
                     port: p,
                     tag: b.tag,
                     beat: b.beat_idx,
@@ -193,7 +192,7 @@ impl Memory {
                     data,
                     bytes: b.bytes,
                 },
-            });
+            );
             self.r_rr = (idx + 1) % n;
             return;
         }
@@ -202,10 +201,7 @@ impl Memory {
     /// Pop the R beat deliverable this cycle, if any (at most one — the
     /// R channel carries one beat per cycle by construction).
     pub fn pop_read_beat(&mut self, now: Cycle) -> Option<RBeat> {
-        match self.r_out.front() {
-            Some(s) if s.deliver_at <= now => Some(self.r_out.pop_front().unwrap().beat),
-            _ => None,
-        }
+        self.r_out.pop_ready(now)
     }
 
     /// Accept a write beat (fused AW+W) at cycle `now`.  One beat per
@@ -217,23 +213,22 @@ impl Memory {
         );
         self.last_w_cycle = Some(now);
         self.writes_accepted += 1;
-        self.w_queue.push_back(ScheduledWrite {
-            apply_at: now + self.latency,
-            addr: w.addr,
-            data: w.data,
-            bytes: w.bytes,
-            port: w.port,
-            tag: w.tag,
-            last: w.last,
-        });
+        self.w_queue.push_at(
+            now + self.latency,
+            ScheduledWrite {
+                addr: w.addr,
+                data: w.data,
+                bytes: w.bytes,
+                port: w.port,
+                tag: w.tag,
+                last: w.last,
+            },
+        );
     }
 
     /// Pop a write response (B) deliverable this cycle, if any.
     pub fn pop_b(&mut self, now: Cycle) -> Option<BResp> {
-        match self.b_queue.front() {
-            Some((c, _)) if *c <= now => Some(self.b_queue.pop_front().unwrap().1),
-            _ => None,
-        }
+        self.b_queue.pop_ready(now)
     }
 
     /// Advance internal pipelines to cycle `now`: serve one read beat,
@@ -241,11 +236,7 @@ impl Memory {
     /// for last beats.
     pub fn tick(&mut self, now: Cycle) {
         self.serve_read(now);
-        while let Some(w) = self.w_queue.front() {
-            if w.apply_at > now {
-                break;
-            }
-            let w = self.w_queue.pop_front().unwrap();
+        while let Some(w) = self.w_queue.pop_ready(now) {
             let addr = w.addr as usize;
             let n = (w.bytes as usize).min(8);
             if addr < self.bytes.len() {
@@ -254,8 +245,7 @@ impl Memory {
             }
             if w.last {
                 // B response travels back through the response pipe.
-                self.b_queue
-                    .push_back((now + self.latency, BResp { port: w.port, tag: w.tag }));
+                self.b_queue.push_at(now + self.latency, BResp { port: w.port, tag: w.tag });
             }
         }
     }
@@ -266,6 +256,53 @@ impl Memory {
             && self.r_out.is_empty()
             && self.w_queue.is_empty()
             && self.b_queue.is_empty()
+    }
+
+    /// Earliest cycle at which any pipeline stage has scheduled work:
+    /// the oldest pending beat finishing its request-pipe traversal, an
+    /// R beat or B response reaching the delivery end of the response
+    /// pipe, or a write reaching the array.
+    pub fn next_event(&self) -> Option<Cycle> {
+        let mut h = self.r_out.next_at();
+        h = EventHorizon::merge(h, self.w_queue.next_at());
+        h = EventHorizon::merge(h, self.b_queue.next_at());
+        if self.r_pending_beats > 0 {
+            let served = self
+                .r_pending
+                .iter()
+                .filter_map(|(_, q)| q.front().map(|b| b.ready_at))
+                .min();
+            h = EventHorizon::merge(h, served);
+        }
+        h
+    }
+
+    /// Defense-in-depth for the fast-forward scheduler (debug builds):
+    /// verify directly against the queues that no pipeline deadline
+    /// falls strictly before `to`, so a horizon-merge bug in a caller
+    /// trips here instead of silently skipping work.
+    #[cfg(debug_assertions)]
+    pub(crate) fn debug_assert_quiet_before(&self, to: Cycle) {
+        let quiet = |c: Option<Cycle>| c.map_or(true, |at| at >= to);
+        debug_assert!(quiet(self.r_out.next_at()), "R delivery inside a fast-forward window");
+        debug_assert!(quiet(self.w_queue.next_at()), "write apply inside a fast-forward window");
+        debug_assert!(quiet(self.b_queue.next_at()), "B delivery inside a fast-forward window");
+        debug_assert!(
+            self.r_pending
+                .iter()
+                .all(|(_, q)| q.front().map_or(true, |b| b.ready_at >= to)),
+            "read service inside a fast-forward window"
+        );
+    }
+}
+
+impl Tickable for Memory {
+    fn tick(&mut self, now: Cycle) {
+        Memory::tick(self, now);
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        Memory::next_event(self)
     }
 }
 
@@ -479,5 +516,42 @@ mod tests {
     fn backdoor_oob_panics() {
         let m = mem(1);
         m.backdoor_read(4096, 1);
+    }
+
+    #[test]
+    fn next_event_tracks_pipeline_deadlines() {
+        let mut m = mem(5);
+        assert_eq!(m.next_event(), None, "idle memory has no events");
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x100, 1));
+        assert_eq!(m.next_event(), Some(5), "request-pipe traversal");
+        for now in 0..=5 {
+            m.tick(now);
+        }
+        assert_eq!(m.next_event(), Some(10), "response-pipe delivery");
+        assert!(m.pop_read_beat(9).is_none());
+        assert!(m.pop_read_beat(10).is_some());
+        assert!(m.quiescent());
+        assert_eq!(m.next_event(), None);
+    }
+
+    #[test]
+    fn next_event_covers_writes_and_b_responses() {
+        let mut m = mem(7);
+        m.push_write(
+            3,
+            WriteBeat {
+                port: Port::Backend,
+                tag: 1,
+                addr: 0x200,
+                data: [1; 8],
+                bytes: 8,
+                last: true,
+            },
+        );
+        assert_eq!(m.next_event(), Some(10), "write reaches the array at 3+7");
+        m.tick(10);
+        assert_eq!(m.next_event(), Some(17), "B response pipe");
+        assert_eq!(m.pop_b(17), Some(BResp { port: Port::Backend, tag: 1 }));
+        assert!(m.quiescent());
     }
 }

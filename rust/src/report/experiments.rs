@@ -9,10 +9,12 @@ use crate::dmac::{Dmac, DmacConfig};
 use crate::mem::backdoor::fill_pattern;
 use crate::mem::LatencyProfile;
 use crate::model::{AreaModel, FpgaModel, UtilizationModel};
+use crate::report::parallel::par_map;
 use crate::report::{Series, Table};
 use crate::sim::RunStats;
 use crate::tb::System;
 use crate::workload::{HitRateLayout, Sweep};
+use std::time::Instant;
 
 /// Transfer sizes swept in Fig. 4/5 (bytes).
 pub const FIG_SIZES: [u32; 10] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
@@ -83,6 +85,125 @@ pub fn run_logicore(profile: LatencyProfile, sweep: Sweep) -> RunStats {
     sys.run_until_idle().expect("logicore run")
 }
 
+/// One timed simulator run (§Perf reporting): wall-clock plus the
+/// event-horizon bookkeeping of the run.
+#[derive(Debug, Clone)]
+pub struct TimedRun {
+    pub stats: RunStats,
+    pub wall_seconds: f64,
+    pub ff_jumps: u64,
+    pub ff_skipped_cycles: u64,
+}
+
+fn timed<C: crate::dmac::Controller>(mut sys: System<C>, naive: bool) -> TimedRun {
+    let t0 = Instant::now();
+    let stats = if naive {
+        sys.run_until_idle_naive().expect("timed run (naive)")
+    } else {
+        sys.run_until_idle().expect("timed run")
+    };
+    TimedRun {
+        stats,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        ff_jumps: sys.horizon.jumps,
+        ff_skipped_cycles: sys.horizon.skipped_cycles,
+    }
+}
+
+/// Timed uniform sweep on our DMAC; `naive` selects the per-cycle
+/// reference loop instead of the event-horizon scheduler.
+pub fn run_ours_timed(
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    sweep: Sweep,
+    naive: bool,
+) -> TimedRun {
+    let mut sys = System::new(profile, Dmac::new(cfg));
+    prepare_payload(&mut sys.mem, sweep);
+    sys.load_and_launch(0, &sweep.chain());
+    timed(sys, naive)
+}
+
+/// Timed hit-rate-controlled sweep on our DMAC (chain generation is
+/// excluded from the measured wall-clock).
+pub fn run_ours_hitrate_timed(
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    sweep: Sweep,
+    hit_rate: f64,
+    seed: u64,
+    naive: bool,
+) -> TimedRun {
+    let mut sys = System::new(profile, Dmac::new(cfg));
+    prepare_payload(&mut sys.mem, sweep);
+    let (chain, _) = HitRateLayout::new(sweep, hit_rate, seed).chain();
+    sys.load_and_launch(0, &chain);
+    timed(sys, naive)
+}
+
+/// Timed sweep on the LogiCORE baseline.
+pub fn run_logicore_timed(profile: LatencyProfile, sweep: Sweep, naive: bool) -> TimedRun {
+    let mut sys = System::new(profile, LogiCore::new(LcConfig::default()));
+    prepare_payload(&mut sys.mem, sweep);
+    let head = sweep.lc_chain().write_to(&mut sys.mem);
+    sys.schedule_launch(0, head);
+    timed(sys, naive)
+}
+
+/// Run the full Fig. 4 grid (all sizes, LogiCORE + the three Table I
+/// configurations) *serially* in one mode, returning total simulated
+/// cycles and wall-clock seconds.  Serial on purpose: this is the
+/// before/after measurement of the fast-forward scheduler itself, so
+/// the parallel executor must not pollute it.
+pub fn grid_cycles_and_wall(profile: LatencyProfile, naive: bool) -> (u64, f64) {
+    let mut cycles = 0u64;
+    let mut wall = 0.0f64;
+    for &size in FIG_SIZES.iter() {
+        let sweep = Sweep::new(CHAIN_LEN, size);
+        let lc = run_logicore_timed(profile, sweep, naive);
+        cycles += lc.stats.end_cycle;
+        wall += lc.wall_seconds;
+        for cfg in DmacConfig::paper_configs() {
+            let r = run_ours_timed(cfg, profile, sweep, naive);
+            cycles += r.stats.end_cycle;
+            wall += r.wall_seconds;
+        }
+    }
+    (cycles, wall)
+}
+
+/// Config label shared by every grid-level throughput entry.
+pub const GRID_CONFIG_LABEL: &str = "grid(logicore+base+speculation+scaled)";
+
+/// Measure the full Fig. 4 grid in both execution modes, append the
+/// two [`ThroughputEntry`]s and the speedup to `report`, and return
+/// `(naive_seconds, fast_seconds)`.  Single emitter shared by the CLI
+/// `bench-throughput` subcommand and the `perf_simulator` bench so
+/// the JSON schema cannot desynchronize between them.
+pub fn push_grid_comparison(
+    report: &mut crate::report::ThroughputReport,
+    label: &str,
+    profile: LatencyProfile,
+) -> (f64, f64) {
+    let mut walls = [0.0f64; 2];
+    for (slot, naive) in [(0usize, true), (1usize, false)] {
+        let (cycles, secs) = grid_cycles_and_wall(profile, naive);
+        walls[slot] = secs;
+        report.push(crate::report::ThroughputEntry {
+            label: label.to_string(),
+            profile: profile.name(),
+            config: GRID_CONFIG_LABEL.into(),
+            mode: if naive { "naive" } else { "fast_forward" },
+            simulated_cycles: cycles,
+            wall_seconds: secs,
+            ff_jumps: 0,
+            ff_skipped_cycles: 0,
+        });
+    }
+    report.push_speedup(label, walls[0], walls[1]);
+    (walls[0], walls[1])
+}
+
 fn prepare_payload(mem: &mut crate::mem::Memory, sweep: Sweep) {
     // Seed only the first transfer's source: payload *values* don't
     // influence timing, and the correctness tests seed fully.
@@ -102,20 +223,31 @@ pub fn fig4(profile: LatencyProfile) -> Series {
         "ideal",
         x.iter().map(|&n| crate::model::ideal_utilization(n)).collect(),
     );
-    let mut lc = Vec::new();
-    let mut cols: Vec<(DmacConfig, Vec<f64>)> = DmacConfig::paper_configs()
-        .into_iter()
-        .map(|c| (c, Vec::new()))
-        .collect();
+    // One task per (size, device): every grid point is an independent
+    // simulation, executed on the scoped-thread pool (§Perf).  Results
+    // are reassembled by index, so column order and values are
+    // identical to the serial sweep.
+    let cfgs = DmacConfig::paper_configs();
+    let per_size = 1 + cfgs.len();
+    let mut tasks: Vec<(u32, Option<DmacConfig>)> = Vec::with_capacity(FIG_SIZES.len() * per_size);
     for &size in FIG_SIZES.iter() {
-        let sweep = Sweep::new(CHAIN_LEN, size);
-        lc.push(run_logicore(profile, sweep).steady_utilization());
-        for (cfg, ys) in cols.iter_mut() {
-            ys.push(run_ours(*cfg, profile, sweep).steady_utilization());
+        tasks.push((size, None));
+        for cfg in cfgs {
+            tasks.push((size, Some(cfg)));
         }
     }
+    let results = par_map(tasks, |_, (size, cfg)| {
+        let sweep = Sweep::new(CHAIN_LEN, size);
+        match cfg {
+            None => run_logicore(profile, sweep).steady_utilization(),
+            Some(cfg) => run_ours(cfg, profile, sweep).steady_utilization(),
+        }
+    });
+    let lc: Vec<f64> = (0..FIG_SIZES.len()).map(|i| results[i * per_size]).collect();
     series.column("LogiCORE", lc);
-    for (cfg, ys) in cols {
+    for (k, cfg) in cfgs.into_iter().enumerate() {
+        let ys: Vec<f64> =
+            (0..FIG_SIZES.len()).map(|i| results[i * per_size + 1 + k]).collect();
         series.column(cfg.name(), ys);
     }
     // Analytic cross-check column for the speculation configuration.
@@ -138,28 +270,38 @@ pub fn fig5() -> Series {
         "ideal",
         x.iter().map(|&n| crate::model::ideal_utilization(n)).collect(),
     );
-    for (i, hr) in [1.0, 0.75, 0.5, 0.25, 0.0].into_iter().enumerate() {
-        let ys: Vec<f64> = FIG_SIZES
-            .iter()
-            .map(|&size| {
-                run_ours_hitrate(
-                    DmacConfig::speculation(),
-                    LatencyProfile::Ddr3,
-                    Sweep::new(CHAIN_LEN, size),
-                    hr,
-                    0xF16_5 + i as u64,
-                )
-                .steady_utilization()
-            })
-            .collect();
+    // Hit-rate rows and the LogiCORE baseline as one parallel grid
+    // (same seeds per row as the serial sweep, so values are
+    // bit-identical).
+    const HIT_RATES: [f64; 5] = [1.0, 0.75, 0.5, 0.25, 0.0];
+    let n_sizes = FIG_SIZES.len();
+    let mut tasks: Vec<(usize, u32, Option<f64>)> =
+        Vec::with_capacity((HIT_RATES.len() + 1) * n_sizes);
+    for (i, hr) in HIT_RATES.into_iter().enumerate() {
+        for &size in FIG_SIZES.iter() {
+            tasks.push((i, size, Some(hr)));
+        }
+    }
+    for &size in FIG_SIZES.iter() {
+        tasks.push((0, size, None));
+    }
+    let results = par_map(tasks, |_, (i, size, hr)| match hr {
+        Some(hr) => run_ours_hitrate(
+            DmacConfig::speculation(),
+            LatencyProfile::Ddr3,
+            Sweep::new(CHAIN_LEN, size),
+            hr,
+            0xF16_5 + i as u64,
+        )
+        .steady_utilization(),
+        None => run_logicore(LatencyProfile::Ddr3, Sweep::new(CHAIN_LEN, size))
+            .steady_utilization(),
+    });
+    for (i, hr) in HIT_RATES.into_iter().enumerate() {
+        let ys = results[i * n_sizes..(i + 1) * n_sizes].to_vec();
         series.column(&format!("hit={:.0}%", hr * 100.0), ys);
     }
-    let lc: Vec<f64> = FIG_SIZES
-        .iter()
-        .map(|&size| {
-            run_logicore(LatencyProfile::Ddr3, Sweep::new(CHAIN_LEN, size)).steady_utilization()
-        })
-        .collect();
+    let lc = results[HIT_RATES.len() * n_sizes..].to_vec();
     series.column("LogiCORE", lc);
     series
 }
@@ -386,5 +528,36 @@ mod tests {
         assert!(table1().render().contains("speculation"));
         assert!(table2().render().contains("kGE"));
         assert!(table3().render().contains("LogiCORE"));
+    }
+
+    #[test]
+    fn parallel_sweep_points_match_serial() {
+        let sweep = Sweep::new(32, 64);
+        let serial = [
+            run_ours(DmacConfig::base(), LatencyProfile::Ddr3, sweep).steady_utilization(),
+            run_logicore(LatencyProfile::Ddr3, sweep).steady_utilization(),
+        ];
+        let parallel = crate::report::par_map(vec![true, false], |_, ours| {
+            if ours {
+                run_ours(DmacConfig::base(), LatencyProfile::Ddr3, sweep)
+                    .steady_utilization()
+            } else {
+                run_logicore(LatencyProfile::Ddr3, sweep).steady_utilization()
+            }
+        });
+        assert_eq!(serial.as_slice(), parallel.as_slice());
+    }
+
+    #[test]
+    fn timed_runs_expose_fast_forward_bookkeeping() {
+        let sweep = Sweep::new(16, 64);
+        let fast =
+            run_ours_timed(DmacConfig::base(), LatencyProfile::UltraDeep, sweep, false);
+        let naive =
+            run_ours_timed(DmacConfig::base(), LatencyProfile::UltraDeep, sweep, true);
+        assert_eq!(fast.stats, naive.stats, "modes must be cycle-identical");
+        assert!(fast.ff_jumps > 0, "deep memory must fast-forward");
+        assert_eq!(naive.ff_jumps, 0, "naive loop never jumps");
+        assert!(fast.wall_seconds >= 0.0 && naive.wall_seconds >= 0.0);
     }
 }

@@ -4,6 +4,11 @@
 //! as column series — the same rows a plotting script would consume.
 
 pub mod experiments;
+pub mod parallel;
+pub mod throughput;
+
+pub use parallel::par_map;
+pub use throughput::{ThroughputEntry, ThroughputReport};
 
 /// A paper-style table.
 #[derive(Debug, Clone, Default)]

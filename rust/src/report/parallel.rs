@@ -1,0 +1,98 @@
+//! Scoped-thread parallel executor for sweep grids.
+//!
+//! Every Fig. 4/5 grid point is an independent simulation (its own
+//! `System`, its own 16 MiB memory image), so the sweeps are
+//! embarrassingly parallel.  `rayon` is not in the offline vendor set;
+//! [`par_map`] is a ~40-line work-stealing map on `std::thread::scope`:
+//! workers pull indices from an atomic cursor (long points don't block
+//! short ones behind a static partition) and write results into
+//! per-index slots, so the output order — and therefore every printed
+//! table — is deterministic regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: `IDMAC_THREADS` if set (>=1), else the machine's
+/// available parallelism, capped at the number of items.
+pub fn worker_threads(n_items: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let configured = std::env::var("IDMAC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(hw);
+    configured.min(n_items.max(1))
+}
+
+/// Map `f` over `items` on a scoped thread pool, preserving order.
+/// `f` receives `(index, item)`.  A panic in any worker propagates.
+pub fn par_map<T, R>(items: Vec<T>, f: impl Fn(usize, T) -> R + Sync) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = items.len();
+    let threads = worker_threads(n);
+    if n == 0 || threads == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item claimed twice");
+                let r = f(i, item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = par_map((0..100).collect::<Vec<i64>>(), |i, x| {
+            assert_eq!(i as i64, x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        assert_eq!(par_map(vec![7], |_, x: i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn worker_threads_respects_item_cap() {
+        assert_eq!(worker_threads(0), 1);
+        assert!(worker_threads(1) <= 1);
+        assert!(worker_threads(1000) >= 1);
+    }
+
+    #[test]
+    fn parallel_results_match_serial() {
+        let serial: Vec<u64> = (0..64u64).map(|x| x.wrapping_mul(x) ^ 0xA5).collect();
+        let parallel = par_map((0..64u64).collect(), |_, x| x.wrapping_mul(x) ^ 0xA5);
+        assert_eq!(serial, parallel);
+    }
+}

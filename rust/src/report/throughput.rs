@@ -1,0 +1,198 @@
+//! Simulator-throughput tracking: `BENCH_sim_throughput.json`.
+//!
+//! Every perf-sensitive entry point (the `perf_simulator` bench, the
+//! CLI `bench-throughput` subcommand) measures simulated-cycles-per-
+//! wall-second per memory profile, in both execution modes — `naive`
+//! (per-cycle tick loop) and `fast_forward` (event-horizon scheduler)
+//! — and emits this machine-readable report so the performance
+//! trajectory is tracked from PR to PR (EXPERIMENTS.md §Perf).
+//!
+//! The JSON is hand-rolled: no `serde` in the offline vendor set, and
+//! the schema is flat enough that an escaping string writer suffices.
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_sim_throughput.json";
+
+/// One timed run of one workload in one execution mode.
+#[derive(Debug, Clone)]
+pub struct ThroughputEntry {
+    /// Workload label, e.g. "fig4c/ultra-deep (100 cycles)".
+    pub label: String,
+    /// Memory profile name.
+    pub profile: String,
+    /// DMAC configuration name (or "logicore").
+    pub config: String,
+    /// "naive" or "fast_forward".
+    pub mode: &'static str,
+    pub simulated_cycles: u64,
+    pub wall_seconds: f64,
+    /// Fast-forward jumps taken (0 in naive mode).
+    pub ff_jumps: u64,
+    /// Dead cycles skipped by fast-forward (0 in naive mode).
+    pub ff_skipped_cycles: u64,
+}
+
+impl ThroughputEntry {
+    pub fn mcycles_per_sec(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.simulated_cycles as f64 / self.wall_seconds / 1e6
+    }
+}
+
+/// A labelled naive-vs-fast wall-clock comparison.
+#[derive(Debug, Clone)]
+pub struct Speedup {
+    pub label: String,
+    pub naive_seconds: f64,
+    pub fast_seconds: f64,
+}
+
+impl Speedup {
+    pub fn factor(&self) -> f64 {
+        if self.fast_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.naive_seconds / self.fast_seconds
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputReport {
+    pub entries: Vec<ThroughputEntry>,
+    pub speedups: Vec<Speedup>,
+}
+
+impl ThroughputReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, entry: ThroughputEntry) {
+        self.entries.push(entry);
+    }
+
+    pub fn push_speedup(&mut self, label: &str, naive_seconds: f64, fast_seconds: f64) {
+        self.speedups.push(Speedup {
+            label: label.to_string(),
+            naive_seconds,
+            fast_seconds,
+        });
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-sim-throughput/v1\",\n");
+        out.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": {}, \"profile\": {}, \"config\": {}, \"mode\": {}, \
+                 \"simulated_cycles\": {}, \"wall_seconds\": {:.6}, \
+                 \"mcycles_per_sec\": {:.3}, \"ff_jumps\": {}, \"ff_skipped_cycles\": {}}}{}\n",
+                json_str(&e.label),
+                json_str(&e.profile),
+                json_str(&e.config),
+                json_str(e.mode),
+                e.simulated_cycles,
+                e.wall_seconds,
+                e.mcycles_per_sec(),
+                e.ff_jumps,
+                e.ff_skipped_cycles,
+                if i + 1 < self.entries.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n  \"speedups\": [\n");
+        for (i, s) in self.speedups.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": {}, \"naive_seconds\": {:.6}, \"fast_seconds\": {:.6}, \
+                 \"speedup\": {:.3}}}{}\n",
+                json_str(&s.label),
+                s.naive_seconds,
+                s.fast_seconds,
+                s.factor(),
+                if i + 1 < self.speedups.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the report to `path` (typically [`BENCH_FILE`]).
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(mode: &'static str, cycles: u64, secs: f64) -> ThroughputEntry {
+        ThroughputEntry {
+            label: "fig4c".into(),
+            profile: "ultra-deep (100 cycles)".into(),
+            config: "scaled".into(),
+            mode,
+            simulated_cycles: cycles,
+            wall_seconds: secs,
+            ff_jumps: 0,
+            ff_skipped_cycles: 0,
+        }
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let mut r = ThroughputReport::new();
+        r.push(entry("naive", 1_000_000, 0.5));
+        r.push(entry("fast_forward", 1_000_000, 0.1));
+        r.push_speedup("fig4c", 0.5, 0.1);
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"idmac-sim-throughput/v1\""));
+        assert!(j.contains("\"mode\": \"naive\""));
+        assert!(j.contains("\"speedup\": 5.000"));
+        assert!(j.contains("\"mcycles_per_sec\": 2.000"));
+        // Balanced braces/brackets (cheap well-formedness proxy).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn degenerate_timings_do_not_divide_by_zero() {
+        assert_eq!(entry("naive", 100, 0.0).mcycles_per_sec(), 0.0);
+        let s = Speedup { label: "x".into(), naive_seconds: 1.0, fast_seconds: 0.0 };
+        assert_eq!(s.factor(), 0.0);
+    }
+
+    #[test]
+    fn write_creates_the_file() {
+        let mut r = ThroughputReport::new();
+        r.push(entry("fast_forward", 42, 0.001));
+        let path = std::env::temp_dir().join("idmac_bench_test.json");
+        r.write(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert!(read.contains("\"simulated_cycles\": 42"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

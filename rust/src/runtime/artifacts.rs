@@ -5,6 +5,7 @@
 //! (64-bit instruction ids), while the text parser reassigns ids — see
 //! /opt/xla-example/README.md.
 
+use crate::xla_rt as xla;
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
 

@@ -10,6 +10,7 @@
 use super::artifacts::{Artifacts, CHAIN_LEN, GATHER_N, LINE_WORDS, MEM_LINES, UTIL_POINTS};
 use crate::mem::backdoor::dump_lines;
 use crate::mem::Memory;
+use crate::xla_rt as xla;
 use crate::{Error, Result};
 
 /// A line-granular descriptor chain (each descriptor moves one 64 B

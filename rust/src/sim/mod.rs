@@ -1,15 +1,23 @@
 //! Deterministic cycle-stepped simulation kernel.
 //!
 //! Every hardware model in this crate is advanced by a single-threaded,
-//! fixed-order `tick` loop: one call == one AXI clock cycle.  There is no
-//! event wheel and no async runtime on the hot path — the per-cycle cost
-//! is a handful of queue operations, which is what lets the Fig. 4/5
-//! sweeps simulate hundreds of millions of cycles in seconds (see
-//! EXPERIMENTS.md §Perf).
+//! fixed-order `tick` loop: one call == one AXI clock cycle.  There is
+//! no event wheel and no async runtime on the hot path — but the loop
+//! does not burn iterations on provably dead cycles either: every model
+//! implements [`Tickable::next_event`] and the [`EventHorizon`]
+//! scheduler fast-forwards the clock across latency windows in which no
+//! component can act (see EXPERIMENTS.md §Perf).  Results are
+//! bit-identical to the naive per-cycle loop, which is kept as
+//! `tb::System::run_until_idle_naive` and cross-checked by the
+//! `prop_fast_forward_matches_naive_tick_loop` property test.
 
+pub mod queue;
 pub mod stats;
+pub mod tickable;
 
+pub use queue::MonotonicQueue;
 pub use stats::{RunStats, SteadyWindow};
+pub use tickable::{EventHorizon, Tickable};
 
 /// Simulation time in clock cycles.
 pub type Cycle = u64;

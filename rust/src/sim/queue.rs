@@ -1,0 +1,111 @@
+//! A monotonic scheduled-event queue.
+//!
+//! Every latency pipe in the simulator (memory request/response pipes,
+//! the backend's r→w datapath, …) schedules items at `now + L` with a
+//! constant `L`, so readiness times are non-decreasing in push order.
+//! [`MonotonicQueue`] encodes that invariant (debug-asserted on push)
+//! and gives the two operations the hot path needs at O(1):
+//!
+//! * `pop_ready(now)` — pop the front item iff it is due, so draining a
+//!   cycle costs O(ready events), never O(outstanding events);
+//! * `next_at()` — the earliest scheduled cycle, which is exactly what
+//!   the event-horizon scheduler ([`super::EventHorizon`]) folds over
+//!   to decide how far the clock can fast-forward.
+
+use super::Cycle;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct MonotonicQueue<T> {
+    q: VecDeque<(Cycle, T)>,
+}
+
+impl<T> MonotonicQueue<T> {
+    pub fn new() -> Self {
+        Self { q: VecDeque::new() }
+    }
+
+    /// Schedule `item` for cycle `at`.  `at` must be >= every
+    /// previously pushed cycle (non-strict: same-cycle items drain in
+    /// push order, one per `pop_ready` call).
+    pub fn push_at(&mut self, at: Cycle, item: T) {
+        debug_assert!(
+            self.q.back().map_or(true, |&(back, _)| at >= back),
+            "MonotonicQueue: push at {at} behind the queue tail"
+        );
+        self.q.push_back((at, item));
+    }
+
+    /// Pop the front item if it is due at `now`.
+    pub fn pop_ready(&mut self, now: Cycle) -> Option<T> {
+        match self.q.front() {
+            Some(&(at, _)) if at <= now => self.q.pop_front().map(|(_, item)| item),
+            _ => None,
+        }
+    }
+
+    /// Cycle of the earliest scheduled item, if any.
+    pub fn next_at(&self) -> Option<Cycle> {
+        self.q.front().map(|&(at, _)| at)
+    }
+
+    /// Front item regardless of readiness (peek for gated drains).
+    pub fn front(&self) -> Option<&T> {
+        self.q.front().map(|(_, item)| item)
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+impl<T> Default for MonotonicQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_only_when_due() {
+        let mut q = MonotonicQueue::new();
+        q.push_at(5, 'a');
+        q.push_at(5, 'b');
+        q.push_at(9, 'c');
+        assert_eq!(q.pop_ready(4), None);
+        assert_eq!(q.next_at(), Some(5));
+        assert_eq!(q.pop_ready(5), Some('a'));
+        assert_eq!(q.pop_ready(5), Some('b'));
+        assert_eq!(q.pop_ready(5), None);
+        assert_eq!(q.next_at(), Some(9));
+        assert_eq!(q.pop_ready(100), Some('c'));
+        assert!(q.is_empty());
+        assert_eq!(q.next_at(), None);
+    }
+
+    #[test]
+    fn len_and_front() {
+        let mut q = MonotonicQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push_at(1, 10u32);
+        q.push_at(2, 20);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.front(), Some(&10));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn non_monotone_push_is_a_bug() {
+        let mut q = MonotonicQueue::new();
+        q.push_at(9, ());
+        q.push_at(5, ());
+    }
+}

@@ -40,7 +40,11 @@ impl SteadyWindow {
 }
 
 /// Aggregate statistics of a simulated run.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` exists for the fast-forward equivalence checks: two
+/// runs are "cycle-identical" iff their `RunStats` compare equal
+/// (completion log included).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunStats {
     pub completions: Vec<Completion>,
     /// Total descriptor-fetch beats issued by the frontend (incl. wasted).

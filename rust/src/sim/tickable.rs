@@ -1,0 +1,129 @@
+//! The [`Tickable`] component contract and the [`EventHorizon`]
+//! fast-forward scheduler.
+//!
+//! The simulator stays *cycle-stepped* — one `tick` == one AXI clock,
+//! fixed intra-cycle ordering, bit-identical results — but the driver
+//! loop no longer has to burn an iteration on cycles where every
+//! component is provably quiet.  Each component reports, via
+//! [`Tickable::next_event`], the earliest future cycle at which it will
+//! act *without any new input*; the scheduler folds those horizons with
+//! [`EventHorizon::merge`] and jumps the clock straight to the minimum.
+//! Cycles in between are dead by construction: every state change in
+//! the models is either caused by an input event (which itself has a
+//! scheduled cycle) or by one of the reported queue deadlines.
+//!
+//! Contract for `next_event`:
+//!
+//! * `None` — the component is fully input-driven right now: it will
+//!   not act until someone else's event reaches it.  A component that
+//!   is completely idle also returns `None`.
+//! * `Some(c)` with `c <= now` — the component has (or may have) work
+//!   *this* cycle; the scheduler must not skip.  Components are free to
+//!   return `Some(0)` as a conservative "busy now" marker.
+//! * `Some(c)` with `c > now` — quiet until cycle `c`.
+//!
+//! Being *conservative* (reporting an event earlier than the true next
+//! action, or reporting one that turns out to be gated) is always
+//! safe: the scheduler simply falls back to plain single-cycle
+//! stepping.  Reporting an event *later* than the true next action is
+//! a model bug; the `prop_fast_forward_matches_naive_tick_loop`
+//! property test and [`System::run_until_idle_cross_checked`]
+//! (debug-mode cross-check) exist to catch exactly that.
+//!
+//! [`System::run_until_idle_cross_checked`]: crate::tb::System::run_until_idle_cross_checked
+
+use super::Cycle;
+
+/// A clocked hardware model.
+pub trait Tickable {
+    /// Advance internal pipelines to cycle `now`.  Components whose
+    /// stepping needs extra context (e.g. the DMA frontend steps
+    /// against the backend queue) keep their richer inherent method and
+    /// leave this as the default no-op.
+    fn tick(&mut self, _now: Cycle) {}
+
+    /// Earliest cycle at which this component will act without further
+    /// input (see the module docs for the exact contract).
+    fn next_event(&self) -> Option<Cycle>;
+}
+
+/// Fast-forward bookkeeping: how often and how far the clock jumped.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventHorizon {
+    /// Number of fast-forward jumps taken.
+    pub jumps: u64,
+    /// Total dead cycles skipped (never ticked).
+    pub skipped_cycles: u64,
+}
+
+impl EventHorizon {
+    /// Fold two component horizons: the earlier one wins.
+    pub fn merge(a: Option<Cycle>, b: Option<Cycle>) -> Option<Cycle> {
+        match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, None) => x,
+            (None, y) => y,
+        }
+    }
+
+    /// Minimum horizon across a set of components.
+    pub fn across<'a>(components: impl IntoIterator<Item = &'a dyn Tickable>) -> Option<Cycle> {
+        components
+            .into_iter()
+            .fold(None, |acc, c| Self::merge(acc, c.next_event()))
+    }
+
+    /// Record a jump from `from` to `to` (`to > from`).
+    pub fn record(&mut self, from: Cycle, to: Cycle) {
+        debug_assert!(to > from);
+        self.jumps += 1;
+        self.skipped_cycles += to - from;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct At(Option<Cycle>);
+    impl Tickable for At {
+        fn next_event(&self) -> Option<Cycle> {
+            self.0
+        }
+    }
+
+    #[test]
+    fn merge_prefers_the_earlier_event() {
+        assert_eq!(EventHorizon::merge(None, None), None);
+        assert_eq!(EventHorizon::merge(Some(5), None), Some(5));
+        assert_eq!(EventHorizon::merge(None, Some(7)), Some(7));
+        assert_eq!(EventHorizon::merge(Some(5), Some(7)), Some(5));
+    }
+
+    #[test]
+    fn across_components() {
+        let a = At(Some(30));
+        let b = At(None);
+        let c = At(Some(12));
+        let comps: [&dyn Tickable; 3] = [&a, &b, &c];
+        assert_eq!(EventHorizon::across(comps), Some(12));
+        let idle: [&dyn Tickable; 1] = [&b];
+        assert_eq!(EventHorizon::across(idle), None);
+    }
+
+    #[test]
+    fn record_accumulates() {
+        let mut h = EventHorizon::default();
+        h.record(10, 110);
+        h.record(200, 203);
+        assert_eq!(h.jumps, 2);
+        assert_eq!(h.skipped_cycles, 103);
+    }
+
+    #[test]
+    fn default_tick_is_a_no_op() {
+        let mut a = At(Some(1));
+        a.tick(99);
+        assert_eq!(a.next_event(), Some(1));
+    }
+}

@@ -3,7 +3,7 @@
 //! through the PLIC with a realistic trap/claim delay.
 
 use super::Plic;
-use crate::sim::Cycle;
+use crate::sim::{Cycle, Tickable};
 
 #[derive(Debug, Clone)]
 pub struct Cpu {
@@ -35,6 +35,25 @@ impl Cpu {
 
     pub fn complete(&mut self, plic: &mut Plic, source: u32) {
         plic.complete(source);
+    }
+
+    /// Cycle from which the hart may claim again (trap window end).
+    /// The SoC scheduler combines this with the PLIC pending state to
+    /// fast-forward across trap-delay windows.
+    pub fn next_claim_at(&self) -> Cycle {
+        self.next_claim_at
+    }
+}
+
+impl Tickable for Cpu {
+    fn tick(&mut self, _now: Cycle) {}
+
+    /// Input-driven on its own: a claim needs a pending PLIC source,
+    /// so the claim horizon is computed by the SoC, which sees both
+    /// (`Soc::next_event` merges `next_claim_at` when the PLIC has
+    /// pending work).
+    fn next_event(&self) -> Option<Cycle> {
+        None
     }
 }
 

@@ -11,7 +11,7 @@ pub use plic::Plic;
 
 use crate::dmac::Controller;
 use crate::mem::LatencyProfile;
-use crate::sim::{Cycle, RunStats};
+use crate::sim::{Cycle, CycleBudget, EventHorizon, RunStats, Tickable};
 use crate::tb::System;
 
 /// The DMAC's interrupt source id at the PLIC (paper: "we occupy one
@@ -51,20 +51,51 @@ impl<C: Controller> Soc<C> {
         self.irqs_routed = self.sys.irqs_seen;
     }
 
+    /// Earliest cycle anything happens in the SoC: the testbench's
+    /// event horizon, or — when the PLIC has a pending source — the end
+    /// of the hart's trap window.  Claims fire on the *post-tick* clock
+    /// value, so the claim horizon targets the preceding cycle.
+    pub fn next_event(&self) -> Option<Cycle> {
+        let mut h = self.sys.next_event();
+        // The PLIC reports claimable work (`Some` iff a source is
+        // pending); the CPU's trap window turns that into the earliest
+        // claim cycle.
+        if self.plic.next_event().is_some() {
+            h = EventHorizon::merge(h, Some(self.cpu.next_claim_at().saturating_sub(1)));
+        }
+        h
+    }
+
     /// Run until the memory system and DMAC drain, servicing IRQs via
     /// `handler` (the registered driver interrupt handler).  The
     /// handler may schedule further launches on `sys`.
+    ///
+    /// Like `System::run_until_idle`, the loop fast-forwards across
+    /// dead cycles (deep-memory latency windows *and* the CPU's trap
+    /// windows) and checks the cycle budget at jumps instead of every
+    /// cycle.
     pub fn run<F>(&mut self, mut handler: F) -> crate::Result<RunStats>
     where
         F: FnMut(&mut System<C>, &mut Cpu, Cycle),
     {
+        let budget = CycleBudget::default();
         let mut settle = 0;
+        let mut steps: u64 = 0;
         while settle < 4 {
-            crate::sim::CycleBudget::default().check(self.sys.now())?;
+            if steps & 0xFFF == 0 {
+                budget.check(self.sys.now())?;
+            }
+            steps += 1;
             if self.sys.is_idle() && self.plic.pending() == 0 {
                 settle += 1;
             } else {
                 settle = 0;
+            }
+            if let Some(h) = self.next_event() {
+                if h > self.sys.now() {
+                    budget.check(h)?;
+                    self.sys.jump_to(h);
+                }
             }
             self.tick();
             // CPU claims and services one interrupt per claim window.
@@ -74,6 +105,11 @@ impl<C: Controller> Soc<C> {
                 handler(&mut self.sys, &mut self.cpu, now);
                 self.cpu.complete(&mut self.plic, src);
             }
+        }
+        // Outcome parity with a per-cycle budget check: a run that
+        // drained past the budget without jumping near it still errors.
+        if self.sys.now() > 0 {
+            budget.check(self.sys.now() - 1)?;
         }
         let mut stats = self.sys.ctrl.take_stats();
         stats.end_cycle = self.sys.now();

@@ -2,6 +2,8 @@
 //! gateways, a pending set, and the claim/complete protocol the Linux
 //! driver's interrupt handler goes through.
 
+use crate::sim::{Cycle, Tickable};
+
 #[derive(Debug, Clone, Default)]
 pub struct Plic {
     pending: Vec<u32>,
@@ -54,6 +56,21 @@ impl Plic {
 
     pub fn is_claimed(&self, source: u32) -> bool {
         self.claimed.contains(&source)
+    }
+}
+
+impl Tickable for Plic {
+    fn tick(&mut self, _now: Cycle) {}
+
+    /// A pending source is claimable right away (the hart's trap delay
+    /// is the CPU's gate, not the PLIC's); with nothing pending the
+    /// gateway is purely input-driven.
+    fn next_event(&self) -> Option<Cycle> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
     }
 }
 

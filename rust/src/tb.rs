@@ -10,12 +10,20 @@
 use crate::axi::{BusMonitor, Port};
 use crate::dmac::{ChainBuilder, Controller};
 use crate::mem::{LatencyProfile, Memory};
-use crate::sim::{Cycle, CycleBudget, RunStats};
+use crate::sim::{Cycle, CycleBudget, EventHorizon, RunStats};
 use std::collections::VecDeque;
 
 /// Default simulated DRAM size: 16 MiB is enough for every paper sweep.
 pub const DEFAULT_MEM_BYTES: usize = 16 << 20;
 
+/// Fast loop: budget re-check interval in scheduler iterations.  The
+/// per-cycle `CycleBudget::check` of the naive loop moved out of the
+/// hot path — the fast loop checks at every event-horizon jump plus
+/// once per this many single-cycle steps, which still bounds a
+/// deadlocked (never-jumping) model.
+const BUDGET_CHECK_MASK: u64 = 0xFFF;
+
+#[derive(Clone)]
 pub struct System<C: Controller> {
     pub mem: Memory,
     pub ctrl: C,
@@ -25,6 +33,8 @@ pub struct System<C: Controller> {
     w_rr: usize,
     now: Cycle,
     budget: CycleBudget,
+    /// Fast-forward bookkeeping: jumps taken and dead cycles skipped.
+    pub horizon: EventHorizon,
     /// IRQ edges observed (the PLIC in the SoC model; a counter here).
     pub irqs_seen: u64,
     /// First AR issue cycle per port (Table IV `i-rf` / `rf-rb`).
@@ -50,6 +60,7 @@ impl<C: Controller> System<C> {
             w_rr: 0,
             now: 0,
             budget: CycleBudget::default(),
+            horizon: EventHorizon::default(),
             irqs_seen: 0,
             first_ar: Vec::new(),
             first_payload_r: None,
@@ -154,10 +165,78 @@ impl<C: Controller> System<C> {
         self.launches.is_empty() && self.ctrl.idle() && self.mem.quiescent()
     }
 
+    /// Earliest cycle at which any component acts without new input:
+    /// the next scheduled CSR launch, the memory's pipeline deadlines,
+    /// or the controller's internal state machines.  `None` means the
+    /// whole system is input-free (idle or deadlocked).
+    pub fn next_event(&self) -> Option<Cycle> {
+        let h = self.launches.front().map(|&(at, _)| at);
+        let h = EventHorizon::merge(h, self.mem.next_event());
+        EventHorizon::merge(h, self.ctrl.next_event())
+    }
+
+    /// Fast-forward the clock to `to` without ticking: every cycle in
+    /// `(now, to)` is dead by the `next_event` contract.  The bus
+    /// monitor's cycle denominator advances so occupancy diagnostics
+    /// stay identical to the naive loop.
+    pub fn jump_to(&mut self, to: Cycle) {
+        debug_assert!(to > self.now);
+        #[cfg(debug_assertions)]
+        self.mem.debug_assert_quiet_before(to);
+        self.horizon.record(self.now, to);
+        self.monitor.advance(to - self.now);
+        self.now = to;
+    }
+
+    /// One scheduler step: jump to the event horizon if it is strictly
+    /// ahead, then execute one cycle.  The cycle budget is checked at
+    /// jumps only (hot-path cost moved out of the per-cycle loop).
+    pub fn advance(&mut self) -> crate::Result<()> {
+        if let Some(h) = self.next_event() {
+            if h > self.now {
+                self.budget.check(h)?;
+                self.jump_to(h);
+            }
+        }
+        self.tick();
+        Ok(())
+    }
+
     /// Run until the whole system drains, returning the run's stats.
+    ///
+    /// Uses the event-horizon scheduler: cycle-identical to
+    /// [`run_until_idle_naive`](Self::run_until_idle_naive) (property-
+    /// tested), but dead latency windows are skipped in one jump.
     pub fn run_until_idle(&mut self) -> crate::Result<RunStats> {
         // A couple of settle cycles after apparent idleness flush
         // response pipes that are scheduled but not yet visible.
+        let mut settle = 0;
+        let mut steps: u64 = 0;
+        while settle < 4 {
+            if steps & BUDGET_CHECK_MASK == 0 {
+                self.budget.check(self.now)?;
+            }
+            steps += 1;
+            if self.is_idle() {
+                settle += 1;
+            } else {
+                settle = 0;
+            }
+            self.advance()?;
+        }
+        // Outcome parity with the naive loop, which checks the budget
+        // at every cycle up to end-1: a run that drains past the
+        // budget without ever jumping near the limit must still error.
+        if self.now > 0 {
+            self.budget.check(self.now - 1)?;
+        }
+        Ok(self.finish_stats())
+    }
+
+    /// The original per-cycle loop, kept as the reference the fast
+    /// scheduler is validated against (and as the `--naive` baseline
+    /// for the §Perf throughput comparison).
+    pub fn run_until_idle_naive(&mut self) -> crate::Result<RunStats> {
         let mut settle = 0;
         while settle < 4 {
             self.budget.check(self.now)?;
@@ -168,10 +247,34 @@ impl<C: Controller> System<C> {
             }
             self.tick();
         }
+        Ok(self.finish_stats())
+    }
+
+    /// Debug-mode cross-check: run a clone of this system through the
+    /// naive per-cycle loop alongside the fast-forward loop and assert
+    /// cycle-identical [`RunStats`].  Used by the equivalence property
+    /// test; also handy when bringing up a new model's `next_event`.
+    pub fn run_until_idle_cross_checked(&mut self) -> crate::Result<RunStats>
+    where
+        C: Clone,
+    {
+        let mut reference = self.clone();
+        let fast = self.run_until_idle()?;
+        let naive = reference.run_until_idle_naive()?;
+        assert_eq!(
+            fast, naive,
+            "event-horizon fast-forward diverged from the naive tick loop \
+             (skipped {} cycles in {} jumps)",
+            self.horizon.skipped_cycles, self.horizon.jumps
+        );
+        Ok(fast)
+    }
+
+    fn finish_stats(&mut self) -> RunStats {
         let mut stats = self.ctrl.take_stats();
         stats.end_cycle = self.now;
         stats.irqs = self.irqs_seen;
-        Ok(stats)
+        stats
     }
 
     /// `i-rf` (Table IV): cycles between the CSR write and the first
@@ -276,5 +379,98 @@ mod tests {
         let head = chain.write_to(&mut sys.mem);
         sys.schedule_launch(1000, head);
         assert!(sys.run_until_idle().is_err());
+    }
+
+    #[test]
+    fn budget_also_caught_by_the_naive_loop() {
+        let mut sys = System::new(LatencyProfile::Ideal, Dmac::new(DmacConfig::base()))
+            .with_budget(CycleBudget { max_cycles: 50 });
+        let chain = simple_chain(1, 64);
+        let head = chain.write_to(&mut sys.mem);
+        sys.schedule_launch(1000, head);
+        assert!(sys.run_until_idle_naive().is_err());
+    }
+
+    #[test]
+    fn budget_outcome_parity_between_loops() {
+        // A run that drains *past* the budget (rather than jumping
+        // over it) must error in both loops, even though the fast loop
+        // only spot-checks the budget on its hot path.
+        let build = || {
+            let mut sys = System::new(LatencyProfile::Ideal, Dmac::new(DmacConfig::base()))
+                .with_budget(CycleBudget { max_cycles: 40 });
+            sys.load_and_launch(0, &simple_chain(4, 256));
+            sys
+        };
+        assert!(build().run_until_idle().is_err());
+        assert!(build().run_until_idle_naive().is_err());
+        // And a run safely inside the budget succeeds in both.
+        let ok = || {
+            let mut sys = System::new(LatencyProfile::Ideal, Dmac::new(DmacConfig::base()))
+                .with_budget(CycleBudget { max_cycles: 100_000 });
+            sys.load_and_launch(0, &simple_chain(1, 64));
+            sys
+        };
+        assert!(ok().run_until_idle().is_ok());
+        assert!(ok().run_until_idle_naive().is_ok());
+    }
+
+    fn checked_system(profile: LatencyProfile, cfg: DmacConfig) -> System<Dmac> {
+        let mut sys = System::new(profile, Dmac::new(cfg));
+        for i in 0..8u64 {
+            fill_pattern(&mut sys.mem, 0x10_0000 + i * 4096, 256, i as u32);
+        }
+        sys.load_and_launch(5, &simple_chain(8, 256));
+        sys
+    }
+
+    #[test]
+    fn fast_forward_matches_naive_across_profiles() {
+        for profile in
+            [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+        {
+            for cfg in DmacConfig::paper_configs() {
+                let mut fast = checked_system(profile, cfg);
+                let mut naive = checked_system(profile, cfg);
+                let f = fast.run_until_idle().unwrap();
+                let n = naive.run_until_idle_naive().unwrap();
+                assert_eq!(f, n, "{profile:?} {}", cfg.name());
+                assert_eq!(fast.now(), naive.now());
+                assert_eq!(
+                    fast.monitor.cycles, naive.monitor.cycles,
+                    "occupancy denominator must include skipped cycles"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deep_memory_actually_fast_forwards() {
+        let mut sys = checked_system(LatencyProfile::UltraDeep, DmacConfig::base());
+        sys.run_until_idle().unwrap();
+        assert!(sys.horizon.jumps > 0, "no jumps taken");
+        assert!(
+            sys.horizon.skipped_cycles > 100,
+            "a 100-cycle memory must yield long dead windows, skipped only {}",
+            sys.horizon.skipped_cycles
+        );
+    }
+
+    #[test]
+    fn cross_checked_run_agrees_with_itself() {
+        let mut sys = checked_system(LatencyProfile::Ddr3, DmacConfig::speculation());
+        let stats = sys.run_until_idle_cross_checked().unwrap();
+        assert_eq!(stats.completions.len(), 8);
+    }
+
+    #[test]
+    fn idle_system_reports_no_events() {
+        let sys = System::new(LatencyProfile::Ideal, Dmac::new(DmacConfig::base()));
+        assert!(sys.next_event().is_none());
+        let mut sys = sys;
+        let chain = simple_chain(1, 64);
+        let head = chain.write_to(&mut sys.mem);
+        sys.schedule_launch(42, head);
+        assert_eq!(sys.next_event(), Some(42), "scheduled launch is the only event");
     }
 }

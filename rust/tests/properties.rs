@@ -190,6 +190,87 @@ fn prop_overlapping_src_dst_within_transfer_is_exact_copy() {
 }
 
 #[test]
+fn prop_fast_forward_matches_naive_tick_loop() {
+    // The event-horizon scheduler is an optimization, not a model
+    // change: across randomized descriptor chains, configurations and
+    // all three paper latency profiles, the fast-forward loop must
+    // produce bit-identical RunStats (end cycle, completion log,
+    // descriptor/payload beat counts, hit/miss accounting) and an
+    // identical final memory image.
+    forall(CASES, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let seed = rng.next_u64() as u32;
+        for profile in
+            [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+        {
+            let build = || {
+                let mut sys = System::new(profile, Dmac::new(cfg));
+                fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+                sys.load_and_launch(0, &cb);
+                sys
+            };
+            let mut fast = build();
+            let mut naive = build();
+            let f = fast.run_until_idle().unwrap();
+            let n = naive.run_until_idle_naive().unwrap();
+            assert_eq!(f, n, "stats diverged: cfg={cfg:?} profile={profile:?}");
+            assert_eq!(fast.now(), naive.now(), "clock diverged");
+            assert_eq!(
+                fast.mem.backdoor_read(map::DST_BASE, 64 * 4096),
+                naive.mem.backdoor_read(map::DST_BASE, 64 * 4096),
+                "memory image diverged: cfg={cfg:?} profile={profile:?}"
+            );
+            // Deep memory must actually exercise the jump path, or the
+            // property degenerates into testing nothing.
+            if profile == LatencyProfile::UltraDeep {
+                assert!(fast.horizon.jumps > 0, "no fast-forward happened at L=100");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fast_forward_matches_naive_on_the_baseline() {
+    use idmac::baseline::{LcConfig, LogiCore};
+    // Same equivalence for the LogiCORE model, whose serialized chase
+    // produces the longest dead windows of all.
+    forall(10, |rng| {
+        let n = rng.range(2, 20) as usize;
+        let size = *rng.pick(&[8u32, 64, 256]);
+        let profile = LatencyProfile::Custom(rng.range(1, 110) as u32);
+        let build = || {
+            let mut sys = System::new(profile, LogiCore::new(LcConfig::default()));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, 7);
+            let sweep = idmac::workload::Sweep::new(n, size);
+            let head = sweep.lc_chain().write_to(&mut sys.mem);
+            sys.schedule_launch(0, head);
+            sys
+        };
+        let mut fast = build();
+        let mut naive = build();
+        let f = fast.run_until_idle().unwrap();
+        let nstats = naive.run_until_idle_naive().unwrap();
+        assert_eq!(f, nstats, "LogiCORE diverged: n={n} size={size} {profile:?}");
+        assert_eq!(fast.now(), naive.now());
+    });
+}
+
+#[test]
+fn prop_cross_checked_runner_accepts_random_chains() {
+    // The debug-mode cross-check entry point (clone + both loops +
+    // assert) must hold over random inputs too.
+    forall(10, |rng| {
+        let (cb, meta) = random_chain(rng);
+        let mut sys = System::new(random_profile(rng), Dmac::new(random_config(rng)));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, 3);
+        sys.load_and_launch(0, &cb);
+        let stats = sys.run_until_idle_cross_checked().unwrap();
+        assert_eq!(stats.completions.len(), meta.len());
+    });
+}
+
+#[test]
 fn prop_simulator_is_deterministic() {
     forall(10, |rng| {
         let (cb, _) = random_chain(rng);
