@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Docs gate: resolve local markdown links and pin required sections.
+
+* Every ``[text](target)`` link in the repo's markdown files whose
+  target is a local path (no URL scheme) must resolve to an existing
+  file, relative to the file containing the link (anchors stripped).
+* DESIGN.md and EXPERIMENTS.md must keep the sections other files and
+  the CI bench gate point at.
+"""
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+MARKDOWN_FILES = [
+    "DESIGN.md",
+    "EXPERIMENTS.md",
+    "ROADMAP.md",
+    "PAPER.md",
+    "PAPERS.md",
+    "CHANGES.md",
+]
+
+REQUIRED_SECTIONS = {
+    "DESIGN.md": ["Multi-channel", "event horizon", "Experiment index"],
+    "EXPERIMENTS.md": ["Contention", "BENCH_multichannel.json", "BENCH_sim_throughput.json"],
+}
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def main() -> int:
+    errors = []
+    for name in MARKDOWN_FILES:
+        path = os.path.join(REPO, name)
+        if not os.path.exists(path):
+            errors.append(f"{name}: file missing")
+            continue
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK.findall(text):
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            local = target.split("#", 1)[0]
+            if not local:
+                continue  # pure anchor
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), local))
+            if not os.path.exists(resolved):
+                errors.append(f"{name}: broken link -> {target}")
+        for needle in REQUIRED_SECTIONS.get(name, []):
+            if needle not in text:
+                errors.append(f"{name}: required section/reference `{needle}` missing")
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"OK: {len(MARKDOWN_FILES)} markdown files, links and required sections intact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

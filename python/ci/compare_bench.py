@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate over the simulator's JSON reports.
+
+Two modes, both gating on *simulated cycle counts* only — wall-clock
+fields are ignored by design, so runner speed cannot flake the build:
+
+``throughput``
+    Validates ``BENCH_sim_throughput.json``-shaped files: (1) inside
+    the measured file, the ``naive`` and ``fast_forward`` modes of each
+    (label, profile, config) must report identical ``simulated_cycles``
+    (the schedulers are cycle-identical by construction); (2) every
+    entry of the checked-in baseline must be reproduced within
+    ``--tolerance`` relative drift.
+
+``multichannel``
+    Validates ``BENCH_multichannel.json``-shaped files: the grids
+    emitted with and without ``--naive`` must be identical, and must
+    match the checked-in baseline exactly.
+
+A baseline file with no entries/points is *bootstrap mode*: the gate
+warns and passes, and the measured file (uploaded as a CI artifact) is
+what should be committed as the new baseline.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path: str) -> dict:
+    """Load a JSON report.  A missing file is always a hard failure:
+    bootstrap mode is only for a *present* baseline with an empty
+    entries/points array — a typo'd or deleted baseline must not
+    silently disarm the gate."""
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} does not exist")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+
+def strip_wallclock(entry: dict) -> dict:
+    """Project a throughput entry onto its deterministic fields."""
+    return {
+        k: entry[k]
+        for k in ("label", "profile", "config", "mode", "simulated_cycles")
+        if k in entry
+    }
+
+
+def check_throughput(measured_path: str, baseline_path: str, tolerance: float) -> None:
+    measured = load(measured_path)
+    if not measured:
+        fail(f"measured file {measured_path} missing or empty")
+    if measured.get("schema") != "idmac-sim-throughput/v1":
+        fail(f"unexpected schema in {measured_path}: {measured.get('schema')}")
+    entries = measured.get("entries", [])
+    if not entries:
+        fail(f"{measured_path} has no entries")
+
+    # (1) cycle-identity between the two scheduler modes.
+    by_key = {}
+    for e in entries:
+        by_key.setdefault((e["label"], e["profile"], e["config"]), {})[e["mode"]] = e
+    for key, modes in by_key.items():
+        if {"naive", "fast_forward"} <= set(modes):
+            n = modes["naive"]["simulated_cycles"]
+            f = modes["fast_forward"]["simulated_cycles"]
+            if n != f:
+                fail(
+                    f"scheduler modes diverged for {key}: "
+                    f"naive={n} fast_forward={f} simulated cycles"
+                )
+    print(f"OK: {len(by_key)} workload(s) cycle-identical across scheduler modes")
+
+    # (2) baseline drift.
+    baseline = load(baseline_path)
+    base_entries = baseline.get("entries", [])
+    if not base_entries:
+        print(
+            f"WARN: baseline {baseline_path} is empty (bootstrap mode) — "
+            f"commit the uploaded artifact to arm the gate"
+        )
+        return
+    measured_by_key = {
+        (e["label"], e["profile"], e["config"], e["mode"]): e["simulated_cycles"]
+        for e in entries
+    }
+    checked = 0
+    for b in base_entries:
+        key = (b["label"], b["profile"], b["config"], b["mode"])
+        if key not in measured_by_key:
+            # The baseline may cover a wider grid than the CI run
+            # (e.g. all profiles vs the small DDR3-only gate grid).
+            continue
+        want = b["simulated_cycles"]
+        got = measured_by_key[key]
+        drift = abs(got - want) / max(want, 1)
+        if drift > tolerance:
+            fail(
+                f"cycle-count drift for {key}: baseline {want}, measured {got} "
+                f"({drift:.4%} > {tolerance:.4%})"
+            )
+        checked += 1
+    if checked == 0:
+        fail("baseline and measured files share no comparable entries")
+    print(f"OK: {checked} baseline entrie(s) within {tolerance:.2%} cycle drift")
+
+
+def check_multichannel(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    fast = load(fast_path)
+    naive = load(naive_path)
+    for name, doc in ((fast_path, fast), (naive_path, naive)):
+        if not doc:
+            fail(f"{name} missing or empty")
+        if doc.get("schema") != "idmac-multichannel/v1":
+            fail(f"unexpected schema in {name}: {doc.get('schema')}")
+        if not doc.get("points"):
+            fail(f"{name} has no points")
+    if fast != naive:
+        fail(
+            f"{fast_path} and {naive_path} differ — the contention grid is "
+            f"not deterministic across scheduler modes"
+        )
+    print(f"OK: {len(fast['points'])} contention point(s) identical across scheduler modes")
+
+    baseline = load(baseline_path)
+    base_points = baseline.get("points", [])
+    if not base_points:
+        print(
+            f"WARN: baseline {baseline_path} is empty (bootstrap mode) — "
+            f"commit the uploaded artifact to arm the gate"
+        )
+        return
+    if base_points != fast["points"]:
+        fail(f"contention grid drifted from the checked-in {baseline_path}")
+    print(f"OK: contention grid matches the checked-in baseline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    t = sub.add_parser("throughput")
+    t.add_argument("--measured", required=True)
+    t.add_argument("--baseline", required=True)
+    t.add_argument("--tolerance", type=float, default=0.0)
+
+    m = sub.add_parser("multichannel")
+    m.add_argument("--fast", required=True)
+    m.add_argument("--naive", required=True)
+    m.add_argument("--baseline", required=True)
+
+    args = ap.parse_args()
+    if args.mode == "throughput":
+        check_throughput(args.measured, args.baseline, args.tolerance)
+    else:
+        check_multichannel(args.fast, args.naive, args.baseline)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,7 @@ from compile.kernels.gather import gather_rows
 
 # Bus geometry: 64-bit data bus => 8-byte beats; our descriptor is 256
 # bits (4 beats), the LogiCORE descriptor is 13x32-bit words fetched over
-# a 32-bit port (13 bus slots).  See DESIGN.md §6 for the calibration.
+# a 32-bit port (13 bus slots).  See DESIGN.md §7 for the calibration.
 BYTES_PER_BEAT = 8.0
 DESC_BEATS_OURS = 4.0
 DESC_BEATS_LOGICORE = 13.0

@@ -1,48 +1,187 @@
-//! Fair round-robin arbiter (paper Fig. 3: "fair round-robin arbiter
-//! (RR)" between the DMAC's two manager interfaces and the memory).
+//! Bus arbiter over the controller manager ports.
+//!
+//! The paper's OOC testbench (Fig. 3) uses a fair round-robin arbiter
+//! between the DMAC's two manager interfaces and the memory; that
+//! remains the default.  The multi-channel system generalizes the
+//! arbiter over `2N` ports with per-port weights and three policies:
+//!
+//! * [`ArbPolicy::RoundRobin`] — the paper's fair RR (weights ignored);
+//! * [`ArbPolicy::StrictPriority`] — ports are served in weight order
+//!   (ties broken by port-list index); a saturated high-priority port
+//!   starves the rest, exactly like a fixed-priority crossbar;
+//! * [`ArbPolicy::WeightedRoundRobin`] — credit-based WRR: each port
+//!   spends one credit per grant and rotation skips ports out of
+//!   credit; when no requesting port holds credit, all credits refill
+//!   to the configured weights.  Long-run service shares converge to
+//!   `w_i / Σw` while staying work-conserving.
 //!
 //! The arbiter is stateless about the request payloads; callers present
 //! the set of ports that want a grant this cycle and the arbiter picks
 //! one, rotating priority so that a continuously requesting port cannot
-//! starve the others.
+//! starve the others (under RR/WRR).
 
 use super::Port;
 use crate::sim::{Cycle, Tickable};
 
+/// Arbitration policy over the port list (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbPolicy {
+    RoundRobin,
+    StrictPriority,
+    WeightedRoundRobin,
+}
+
+impl ArbPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArbPolicy::RoundRobin => "rr",
+            ArbPolicy::StrictPriority => "strict",
+            ArbPolicy::WeightedRoundRobin => "wrr",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Arbiter {
     ports: Vec<Port>,
-    /// Index of the port with the *highest* priority next grant.
+    policy: ArbPolicy,
+    /// Per-port weight (>= 1); ignored by plain round-robin.
+    weights: Vec<u32>,
+    /// Remaining WRR credits per port.
+    credits: Vec<u32>,
+    /// Port-list indices in strict-priority order (weight desc, index asc).
+    priority_order: Vec<usize>,
+    /// Index of the port with the *highest* priority next grant (RR/WRR).
     next: usize,
     grants: u64,
+    grants_per_port: Vec<u64>,
 }
 
 impl Arbiter {
+    /// The paper's fair round-robin arbiter (Fig. 3).
     pub fn new(ports: Vec<Port>) -> Self {
-        assert!(!ports.is_empty(), "arbiter needs at least one port");
-        Self { ports, next: 0, grants: 0 }
+        Self::with_policy(ports, ArbPolicy::RoundRobin, Vec::new())
     }
 
-    /// Grant one of the requesting ports, if any.  `requesting` is
-    /// evaluated against the arbiter's port list in rotating-priority
-    /// order, so repeated single-port requests are granted every cycle
-    /// while contending ports alternate fairly.
-    pub fn grant(&mut self, requesting: impl Fn(Port) -> bool) -> Option<Port> {
+    /// QoS-aware arbiter.  `weights` is padded with 1s (and floored at
+    /// 1) to the port count, so callers may pass an empty vector for
+    /// uniform service.
+    pub fn with_policy(ports: Vec<Port>, policy: ArbPolicy, weights: Vec<u32>) -> Self {
+        assert!(!ports.is_empty(), "arbiter needs at least one port");
+        let mut weights = weights;
+        weights.resize(ports.len(), 1);
+        for w in &mut weights {
+            *w = (*w).max(1);
+        }
+        let mut priority_order: Vec<usize> = (0..ports.len()).collect();
+        priority_order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+        let n = ports.len();
+        Self {
+            ports,
+            policy,
+            credits: weights.clone(),
+            weights,
+            priority_order,
+            next: 0,
+            grants: 0,
+            grants_per_port: vec![0; n],
+        }
+    }
+
+    pub fn policy(&self) -> ArbPolicy {
+        self.policy
+    }
+
+    /// Scan the ports in policy order and grant the first one for which
+    /// `try_port` returns `Some`.  A port that declines (returns `None`)
+    /// forfeits to the next port *without* consuming rotation state or
+    /// credits — this mirrors the testbench contract where `wants_ar`
+    /// may be optimistic and `pop_ar` is the authoritative grant.
+    pub fn grant_with<T>(&mut self, mut try_port: impl FnMut(Port) -> Option<T>) -> Option<T> {
         let n = self.ports.len();
-        for i in 0..n {
-            let idx = (self.next + i) % n;
-            let port = self.ports[idx];
-            if requesting(port) {
-                self.next = (idx + 1) % n;
-                self.grants += 1;
-                return Some(port);
+        match self.policy {
+            ArbPolicy::RoundRobin => {
+                for i in 0..n {
+                    let idx = (self.next + i) % n;
+                    if let Some(t) = try_port(self.ports[idx]) {
+                        self.next = (idx + 1) % n;
+                        self.record_grant(idx);
+                        return Some(t);
+                    }
+                }
+                None
+            }
+            ArbPolicy::StrictPriority => {
+                for k in 0..n {
+                    let idx = self.priority_order[k];
+                    if let Some(t) = try_port(self.ports[idx]) {
+                        self.record_grant(idx);
+                        return Some(t);
+                    }
+                }
+                None
+            }
+            ArbPolicy::WeightedRoundRobin => {
+                // Pass 1: rotating scan over ports still holding credit.
+                for i in 0..n {
+                    let idx = (self.next + i) % n;
+                    if self.credits[idx] == 0 {
+                        continue;
+                    }
+                    if let Some(t) = try_port(self.ports[idx]) {
+                        self.credits[idx] -= 1;
+                        self.next = (idx + 1) % n;
+                        self.record_grant(idx);
+                        return Some(t);
+                    }
+                }
+                // Pass 2 (work-conserving): offer the out-of-credit
+                // ports; a taker proves every requesting port had spent
+                // its credit, so the round refills *at the grant*.
+                // Crucially, arbiter state only ever changes on a
+                // grant: the naive loop polls the arbiter on dead
+                // cycles the event-horizon scheduler skips, and both
+                // must see identical credit streams.
+                for i in 0..n {
+                    let idx = (self.next + i) % n;
+                    if self.credits[idx] > 0 {
+                        continue; // already offered in pass 1
+                    }
+                    if let Some(t) = try_port(self.ports[idx]) {
+                        self.credits.copy_from_slice(&self.weights);
+                        self.credits[idx] -= 1;
+                        self.next = (idx + 1) % n;
+                        self.record_grant(idx);
+                        return Some(t);
+                    }
+                }
+                None
             }
         }
-        None
+    }
+
+    fn record_grant(&mut self, idx: usize) {
+        self.grants += 1;
+        self.grants_per_port[idx] += 1;
+    }
+
+    /// Grant one of the requesting ports, if any (predicate form of
+    /// [`grant_with`](Self::grant_with)).
+    pub fn grant(&mut self, requesting: impl Fn(Port) -> bool) -> Option<Port> {
+        self.grant_with(|p| if requesting(p) { Some(p) } else { None })
     }
 
     pub fn grants(&self) -> u64 {
         self.grants
+    }
+
+    /// Grants given to `port` so far (fairness diagnostics).
+    pub fn grants_to(&self, port: Port) -> u64 {
+        self.ports
+            .iter()
+            .position(|&p| p == port)
+            .map(|i| self.grants_per_port[i])
+            .unwrap_or(0)
     }
 }
 
@@ -67,6 +206,8 @@ mod tests {
             assert_eq!(a.grant(|p| p == Port::Backend), Some(Port::Backend));
         }
         assert_eq!(a.grants(), 4);
+        assert_eq!(a.grants_to(Port::Backend), 4);
+        assert_eq!(a.grants_to(Port::Frontend), 0);
     }
 
     #[test]
@@ -113,5 +254,92 @@ mod tests {
     #[should_panic]
     fn empty_port_list_panics() {
         Arbiter::new(vec![]);
+    }
+
+    #[test]
+    fn declining_port_forfeits_without_rotating() {
+        // Port A wants but declines; B takes the grant.  Next cycle the
+        // rotation continues after B, not after A.
+        let mut a = Arbiter::new(vec![Port::Frontend, Port::Backend]);
+        let got: Option<Port> = a.grant_with(|p| (p == Port::Backend).then_some(p));
+        assert_eq!(got, Some(Port::Backend));
+        // Rotation advanced past Backend, so Frontend is next in line.
+        let got: Option<Port> = a.grant_with(Some);
+        assert_eq!(got, Some(Port::Frontend));
+    }
+
+    #[test]
+    fn strict_priority_starves_lower_weights() {
+        let mut a = Arbiter::with_policy(
+            vec![Port::Frontend, Port::Backend, Port::Cpu],
+            ArbPolicy::StrictPriority,
+            vec![1, 4, 2],
+        );
+        for _ in 0..50 {
+            assert_eq!(a.grant(|_| true), Some(Port::Backend), "highest weight wins");
+        }
+        // When the top port goes quiet, the next weight is served.
+        assert_eq!(a.grant(|p| p != Port::Backend), Some(Port::Cpu));
+        assert_eq!(a.grant(|p| p == Port::Frontend), Some(Port::Frontend));
+    }
+
+    #[test]
+    fn strict_priority_ties_break_by_port_order() {
+        let mut a = Arbiter::with_policy(
+            vec![Port::Frontend, Port::Backend],
+            ArbPolicy::StrictPriority,
+            vec![1, 1],
+        );
+        for _ in 0..10 {
+            assert_eq!(a.grant(|_| true), Some(Port::Frontend));
+        }
+    }
+
+    #[test]
+    fn wrr_converges_to_weight_shares() {
+        let mut a = Arbiter::with_policy(
+            vec![Port::Frontend, Port::Backend, Port::Cpu],
+            ArbPolicy::WeightedRoundRobin,
+            vec![4, 1, 1],
+        );
+        let rounds = 600;
+        for _ in 0..rounds {
+            a.grant(|_| true).unwrap();
+        }
+        let share = |p| a.grants_to(p) as f64 / rounds as f64;
+        assert!((share(Port::Frontend) - 4.0 / 6.0).abs() < 0.05, "fe {}", share(Port::Frontend));
+        assert!((share(Port::Backend) - 1.0 / 6.0).abs() < 0.05);
+        assert!((share(Port::Cpu) - 1.0 / 6.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn wrr_is_work_conserving() {
+        // A sole requester is granted every cycle even with weight 1.
+        let mut a = Arbiter::with_policy(
+            vec![Port::Frontend, Port::Backend],
+            ArbPolicy::WeightedRoundRobin,
+            vec![8, 1],
+        );
+        for _ in 0..20 {
+            assert_eq!(a.grant(|p| p == Port::Backend), Some(Port::Backend));
+        }
+        assert_eq!(a.grants_to(Port::Backend), 20);
+    }
+
+    #[test]
+    fn weights_are_padded_and_floored() {
+        let a = Arbiter::with_policy(
+            vec![Port::Frontend, Port::Backend, Port::Cpu],
+            ArbPolicy::WeightedRoundRobin,
+            vec![0],
+        );
+        assert_eq!(a.weights, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(ArbPolicy::RoundRobin.name(), "rr");
+        assert_eq!(ArbPolicy::StrictPriority.name(), "strict");
+        assert_eq!(ArbPolicy::WeightedRoundRobin.name(), "wrr");
     }
 }

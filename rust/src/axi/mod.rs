@@ -16,6 +16,6 @@ pub mod arbiter;
 pub mod monitor;
 pub mod types;
 
-pub use arbiter::Arbiter;
+pub use arbiter::{ArbPolicy, Arbiter};
 pub use monitor::BusMonitor;
-pub use types::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT};
+pub use types::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, MAX_CHANNELS};

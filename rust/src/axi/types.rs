@@ -3,10 +3,17 @@
 /// Data-bus width of the 64-bit CVA6 memory system: 8 bytes per beat.
 pub const BYTES_PER_BEAT: u64 = 8;
 
+/// Maximum DMAC channels one system can instantiate.  Bounds the dense
+/// port-index space ([`Port::COUNT`]) and the PLIC source range.
+pub const MAX_CHANNELS: usize = 8;
+
 /// Identifies which manager interface a transaction belongs to.  The
 /// paper's DMAC exposes two manager ports (frontend descriptor port and
 /// backend data port); the LogiCORE baseline gets its own pair so both
-/// devices can be instantiated in one system.
+/// devices can be instantiated in one system.  Multi-channel systems
+/// bank further DMAC channels as `ChFrontend(c)`/`ChBackend(c)` —
+/// channel 0 keeps the legacy `Frontend`/`Backend` ports so a one-
+/// channel system is structurally identical to the single-channel one.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Port {
     /// Our DMA frontend: descriptor fetches + completion write-backs.
@@ -19,12 +26,39 @@ pub enum Port {
     LcBackend,
     /// CPU / launch-unit MMIO-side traffic (SoC integration).
     Cpu,
+    /// Descriptor port of DMAC channel `c >= 1` (channel 0 is
+    /// [`Port::Frontend`]; use [`Port::frontend_of`]).
+    ChFrontend(u8),
+    /// Payload port of DMAC channel `c >= 1`.
+    ChBackend(u8),
 }
+
+/// Interleaved `(frontend, backend)` port pairs for every channel, in
+/// arbitration order.  `ports()` implementations slice this static so
+/// they can return `&'static [Port]` for any channel count.
+pub static CHANNEL_PAIRS: [Port; 2 * MAX_CHANNELS] = [
+    Port::Frontend,
+    Port::Backend,
+    Port::ChFrontend(1),
+    Port::ChBackend(1),
+    Port::ChFrontend(2),
+    Port::ChBackend(2),
+    Port::ChFrontend(3),
+    Port::ChBackend(3),
+    Port::ChFrontend(4),
+    Port::ChBackend(4),
+    Port::ChFrontend(5),
+    Port::ChBackend(5),
+    Port::ChFrontend(6),
+    Port::ChBackend(6),
+    Port::ChFrontend(7),
+    Port::ChBackend(7),
+];
 
 impl Port {
     /// Dense index for counter arrays (§Perf: the bus monitor counts
     /// every beat; a BTreeMap lookup per beat was a profile hotspot).
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 5 + 2 * MAX_CHANNELS;
 
     pub fn index(self) -> usize {
         match self {
@@ -33,7 +67,60 @@ impl Port {
             Port::LcFrontend => 2,
             Port::LcBackend => 3,
             Port::Cpu => 4,
+            // Hard assert (also in release): the index feeds fixed
+            // counter arrays, and an out-of-range channel must fail
+            // here, at the source, not deep inside the bus monitor.
+            Port::ChFrontend(c) => {
+                assert!((c as usize) < MAX_CHANNELS, "channel {c} out of range");
+                5 + 2 * c as usize
+            }
+            Port::ChBackend(c) => {
+                assert!((c as usize) < MAX_CHANNELS, "channel {c} out of range");
+                6 + 2 * c as usize
+            }
         }
+    }
+
+    /// The descriptor-fetch port of DMAC channel `ch`.
+    pub fn frontend_of(ch: usize) -> Port {
+        assert!(ch < MAX_CHANNELS, "channel {ch} exceeds MAX_CHANNELS");
+        if ch == 0 {
+            Port::Frontend
+        } else {
+            Port::ChFrontend(ch as u8)
+        }
+    }
+
+    /// The payload port of DMAC channel `ch`.
+    pub fn backend_of(ch: usize) -> Port {
+        assert!(ch < MAX_CHANNELS, "channel {ch} exceeds MAX_CHANNELS");
+        if ch == 0 {
+            Port::Backend
+        } else {
+            Port::ChBackend(ch as u8)
+        }
+    }
+
+    /// `(channel, is_frontend)` for DMAC channel ports, `None` for the
+    /// LogiCORE and CPU ports.  The canonical ports of channel 0 are
+    /// `Frontend`/`Backend` (see [`Port::frontend_of`]); a manually
+    /// constructed `ChFrontend(0)`/`ChBackend(0)` is non-canonical and
+    /// deliberately resolves to `None` so routing treats it as foreign
+    /// instead of half-aliasing the real channel-0 ports.
+    pub fn dmac_channel(self) -> Option<(usize, bool)> {
+        match self {
+            Port::Frontend => Some((0, true)),
+            Port::Backend => Some((0, false)),
+            Port::ChFrontend(c) if c >= 1 => Some((c as usize, true)),
+            Port::ChBackend(c) if c >= 1 => Some((c as usize, false)),
+            _ => None,
+        }
+    }
+
+    /// True for ports that carry payload traffic (Table IV `r-w`
+    /// probes key on the first payload beat of any such port).
+    pub fn is_payload(self) -> bool {
+        matches!(self, Port::Backend | Port::LcBackend | Port::ChBackend(_))
     }
 }
 
@@ -110,5 +197,48 @@ mod tests {
     fn ports_are_distinct() {
         assert_ne!(Port::Frontend, Port::Backend);
         assert_ne!(Port::LcFrontend, Port::LcBackend);
+        assert_ne!(Port::ChFrontend(1), Port::ChBackend(1));
+        assert_ne!(Port::ChFrontend(1), Port::ChFrontend(2));
+    }
+
+    #[test]
+    fn channel_zero_keeps_legacy_ports() {
+        assert_eq!(Port::frontend_of(0), Port::Frontend);
+        assert_eq!(Port::backend_of(0), Port::Backend);
+        assert_eq!(Port::frontend_of(3), Port::ChFrontend(3));
+        assert_eq!(Port::backend_of(3), Port::ChBackend(3));
+    }
+
+    #[test]
+    fn port_indices_are_dense_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for ch in 0..MAX_CHANNELS {
+            for p in [Port::frontend_of(ch), Port::backend_of(ch)] {
+                assert!(p.index() < Port::COUNT);
+                seen.insert(p.index());
+            }
+        }
+        for p in [Port::LcFrontend, Port::LcBackend, Port::Cpu] {
+            assert!(p.index() < Port::COUNT);
+            seen.insert(p.index());
+        }
+        assert_eq!(seen.len(), 2 * MAX_CHANNELS + 3);
+    }
+
+    #[test]
+    fn channel_pairs_round_trip() {
+        for ch in 0..MAX_CHANNELS {
+            assert_eq!(CHANNEL_PAIRS[2 * ch], Port::frontend_of(ch));
+            assert_eq!(CHANNEL_PAIRS[2 * ch + 1], Port::backend_of(ch));
+            assert_eq!(Port::frontend_of(ch).dmac_channel(), Some((ch, true)));
+            assert_eq!(Port::backend_of(ch).dmac_channel(), Some((ch, false)));
+        }
+        assert_eq!(Port::Cpu.dmac_channel(), None);
+        // Non-canonical channel-0 spellings do not alias the real ports.
+        assert_eq!(Port::ChFrontend(0).dmac_channel(), None);
+        assert_eq!(Port::ChBackend(0).dmac_channel(), None);
+        assert!(Port::backend_of(2).is_payload());
+        assert!(!Port::frontend_of(2).is_payload());
+        assert!(Port::LcBackend.is_payload());
     }
 }

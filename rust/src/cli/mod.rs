@@ -2,6 +2,7 @@
 //! set).  Flags are `--name value` or `--name=value`; the first
 //! non-flag token is the subcommand.
 
+use crate::axi::ArbPolicy;
 use crate::dmac::DmacConfig;
 use crate::mem::LatencyProfile;
 use crate::{Error, Result};
@@ -116,16 +117,50 @@ impl Args {
         self.get_bool("naive")
     }
 
+    /// `--policy rr|wrr|strict`: arbitration policy for the
+    /// multi-channel contention experiments.
+    pub fn policy(&self) -> Result<ArbPolicy> {
+        match self.get_or("policy", "rr").as_str() {
+            "rr" => Ok(ArbPolicy::RoundRobin),
+            "wrr" => Ok(ArbPolicy::WeightedRoundRobin),
+            "strict" => Ok(ArbPolicy::StrictPriority),
+            other => Err(Error::Cli(format!("unknown --policy `{other}` (rr|wrr|strict)"))),
+        }
+    }
+
+    /// `--weights 4,2,1,1`: per-channel QoS weights (comma-separated,
+    /// each >= 1 — the arbiter has no notion of a zero-share channel).
+    pub fn weights(&self) -> Result<Option<Vec<u32>>> {
+        match self.get("weights") {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|w| match w.trim().parse::<u32>() {
+                    Ok(0) => Err(Error::Cli("--weights entries must be >= 1".into())),
+                    Ok(n) => Ok(n),
+                    Err(_) => Err(Error::Cli(format!("bad weight `{w}` in --weights"))),
+                })
+                .collect::<Result<Vec<u32>>>()
+                .map(Some),
+        }
+    }
+
     /// `--latency ideal|ddr3|ultradeep|<cycles>`.
     pub fn latency(&self) -> Result<LatencyProfile> {
-        match self.get_or("latency", "ddr3").as_str() {
+        self.latency_from("latency")
+    }
+
+    /// Parse a latency profile out of an arbitrary flag (e.g. the
+    /// `--profile` filter of `bench-throughput`).
+    pub fn latency_from(&self, key: &str) -> Result<LatencyProfile> {
+        match self.get_or(key, "ddr3").as_str() {
             "ideal" => Ok(LatencyProfile::Ideal),
             "ddr3" => Ok(LatencyProfile::Ddr3),
             "ultradeep" | "deep" => Ok(LatencyProfile::UltraDeep),
             other => other
                 .parse::<u32>()
                 .map(LatencyProfile::Custom)
-                .map_err(|_| Error::Cli(format!("unknown --latency `{other}`"))),
+                .map_err(|_| Error::Cli(format!("unknown --{key} `{other}`"))),
         }
     }
 }
@@ -189,5 +224,17 @@ mod tests {
     fn naive_flag() {
         assert!(parse("x --naive").naive());
         assert!(!parse("x").naive());
+    }
+
+    #[test]
+    fn policy_and_weights() {
+        assert_eq!(parse("x").policy().unwrap(), ArbPolicy::RoundRobin);
+        assert_eq!(parse("x --policy wrr").policy().unwrap(), ArbPolicy::WeightedRoundRobin);
+        assert_eq!(parse("x --policy strict").policy().unwrap(), ArbPolicy::StrictPriority);
+        assert!(parse("x --policy fifo").policy().is_err());
+        assert_eq!(parse("x").weights().unwrap(), None);
+        assert_eq!(parse("x --weights 4,2,1").weights().unwrap(), Some(vec![4, 2, 1]));
+        assert!(parse("x --weights 4,x").weights().is_err());
+        assert!(parse("x --weights 4,0").weights().is_err(), "zero weight rejected");
     }
 }

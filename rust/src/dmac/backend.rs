@@ -84,6 +84,10 @@ impl Backend {
         }
     }
 
+    pub fn port(&self) -> Port {
+        self.port
+    }
+
     /// A transfer occupies a queue slot from acceptance until its last
     /// read beat has entered the r→w datapath; the B-response tracker
     /// is a separate (cheap) structure, like the hardware's completion

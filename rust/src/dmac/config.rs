@@ -17,13 +17,18 @@ pub struct DmacConfig {
     /// inter-transfer data dependences (the paper's DMAC, like the
     /// hardware, does not order payloads of distinct descriptors).
     pub strict_order: bool,
+    /// QoS weight of this channel at the system arbiter (multi-channel
+    /// systems; ignored by the round-robin policy).  Higher = more bus
+    /// share under `WeightedRoundRobin`, higher priority under
+    /// `StrictPriority`.
+    pub weight: u32,
 }
 
 impl DmacConfig {
     /// Table I `base`: 4 descriptors in flight, prefetching disabled.
     /// Closely matches the LogiCORE IP DMA default configuration.
     pub fn base() -> Self {
-        Self { in_flight: 4, prefetch: 0, launch_latency: 3, strict_order: false }
+        Self { in_flight: 4, prefetch: 0, launch_latency: 3, strict_order: false, weight: 1 }
     }
 
     /// Table I `speculation`: `base` + 4 speculation slots.
@@ -43,6 +48,12 @@ impl DmacConfig {
 
     pub fn with_strict_order(mut self) -> Self {
         self.strict_order = true;
+        self
+    }
+
+    /// Set the channel's QoS weight (floored at 1 by the arbiter).
+    pub fn with_weight(mut self, weight: u32) -> Self {
+        self.weight = weight;
         self
     }
 
@@ -86,5 +97,13 @@ mod tests {
     #[test]
     fn launch_latency_matches_table4() {
         assert_eq!(DmacConfig::scaled().launch_latency, 3);
+    }
+
+    #[test]
+    fn weight_defaults_to_one_and_is_settable() {
+        assert_eq!(DmacConfig::base().weight, 1);
+        assert_eq!(DmacConfig::speculation().with_weight(4).weight, 4);
+        // Weight does not affect the Table I preset name.
+        assert_eq!(DmacConfig::scaled().with_weight(7).name(), "scaled");
     }
 }

@@ -27,6 +27,14 @@ pub trait Controller: Tickable {
     /// Memory-mapped CSR write: launch the chain headed at `desc_addr`.
     fn csr_write(&mut self, now: Cycle, desc_addr: u64);
 
+    /// Banked CSR write: launch on channel `ch`.  Single-channel
+    /// controllers only have channel 0 and fall through to
+    /// [`csr_write`](Self::csr_write).
+    fn csr_write_ch(&mut self, now: Cycle, ch: usize, desc_addr: u64) {
+        debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.csr_write(now, desc_addr);
+    }
+
     /// Deliver a read-data beat returned by the memory system.
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat);
 
@@ -51,6 +59,14 @@ pub trait Controller: Tickable {
     /// Manager ports of this controller, in arbitration order.
     fn ports(&self) -> &'static [Port];
 
+    /// QoS weight of each manager port, aligned with
+    /// [`ports`](Self::ports).  Consumed by the system arbiter under
+    /// the weighted / strict-priority policies; the default is uniform
+    /// service.
+    fn port_weights(&self) -> Vec<u32> {
+        vec![1; self.ports().len()]
+    }
+
     /// All queues drained and no transfer in flight.
     fn idle(&self) -> bool;
 
@@ -59,4 +75,15 @@ pub trait Controller: Tickable {
 
     /// Number of IRQ edges raised since the last call.
     fn take_irq(&mut self) -> u64;
+
+    /// Per-channel IRQ edges since the last call, delivered through
+    /// `sink(channel, edges)`.  Single-channel controllers report
+    /// everything on channel 0; the SoC routes channel `c` to PLIC
+    /// source `DMAC_IRQ_SOURCE + c`.
+    fn take_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        let n = self.take_irq();
+        if n > 0 {
+            sink(0, n);
+        }
+    }
 }

@@ -59,6 +59,9 @@ struct Writeback {
 #[derive(Debug, Clone)]
 pub struct Frontend {
     cfg: DmacConfig,
+    /// Manager port descriptor traffic is issued on (channel-banked in
+    /// multi-channel systems; `Port::Frontend` for channel 0).
+    port: Port,
     /// CSR launch queue: (eligible_cycle, chain head address).
     csr_queue: VecDeque<(Cycle, u64)>,
     /// Outstanding fetches in AR-issue order (memory serves FIFO, so
@@ -94,8 +97,14 @@ pub struct Frontend {
 
 impl Frontend {
     pub fn new(cfg: DmacConfig) -> Self {
+        Self::with_port(cfg, Port::Frontend)
+    }
+
+    /// A frontend issuing on a banked channel port.
+    pub fn with_port(cfg: DmacConfig, port: Port) -> Self {
         Self {
             cfg,
+            port,
             csr_queue: VecDeque::new(),
             fetches: VecDeque::new(),
             handoff: VecDeque::new(),
@@ -114,6 +123,10 @@ impl Frontend {
 
     pub fn config(&self) -> DmacConfig {
         self.cfg
+    }
+
+    pub fn port(&self) -> Port {
+        self.port
     }
 
     /// Memory-mapped CSR write (paper §II-A).  The address becomes
@@ -381,12 +394,7 @@ impl Frontend {
         slot.granted = true;
         self.granted_count += 1;
         stats.desc_beats += Descriptor::fetch_beats() as u64;
-        Some(ReadReq::new(
-            Port::Frontend,
-            slot.addr,
-            slot.addr,
-            Descriptor::fetch_beats(),
-        ))
+        Some(ReadReq::new(self.port, slot.addr, slot.addr, Descriptor::fetch_beats()))
     }
 
     pub fn wants_w(&self) -> bool {
@@ -400,7 +408,7 @@ impl Frontend {
         self.wb_outstanding.push((tag, wb));
         stats.writeback_beats += 1;
         Some(WriteBeat {
-            port: Port::Frontend,
+            port: self.port,
             tag,
             addr: wb.desc_addr,
             data: COMPLETION_STAMP.to_le_bytes(),

@@ -14,37 +14,58 @@ pub mod config;
 pub mod controller;
 pub mod descriptor;
 pub mod frontend;
+pub mod multichannel;
 
 pub use backend::Backend;
 pub use config::DmacConfig;
 pub use controller::Controller;
 pub use descriptor::{ChainBuilder, Descriptor, DESC_BYTES, END_OF_CHAIN};
 pub use frontend::Frontend;
+pub use multichannel::MultiChannel;
 
-use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS};
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 
 /// Our DMAC: frontend + backend glued through the handoff and
-/// completion queues (Fig. 1).
+/// completion queues (Fig. 1).  `channel` banks the manager ports (and
+/// the CSR/IRQ lines at the system level): channel 0 keeps the legacy
+/// `Frontend`/`Backend` ports, so a one-channel system is structurally
+/// identical to the original single-channel DMAC.
 #[derive(Debug, Clone)]
 pub struct Dmac {
     pub frontend: Frontend,
     pub backend: Backend,
+    channel: usize,
     stats: RunStats,
 }
 
 impl Dmac {
     pub fn new(cfg: DmacConfig) -> Self {
+        Self::with_channel(cfg, 0)
+    }
+
+    /// A DMAC instance banked as channel `ch` (< [`crate::axi::MAX_CHANNELS`]).
+    pub fn with_channel(cfg: DmacConfig, ch: usize) -> Self {
         Self {
-            frontend: Frontend::new(cfg),
-            backend: Backend::new(cfg.in_flight, cfg.strict_order, 0),
+            frontend: Frontend::with_port(cfg, Port::frontend_of(ch)),
+            backend: Backend::with_port(
+                cfg.in_flight,
+                cfg.strict_order,
+                0,
+                Port::backend_of(ch),
+            ),
+            channel: ch,
             stats: RunStats::default(),
         }
     }
 
     pub fn config(&self) -> DmacConfig {
         self.frontend.config()
+    }
+
+    pub fn channel(&self) -> usize {
+        self.channel
     }
 }
 
@@ -64,18 +85,22 @@ impl Controller for Dmac {
     }
 
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
-        match beat.port {
-            Port::Frontend => self.frontend.on_desc_beat(now, beat, &mut self.stats),
-            Port::Backend => self.backend.on_payload_beat(now, beat, &mut self.stats),
-            p => panic!("unexpected R beat for port {p:?} at our DMAC"),
+        if beat.port == self.frontend.port() {
+            self.frontend.on_desc_beat(now, beat, &mut self.stats);
+        } else if beat.port == self.backend.port() {
+            self.backend.on_payload_beat(now, beat, &mut self.stats);
+        } else {
+            panic!("unexpected R beat for port {:?} at DMAC channel {}", beat.port, self.channel);
         }
     }
 
     fn on_b(&mut self, now: Cycle, b: BResp) {
-        match b.port {
-            Port::Frontend => self.frontend.on_writeback_b(now, b, &mut self.stats),
-            Port::Backend => self.backend.on_write_b(now, b, &mut self.stats),
-            p => panic!("unexpected B for port {p:?} at our DMAC"),
+        if b.port == self.frontend.port() {
+            self.frontend.on_writeback_b(now, b, &mut self.stats);
+        } else if b.port == self.backend.port() {
+            self.backend.on_write_b(now, b, &mut self.stats);
+        } else {
+            panic!("unexpected B for port {:?} at DMAC channel {}", b.port, self.channel);
         }
     }
 
@@ -91,39 +116,51 @@ impl Controller for Dmac {
     }
 
     fn wants_ar(&self, port: Port) -> bool {
-        match port {
-            Port::Frontend => self.frontend.wants_ar(),
-            Port::Backend => self.backend.wants_ar(),
-            _ => false,
+        if port == self.frontend.port() {
+            self.frontend.wants_ar()
+        } else if port == self.backend.port() {
+            self.backend.wants_ar()
+        } else {
+            false
         }
     }
 
     fn pop_ar(&mut self, now: Cycle, port: Port) -> Option<ReadReq> {
-        match port {
-            Port::Frontend => self.frontend.pop_ar(now, &mut self.stats),
-            Port::Backend => self.backend.pop_ar(now, &mut self.stats),
-            _ => None,
+        if port == self.frontend.port() {
+            self.frontend.pop_ar(now, &mut self.stats)
+        } else if port == self.backend.port() {
+            self.backend.pop_ar(now, &mut self.stats)
+        } else {
+            None
         }
     }
 
     fn wants_w(&self, port: Port) -> bool {
-        match port {
-            Port::Frontend => self.frontend.wants_w(),
-            Port::Backend => self.backend.wants_w(),
-            _ => false,
+        if port == self.frontend.port() {
+            self.frontend.wants_w()
+        } else if port == self.backend.port() {
+            self.backend.wants_w()
+        } else {
+            false
         }
     }
 
     fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat> {
-        match port {
-            Port::Frontend => self.frontend.pop_w(now, &mut self.stats),
-            Port::Backend => self.backend.pop_w(now, &mut self.stats),
-            _ => None,
+        if port == self.frontend.port() {
+            self.frontend.pop_w(now, &mut self.stats)
+        } else if port == self.backend.port() {
+            self.backend.pop_w(now, &mut self.stats)
+        } else {
+            None
         }
     }
 
     fn ports(&self) -> &'static [Port] {
-        &[Port::Frontend, Port::Backend]
+        &CHANNEL_PAIRS[2 * self.channel..2 * self.channel + 2]
+    }
+
+    fn port_weights(&self) -> Vec<u32> {
+        vec![self.config().weight; 2]
     }
 
     fn idle(&self) -> bool {

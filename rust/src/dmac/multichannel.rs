@@ -1,0 +1,275 @@
+//! Multi-channel DMAC: `N` independent frontend/backend pairs behind
+//! one shared AXI bus.
+//!
+//! The paper's DMAC (Fig. 1) is a single frontend/backend pair; this
+//! module banks `N` of them the way XDMA (arXiv 2508.08396) distributes
+//! layout-flexible engines and the Modular DMA Engine (arXiv
+//! 2305.05240) replicates iDMA backends behind a shared crossbar:
+//!
+//! * each channel owns a banked CSR slot (`csr_write_ch`), a banked
+//!   pair of manager ports (`Port::frontend_of(ch)` /
+//!   `Port::backend_of(ch)`), and its own IRQ line (PLIC source
+//!   `DMAC_IRQ_SOURCE + ch`);
+//! * the system arbiter sees all `2N` ports and applies the configured
+//!   QoS policy (`axi::ArbPolicy`) with per-channel weights from
+//!   [`DmacConfig::weight`];
+//! * statistics are kept per channel and merged (completion logs
+//!   time-sorted) when the run finishes.
+//!
+//! Channel 0 keeps the legacy `Frontend`/`Backend` ports and the
+//! default `csr_write` path, so an `N = 1` [`MultiChannel`] is
+//! structurally — and, property-tested, cycle-for-cycle — identical to
+//! a bare [`Dmac`].
+
+use super::{Controller, Dmac, DmacConfig};
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS, MAX_CHANNELS};
+use crate::mem::latency::BResp;
+use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
+
+#[derive(Debug, Clone)]
+pub struct MultiChannel {
+    channels: Vec<Dmac>,
+    /// Per-channel stats snapshot taken at `take_stats` (live stats
+    /// stay inside each channel until then).
+    per_channel: Vec<RunStats>,
+    /// Merged aggregate produced by the last `take_stats`.
+    merged: RunStats,
+}
+
+impl MultiChannel {
+    /// One channel per configuration entry (`cfgs[i].weight` is the
+    /// channel's QoS weight at the system arbiter).
+    pub fn new(cfgs: &[DmacConfig]) -> Self {
+        assert!(!cfgs.is_empty(), "at least one channel");
+        assert!(cfgs.len() <= MAX_CHANNELS, "at most {MAX_CHANNELS} channels");
+        Self {
+            channels: cfgs
+                .iter()
+                .enumerate()
+                .map(|(ch, &cfg)| Dmac::with_channel(cfg, ch))
+                .collect(),
+            per_channel: Vec::new(),
+            merged: RunStats::default(),
+        }
+    }
+
+    /// `n` identical channels.
+    pub fn uniform(cfg: DmacConfig, n: usize) -> Self {
+        Self::new(&vec![cfg; n])
+    }
+
+    pub fn num_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    pub fn channel(&self, ch: usize) -> &Dmac {
+        &self.channels[ch]
+    }
+
+    /// Per-channel run statistics: the live counters while the run is
+    /// in flight, or the snapshot taken by the final `take_stats`.
+    pub fn channel_stats(&self, ch: usize) -> &RunStats {
+        if self.per_channel.len() == self.channels.len() {
+            &self.per_channel[ch]
+        } else {
+            Controller::stats(&self.channels[ch])
+        }
+    }
+
+    fn route(&self, port: Port) -> Option<usize> {
+        let (ch, _) = port.dmac_channel()?;
+        (ch < self.channels.len()).then_some(ch)
+    }
+}
+
+impl Tickable for MultiChannel {
+    fn tick(&mut self, now: Cycle) {
+        Controller::step(self, now);
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        self.channels
+            .iter()
+            .fold(None, |h, c| EventHorizon::merge(h, Tickable::next_event(c)))
+    }
+}
+
+impl Controller for MultiChannel {
+    fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
+        self.csr_write_ch(now, 0, desc_addr);
+    }
+
+    fn csr_write_ch(&mut self, now: Cycle, ch: usize, desc_addr: u64) {
+        // New work invalidates the last run's snapshot, so
+        // `channel_stats` goes back to reading live counters.
+        self.per_channel.clear();
+        self.channels[ch].csr_write(now, desc_addr);
+    }
+
+    fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
+        let ch = self.route(beat.port).expect("R beat for unknown channel");
+        self.channels[ch].on_r_beat(now, beat);
+    }
+
+    fn on_b(&mut self, now: Cycle, b: BResp) {
+        let ch = self.route(b.port).expect("B for unknown channel");
+        self.channels[ch].on_b(now, b);
+    }
+
+    fn step(&mut self, now: Cycle) {
+        for c in &mut self.channels {
+            c.step(now);
+        }
+    }
+
+    fn wants_ar(&self, port: Port) -> bool {
+        self.route(port).is_some_and(|ch| self.channels[ch].wants_ar(port))
+    }
+
+    fn pop_ar(&mut self, now: Cycle, port: Port) -> Option<ReadReq> {
+        let ch = self.route(port)?;
+        self.channels[ch].pop_ar(now, port)
+    }
+
+    fn wants_w(&self, port: Port) -> bool {
+        self.route(port).is_some_and(|ch| self.channels[ch].wants_w(port))
+    }
+
+    fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat> {
+        let ch = self.route(port)?;
+        self.channels[ch].pop_w(now, port)
+    }
+
+    fn ports(&self) -> &'static [Port] {
+        &CHANNEL_PAIRS[..2 * self.channels.len()]
+    }
+
+    fn port_weights(&self) -> Vec<u32> {
+        self.channels
+            .iter()
+            .flat_map(|c| {
+                let w = c.config().weight;
+                [w, w]
+            })
+            .collect()
+    }
+
+    fn idle(&self) -> bool {
+        self.channels.iter().all(Controller::idle)
+    }
+
+    /// The merged aggregate of the last `take_stats` (empty while a run
+    /// is in flight — use [`channel_stats`](Self::channel_stats) for
+    /// live per-channel counters).
+    fn stats(&self) -> &RunStats {
+        &self.merged
+    }
+
+    fn take_stats(&mut self) -> RunStats {
+        self.per_channel = self.channels.iter_mut().map(Controller::take_stats).collect();
+        let mut merged = RunStats::default();
+        for s in &self.per_channel {
+            merged.absorb(s.clone());
+        }
+        // Time-ordered merged completion log; the sort is stable, so
+        // ties keep channel order and N = 1 is the exact identity.
+        merged.completions.sort_by_key(|c| c.cycle);
+        self.merged = merged.clone();
+        merged
+    }
+
+    fn take_irq(&mut self) -> u64 {
+        self.channels.iter_mut().map(Controller::take_irq).sum()
+    }
+
+    fn take_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        for (ch, c) in self.channels.iter_mut().enumerate() {
+            let n = Controller::take_irq(c);
+            if n > 0 {
+                sink(ch, n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ports_are_the_interleaved_channel_pairs() {
+        let mc = MultiChannel::uniform(DmacConfig::base(), 3);
+        assert_eq!(
+            mc.ports(),
+            &[
+                Port::Frontend,
+                Port::Backend,
+                Port::ChFrontend(1),
+                Port::ChBackend(1),
+                Port::ChFrontend(2),
+                Port::ChBackend(2),
+            ]
+        );
+    }
+
+    #[test]
+    fn n1_ports_match_single_channel() {
+        let mc = MultiChannel::uniform(DmacConfig::speculation(), 1);
+        let single = Dmac::new(DmacConfig::speculation());
+        assert_eq!(mc.ports(), single.ports());
+    }
+
+    #[test]
+    fn port_weights_follow_channel_configs() {
+        let mc = MultiChannel::new(&[
+            DmacConfig::base().with_weight(4),
+            DmacConfig::base().with_weight(1),
+        ]);
+        assert_eq!(mc.port_weights(), vec![4, 4, 1, 1]);
+    }
+
+    #[test]
+    fn csr_writes_land_on_their_channel() {
+        let mut mc = MultiChannel::uniform(DmacConfig::base(), 2);
+        mc.csr_write_ch(0, 1, 0x2000);
+        mc.step(3);
+        assert!(!mc.wants_ar(Port::Frontend), "channel 0 idle");
+        assert!(mc.wants_ar(Port::ChFrontend(1)), "channel 1 launched");
+        let req = mc.pop_ar(3, Port::ChFrontend(1)).unwrap();
+        assert_eq!(req.addr, 0x2000);
+        assert_eq!(req.port, Port::ChFrontend(1));
+    }
+
+    #[test]
+    fn foreign_ports_are_ignored() {
+        let mut mc = MultiChannel::uniform(DmacConfig::base(), 1);
+        assert!(!mc.wants_ar(Port::LcFrontend));
+        assert!(!mc.wants_w(Port::Cpu));
+        assert!(mc.pop_ar(0, Port::ChFrontend(5)).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_channels_rejected() {
+        MultiChannel::uniform(DmacConfig::base(), MAX_CHANNELS + 1);
+    }
+
+    #[test]
+    fn take_irq_channels_attributes_edges() {
+        let mut mc = MultiChannel::uniform(DmacConfig::base(), 2);
+        // Inject IRQ edges directly through the feedback path.
+        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true);
+        let mut s = RunStats::default();
+        let w = mc.channels[1].frontend.pop_w(0, &mut s).unwrap();
+        mc.channels[1]
+            .frontend
+            .on_writeback_b(1, BResp { port: w.port, tag: w.tag }, &mut s);
+        let mut seen = Vec::new();
+        mc.take_irq_channels(&mut |ch, n| seen.push((ch, n)));
+        assert_eq!(seen, vec![(1, 1)]);
+        // Drained: a second call reports nothing.
+        let mut seen2 = Vec::new();
+        mc.take_irq_channels(&mut |ch, n| seen2.push((ch, n)));
+        assert!(seen2.is_empty());
+    }
+}

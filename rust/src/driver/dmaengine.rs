@@ -35,6 +35,9 @@ pub struct DmaDriver {
     /// over multiple descriptors (hardware max is 4 GiB; the driver
     /// uses 1 GiB chunks like the kernel's `dma_get_max_seg_size`).
     pub max_seg_bytes: u64,
+    /// Physical DMAC channel this driver instance launches on (banked
+    /// CSR; 0 on single-channel systems).
+    channel: usize,
     pool_base: u64,
     pool_size: u64,
     pool_cursor: u64,
@@ -57,6 +60,7 @@ impl DmaDriver {
         Self {
             max_chains: max_chains.max(1),
             max_seg_bytes: 1 << 30,
+            channel: 0,
             pool_base,
             pool_size,
             pool_cursor: 0,
@@ -70,6 +74,17 @@ impl DmaDriver {
         }
     }
 
+    /// Bind this driver instance to physical channel `ch` (its CSR
+    /// writes and promoted chains launch there).
+    pub fn on_channel(mut self, ch: usize) -> Self {
+        self.channel = ch;
+        self
+    }
+
+    pub fn channel(&self) -> usize {
+        self.channel
+    }
+
     fn alloc_desc(&mut self) -> Result<u64> {
         if self.pool_cursor + DESC_BYTES > self.pool_size {
             return Err(Error::Driver("descriptor pool exhausted".into()));
@@ -80,18 +95,27 @@ impl DmaDriver {
     }
 
     /// `device_prep_dma_memcpy`: build the descriptor list for one
-    /// client transfer (split over `max_seg_bytes` chunks).
+    /// client transfer (split over `max_seg_bytes` chunks).  A prep
+    /// that exhausts the pool mid-split frees everything it allocated
+    /// (the failed transaction must not leak descriptors).
     pub fn prep_memcpy(&mut self, dst: u64, src: u64, len: u64) -> Result<Tx> {
         if len == 0 {
             return Err(Error::Driver("zero-length memcpy".into()));
         }
         let cookie = self.next_cookie;
         self.next_cookie += 1;
+        let pool_checkpoint = self.pool_cursor;
         let mut descs = Vec::new();
         let mut off = 0u64;
         while off < len {
             let seg = (len - off).min(self.max_seg_bytes).min(u32::MAX as u64 & !63);
-            let addr = self.alloc_desc()?;
+            let addr = match self.alloc_desc() {
+                Ok(addr) => addr,
+                Err(e) => {
+                    self.pool_cursor = pool_checkpoint;
+                    return Err(e);
+                }
+            };
             descs.push((addr, Descriptor::new(src + off, dst + off, seg as u32)));
             off += seg;
         }
@@ -129,7 +153,7 @@ impl DmaDriver {
         }
         let chain = Chain { head: flat[0].0, last_desc: flat[n - 1].0, cookies };
         if self.active.len() < self.max_chains {
-            sys.schedule_launch(now + 1, chain.head);
+            sys.schedule_launch_on(now + 1, self.channel, chain.head);
             self.active.push(chain);
         } else {
             self.stored.push_back(chain);
@@ -153,7 +177,7 @@ impl DmaDriver {
         while self.active.len() < self.max_chains {
             match self.stored.pop_front() {
                 Some(chain) => {
-                    sys.schedule_launch(now + 1, chain.head);
+                    sys.schedule_launch_on(now + 1, self.channel, chain.head);
                     self.active.push(chain);
                 }
                 None => break,

@@ -18,5 +18,7 @@
 //!    decrement the active count, and launch stored chains.
 
 pub mod dmaengine;
+pub mod multitenant;
 
 pub use dmaengine::{Cookie, DmaDriver, Tx};
+pub use multitenant::{MultiTenantDriver, VchanId};

@@ -1,0 +1,290 @@
+//! Multi-tenant allocator: many client submission queues (*virtual
+//! channels*) multiplexed onto the physical DMAC channels.
+//!
+//! The Linux dmaengine framework hands every client a `dma_chan`; on
+//! hardware with fewer physical channels than clients, the driver
+//! multiplexes.  This model reproduces that layer on top of
+//! [`DmaDriver`] (one instance per physical channel, each owning a
+//! slice of the descriptor pool and launching on its banked CSR):
+//!
+//! * **virtual channels** are opened per client, either *pinned* to a
+//!   physical channel or placed *least-loaded* (fewest outstanding
+//!   payload bytes, ties to the lowest channel id — deterministic);
+//! * **cookies** are drawn from one global monotone counter, so each
+//!   client observes a strictly increasing cookie sequence no matter
+//!   how its transfers were placed;
+//! * the **interrupt handler** is shared: every physical channel's
+//!   chains are scanned for completion stamps, stored chains are
+//!   promoted per channel, and completion callbacks fire in channel
+//!   order (deterministic).
+
+use super::dmaengine::{Cookie, DmaDriver};
+use crate::dmac::{Controller, DESC_BYTES};
+use crate::sim::Cycle;
+use crate::tb::System;
+use crate::{Error, Result};
+
+/// Handle of a client submission queue.
+pub type VchanId = usize;
+
+#[derive(Debug, Clone)]
+struct Vchan {
+    /// `Some(ch)` pins every submission to that physical channel.
+    pinned: Option<usize>,
+    /// Cookies issued to this client, in submission order.
+    cookies: Vec<Cookie>,
+}
+
+#[derive(Debug)]
+pub struct MultiTenantDriver {
+    phys: Vec<DmaDriver>,
+    vchans: Vec<Vchan>,
+    next_cookie: Cookie,
+    /// Outstanding work: (cookie, physical channel, payload bytes).
+    outstanding: Vec<(Cookie, usize, u64)>,
+    completed: Vec<Cookie>,
+    callback_cursor: usize,
+}
+
+impl MultiTenantDriver {
+    /// One [`DmaDriver`] per physical channel; the descriptor pool is
+    /// split evenly (descriptor-aligned) between them.
+    pub fn new(channels: usize, pool_base: u64, pool_size: u64, max_chains: usize) -> Self {
+        assert!(channels >= 1, "at least one physical channel");
+        let slice = pool_size / channels as u64 / DESC_BYTES * DESC_BYTES;
+        let phys = (0..channels)
+            .map(|ch| {
+                DmaDriver::new(pool_base + ch as u64 * slice, slice, max_chains).on_channel(ch)
+            })
+            .collect();
+        Self {
+            phys,
+            vchans: Vec::new(),
+            next_cookie: 1,
+            outstanding: Vec::new(),
+            completed: Vec::new(),
+            callback_cursor: 0,
+        }
+    }
+
+    pub fn num_channels(&self) -> usize {
+        self.phys.len()
+    }
+
+    /// Open a client submission queue with least-loaded placement.
+    pub fn open(&mut self) -> VchanId {
+        self.vchans.push(Vchan { pinned: None, cookies: Vec::new() });
+        self.vchans.len() - 1
+    }
+
+    /// Open a client submission queue pinned to physical channel `ch`.
+    pub fn open_pinned(&mut self, ch: usize) -> Result<VchanId> {
+        if ch >= self.phys.len() {
+            return Err(Error::Driver(format!(
+                "cannot pin to channel {ch}: only {} channels",
+                self.phys.len()
+            )));
+        }
+        self.vchans.push(Vchan { pinned: Some(ch), cookies: Vec::new() });
+        Ok(self.vchans.len() - 1)
+    }
+
+    /// Outstanding payload bytes currently placed on channel `ch`.
+    pub fn channel_load(&self, ch: usize) -> u64 {
+        self.outstanding.iter().filter(|&&(_, c, _)| c == ch).map(|&(_, _, b)| b).sum()
+    }
+
+    /// prep + submit in one step: place the transfer, build its
+    /// descriptor list on the chosen channel's pool, and commit it.
+    /// Returns the client-visible cookie (globally monotone).
+    ///
+    /// Unpinned placement prefers the least-loaded channel but falls
+    /// back across the others (in load order) when a channel's pool
+    /// slice is exhausted — outstanding bytes say nothing about
+    /// descriptor headroom.  Pinned submissions fail like a dedicated
+    /// channel would.
+    pub fn submit(&mut self, vchan: VchanId, dst: u64, src: u64, len: u64) -> Result<Cookie> {
+        let candidates: Vec<usize> = match self.vchans[vchan].pinned {
+            Some(ch) => vec![ch],
+            None => {
+                let mut load = vec![0u64; self.phys.len()];
+                for &(_, ch, bytes) in &self.outstanding {
+                    load[ch] += bytes;
+                }
+                let mut order: Vec<usize> = (0..self.phys.len()).collect();
+                order.sort_by_key(|&i| (load[i], i));
+                order
+            }
+        };
+        let mut last_err = None;
+        for ch in candidates {
+            match self.phys[ch].prep_memcpy(dst, src, len) {
+                Ok(mut tx) => {
+                    let cookie = self.next_cookie;
+                    self.next_cookie += 1;
+                    tx.cookie = cookie;
+                    self.phys[ch].tx_submit(tx);
+                    self.vchans[vchan].cookies.push(cookie);
+                    self.outstanding.push((cookie, ch, len));
+                    return Ok(cookie);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one candidate channel"))
+    }
+
+    /// `issue_pending` on every physical channel (each seals its own
+    /// committed transactions into a chain on its banked CSR).
+    pub fn issue_pending<C: Controller>(&mut self, sys: &mut System<C>, now: Cycle) {
+        for d in &mut self.phys {
+            d.issue_pending(sys, now);
+        }
+    }
+
+    /// Shared interrupt handler: scan every channel's chains, promote
+    /// stored chains, and collect completion callbacks.
+    pub fn irq_handler<C: Controller>(&mut self, sys: &mut System<C>, now: Cycle) {
+        for d in &mut self.phys {
+            d.irq_handler(sys, now);
+        }
+        let mut newly = Vec::new();
+        for d in &mut self.phys {
+            newly.extend(d.take_completed());
+        }
+        if !newly.is_empty() {
+            // One sweep over the outstanding set, not one per cookie.
+            let done: std::collections::HashSet<Cookie> = newly.iter().copied().collect();
+            self.outstanding.retain(|&(c, _, _)| !done.contains(&c));
+            self.completed.extend(newly);
+        }
+    }
+
+    pub fn is_complete(&self, cookie: Cookie) -> bool {
+        self.completed.contains(&cookie)
+    }
+
+    /// Completion callbacks fired since the last call.
+    pub fn take_completed(&mut self) -> Vec<Cookie> {
+        let new = self.completed[self.callback_cursor..].to_vec();
+        self.callback_cursor = self.completed.len();
+        new
+    }
+
+    /// Cookies issued to `vchan`, in submission order.
+    pub fn cookies_of(&self, vchan: VchanId) -> &[Cookie] {
+        &self.vchans[vchan].cookies
+    }
+
+    pub fn active_chains(&self) -> usize {
+        self.phys.iter().map(DmaDriver::active_chains).sum()
+    }
+
+    pub fn stored_chains(&self) -> usize {
+        self.phys.iter().map(DmaDriver::stored_chains).sum()
+    }
+
+    pub fn phys_driver(&self, ch: usize) -> &DmaDriver {
+        &self.phys[ch]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::map;
+
+    fn mt(channels: usize) -> MultiTenantDriver {
+        MultiTenantDriver::new(channels, map::DESC_BASE, map::DESC_SIZE, 2)
+    }
+
+    #[test]
+    fn pool_is_split_descriptor_aligned() {
+        let d = MultiTenantDriver::new(3, 0x1000, 1000, 1);
+        // 1000 / 3 = 333 -> floored to 320 (10 descriptors) per channel.
+        assert_eq!(d.num_channels(), 3);
+        let c1 = d.phys_driver(1);
+        assert_eq!(c1.channel(), 1);
+    }
+
+    #[test]
+    fn least_loaded_placement_balances_bytes() {
+        let mut d = mt(2);
+        let a = d.open();
+        // First submit: both empty -> channel 0.
+        d.submit(a, map::DST_BASE, map::SRC_BASE, 4096).unwrap();
+        assert_eq!(d.channel_load(0), 4096);
+        assert_eq!(d.channel_load(1), 0);
+        // Second: channel 1 is now the least loaded.
+        d.submit(a, map::DST_BASE + 8192, map::SRC_BASE, 1024).unwrap();
+        assert_eq!(d.channel_load(1), 1024);
+        // Third: channel 1 still lighter (1024 < 4096).
+        d.submit(a, map::DST_BASE + 16384, map::SRC_BASE, 512).unwrap();
+        assert_eq!(d.channel_load(1), 1536);
+    }
+
+    #[test]
+    fn pinned_vchan_always_lands_on_its_channel() {
+        let mut d = mt(2);
+        let v = d.open_pinned(1).unwrap();
+        for i in 0..4u64 {
+            d.submit(v, map::DST_BASE + i * 4096, map::SRC_BASE, 4096).unwrap();
+        }
+        assert_eq!(d.channel_load(0), 0);
+        assert_eq!(d.channel_load(1), 4 * 4096);
+        assert!(d.open_pinned(7).is_err(), "pin beyond channel count");
+    }
+
+    #[test]
+    fn cookies_are_globally_monotone_per_client() {
+        let mut d = mt(2);
+        let a = d.open();
+        let b = d.open_pinned(1).unwrap();
+        for i in 0..5u64 {
+            d.submit(a, map::DST_BASE + i * 8192, map::SRC_BASE, 256).unwrap();
+            d.submit(b, map::DST_BASE + 0x40000 + i * 8192, map::SRC_BASE, 256).unwrap();
+        }
+        for v in [a, b] {
+            let cs = d.cookies_of(v);
+            assert_eq!(cs.len(), 5);
+            assert!(cs.windows(2).all(|w| w[1] > w[0]), "monotone cookies: {cs:?}");
+        }
+        // Global uniqueness across clients.
+        let mut all: Vec<Cookie> =
+            d.cookies_of(a).iter().chain(d.cookies_of(b)).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 10);
+    }
+
+    #[test]
+    fn unpinned_submit_falls_back_across_exhausted_pool_slices() {
+        // 2 descriptors per channel slice.
+        let mut d = MultiTenantDriver::new(2, map::DESC_BASE, 4 * DESC_BYTES, 1);
+        let pinned = d.open_pinned(1).unwrap();
+        d.submit(pinned, map::DST_BASE + 0x10000, map::SRC_BASE, 1024).unwrap();
+        let v = d.open();
+        // Channel 0 is least-loaded; two submits fill its pool slice.
+        d.submit(v, map::DST_BASE, map::SRC_BASE, 64).unwrap();
+        d.submit(v, map::DST_BASE + 0x1000, map::SRC_BASE, 64).unwrap();
+        assert_eq!(d.channel_load(0), 128);
+        // Channel 0 is still least-loaded but its slice is exhausted:
+        // the submit must fall back to channel 1, not fail.
+        d.submit(v, map::DST_BASE + 0x2000, map::SRC_BASE, 64).unwrap();
+        assert_eq!(d.channel_load(1), 1024 + 64);
+        // Every slice full -> a clean driver error.
+        let err = d.submit(v, map::DST_BASE + 0x3000, map::SRC_BASE, 64);
+        assert!(matches!(err, Err(Error::Driver(_))));
+    }
+
+    #[test]
+    fn exhausted_channel_pool_is_a_driver_error() {
+        // 2 descriptors per channel.
+        let mut d = MultiTenantDriver::new(2, map::DESC_BASE, 4 * DESC_BYTES, 1);
+        let v = d.open_pinned(0).unwrap();
+        assert!(d.submit(v, map::DST_BASE, map::SRC_BASE, 64).is_ok());
+        assert!(d.submit(v, map::DST_BASE + 4096, map::SRC_BASE, 64).is_ok());
+        let err = d.submit(v, map::DST_BASE + 8192, map::SRC_BASE, 64);
+        assert!(matches!(err, Err(Error::Driver(_))));
+    }
+}

@@ -7,7 +7,11 @@
 //! idmac table1|table2|table3|table4
 //! idmac sweep --config base|speculation|scaled|DxS --latency … --size N
 //!             [--transfers N] [--hit-rate F] [--naive]
-//! idmac bench-throughput [--out FILE]   # writes BENCH_sim_throughput.json
+//! idmac bench-throughput [--out FILE] [--profile ideal|ddr3|ultradeep]
+//!                                       # writes BENCH_sim_throughput.json
+//! idmac contention [--channels N] [--policy rr|wrr|strict] [--weights 4,2,1,1]
+//!                  [--latency …] [--size N] [--transfers N] [--naive] [--out FILE]
+//!                                       # writes BENCH_multichannel.json
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
 //! idmac all     # every table + figure in paper order
@@ -57,6 +61,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("table3") => exp::table3().print(),
         Some("table4") => exp::table4().print(),
         Some("sweep") => sweep(args)?,
+        Some("contention") => contention(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
         Some("soc-demo") => soc_demo(args)?,
@@ -80,8 +85,8 @@ fn run(args: &Args) -> idmac::Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|bench-throughput|\
-                     oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
+const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
+                     bench-throughput|oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
 
 fn sweep(args: &Args) -> idmac::Result<()> {
     let cfg = args.dmac_config()?;
@@ -134,15 +139,62 @@ fn sweep(args: &Args) -> idmac::Result<()> {
     Ok(())
 }
 
+/// Multi-channel contention grid (channels × policy/weights × latency
+/// profiles); emits the deterministic `BENCH_multichannel.json`.  With
+/// an explicit `--policy`/`--weights`/`--latency` the grid collapses
+/// to that single point (plus the requested channel count).
+fn contention(args: &Args) -> idmac::Result<()> {
+    use idmac::report::contention as ct;
+
+    let channels = args.get_usize("channels", 4)?;
+    if channels == 0 || channels > idmac::axi::MAX_CHANNELS {
+        return Err(idmac::Error::Cli(format!(
+            "--channels must be in 1..={}",
+            idmac::axi::MAX_CHANNELS
+        )));
+    }
+    let transfers = args.get_usize("transfers", 48)?;
+    let size = args.get_usize("size", 256)? as u32;
+    let naive = args.naive();
+    let out = args.get_or("out", ct::BENCH_FILE);
+    let points = if args.get("policy").is_some()
+        || args.get("weights").is_some()
+        || args.get("latency").is_some()
+    {
+        let policy = args.policy()?;
+        let weights = args.weights()?.unwrap_or_else(|| vec![1; channels]);
+        if weights.len() != channels {
+            return Err(idmac::Error::Cli(format!(
+                "--weights lists {} entries for {channels} channels",
+                weights.len()
+            )));
+        }
+        vec![ct::run_contention(&weights, policy, args.latency()?, transfers, size, naive)]
+    } else {
+        ct::contention_grid(channels, transfers, size, naive)
+    };
+    let report = idmac::report::MultiChannelReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// Measure simulated-cycles-per-second across the three memory
 /// profiles, naive vs fast-forward, and emit `BENCH_sim_throughput.json`
 /// so the perf trajectory is tracked PR over PR (EXPERIMENTS.md §Perf).
+/// `--profile` restricts the grid to one memory profile (the CI
+/// bench-regression gate uses a small grid).
 fn bench_throughput(args: &Args) -> idmac::Result<()> {
     use idmac::report::ThroughputReport;
 
     let out = args.get_or("out", idmac::report::throughput::BENCH_FILE);
+    let profiles: Vec<LatencyProfile> = match args.get("profile") {
+        None => vec![LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep],
+        Some(_) => vec![args.latency_from("profile")?],
+    };
     let mut report = ThroughputReport::new();
-    for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
+    for profile in profiles {
         let label = format!("fig4-grid/{}", profile.name());
         let (naive_s, fast_s) = exp::push_grid_comparison(&mut report, &label, profile);
         println!(

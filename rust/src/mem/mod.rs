@@ -5,7 +5,7 @@
 //! *ultra-deep* (100 cycles, large-NoC SoC).  The model applies the
 //! configured latency once on the request path and once on the
 //! response path (`rf-rb = 2L + beats + overhead`, which calibrates
-//! Table IV — see DESIGN.md §6) and serves one read-data beat and one
+//! Table IV — see DESIGN.md §7) and serves one read-data beat and one
 //! write beat per cycle, which is the bandwidth wall all utilization
 //! curves are measured against.
 

@@ -1,0 +1,378 @@
+//! Multi-channel contention experiments: `BENCH_multichannel.json`.
+//!
+//! A family of experiments the single-stream paper sweeps cannot
+//! express: `N` DMAC channels launch independent chains at cycle 0 and
+//! contend for the one AXI bus under a QoS policy.  The grid sweeps
+//! channel count × arbitration policy/weights × memory latency profile
+//! and reports per-channel progress (bytes, completions, finish cycle)
+//! plus aggregate cycles.
+//!
+//! Everything in the JSON is *simulated-time* — no wall-clock — so the
+//! file is bit-deterministic and identical under both the event-horizon
+//! scheduler and the `--naive` per-cycle loop (CI diffs the two).
+
+use crate::axi::ArbPolicy;
+use crate::dmac::{ChainBuilder, Descriptor, DmacConfig, MultiChannel, DESC_BYTES};
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::LatencyProfile;
+use crate::report::parallel::par_map;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::Cycle;
+use crate::tb::System;
+use crate::workload::map;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_multichannel.json";
+
+/// Per-channel slice of the source/destination arenas (512 KiB each:
+/// 8 channels fit inside the 5 MiB SRC window of the 16 MiB map).
+pub const CH_ARENA_STRIDE: u64 = 0x8_0000;
+/// Per-channel slice of the descriptor pool.
+pub const CH_DESC_STRIDE: u64 = 0x6_0000;
+
+/// One channel's outcome under contention.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelOutcome {
+    pub channel: usize,
+    pub weight: u32,
+    pub bytes: u64,
+    pub completions: usize,
+    pub last_completion_cycle: Cycle,
+    pub irqs: u64,
+}
+
+/// One grid point: `channels` × `policy` × `profile`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContentionPoint {
+    pub channels: usize,
+    pub policy: &'static str,
+    pub weights: Vec<u32>,
+    pub profile: String,
+    pub size: u32,
+    pub transfers_per_channel: usize,
+    pub total_cycles: Cycle,
+    pub total_bytes: u64,
+    pub per_channel: Vec<ChannelOutcome>,
+}
+
+impl ContentionPoint {
+    /// Fraction of the moved bytes that channel `ch` moved.
+    pub fn share(&self, ch: usize) -> f64 {
+        if self.total_bytes == 0 {
+            return 0.0;
+        }
+        self.per_channel[ch].bytes as f64 / self.total_bytes as f64
+    }
+}
+
+/// Sequential chain for channel `ch` inside its arena slice.
+pub fn channel_chain(ch: usize, transfers: usize, size: u32) -> ChainBuilder {
+    let stride = (size as u64).next_multiple_of(map::LINE_BYTES);
+    assert!(
+        stride * transfers as u64 <= CH_ARENA_STRIDE,
+        "workload exceeds the per-channel arena slice"
+    );
+    let src_base = map::SRC_BASE + ch as u64 * CH_ARENA_STRIDE;
+    let dst_base = map::DST_BASE + ch as u64 * CH_ARENA_STRIDE;
+    let desc_base = map::DESC_BASE + ch as u64 * CH_DESC_STRIDE;
+    let mut cb = ChainBuilder::new();
+    for i in 0..transfers as u64 {
+        let d = Descriptor::new(src_base + i * stride, dst_base + i * stride, size);
+        let d = if i + 1 == transfers as u64 { d.with_irq() } else { d };
+        cb.push_at(desc_base + i * DESC_BYTES, d);
+    }
+    cb
+}
+
+/// Run one contention point: every channel launches its chain at cycle
+/// 0 and the system drains under `policy`.
+pub fn run_contention(
+    weights: &[u32],
+    policy: ArbPolicy,
+    profile: LatencyProfile,
+    transfers: usize,
+    size: u32,
+    naive: bool,
+) -> ContentionPoint {
+    let channels = weights.len();
+    // Report the *effective* weights: the arbiter floors at 1, and the
+    // JSON must describe the QoS configuration that actually ran.
+    let weights: Vec<u32> = weights.iter().map(|&w| w.max(1)).collect();
+    let cfgs: Vec<DmacConfig> = weights
+        .iter()
+        .map(|&w| DmacConfig::speculation().with_weight(w))
+        .collect();
+    let mut sys = System::new(profile, MultiChannel::new(&cfgs)).with_arbitration(policy);
+    for ch in 0..channels {
+        // Seed the first transfer's source line: payload values do not
+        // influence timing (the multichannel tests seed fully).
+        fill_pattern(
+            &mut sys.mem,
+            map::SRC_BASE + ch as u64 * CH_ARENA_STRIDE,
+            size as usize,
+            ch as u32 + 1,
+        );
+        let chain = channel_chain(ch, transfers, size);
+        sys.load_and_launch_on(0, ch, &chain);
+    }
+    let stats = if naive {
+        sys.run_until_idle_naive().expect("contention run (naive)")
+    } else {
+        sys.run_until_idle().expect("contention run")
+    };
+    let per_channel = (0..channels)
+        .map(|ch| {
+            let s = sys.ctrl.channel_stats(ch);
+            ChannelOutcome {
+                channel: ch,
+                weight: weights[ch],
+                bytes: s.total_bytes(),
+                completions: s.completions.len(),
+                last_completion_cycle: s.completions.last().map(|c| c.cycle).unwrap_or(0),
+                irqs: sys.irq_edges.get(ch).copied().unwrap_or(0),
+            }
+        })
+        .collect();
+    ContentionPoint {
+        channels,
+        policy: policy.name(),
+        weights,
+        profile: profile.name(),
+        size,
+        transfers_per_channel: transfers,
+        total_cycles: stats.end_cycle,
+        total_bytes: stats.total_bytes(),
+        per_channel,
+    }
+}
+
+/// The policy/weight rows of the grid for a given channel count:
+/// fair RR, weighted RR with descending weights, and strict priority
+/// with the same weights.
+pub fn policy_rows(channels: usize) -> Vec<(ArbPolicy, Vec<u32>)> {
+    let descending: Vec<u32> = (0..channels).map(|i| (channels - i) as u32).collect();
+    vec![
+        (ArbPolicy::RoundRobin, vec![1; channels]),
+        (ArbPolicy::WeightedRoundRobin, descending.clone()),
+        (ArbPolicy::StrictPriority, descending),
+    ]
+}
+
+/// The full grid: channel counts (powers of two up to `max_channels`,
+/// plus `max_channels` itself when it is not a power of two — the
+/// requested count must always be simulated) × policy rows × the three
+/// paper memory profiles, in deterministic order, executed on the
+/// parallel sweep executor.
+pub fn contention_grid(
+    max_channels: usize,
+    transfers: usize,
+    size: u32,
+    naive: bool,
+) -> Vec<ContentionPoint> {
+    let mut counts = Vec::new();
+    let mut n = 1;
+    while n <= max_channels {
+        counts.push(n);
+        n *= 2;
+    }
+    if counts.last() != Some(&max_channels) {
+        counts.push(max_channels);
+    }
+    let mut tasks: Vec<(Vec<u32>, ArbPolicy, LatencyProfile)> = Vec::new();
+    for &channels in &counts {
+        for (policy, weights) in policy_rows(channels) {
+            for profile in
+                [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+            {
+                tasks.push((weights.clone(), policy, profile));
+            }
+        }
+    }
+    par_map(tasks, |_, (weights, policy, profile)| {
+        run_contention(&weights, policy, profile, transfers, size, naive)
+    })
+}
+
+/// The machine-readable contention report (`BENCH_multichannel.json`,
+/// schema `idmac-multichannel/v1`).  Deliberately free of wall-clock
+/// fields: the file must be bit-identical across scheduler modes and
+/// machines.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MultiChannelReport {
+    pub points: Vec<ContentionPoint>,
+}
+
+impl MultiChannelReport {
+    pub fn new(points: Vec<ContentionPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-multichannel/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            let weights: Vec<String> = p.weights.iter().map(|w| w.to_string()).collect();
+            out.push_str(&format!(
+                "    {{\"channels\": {}, \"policy\": {}, \"weights\": [{}], \
+                 \"profile\": {}, \"size\": {}, \"transfers_per_channel\": {}, \
+                 \"total_cycles\": {}, \"total_bytes\": {}, \"per_channel\": [",
+                p.channels,
+                json_str(p.policy),
+                weights.join(", "),
+                json_str(&p.profile),
+                p.size,
+                p.transfers_per_channel,
+                p.total_cycles,
+                p.total_bytes,
+            ));
+            for (j, c) in p.per_channel.iter().enumerate() {
+                out.push_str(&format!(
+                    "{{\"channel\": {}, \"weight\": {}, \"bytes\": {}, \
+                     \"completions\": {}, \"last_completion_cycle\": {}, \"irqs\": {}}}{}",
+                    c.channel,
+                    c.weight,
+                    c.bytes,
+                    c.completions,
+                    c.last_completion_cycle,
+                    c.irqs,
+                    if j + 1 < p.per_channel.len() { ", " } else { "" },
+                ));
+            }
+            out.push_str(&format!(
+                "]}}{}\n",
+                if i + 1 < self.points.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable fairness table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Multi-channel contention — per-channel byte shares",
+            &["ch", "policy", "weights", "memory", "cycles", "KiB", "shares"],
+        );
+        for p in &self.points {
+            let weights: Vec<String> = p.weights.iter().map(|w| w.to_string()).collect();
+            let shares: Vec<String> =
+                (0..p.channels).map(|c| format!("{:.2}", p.share(c))).collect();
+            t.row(&[
+                p.channels.to_string(),
+                p.policy.to_string(),
+                weights.join(":"),
+                p.profile.clone(),
+                p.total_cycles.to_string(),
+                (p.total_bytes / 1024).to_string(),
+                shares.join("/"),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_moves_all_bytes() {
+        let p = run_contention(
+            &[1, 1],
+            ArbPolicy::RoundRobin,
+            LatencyProfile::Ideal,
+            12,
+            64,
+            false,
+        );
+        assert_eq!(p.channels, 2);
+        assert_eq!(p.total_bytes, 2 * 12 * 64);
+        for c in &p.per_channel {
+            assert_eq!(c.completions, 12);
+            assert_eq!(c.bytes, 12 * 64);
+            assert_eq!(c.irqs, 1, "one IRQ per chain on channel {}", c.channel);
+        }
+    }
+
+    #[test]
+    fn fast_forward_and_naive_emit_identical_points() {
+        for policy in
+            [ArbPolicy::RoundRobin, ArbPolicy::WeightedRoundRobin, ArbPolicy::StrictPriority]
+        {
+            let fast =
+                run_contention(&[2, 1], policy, LatencyProfile::Ddr3, 10, 64, false);
+            let naive =
+                run_contention(&[2, 1], policy, LatencyProfile::Ddr3, 10, 64, true);
+            assert_eq!(fast, naive, "{policy:?} diverged across schedulers");
+        }
+    }
+
+    #[test]
+    fn json_is_deterministic_and_balanced() {
+        let points = vec![run_contention(
+            &[1, 1],
+            ArbPolicy::RoundRobin,
+            LatencyProfile::Ideal,
+            8,
+            64,
+            false,
+        )];
+        let a = MultiChannelReport::new(points.clone()).to_json();
+        let b = MultiChannelReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-multichannel/v1\""));
+        assert!(a.contains("\"policy\": \"rr\""));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn grid_covers_counts_policies_and_profiles() {
+        let points = contention_grid(2, 6, 64, false);
+        // counts {1,2} x 3 policies x 3 profiles.
+        assert_eq!(points.len(), 2 * 3 * 3);
+        assert!(points.iter().any(|p| p.channels == 1));
+        assert!(points.iter().any(|p| p.channels == 2 && p.policy == "strict"));
+        for p in &points {
+            assert_eq!(
+                p.total_bytes,
+                p.channels as u64 * 6 * 64,
+                "conservation at {} ch / {} / {}",
+                p.channels,
+                p.policy,
+                p.profile
+            );
+        }
+    }
+
+    #[test]
+    fn grid_always_includes_the_requested_channel_count() {
+        // 3 is not a power of two: counts must be {1, 2, 3}.
+        let points = contention_grid(3, 4, 64, false);
+        assert_eq!(points.len(), 3 * 3 * 3);
+        assert!(points.iter().any(|p| p.channels == 3));
+    }
+
+    #[test]
+    fn table_renders_shares() {
+        let points = vec![run_contention(
+            &[1, 1],
+            ArbPolicy::RoundRobin,
+            LatencyProfile::Ideal,
+            8,
+            64,
+            false,
+        )];
+        let t = MultiChannelReport::new(points).to_table();
+        assert!(t.render().contains("rr"));
+    }
+}

@@ -3,10 +3,12 @@
 //! columns.  No plotting dependencies exist offline, so figures print
 //! as column series — the same rows a plotting script would consume.
 
+pub mod contention;
 pub mod experiments;
 pub mod parallel;
 pub mod throughput;
 
+pub use contention::{ContentionPoint, MultiChannelReport};
 pub use parallel::par_map;
 pub use throughput::{ThroughputEntry, ThroughputReport};
 

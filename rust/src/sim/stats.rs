@@ -109,6 +109,29 @@ impl RunStats {
         }
     }
 
+    /// Fold another run's counters into this one (multi-channel
+    /// aggregation).  Completion logs are concatenated; callers that
+    /// need a time-ordered merged log sort afterwards (stable, so a
+    /// single-channel absorb into an empty aggregate is the identity).
+    pub fn absorb(&mut self, other: RunStats) {
+        self.completions.extend(other.completions);
+        self.desc_beats += other.desc_beats;
+        self.wasted_desc_beats += other.wasted_desc_beats;
+        self.payload_read_beats += other.payload_read_beats;
+        self.payload_write_beats += other.payload_write_beats;
+        self.writeback_beats += other.writeback_beats;
+        self.spec_hits += other.spec_hits;
+        self.spec_misses += other.spec_misses;
+        self.eoc_flushes += other.eoc_flushes;
+        self.irqs += other.irqs;
+        self.end_cycle = self.end_cycle.max(other.end_cycle);
+    }
+
+    /// Total payload bytes in the completion log.
+    pub fn total_bytes(&self) -> u64 {
+        self.completions.iter().map(|c| c.bytes).sum()
+    }
+
     /// Observed prefetch hit rate, if any speculation was resolved.
     pub fn hit_rate(&self) -> Option<f64> {
         let total = self.spec_hits + self.spec_misses;
@@ -173,6 +196,28 @@ mod tests {
         s.spec_hits = 3;
         s.spec_misses = 1;
         assert_eq!(s.hit_rate(), Some(0.75));
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_concatenates_completions() {
+        let mut a = stats_with(4, 10, 64);
+        a.spec_hits = 3;
+        a.desc_beats = 16;
+        let mut b = stats_with(2, 7, 32);
+        b.spec_misses = 1;
+        b.end_cycle = 99;
+        a.end_cycle = 40;
+        a.absorb(b);
+        assert_eq!(a.completions.len(), 6);
+        assert_eq!(a.spec_hits, 3);
+        assert_eq!(a.spec_misses, 1);
+        assert_eq!(a.end_cycle, 99);
+        assert_eq!(a.total_bytes(), 4 * 64 + 2 * 32);
+        // Absorb into an empty aggregate is the identity.
+        let c = stats_with(5, 3, 8);
+        let mut agg = RunStats::default();
+        agg.absorb(c.clone());
+        assert_eq!(agg, c);
     }
 
     #[test]

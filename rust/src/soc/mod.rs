@@ -15,15 +15,24 @@ use crate::sim::{Cycle, CycleBudget, EventHorizon, RunStats, Tickable};
 use crate::tb::System;
 
 /// The DMAC's interrupt source id at the PLIC (paper: "we occupy one
-/// new IRQ channel at the system's PLIC").
+/// new IRQ channel at the system's PLIC").  Multi-channel systems bank
+/// one source per channel: channel `c` raises
+/// [`dmac_irq_source`]`(c)` = `DMAC_IRQ_SOURCE + c`.
 pub const DMAC_IRQ_SOURCE: u32 = 5;
+
+/// PLIC source id of DMAC channel `ch`.
+pub fn dmac_irq_source(ch: usize) -> u32 {
+    debug_assert!(ch < crate::axi::MAX_CHANNELS);
+    DMAC_IRQ_SOURCE + ch as u32
+}
 
 /// The in-system integration: the OOC testbench plus CPU + PLIC.
 pub struct Soc<C: Controller> {
     pub sys: System<C>,
     pub cpu: Cpu,
     pub plic: Plic,
-    irqs_routed: u64,
+    /// Per-channel IRQ edges already routed to the PLIC gateway.
+    irqs_routed: Vec<u64>,
 }
 
 impl<C: Controller> Soc<C> {
@@ -32,7 +41,7 @@ impl<C: Controller> Soc<C> {
             sys: System::new(profile, ctrl),
             cpu: Cpu::default(),
             plic: Plic::new(),
-            irqs_routed: 0,
+            irqs_routed: Vec::new(),
         }
     }
 
@@ -40,15 +49,20 @@ impl<C: Controller> Soc<C> {
         self.sys.now()
     }
 
-    /// One SoC clock: testbench tick + IRQ routing to the PLIC.
+    /// One SoC clock: testbench tick + IRQ routing to the PLIC (one
+    /// banked source per channel).
     pub fn tick(&mut self) {
         self.sys.tick();
-        // Route new DMAC IRQ edges through the PLIC gateway.
-        let edges = self.sys.irqs_seen - self.irqs_routed;
-        for _ in 0..edges {
-            self.plic.raise(DMAC_IRQ_SOURCE);
+        if self.irqs_routed.len() < self.sys.irq_edges.len() {
+            self.irqs_routed.resize(self.sys.irq_edges.len(), 0);
         }
-        self.irqs_routed = self.sys.irqs_seen;
+        for ch in 0..self.sys.irq_edges.len() {
+            let edges = self.sys.irq_edges[ch] - self.irqs_routed[ch];
+            for _ in 0..edges {
+                self.plic.raise(dmac_irq_source(ch));
+            }
+            self.irqs_routed[ch] = self.sys.irq_edges[ch];
+        }
     }
 
     /// Earliest cycle anything happens in the SoC: the testbench's
@@ -99,9 +113,15 @@ impl<C: Controller> Soc<C> {
             }
             self.tick();
             // CPU claims and services one interrupt per claim window.
+            // The registered handler serves every DMAC channel (it
+            // scans completion stamps, so the source id selects no
+            // distinct code path — exactly like a shared Linux ISR).
             let now = self.sys.now();
             if let Some(src) = self.cpu.maybe_claim(&mut self.plic, now) {
-                debug_assert_eq!(src, DMAC_IRQ_SOURCE);
+                debug_assert!(
+                    (DMAC_IRQ_SOURCE..DMAC_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32)
+                        .contains(&src)
+                );
                 handler(&mut self.sys, &mut self.cpu, now);
                 self.cpu.complete(&mut self.plic, src);
             }

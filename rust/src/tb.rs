@@ -7,7 +7,7 @@
 //! DMAC's CSR.  The testbench is generic over [`Controller`], so the
 //! same harness evaluates our DMAC and the LogiCORE baseline.
 
-use crate::axi::{BusMonitor, Port};
+use crate::axi::{ArbPolicy, Arbiter, BusMonitor, Port};
 use crate::dmac::{ChainBuilder, Controller};
 use crate::mem::{LatencyProfile, Memory};
 use crate::sim::{Cycle, CycleBudget, EventHorizon, RunStats};
@@ -28,15 +28,19 @@ pub struct System<C: Controller> {
     pub mem: Memory,
     pub ctrl: C,
     pub monitor: BusMonitor,
-    launches: VecDeque<(Cycle, u64)>,
-    ar_rr: usize,
-    w_rr: usize,
+    /// Launch unit schedule: (cycle, channel, chain head address).
+    launches: VecDeque<(Cycle, usize, u64)>,
+    ar_arb: Arbiter,
+    w_arb: Arbiter,
     now: Cycle,
     budget: CycleBudget,
     /// Fast-forward bookkeeping: jumps taken and dead cycles skipped.
     pub horizon: EventHorizon,
     /// IRQ edges observed (the PLIC in the SoC model; a counter here).
     pub irqs_seen: u64,
+    /// Cumulative IRQ edges per channel (index = channel id; grown on
+    /// first edge).  The SoC routes these to banked PLIC sources.
+    pub irq_edges: Vec<u64>,
     /// First AR issue cycle per port (Table IV `i-rf` / `rf-rb`).
     pub first_ar: Vec<(Port, Cycle)>,
     /// First payload R-beat delivery cycle (Table IV `r-w`).
@@ -51,17 +55,19 @@ impl<C: Controller> System<C> {
     }
 
     pub fn with_memory(mem: Memory, ctrl: C) -> Self {
+        let ports = ctrl.ports().to_vec();
         Self {
             mem,
             ctrl,
             monitor: BusMonitor::new(),
             launches: VecDeque::new(),
-            ar_rr: 0,
-            w_rr: 0,
+            ar_arb: Arbiter::new(ports.clone()),
+            w_arb: Arbiter::new(ports),
             now: 0,
             budget: CycleBudget::default(),
             horizon: EventHorizon::default(),
             irqs_seen: 0,
+            irq_edges: Vec::new(),
             first_ar: Vec::new(),
             first_payload_r: None,
             first_payload_w: None,
@@ -73,20 +79,49 @@ impl<C: Controller> System<C> {
         self
     }
 
+    /// Select the AR/W arbitration policy (paper default: fair RR).
+    /// Port weights are taken from the controller
+    /// ([`Controller::port_weights`], i.e. `DmacConfig::weight` per
+    /// channel).
+    pub fn with_arbitration(mut self, policy: ArbPolicy) -> Self {
+        let ports = self.ctrl.ports().to_vec();
+        let weights = self.ctrl.port_weights();
+        self.ar_arb = Arbiter::with_policy(ports.clone(), policy, weights.clone());
+        self.w_arb = Arbiter::with_policy(ports, policy, weights);
+        self
+    }
+
+    /// Grants issued so far on the AR and W arbiters for `port`
+    /// (QoS/fairness diagnostics).
+    pub fn grants_to(&self, port: Port) -> (u64, u64) {
+        (self.ar_arb.grants_to(port), self.w_arb.grants_to(port))
+    }
+
     pub fn now(&self) -> Cycle {
         self.now
     }
 
-    /// Schedule a CSR write (the launch unit's job) at cycle `at`.
+    /// Schedule a CSR write (the launch unit's job) at cycle `at`,
+    /// on channel 0.
     pub fn schedule_launch(&mut self, at: Cycle, desc_addr: u64) {
+        self.schedule_launch_on(at, 0, desc_addr);
+    }
+
+    /// Schedule a banked CSR write on channel `ch` at cycle `at`.
+    pub fn schedule_launch_on(&mut self, at: Cycle, ch: usize, desc_addr: u64) {
         debug_assert!(at >= self.now);
-        self.launches.push_back((at, desc_addr));
+        self.launches.push_back((at, ch, desc_addr));
     }
 
     /// Backdoor-load a chain and schedule its launch `at` cycle.
     pub fn load_and_launch(&mut self, at: Cycle, chain: &ChainBuilder) -> u64 {
+        self.load_and_launch_on(at, 0, chain)
+    }
+
+    /// Backdoor-load a chain and schedule its launch on channel `ch`.
+    pub fn load_and_launch_on(&mut self, at: Cycle, ch: usize, chain: &ChainBuilder) -> u64 {
         let head = chain.write_to(&mut self.mem);
-        self.schedule_launch(at, head);
+        self.schedule_launch_on(at, ch, head);
         head
     }
 
@@ -95,20 +130,18 @@ impl<C: Controller> System<C> {
     pub fn tick(&mut self) {
         let now = self.now;
         // Launch unit: CSR writes scheduled for this cycle.
-        while let Some(&(at, addr)) = self.launches.front() {
+        while let Some(&(at, ch, addr)) = self.launches.front() {
             if at > now {
                 break;
             }
             self.launches.pop_front();
-            self.ctrl.csr_write(now, addr);
+            self.ctrl.csr_write_ch(now, ch, addr);
         }
         // Memory pipelines advance, then response channels deliver.
         self.mem.tick(now);
         if let Some(beat) = self.mem.pop_read_beat(now) {
             self.monitor.count_read_beat(beat.port, beat.bytes);
-            if matches!(beat.port, Port::Backend | Port::LcBackend)
-                && self.first_payload_r.is_none()
-            {
+            if beat.port.is_payload() && self.first_payload_r.is_none() {
                 self.first_payload_r = Some(now);
             }
             self.ctrl.on_r_beat(now, beat);
@@ -119,44 +152,57 @@ impl<C: Controller> System<C> {
         // Internal state machines (same-cycle mispredict reissue
         // happens here, before AR arbitration).
         self.ctrl.step(now);
-        // AR channel: one grant per cycle, fair RR over the
-        // controller's manager ports.  A port whose `pop_ar` declines
-        // (e.g. engine start overhead) forfeits to the next port.
-        let ports = self.ctrl.ports();
-        let n = ports.len();
-        for i in 0..n {
-            let idx = (self.ar_rr + i) % n;
-            let p = ports[idx];
-            if self.ctrl.wants_ar(p) {
-                if let Some(req) = self.ctrl.pop_ar(now, p) {
-                    if self.first_ar.iter().all(|&(fp, _)| fp != p) {
-                        self.first_ar.push((p, now));
-                    }
-                    self.mem.push_read(now, req);
-                    self.ar_rr = (idx + 1) % n;
-                    break;
+        // AR channel: one grant per cycle across the controller's
+        // manager ports, under the configured arbitration policy (fair
+        // RR by default — the paper's Fig. 3 testbench).  A port whose
+        // `pop_ar` declines (e.g. engine start overhead) forfeits to
+        // the next port without consuming arbitration state.
+        {
+            let ctrl = &mut self.ctrl;
+            let mem = &mut self.mem;
+            let first_ar = &mut self.first_ar;
+            let _ = self.ar_arb.grant_with(|p| {
+                if !ctrl.wants_ar(p) {
+                    return None;
                 }
-            }
-        }
-        // W channel: one beat per cycle, fair RR.
-        for i in 0..n {
-            let idx = (self.w_rr + i) % n;
-            let p = ports[idx];
-            if self.ctrl.wants_w(p) {
-                if let Some(w) = self.ctrl.pop_w(now, p) {
-                    self.monitor.count_write_beat(w.port, w.bytes);
-                    if matches!(w.port, Port::Backend | Port::LcBackend)
-                        && self.first_payload_w.is_none()
-                    {
-                        self.first_payload_w = Some(now);
-                    }
-                    self.mem.push_write(now, w);
-                    self.w_rr = (idx + 1) % n;
-                    break;
+                let req = ctrl.pop_ar(now, p)?;
+                if first_ar.iter().all(|&(fp, _)| fp != p) {
+                    first_ar.push((p, now));
                 }
-            }
+                mem.push_read(now, req);
+                Some(())
+            });
         }
-        self.irqs_seen += self.ctrl.take_irq();
+        // W channel: one beat per cycle, same policy.
+        {
+            let ctrl = &mut self.ctrl;
+            let mem = &mut self.mem;
+            let monitor = &mut self.monitor;
+            let first_payload_w = &mut self.first_payload_w;
+            let _ = self.w_arb.grant_with(|p| {
+                if !ctrl.wants_w(p) {
+                    return None;
+                }
+                let w = ctrl.pop_w(now, p)?;
+                monitor.count_write_beat(w.port, w.bytes);
+                if w.port.is_payload() && first_payload_w.is_none() {
+                    *first_payload_w = Some(now);
+                }
+                mem.push_write(now, w);
+                Some(())
+            });
+        }
+        {
+            let irqs_seen = &mut self.irqs_seen;
+            let per_ch = &mut self.irq_edges;
+            self.ctrl.take_irq_channels(&mut |ch, n| {
+                *irqs_seen += n;
+                if per_ch.len() <= ch {
+                    per_ch.resize(ch + 1, 0);
+                }
+                per_ch[ch] += n;
+            });
+        }
         self.monitor.tick();
         self.now += 1;
     }
@@ -170,7 +216,7 @@ impl<C: Controller> System<C> {
     /// or the controller's internal state machines.  `None` means the
     /// whole system is input-free (idle or deadlocked).
     pub fn next_event(&self) -> Option<Cycle> {
-        let h = self.launches.front().map(|&(at, _)| at);
+        let h = self.launches.front().map(|&(at, _, _)| at);
         let h = EventHorizon::merge(h, self.mem.next_event());
         EventHorizon::merge(h, self.ctrl.next_event())
     }

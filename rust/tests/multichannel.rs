@@ -1,0 +1,261 @@
+//! Multi-channel system properties: (a) an `N = 1` multi-channel
+//! system is cycle-identical to the original single-channel path,
+//! (b) total bytes moved under contention equal the sum of the
+//! per-channel workloads, (c) the event-horizon scheduler stays
+//! bit-identical to the naive loop with many channels contending, and
+//! (d) QoS policies shape per-channel finish order as designed.
+
+use idmac::axi::{ArbPolicy, Port};
+use idmac::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, MultiChannel};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::report::contention::{channel_chain, run_contention, CH_ARENA_STRIDE};
+use idmac::tb::System;
+use idmac::testutil::{forall, SplitMix64};
+use idmac::workload::map;
+
+/// Random race-free chain on channel 0's arena (mirrors
+/// `tests/properties.rs`).
+fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
+    let n = rng.range(2, 30) as usize;
+    let mut cb = ChainBuilder::new();
+    let mut meta = Vec::new();
+    let mut dst_slots: Vec<u64> = (0..64).collect();
+    rng.shuffle(&mut dst_slots);
+    let mut desc_addr = map::DESC_BASE;
+    for i in 0..n {
+        let size = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
+        let src = map::SRC_BASE + rng.below(32) * 4096;
+        let dst = map::DST_BASE + dst_slots[i] * 4096;
+        let d = Descriptor::new(src, dst, size);
+        let d = if i + 1 == n { d.with_irq() } else { d };
+        cb.push_at(desc_addr, d);
+        meta.push((src, dst, size));
+        desc_addr += 32 * rng.range(1, 4);
+    }
+    (cb, meta)
+}
+
+fn random_config(rng: &mut SplitMix64) -> DmacConfig {
+    DmacConfig::custom(rng.range(1, 24) as usize, rng.range(0, 24) as usize)
+}
+
+fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
+    LatencyProfile::Custom(rng.range(1, 110) as u32)
+}
+
+fn random_policy(rng: &mut SplitMix64) -> ArbPolicy {
+    *rng.pick(&[
+        ArbPolicy::RoundRobin,
+        ArbPolicy::WeightedRoundRobin,
+        ArbPolicy::StrictPriority,
+    ])
+}
+
+#[test]
+fn prop_n1_multichannel_is_cycle_identical_to_single_channel() {
+    // The acceptance property of the refactor: wrapping one channel in
+    // the multi-channel controller must change *nothing* — same
+    // RunStats (completion log included), same final clock, same
+    // memory image, under both schedulers.
+    forall(20, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let single = {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = sys.run_until_idle().unwrap();
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        let multi = {
+            let mut sys = System::new(profile, MultiChannel::uniform(cfg, 1));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = sys.run_until_idle().unwrap();
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        assert_eq!(single.0, multi.0, "RunStats diverged: cfg={cfg:?} {profile:?}");
+        assert_eq!(single.1, multi.1, "clock diverged");
+        assert_eq!(single.2, multi.2, "memory image diverged");
+        // And the naive loop agrees too.
+        let multi_naive = {
+            let mut sys = System::new(profile, MultiChannel::uniform(cfg, 1));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            sys.run_until_idle_naive().unwrap()
+        };
+        assert_eq!(single.0, multi_naive, "naive multi diverged");
+    });
+}
+
+#[test]
+fn prop_contention_conserves_bytes_and_payload() {
+    // Under any policy and latency, every channel completes its whole
+    // workload and the moved bytes land exactly where they should.
+    forall(12, |rng| {
+        let channels = rng.range(2, 4) as usize;
+        let policy = random_policy(rng);
+        let profile = random_profile(rng);
+        let size = *rng.pick(&[64u32, 256, 1024]);
+        let per_ch: Vec<usize> =
+            (0..channels).map(|_| rng.range(2, 12) as usize).collect();
+        let cfgs: Vec<DmacConfig> = (0..channels)
+            .map(|i| DmacConfig::speculation().with_weight((channels - i) as u32))
+            .collect();
+        let mut sys = System::new(profile, MultiChannel::new(&cfgs)).with_arbitration(policy);
+        for ch in 0..channels {
+            fill_pattern(
+                &mut sys.mem,
+                map::SRC_BASE + ch as u64 * CH_ARENA_STRIDE,
+                per_ch[ch] * (size as usize).next_multiple_of(64),
+                ch as u32 + 7,
+            );
+            let chain = channel_chain(ch, per_ch[ch], size);
+            sys.load_and_launch_on(0, ch, &chain);
+        }
+        let stats = sys.run_until_idle().unwrap();
+        let expected_total: u64 =
+            per_ch.iter().map(|&n| n as u64 * size as u64).sum();
+        assert_eq!(stats.total_bytes(), expected_total, "{policy:?} {profile:?}");
+        let expected_completions: usize = per_ch.iter().sum();
+        assert_eq!(stats.completions.len(), expected_completions);
+        assert_eq!(stats.irqs, channels as u64, "one IRQ per channel chain");
+        for ch in 0..channels {
+            let s = sys.ctrl.channel_stats(ch);
+            assert_eq!(s.completions.len(), per_ch[ch], "channel {ch}");
+            assert_eq!(s.total_bytes(), per_ch[ch] as u64 * size as u64);
+            assert_eq!(sys.irq_edges[ch], 1);
+            // Payload integrity per channel.
+            let stride = (size as u64).next_multiple_of(64);
+            for i in 0..per_ch[ch] as u64 {
+                let src = map::SRC_BASE + ch as u64 * CH_ARENA_STRIDE + i * stride;
+                let dst = map::DST_BASE + ch as u64 * CH_ARENA_STRIDE + i * stride;
+                assert_eq!(
+                    sys.mem.backdoor_read(src, size as usize).to_vec(),
+                    sys.mem.backdoor_read(dst, size as usize).to_vec(),
+                    "channel {ch} transfer {i}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_multichannel_fast_forward_matches_naive() {
+    forall(10, |rng| {
+        let channels = rng.range(2, 4) as usize;
+        let policy = random_policy(rng);
+        let profile = random_profile(rng);
+        let size = *rng.pick(&[64u32, 256]);
+        let transfers = rng.range(2, 10) as usize;
+        let build = || {
+            let cfgs: Vec<DmacConfig> = (0..channels)
+                .map(|i| DmacConfig::speculation().with_weight((i + 1) as u32))
+                .collect();
+            let mut sys =
+                System::new(profile, MultiChannel::new(&cfgs)).with_arbitration(policy);
+            for ch in 0..channels {
+                fill_pattern(
+                    &mut sys.mem,
+                    map::SRC_BASE + ch as u64 * CH_ARENA_STRIDE,
+                    transfers * (size as usize).next_multiple_of(64),
+                    3,
+                );
+                sys.load_and_launch_on(0, ch, &channel_chain(ch, transfers, size));
+            }
+            sys
+        };
+        let mut fast = build();
+        let mut naive = build();
+        let f = fast.run_until_idle().unwrap();
+        let n = naive.run_until_idle_naive().unwrap();
+        assert_eq!(f, n, "stats diverged: {channels} ch {policy:?} {profile:?}");
+        assert_eq!(fast.now(), naive.now(), "clock diverged");
+        assert_eq!(
+            fast.mem.backdoor_read(map::DST_BASE, 4 * CH_ARENA_STRIDE as usize),
+            naive.mem.backdoor_read(map::DST_BASE, 4 * CH_ARENA_STRIDE as usize),
+            "memory image diverged"
+        );
+    });
+}
+
+#[test]
+fn contention_points_are_deterministic_across_schedulers() {
+    // The exact acceptance criterion behind the CI gate: the
+    // BENCH_multichannel.json content must be identical with and
+    // without --naive.
+    for policy in
+        [ArbPolicy::RoundRobin, ArbPolicy::WeightedRoundRobin, ArbPolicy::StrictPriority]
+    {
+        let fast = run_contention(&[4, 2, 1, 1], policy, LatencyProfile::Ddr3, 12, 64, false);
+        let naive = run_contention(&[4, 2, 1, 1], policy, LatencyProfile::Ddr3, 12, 64, true);
+        assert_eq!(fast, naive, "{policy:?}");
+    }
+}
+
+#[test]
+fn strict_priority_finishes_the_top_channel_first() {
+    // Two identical workloads; channel 0 holds strict priority, so its
+    // chain can never outlive channel 1's.
+    let p = run_contention(
+        &[2, 1],
+        ArbPolicy::StrictPriority,
+        LatencyProfile::Ddr3,
+        24,
+        64,
+        false,
+    );
+    assert!(
+        p.per_channel[0].last_completion_cycle <= p.per_channel[1].last_completion_cycle,
+        "priority channel finished later: {:?}",
+        p.per_channel
+    );
+}
+
+#[test]
+fn wrr_weights_skew_bus_shares_toward_heavy_channels() {
+    // Saturating workloads on both channels, weights 3:1 — the heavy
+    // channel must finish no later, and get at least its fair half of
+    // the AR grants while both are active.
+    let cfgs = [
+        DmacConfig::speculation().with_weight(3),
+        DmacConfig::speculation().with_weight(1),
+    ];
+    let mut sys = System::new(LatencyProfile::Ddr3, MultiChannel::new(&cfgs))
+        .with_arbitration(ArbPolicy::WeightedRoundRobin);
+    for ch in 0..2 {
+        fill_pattern(&mut sys.mem, map::SRC_BASE + ch as u64 * CH_ARENA_STRIDE, 4096, 1);
+        sys.load_and_launch_on(0, ch, &channel_chain(ch, 32, 256));
+    }
+    sys.run_until_idle().unwrap();
+    let heavy = sys.ctrl.channel_stats(0).completions.last().unwrap().cycle;
+    let light = sys.ctrl.channel_stats(1).completions.last().unwrap().cycle;
+    assert!(heavy <= light, "weighted channel finished later: {heavy} vs {light}");
+    let (heavy_ar, _) = sys.grants_to(Port::backend_of(0));
+    let (light_ar, _) = sys.grants_to(Port::backend_of(1));
+    assert!(
+        heavy_ar >= light_ar,
+        "weight-3 channel got fewer payload grants: {heavy_ar} vs {light_ar}"
+    );
+}
+
+#[test]
+fn n1_contention_point_matches_dedicated_bus() {
+    // One channel contending with nobody behaves like the plain
+    // single-channel sweep: same completion count, same end cycle as a
+    // direct System<Dmac> run of the same chain.
+    let p = run_contention(&[1], ArbPolicy::RoundRobin, LatencyProfile::Ddr3, 16, 64, false);
+    let mut sys = System::new(
+        LatencyProfile::Ddr3,
+        Dmac::new(DmacConfig::speculation()),
+    );
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 64, 1);
+    sys.load_and_launch(0, &channel_chain(0, 16, 64));
+    let stats = sys.run_until_idle().unwrap();
+    assert_eq!(p.total_cycles, stats.end_cycle);
+    assert_eq!(p.per_channel[0].completions, stats.completions.len());
+    assert_eq!(p.total_bytes, stats.total_bytes());
+}
