@@ -15,6 +15,7 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 MARKDOWN_FILES = [
+    "README.md",
     "DESIGN.md",
     "EXPERIMENTS.md",
     "ROADMAP.md",
@@ -24,8 +25,20 @@ MARKDOWN_FILES = [
 ]
 
 REQUIRED_SECTIONS = {
-    "DESIGN.md": ["Multi-channel", "event horizon", "Experiment index"],
-    "EXPERIMENTS.md": ["Contention", "BENCH_multichannel.json", "BENCH_sim_throughput.json"],
+    "README.md": ["Quickstart", "translate", "bench-regression gate"],
+    "DESIGN.md": [
+        "Multi-channel",
+        "event horizon",
+        "Experiment index",
+        "Virtual memory & IOMMU",
+    ],
+    "EXPERIMENTS.md": [
+        "Contention",
+        "Translation",
+        "BENCH_multichannel.json",
+        "BENCH_sim_throughput.json",
+        "BENCH_translation.json",
+    ],
 }
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -17,6 +17,11 @@ fields are ignored by design, so runner speed cannot flake the build:
     emitted with and without ``--naive`` must be identical, and must
     match the checked-in baseline exactly.
 
+``translation``
+    Validates ``BENCH_translation.json``-shaped files with the same
+    protocol as ``multichannel`` (scheduler-mode identity + exact
+    baseline match) against the ``idmac-translation/v1`` schema.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -114,22 +119,27 @@ def check_throughput(measured_path: str, baseline_path: str, tolerance: float) -
     print(f"OK: {checked} baseline entrie(s) within {tolerance:.2%} cycle drift")
 
 
-def check_multichannel(fast_path: str, naive_path: str, baseline_path: str) -> None:
+def check_point_grid(
+    fast_path: str, naive_path: str, baseline_path: str, schema: str, what: str
+) -> None:
+    """Shared gate for point-grid reports (multichannel, translation):
+    the fast and naive grids must be identical and must match the
+    checked-in baseline exactly (bootstrap-empty baselines warn)."""
     fast = load(fast_path)
     naive = load(naive_path)
     for name, doc in ((fast_path, fast), (naive_path, naive)):
         if not doc:
             fail(f"{name} missing or empty")
-        if doc.get("schema") != "idmac-multichannel/v1":
+        if doc.get("schema") != schema:
             fail(f"unexpected schema in {name}: {doc.get('schema')}")
         if not doc.get("points"):
             fail(f"{name} has no points")
     if fast != naive:
         fail(
-            f"{fast_path} and {naive_path} differ — the contention grid is "
+            f"{fast_path} and {naive_path} differ — the {what} grid is "
             f"not deterministic across scheduler modes"
         )
-    print(f"OK: {len(fast['points'])} contention point(s) identical across scheduler modes")
+    print(f"OK: {len(fast['points'])} {what} point(s) identical across scheduler modes")
 
     baseline = load(baseline_path)
     base_points = baseline.get("points", [])
@@ -140,8 +150,20 @@ def check_multichannel(fast_path: str, naive_path: str, baseline_path: str) -> N
         )
         return
     if base_points != fast["points"]:
-        fail(f"contention grid drifted from the checked-in {baseline_path}")
-    print(f"OK: contention grid matches the checked-in baseline")
+        fail(f"{what} grid drifted from the checked-in {baseline_path}")
+    print(f"OK: {what} grid matches the checked-in baseline")
+
+
+def check_multichannel(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(
+        fast_path, naive_path, baseline_path, "idmac-multichannel/v1", "contention"
+    )
+
+
+def check_translation(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(
+        fast_path, naive_path, baseline_path, "idmac-translation/v1", "translation"
+    )
 
 
 def main() -> None:
@@ -158,11 +180,18 @@ def main() -> None:
     m.add_argument("--naive", required=True)
     m.add_argument("--baseline", required=True)
 
+    tr = sub.add_parser("translation")
+    tr.add_argument("--fast", required=True)
+    tr.add_argument("--naive", required=True)
+    tr.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
-    else:
+    elif args.mode == "multichannel":
         check_multichannel(args.fast, args.naive, args.baseline)
+    else:
+        check_translation(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

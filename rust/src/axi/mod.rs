@@ -18,4 +18,6 @@ pub mod types;
 
 pub use arbiter::{ArbPolicy, Arbiter};
 pub use monitor::BusMonitor;
-pub use types::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, MAX_CHANNELS};
+pub use types::{
+    Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, CHANNEL_TRIPLES, MAX_CHANNELS,
+};

@@ -31,6 +31,11 @@ pub enum Port {
     ChFrontend(u8),
     /// Payload port of DMAC channel `c >= 1`.
     ChBackend(u8),
+    /// Page-table-walker port of the IOMMU in front of DMAC channel
+    /// `c`: PTE reads issued by the SV39 walker share the bus with
+    /// everything else, so translation pressure shows up in bus
+    /// utilization (Kurth et al., MMU-aware DMA).
+    Ptw(u8),
 }
 
 /// Interleaved `(frontend, backend)` port pairs for every channel, in
@@ -55,10 +60,42 @@ pub static CHANNEL_PAIRS: [Port; 2 * MAX_CHANNELS] = [
     Port::ChBackend(7),
 ];
 
+/// Interleaved `(frontend, backend, ptw)` port triples for every
+/// channel of an IOMMU-fronted DMAC, in arbitration order.  The walker
+/// port of a channel whose IOMMU is disabled simply never requests a
+/// grant, which is transparent to all arbitration policies (rotation,
+/// credits and priority state only ever change on grants).
+pub static CHANNEL_TRIPLES: [Port; 3 * MAX_CHANNELS] = [
+    Port::Frontend,
+    Port::Backend,
+    Port::Ptw(0),
+    Port::ChFrontend(1),
+    Port::ChBackend(1),
+    Port::Ptw(1),
+    Port::ChFrontend(2),
+    Port::ChBackend(2),
+    Port::Ptw(2),
+    Port::ChFrontend(3),
+    Port::ChBackend(3),
+    Port::Ptw(3),
+    Port::ChFrontend(4),
+    Port::ChBackend(4),
+    Port::Ptw(4),
+    Port::ChFrontend(5),
+    Port::ChBackend(5),
+    Port::Ptw(5),
+    Port::ChFrontend(6),
+    Port::ChBackend(6),
+    Port::Ptw(6),
+    Port::ChFrontend(7),
+    Port::ChBackend(7),
+    Port::Ptw(7),
+];
+
 impl Port {
     /// Dense index for counter arrays (§Perf: the bus monitor counts
     /// every beat; a BTreeMap lookup per beat was a profile hotspot).
-    pub const COUNT: usize = 5 + 2 * MAX_CHANNELS;
+    pub const COUNT: usize = 5 + 3 * MAX_CHANNELS;
 
     pub fn index(self) -> usize {
         match self {
@@ -77,6 +114,10 @@ impl Port {
             Port::ChBackend(c) => {
                 assert!((c as usize) < MAX_CHANNELS, "channel {c} out of range");
                 6 + 2 * c as usize
+            }
+            Port::Ptw(c) => {
+                assert!((c as usize) < MAX_CHANNELS, "channel {c} out of range");
+                5 + 2 * MAX_CHANNELS + c as usize
             }
         }
     }
@@ -98,6 +139,20 @@ impl Port {
             Port::Backend
         } else {
             Port::ChBackend(ch as u8)
+        }
+    }
+
+    /// The page-table-walker port of the IOMMU fronting channel `ch`.
+    pub fn ptw_of(ch: usize) -> Port {
+        assert!(ch < MAX_CHANNELS, "channel {ch} exceeds MAX_CHANNELS");
+        Port::Ptw(ch as u8)
+    }
+
+    /// `Some(channel)` for walker ports, `None` otherwise.
+    pub fn ptw_channel(self) -> Option<usize> {
+        match self {
+            Port::Ptw(c) => Some(c as usize),
+            _ => None,
         }
     }
 
@@ -213,7 +268,7 @@ mod tests {
     fn port_indices_are_dense_and_unique() {
         let mut seen = std::collections::HashSet::new();
         for ch in 0..MAX_CHANNELS {
-            for p in [Port::frontend_of(ch), Port::backend_of(ch)] {
+            for p in [Port::frontend_of(ch), Port::backend_of(ch), Port::ptw_of(ch)] {
                 assert!(p.index() < Port::COUNT);
                 seen.insert(p.index());
             }
@@ -222,7 +277,20 @@ mod tests {
             assert!(p.index() < Port::COUNT);
             seen.insert(p.index());
         }
-        assert_eq!(seen.len(), 2 * MAX_CHANNELS + 3);
+        assert_eq!(seen.len(), 3 * MAX_CHANNELS + 3);
+    }
+
+    #[test]
+    fn channel_triples_interleave_walker_ports() {
+        for ch in 0..MAX_CHANNELS {
+            assert_eq!(CHANNEL_TRIPLES[3 * ch], Port::frontend_of(ch));
+            assert_eq!(CHANNEL_TRIPLES[3 * ch + 1], Port::backend_of(ch));
+            assert_eq!(CHANNEL_TRIPLES[3 * ch + 2], Port::ptw_of(ch));
+            assert_eq!(Port::ptw_of(ch).ptw_channel(), Some(ch));
+        }
+        assert_eq!(Port::Frontend.ptw_channel(), None);
+        assert_eq!(Port::Ptw(2).dmac_channel(), None, "walker port is not a fe/be port");
+        assert!(!Port::Ptw(0).is_payload());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use crate::axi::ArbPolicy;
 use crate::dmac::DmacConfig;
 use crate::mem::LatencyProfile;
+use crate::report::translation::AccessPattern;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -145,6 +146,20 @@ impl Args {
         }
     }
 
+    /// `--pattern seq|stride4|rand`: page-access pattern for the
+    /// translation sweep (`None` when the flag is absent).
+    pub fn pattern(&self) -> Result<Option<AccessPattern>> {
+        match self.get("pattern") {
+            None => Ok(None),
+            Some("seq") => Ok(Some(AccessPattern::Sequential)),
+            Some("stride4") => Ok(Some(AccessPattern::Strided)),
+            Some("rand") => Ok(Some(AccessPattern::Random)),
+            Some(other) => {
+                Err(Error::Cli(format!("unknown --pattern `{other}` (seq|stride4|rand)")))
+            }
+        }
+    }
+
     /// `--latency ideal|ddr3|ultradeep|<cycles>`.
     pub fn latency(&self) -> Result<LatencyProfile> {
         self.latency_from("latency")
@@ -224,6 +239,15 @@ mod tests {
     fn naive_flag() {
         assert!(parse("x --naive").naive());
         assert!(!parse("x").naive());
+    }
+
+    #[test]
+    fn pattern_flag() {
+        assert_eq!(parse("x").pattern().unwrap(), None);
+        assert_eq!(parse("x --pattern seq").pattern().unwrap(), Some(AccessPattern::Sequential));
+        assert_eq!(parse("x --pattern stride4").pattern().unwrap(), Some(AccessPattern::Strided));
+        assert_eq!(parse("x --pattern rand").pattern().unwrap(), Some(AccessPattern::Random));
+        assert!(parse("x --pattern diagonal").pattern().is_err());
     }
 
     #[test]

@@ -1,5 +1,34 @@
 //! Compile-time parameter sets of the DMAC (paper Table I).
 
+/// Per-channel IOMMU parameters, consumed by [`crate::iommu::IommuDmac`]
+/// when it banks an SV39 translation stage in front of this channel's
+/// manager ports.  The bare [`crate::dmac::Dmac`] ignores them, so a
+/// disabled-IOMMU configuration is structurally identical to the
+/// pre-IOMMU DMAC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IommuParams {
+    /// Translate this channel's descriptor + payload traffic.
+    pub enabled: bool,
+    /// IOTLB sets (set index = `vpn % sets`).
+    pub tlb_sets: usize,
+    /// IOTLB ways per set (LRU replacement).
+    pub tlb_ways: usize,
+    /// Speculatively walk page `N + 1` while page `N` streams.
+    pub prefetch: bool,
+}
+
+impl IommuParams {
+    /// Translation disabled (the default for every Table I preset).
+    pub fn disabled() -> Self {
+        Self { enabled: false, tlb_sets: 0, tlb_ways: 0, prefetch: false }
+    }
+
+    /// Translation enabled with a `sets x ways` IOTLB.
+    pub fn enabled(tlb_sets: usize, tlb_ways: usize, prefetch: bool) -> Self {
+        Self { enabled: true, tlb_sets: tlb_sets.max(1), tlb_ways: tlb_ways.max(1), prefetch }
+    }
+}
+
 /// Parameters of the DMAC (the paper's compile-time configuration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DmacConfig {
@@ -22,13 +51,24 @@ pub struct DmacConfig {
     /// share under `WeightedRoundRobin`, higher priority under
     /// `StrictPriority`.
     pub weight: u32,
+    /// Optional SV39 translation stage in front of this channel (only
+    /// honoured when the channel runs inside an
+    /// [`crate::iommu::IommuDmac`]).
+    pub iommu: IommuParams,
 }
 
 impl DmacConfig {
     /// Table I `base`: 4 descriptors in flight, prefetching disabled.
     /// Closely matches the LogiCORE IP DMA default configuration.
     pub fn base() -> Self {
-        Self { in_flight: 4, prefetch: 0, launch_latency: 3, strict_order: false, weight: 1 }
+        Self {
+            in_flight: 4,
+            prefetch: 0,
+            launch_latency: 3,
+            strict_order: false,
+            weight: 1,
+            iommu: IommuParams::disabled(),
+        }
     }
 
     /// Table I `speculation`: `base` + 4 speculation slots.
@@ -54,6 +94,12 @@ impl DmacConfig {
     /// Set the channel's QoS weight (floored at 1 by the arbiter).
     pub fn with_weight(mut self, weight: u32) -> Self {
         self.weight = weight;
+        self
+    }
+
+    /// Put an SV39 translation stage in front of this channel.
+    pub fn with_iommu(mut self, iommu: IommuParams) -> Self {
+        self.iommu = iommu;
         self
     }
 
@@ -105,5 +151,16 @@ mod tests {
         assert_eq!(DmacConfig::speculation().with_weight(4).weight, 4);
         // Weight does not affect the Table I preset name.
         assert_eq!(DmacConfig::scaled().with_weight(7).name(), "scaled");
+    }
+
+    #[test]
+    fn iommu_defaults_off_and_floors_tlb_shape() {
+        assert!(!DmacConfig::base().iommu.enabled);
+        let p = IommuParams::enabled(0, 0, true);
+        assert!(p.enabled);
+        assert_eq!((p.tlb_sets, p.tlb_ways), (1, 1), "degenerate TLB floored to 1x1");
+        let c = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, false));
+        assert!(c.iommu.enabled);
+        assert_eq!(c.name(), "speculation", "translation does not affect the preset name");
     }
 }

@@ -86,4 +86,10 @@ pub trait Controller: Tickable {
             sink(0, n);
         }
     }
+
+    /// Per-channel IOMMU translation-fault edges since the last call,
+    /// delivered through `sink(channel, edges)`.  Controllers without a
+    /// translation stage never fault; the SoC routes channel `c` to the
+    /// dedicated banked PLIC source `iommu_fault_source(c)`.
+    fn take_fault_channels(&mut self, _sink: &mut dyn FnMut(usize, u64)) {}
 }

@@ -38,7 +38,13 @@ pub struct Descriptor {
 }
 
 impl Descriptor {
+    /// Build a transfer descriptor.  `length` must be nonzero
+    /// (debug-asserted): the hardware treats a 0-length descriptor as a
+    /// degenerate transfer that completes without moving a byte, which
+    /// silently masks driver bugs — every legitimate producer (driver
+    /// prep paths, workload generators) always has a positive length.
     pub fn new(source: u64, destination: u64, length: u32) -> Self {
+        debug_assert!(length > 0, "zero-length descriptor (masks driver bugs)");
         Self { length, config: 0, next: END_OF_CHAIN, source, destination }
     }
 
@@ -234,5 +240,12 @@ mod tests {
     fn unaligned_descriptor_rejected() {
         let mut cb = ChainBuilder::new();
         cb.push_at(0x101, Descriptor::new(0, 0, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-length descriptor")]
+    #[cfg(debug_assertions)]
+    fn zero_length_descriptor_rejected() {
+        let _ = Descriptor::new(0x100, 0x200, 0);
     }
 }

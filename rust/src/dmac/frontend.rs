@@ -575,7 +575,7 @@ mod tests {
         let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x7000);
         deliver_desc(&mut f, 10, &d, &mut s);
         // The two granted speculative fetches stream 8 wasted beats.
-        let junk = Descriptor::new(0, 0, 0);
+        let junk = Descriptor::new(0, 0, 8);
         deliver_desc(&mut f, 12, &junk, &mut s);
         deliver_desc(&mut f, 16, &junk, &mut s);
         assert_eq!(s.wasted_desc_beats, 8);

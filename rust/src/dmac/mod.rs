@@ -17,7 +17,7 @@ pub mod frontend;
 pub mod multichannel;
 
 pub use backend::Backend;
-pub use config::DmacConfig;
+pub use config::{DmacConfig, IommuParams};
 pub use controller::Controller;
 pub use descriptor::{ChainBuilder, Descriptor, DESC_BYTES, END_OF_CHAIN};
 pub use frontend::Frontend;

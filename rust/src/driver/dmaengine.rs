@@ -95,29 +95,42 @@ impl DmaDriver {
     }
 
     /// `device_prep_dma_memcpy`: build the descriptor list for one
-    /// client transfer (split over `max_seg_bytes` chunks).  A prep
-    /// that exhausts the pool mid-split frees everything it allocated
-    /// (the failed transaction must not leak descriptors).
+    /// client transfer — the one-element special case of
+    /// [`prep_sg`](Self::prep_sg).
     pub fn prep_memcpy(&mut self, dst: u64, src: u64, len: u64) -> Result<Tx> {
-        if len == 0 {
-            return Err(Error::Driver("zero-length memcpy".into()));
+        self.prep_sg(&[(dst, src, len)])
+    }
+
+    /// `device_prep_dma_sg`: one transaction covering a guest-virtual
+    /// scatter-gather list of `(dst, src, len)` triples — one or more
+    /// descriptors per element (long elements split over
+    /// `max_seg_bytes`), one completion cookie for the whole list.
+    /// Addresses may be IOVAs produced by [`super::DmaMapper`]; the
+    /// IOMMU translates them in flight.  A prep that exhausts the pool
+    /// mid-list frees everything it allocated (the failed transaction
+    /// must not leak descriptors).
+    pub fn prep_sg(&mut self, sg: &[(u64, u64, u64)]) -> Result<Tx> {
+        if sg.is_empty() || sg.iter().any(|&(_, _, len)| len == 0) {
+            return Err(Error::Driver("empty or zero-length sg element".into()));
         }
         let cookie = self.next_cookie;
         self.next_cookie += 1;
         let pool_checkpoint = self.pool_cursor;
         let mut descs = Vec::new();
-        let mut off = 0u64;
-        while off < len {
-            let seg = (len - off).min(self.max_seg_bytes).min(u32::MAX as u64 & !63);
-            let addr = match self.alloc_desc() {
-                Ok(addr) => addr,
-                Err(e) => {
-                    self.pool_cursor = pool_checkpoint;
-                    return Err(e);
-                }
-            };
-            descs.push((addr, Descriptor::new(src + off, dst + off, seg as u32)));
-            off += seg;
+        for &(dst, src, len) in sg {
+            let mut off = 0u64;
+            while off < len {
+                let seg = (len - off).min(self.max_seg_bytes).min(u32::MAX as u64 & !63);
+                let addr = match self.alloc_desc() {
+                    Ok(addr) => addr,
+                    Err(e) => {
+                        self.pool_cursor = pool_checkpoint;
+                        return Err(e);
+                    }
+                };
+                descs.push((addr, Descriptor::new(src + off, dst + off, seg as u32)));
+                off += seg;
+            }
         }
         Ok(Tx { cookie, descs })
     }

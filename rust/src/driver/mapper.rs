@@ -1,0 +1,286 @@
+//! Linux-style `dma_map` / `dma_unmap` layer over the IOMMU.
+//!
+//! [`DmaMapper`] owns a slice of physical memory for SV39 page-table
+//! pages (allocated via the [`crate::mem`] backdoor, exactly like the
+//! testbench loads descriptors) and a bump allocator over a guest-
+//! virtual IOVA window.  `dma_map` wires scattered physical pages into
+//! IOVA-contiguous ranges; the DMAC then streams a *linear* descriptor
+//! chain through paged, non-contiguous memory — the canonical irregular
+//! transfer the paper motivates.
+//!
+//! Fault recovery (`handle_fault`): map the missing page at the faulted
+//! IOVA, then [`crate::iommu::IommuDmac::resume`] relaunches the
+//! stalled translation from the page-table root.
+
+use crate::iommu::pagetable::{
+    pte_is_leaf, pte_leaf, pte_table, pte_target, pte_valid, vpn_index, vpn_of, PAGE_SIZE,
+    PTE_BYTES, PT_LEVELS,
+};
+use crate::mem::Memory;
+use crate::{Error, Result};
+
+/// One mapped IOVA range returned by [`DmaMapper::dma_map`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DmaMapping {
+    /// First mapped IOVA byte (carries the physical page offset).
+    pub iova: u64,
+    /// Length in bytes, as requested.
+    pub len: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DmaMapper {
+    pt_base: u64,
+    pt_size: u64,
+    pt_cursor: u64,
+    root: u64,
+    iova_cursor: u64,
+}
+
+impl DmaMapper {
+    /// Carve page-table pages out of `[pt_base, pt_base + pt_size)` and
+    /// hand out IOVAs from `iova_base` up.  Allocates and zeroes the
+    /// root table immediately.
+    pub fn new(mem: &mut Memory, pt_base: u64, pt_size: u64, iova_base: u64) -> Result<Self> {
+        if pt_base % PAGE_SIZE != 0 || pt_size % PAGE_SIZE != 0 {
+            return Err(Error::Driver("page-table region must be page-aligned".into()));
+        }
+        let mut m = Self { pt_base, pt_size, pt_cursor: 0, root: 0, iova_cursor: iova_base };
+        m.root = m.alloc_table_page(mem)?;
+        Ok(m)
+    }
+
+    /// Physical address of the root table (written into the IOMMU's
+    /// root CSR via [`crate::iommu::IommuDmac::set_root`]).
+    pub fn root(&self) -> u64 {
+        self.root
+    }
+
+    /// Page-table pages allocated so far (root included).
+    pub fn table_pages(&self) -> u64 {
+        self.pt_cursor / PAGE_SIZE
+    }
+
+    fn alloc_table_page(&mut self, mem: &mut Memory) -> Result<u64> {
+        if self.pt_cursor + PAGE_SIZE > self.pt_size {
+            return Err(Error::Driver("page-table pool exhausted".into()));
+        }
+        let page = self.pt_base + self.pt_cursor;
+        self.pt_cursor += PAGE_SIZE;
+        mem.backdoor_write(page, &[0u8; PAGE_SIZE as usize]);
+        Ok(page)
+    }
+
+    /// Walk (and grow) the tables down to the leaf level for `iova`,
+    /// returning the physical address of its leaf PTE slot.
+    fn leaf_slot(&mut self, mem: &mut Memory, iova: u64, grow: bool) -> Result<u64> {
+        let vpn = vpn_of(iova);
+        let mut table = self.root;
+        for level in (1..PT_LEVELS).rev() {
+            let slot = table + vpn_index(vpn, level) * PTE_BYTES;
+            let pte = mem.backdoor_read_u64(slot);
+            table = if pte_valid(pte) {
+                if pte_is_leaf(pte) {
+                    return Err(Error::Driver(format!(
+                        "superpage PTE at level {level} for iova {iova:#x}"
+                    )));
+                }
+                pte_target(pte)
+            } else {
+                if !grow {
+                    return Err(Error::Driver(format!("iova {iova:#x} not mapped")));
+                }
+                let page = self.alloc_table_page(mem)?;
+                mem.backdoor_write_u64(slot, pte_table(page));
+                page
+            };
+        }
+        Ok(table + vpn_index(vpn, 0) * PTE_BYTES)
+    }
+
+    /// Map the 4 KiB page containing `iova` onto the physical page at
+    /// `pa` (both page-aligned).  Remapping an existing entry is
+    /// allowed — that is exactly what fault recovery does.
+    pub fn map_page(&mut self, mem: &mut Memory, iova: u64, pa: u64) -> Result<()> {
+        if iova % PAGE_SIZE != 0 || pa % PAGE_SIZE != 0 {
+            return Err(Error::Driver("map_page needs page-aligned iova and pa".into()));
+        }
+        let slot = self.leaf_slot(mem, iova, true)?;
+        mem.backdoor_write_u64(slot, pte_leaf(pa));
+        Ok(())
+    }
+
+    /// Invalidate the leaf PTE for `iova`.  The caller must also shoot
+    /// down the IOTLB ([`crate::iommu::Mmu::flush_iova`]).
+    pub fn unmap_page(&mut self, mem: &mut Memory, iova: u64) -> Result<()> {
+        let slot = self.leaf_slot(mem, iova, false)?;
+        if !pte_valid(mem.backdoor_read_u64(slot)) {
+            return Err(Error::Driver(format!("iova {iova:#x} not mapped")));
+        }
+        mem.backdoor_write_u64(slot, 0);
+        Ok(())
+    }
+
+    /// Identity-map `[base, base + len)` (page-rounded): used for the
+    /// descriptor pool, so CSR launch addresses and completion stamps
+    /// keep their physical values while still exercising translation.
+    pub fn map_identity(&mut self, mem: &mut Memory, base: u64, len: u64) -> Result<()> {
+        let first = base & !(PAGE_SIZE - 1);
+        let last = (base + len + PAGE_SIZE - 1) & !(PAGE_SIZE - 1);
+        let mut page = first;
+        while page < last {
+            self.map_page(mem, page, page)?;
+            page += PAGE_SIZE;
+        }
+        Ok(())
+    }
+
+    /// Map `[pa, pa + len)` at a fresh IOVA range (page offset
+    /// preserved).  This is `dma_map_single`: one physically contiguous
+    /// buffer, one IOVA range.
+    pub fn dma_map(&mut self, mem: &mut Memory, pa: u64, len: u64) -> Result<DmaMapping> {
+        if len == 0 {
+            return Err(Error::Driver("zero-length dma_map".into()));
+        }
+        let off = pa % PAGE_SIZE;
+        let first = pa - off;
+        let pages = (off + len).div_ceil(PAGE_SIZE);
+        let iova0 = self.iova_cursor;
+        self.iova_cursor += pages * PAGE_SIZE;
+        for i in 0..pages {
+            self.map_page(mem, iova0 + i * PAGE_SIZE, first + i * PAGE_SIZE)?;
+        }
+        Ok(DmaMapping { iova: iova0 + off, len })
+    }
+
+    /// `dma_map_sg`: one IOVA range per scatter-gather element.  The
+    /// returned list pairs with the element order, ready to hand to
+    /// [`super::DmaDriver::prep_sg`] /
+    /// [`super::MultiTenantDriver::submit_sg`].
+    pub fn dma_map_sg(&mut self, mem: &mut Memory, sg: &[(u64, u64)]) -> Result<Vec<DmaMapping>> {
+        sg.iter().map(|&(pa, len)| self.dma_map(mem, pa, len)).collect()
+    }
+
+    /// Tear down a mapping's leaf PTEs (table pages are not recycled,
+    /// like a bump-allocated kernel pool between `dma_free` batches).
+    pub fn dma_unmap(&mut self, mem: &mut Memory, mapping: DmaMapping) -> Result<()> {
+        let first = mapping.iova & !(PAGE_SIZE - 1);
+        let pages = (mapping.iova % PAGE_SIZE + mapping.len).div_ceil(PAGE_SIZE);
+        for i in 0..pages {
+            self.unmap_page(mem, first + i * PAGE_SIZE)?;
+        }
+        Ok(())
+    }
+
+    /// Software walk of the tables this mapper built — the test oracle
+    /// for what the hardware walker should resolve.
+    pub fn translate(&self, mem: &Memory, iova: u64) -> Option<u64> {
+        let vpn = vpn_of(iova);
+        let mut table = self.root;
+        for level in (0..PT_LEVELS).rev() {
+            let pte = mem.backdoor_read_u64(table + vpn_index(vpn, level) * PTE_BYTES);
+            if !pte_valid(pte) {
+                return None;
+            }
+            if pte_is_leaf(pte) {
+                return (level == 0).then(|| pte_target(pte) + iova % PAGE_SIZE);
+            }
+            table = pte_target(pte);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::LatencyProfile;
+    use crate::workload::map;
+
+    fn setup() -> (Memory, DmaMapper) {
+        let mut mem = Memory::new(crate::tb::DEFAULT_MEM_BYTES, LatencyProfile::Ideal);
+        let mapper = DmaMapper::new(&mut mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+        (mem, mapper)
+    }
+
+    #[test]
+    fn map_and_translate_round_trip() {
+        let (mut mem, mut m) = setup();
+        m.map_page(&mut mem, map::IOVA_BASE, map::SRC_BASE).unwrap();
+        assert_eq!(m.translate(&mem, map::IOVA_BASE + 0x123), Some(map::SRC_BASE + 0x123));
+        assert_eq!(m.translate(&mem, map::IOVA_BASE + PAGE_SIZE), None);
+        // Three table pages: root + one L1 + one L0.
+        assert_eq!(m.table_pages(), 3);
+    }
+
+    #[test]
+    fn dma_map_preserves_page_offset_and_is_contiguous() {
+        let (mut mem, mut m) = setup();
+        let mapping = m.dma_map(&mut mem, map::SRC_BASE + 0x40, 2 * PAGE_SIZE).unwrap();
+        assert_eq!(mapping.iova % PAGE_SIZE, 0x40);
+        assert_eq!(mapping.len, 2 * PAGE_SIZE);
+        for off in [0u64, 0x1000, 0x1FBF] {
+            assert_eq!(
+                m.translate(&mem, mapping.iova + off),
+                Some(map::SRC_BASE + 0x40 + off),
+                "offset {off:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn dma_map_sg_gives_each_element_its_own_range() {
+        let (mut mem, mut m) = setup();
+        let sg =
+            [(map::SRC_BASE, 64u64), (map::SRC_BASE + 8 * PAGE_SIZE, 64), (map::DST_BASE, 4096)];
+        let maps = m.dma_map_sg(&mut mem, &sg).unwrap();
+        assert_eq!(maps.len(), 3);
+        for (mapping, &(pa, len)) in maps.iter().zip(&sg) {
+            assert_eq!(mapping.len, len);
+            assert_eq!(m.translate(&mem, mapping.iova), Some(pa));
+        }
+        // Ranges never overlap.
+        assert!(maps[0].iova + PAGE_SIZE <= maps[1].iova);
+        assert!(maps[1].iova + PAGE_SIZE <= maps[2].iova);
+    }
+
+    #[test]
+    fn unmap_invalidates_and_double_unmap_errors() {
+        let (mut mem, mut m) = setup();
+        let mapping = m.dma_map(&mut mem, map::SRC_BASE, 100).unwrap();
+        m.dma_unmap(&mut mem, mapping).unwrap();
+        assert_eq!(m.translate(&mem, mapping.iova), None);
+        assert!(m.dma_unmap(&mut mem, mapping).is_err());
+    }
+
+    #[test]
+    fn identity_map_covers_partial_pages() {
+        let (mut mem, mut m) = setup();
+        m.map_identity(&mut mem, map::DESC_BASE + 8, 0x1800).unwrap();
+        assert_eq!(m.translate(&mem, map::DESC_BASE), Some(map::DESC_BASE));
+        assert_eq!(
+            m.translate(&mem, map::DESC_BASE + 0x1FFF),
+            Some(map::DESC_BASE + 0x1FFF),
+            "rounded up to the covering page"
+        );
+    }
+
+    #[test]
+    fn pool_exhaustion_is_a_driver_error() {
+        let mut mem = Memory::new(crate::tb::DEFAULT_MEM_BYTES, LatencyProfile::Ideal);
+        // Room for root + L1 + one L0 table only.
+        let mut m = DmaMapper::new(&mut mem, map::PT_BASE, 3 * PAGE_SIZE, map::IOVA_BASE).unwrap();
+        m.map_page(&mut mem, map::IOVA_BASE, map::SRC_BASE).unwrap();
+        // A far-away iova needs fresh L1+L0 tables: exhausted.
+        let far = map::IOVA_BASE + (1 << 30);
+        assert!(matches!(m.map_page(&mut mem, far, map::SRC_BASE), Err(Error::Driver(_))));
+    }
+
+    #[test]
+    fn remap_overwrites_in_place() {
+        let (mut mem, mut m) = setup();
+        m.map_page(&mut mem, map::IOVA_BASE, map::SRC_BASE).unwrap();
+        m.map_page(&mut mem, map::IOVA_BASE, map::DST_BASE).unwrap();
+        assert_eq!(m.translate(&mem, map::IOVA_BASE), Some(map::DST_BASE));
+    }
+}

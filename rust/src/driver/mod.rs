@@ -18,7 +18,9 @@
 //!    decrement the active count, and launch stored chains.
 
 pub mod dmaengine;
+pub mod mapper;
 pub mod multitenant;
 
 pub use dmaengine::{Cookie, DmaDriver, Tx};
+pub use mapper::{DmaMapper, DmaMapping};
 pub use multitenant::{MultiTenantDriver, VchanId};

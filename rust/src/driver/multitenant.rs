@@ -104,7 +104,38 @@ impl MultiTenantDriver {
     /// descriptor headroom.  Pinned submissions fail like a dedicated
     /// channel would.
     pub fn submit(&mut self, vchan: VchanId, dst: u64, src: u64, len: u64) -> Result<Cookie> {
-        let candidates: Vec<usize> = match self.vchans[vchan].pinned {
+        self.submit_sg(vchan, &[(dst, src, len)])
+    }
+
+    /// Scatter-gather submit: place a guest-virtual `(dst, src, len)`
+    /// list (e.g. the output of [`super::DmaMapper::dma_map_sg`]) as
+    /// one transaction, with the same placement/fallback policy as
+    /// [`submit`](Self::submit).
+    pub fn submit_sg(&mut self, vchan: VchanId, sg: &[(u64, u64, u64)]) -> Result<Cookie> {
+        let total: u64 = sg.iter().map(|&(_, _, len)| len).sum();
+        let candidates = self.placement_order(vchan);
+        let mut last_err = None;
+        for ch in candidates {
+            match self.phys[ch].prep_sg(sg) {
+                Ok(mut tx) => {
+                    let cookie = self.next_cookie;
+                    self.next_cookie += 1;
+                    tx.cookie = cookie;
+                    self.phys[ch].tx_submit(tx);
+                    self.vchans[vchan].cookies.push(cookie);
+                    self.outstanding.push((cookie, ch, total));
+                    return Ok(cookie);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one candidate channel"))
+    }
+
+    /// Candidate physical channels for a submission from `vchan`, in
+    /// placement order (pin, or least-loaded with fallback).
+    fn placement_order(&self, vchan: VchanId) -> Vec<usize> {
+        match self.vchans[vchan].pinned {
             Some(ch) => vec![ch],
             None => {
                 let mut load = vec![0u64; self.phys.len()];
@@ -115,23 +146,7 @@ impl MultiTenantDriver {
                 order.sort_by_key(|&i| (load[i], i));
                 order
             }
-        };
-        let mut last_err = None;
-        for ch in candidates {
-            match self.phys[ch].prep_memcpy(dst, src, len) {
-                Ok(mut tx) => {
-                    let cookie = self.next_cookie;
-                    self.next_cookie += 1;
-                    tx.cookie = cookie;
-                    self.phys[ch].tx_submit(tx);
-                    self.vchans[vchan].cookies.push(cookie);
-                    self.outstanding.push((cookie, ch, len));
-                    return Ok(cookie);
-                }
-                Err(e) => last_err = Some(e),
-            }
         }
-        Err(last_err.expect("at least one candidate channel"))
     }
 
     /// `issue_pending` on every physical channel (each seals its own

@@ -1,0 +1,121 @@
+//! SV39 page-table encoding shared by the hardware walker and the
+//! driver-side table builder.
+//!
+//! The format follows the RISC-V privileged spec's SV39 scheme at the
+//! granularity this model needs: 4 KiB pages, three translation levels
+//! of 512 PTEs each, and 8-byte PTEs with
+//!
+//! ```text
+//! bit  0        V   — valid
+//! bit  1        R   — readable       (R|W|X != 0 marks a leaf)
+//! bit  2        W   — writable
+//! bit  3        X   — executable     (unused by the DMAC, kept for
+//!                                     layout fidelity)
+//! bits 10..=53  PPN — physical page number
+//! ```
+//!
+//! Superpages (leaves above level 0) are deliberately unsupported: the
+//! walker treats them as malformed tables and faults, and the builder
+//! never creates them.  Every mapping is a 4 KiB leaf at level 0.
+
+/// log2 of the page size.
+pub const PAGE_SHIFT: u32 = 12;
+/// 4 KiB pages.
+pub const PAGE_SIZE: u64 = 1 << PAGE_SHIFT;
+/// SV39 translates three 9-bit VPN slices.
+pub const PT_LEVELS: u32 = 3;
+/// PTEs per table page (4096 / 8).
+pub const PTES_PER_PAGE: u64 = 512;
+/// Bytes per PTE.
+pub const PTE_BYTES: u64 = 8;
+
+pub const PTE_V: u64 = 1 << 0;
+pub const PTE_R: u64 = 1 << 1;
+pub const PTE_W: u64 = 1 << 2;
+pub const PTE_X: u64 = 1 << 3;
+const PTE_PPN_SHIFT: u32 = 10;
+const PTE_PPN_MASK: u64 = (1 << 44) - 1;
+
+/// Virtual page number of an SV39 address (27 significant bits).
+pub fn vpn_of(iova: u64) -> u64 {
+    (iova >> PAGE_SHIFT) & ((1 << (9 * PT_LEVELS)) - 1)
+}
+
+/// 9-bit VPN slice indexing the table at `level` (2 = root).
+pub fn vpn_index(vpn: u64, level: u32) -> u64 {
+    debug_assert!(level < PT_LEVELS);
+    (vpn >> (9 * level)) & (PTES_PER_PAGE - 1)
+}
+
+/// Byte offset within the page.
+pub fn page_offset(iova: u64) -> u64 {
+    iova & (PAGE_SIZE - 1)
+}
+
+/// A read/write leaf PTE mapping one 4 KiB page at `pa`.
+pub fn pte_leaf(pa: u64) -> u64 {
+    debug_assert_eq!(pa % PAGE_SIZE, 0, "leaf target must be page-aligned");
+    ((pa >> PAGE_SHIFT) << PTE_PPN_SHIFT) | PTE_V | PTE_R | PTE_W
+}
+
+/// A non-leaf PTE pointing at the next-level table page at `pa`.
+pub fn pte_table(pa: u64) -> u64 {
+    debug_assert_eq!(pa % PAGE_SIZE, 0, "table page must be page-aligned");
+    ((pa >> PAGE_SHIFT) << PTE_PPN_SHIFT) | PTE_V
+}
+
+pub fn pte_valid(pte: u64) -> bool {
+    pte & PTE_V != 0
+}
+
+/// Leaf test per the privileged spec: any of R/W/X set.
+pub fn pte_is_leaf(pte: u64) -> bool {
+    pte & (PTE_R | PTE_W | PTE_X) != 0
+}
+
+/// Physical page number carried by a PTE.
+pub fn pte_ppn(pte: u64) -> u64 {
+    (pte >> PTE_PPN_SHIFT) & PTE_PPN_MASK
+}
+
+/// Physical base address of the page/table a PTE points at.
+pub fn pte_target(pte: u64) -> u64 {
+    pte_ppn(pte) << PAGE_SHIFT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vpn_slices_cover_39_bits() {
+        let iova = 0x40_2030_4567u64; // within 39 bits
+        let vpn = vpn_of(iova);
+        let rebuilt = (vpn_index(vpn, 2) << 18) | (vpn_index(vpn, 1) << 9) | vpn_index(vpn, 0);
+        assert_eq!(rebuilt, vpn);
+        assert_eq!(page_offset(iova), 0x567);
+        // Bits above 39 are ignored (SV39 canonical truncation).
+        assert_eq!(vpn_of(iova | (0xFF << 40)), vpn);
+    }
+
+    #[test]
+    fn leaf_round_trip() {
+        let pte = pte_leaf(0x0042_3000);
+        assert!(pte_valid(pte));
+        assert!(pte_is_leaf(pte));
+        assert_eq!(pte_target(pte), 0x0042_3000);
+    }
+
+    #[test]
+    fn table_pte_is_not_a_leaf() {
+        let pte = pte_table(0x9000);
+        assert!(pte_valid(pte));
+        assert!(!pte_is_leaf(pte));
+        assert_eq!(pte_target(pte), 0x9000);
+    }
+
+    #[test]
+    fn zero_pte_is_invalid() {
+        assert!(!pte_valid(0));
+    }
+}

@@ -1,0 +1,194 @@
+//! Set-associative IOTLB with true-LRU replacement and hit/miss/
+//! eviction accounting.
+//!
+//! The TLB is indexed by `vpn % sets` and fully deterministic: the LRU
+//! stamp is a monotonically increasing access counter, so replacement
+//! decisions depend only on the access history, never on wall-clock or
+//! hashing.  Lookups that should not perturb accounting or recency
+//! (prefetch dedup, post-walk refills) go through [`IoTlb::probe`].
+
+#[derive(Debug, Clone, Copy)]
+struct TlbEntry {
+    vpn: u64,
+    ppn: u64,
+    lru: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoTlb {
+    sets: usize,
+    ways: usize,
+    /// `sets` buckets of at most `ways` entries each.
+    entries: Vec<Vec<TlbEntry>>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl IoTlb {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        let sets = sets.max(1);
+        Self {
+            sets,
+            ways: ways.max(1),
+            entries: vec![Vec::new(); sets],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    fn set_of(&self, vpn: u64) -> usize {
+        (vpn % self.sets as u64) as usize
+    }
+
+    /// Counted lookup: bumps recency and the hit/miss counters.
+    pub fn lookup(&mut self, vpn: u64) -> Option<u64> {
+        self.clock += 1;
+        let clock = self.clock;
+        let set = self.set_of(vpn);
+        match self.entries[set].iter_mut().find(|e| e.vpn == vpn) {
+            Some(e) => {
+                e.lru = clock;
+                self.hits += 1;
+                Some(e.ppn)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Uncounted, recency-neutral probe (prefetch dedup, post-walk
+    /// segment refills).
+    pub fn probe(&self, vpn: u64) -> Option<u64> {
+        self.entries[self.set_of(vpn)].iter().find(|e| e.vpn == vpn).map(|e| e.ppn)
+    }
+
+    /// Insert (or refresh) a translation, evicting the set's LRU entry
+    /// when the set is full.
+    pub fn insert(&mut self, vpn: u64, ppn: u64) {
+        self.clock += 1;
+        let clock = self.clock;
+        let set = self.set_of(vpn);
+        let ways = self.ways;
+        let bucket = &mut self.entries[set];
+        if let Some(e) = bucket.iter_mut().find(|e| e.vpn == vpn) {
+            e.ppn = ppn;
+            e.lru = clock;
+            return;
+        }
+        if bucket.len() == ways {
+            let victim = bucket
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.lru)
+                .map(|(i, _)| i)
+                .unwrap();
+            bucket.remove(victim);
+            self.evictions += 1;
+        }
+        bucket.push(TlbEntry { vpn, ppn, lru: clock });
+    }
+
+    /// Drop every cached translation (driver `dma_unmap` shootdown).
+    pub fn flush(&mut self) {
+        for bucket in &mut self.entries {
+            bucket.clear();
+        }
+    }
+
+    /// Drop one translation if present (single-page shootdown).
+    pub fn flush_vpn(&mut self, vpn: u64) {
+        let set = self.set_of(vpn);
+        self.entries[set].retain(|e| e.vpn != vpn);
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut t = IoTlb::new(4, 2);
+        assert_eq!(t.lookup(0x40), None);
+        t.insert(0x40, 0x123);
+        assert_eq!(t.lookup(0x40), Some(0x123));
+        assert_eq!((t.hits, t.misses), (1, 1));
+    }
+
+    #[test]
+    fn probe_does_not_count() {
+        let mut t = IoTlb::new(2, 1);
+        t.insert(7, 9);
+        assert_eq!(t.probe(7), Some(9));
+        assert_eq!(t.probe(8), None);
+        assert_eq!((t.hits, t.misses), (0, 0));
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_way() {
+        let mut t = IoTlb::new(1, 2);
+        t.insert(0, 10);
+        t.insert(1, 11);
+        // Touch vpn 0 so vpn 1 becomes LRU.
+        assert_eq!(t.lookup(0), Some(10));
+        t.insert(2, 12);
+        assert_eq!(t.evictions, 1);
+        assert_eq!(t.probe(0), Some(10), "recently used survives");
+        assert_eq!(t.probe(1), None, "LRU way evicted");
+        assert_eq!(t.probe(2), Some(12));
+    }
+
+    #[test]
+    fn sets_partition_the_vpn_space() {
+        let mut t = IoTlb::new(4, 1);
+        // vpns 0 and 4 collide on set 0; 1 lands in set 1.
+        t.insert(0, 100);
+        t.insert(1, 101);
+        t.insert(4, 104);
+        assert_eq!(t.probe(0), None, "conflict eviction in set 0");
+        assert_eq!(t.probe(4), Some(104));
+        assert_eq!(t.probe(1), Some(101), "other set untouched");
+        assert_eq!(t.occupancy(), 2);
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut t = IoTlb::new(1, 1);
+        t.insert(5, 50);
+        t.insert(5, 51);
+        assert_eq!(t.evictions, 0);
+        assert_eq!(t.probe(5), Some(51));
+    }
+
+    #[test]
+    fn flush_and_single_shootdown() {
+        let mut t = IoTlb::new(2, 2);
+        t.insert(1, 1);
+        t.insert(2, 2);
+        t.flush_vpn(1);
+        assert_eq!(t.probe(1), None);
+        assert_eq!(t.probe(2), Some(2));
+        t.flush();
+        assert_eq!(t.occupancy(), 0);
+    }
+
+    #[test]
+    fn degenerate_shape_is_floored() {
+        let t = IoTlb::new(0, 0);
+        assert_eq!(t.capacity(), 1);
+    }
+}

@@ -1,0 +1,792 @@
+//! Per-channel MMU: request interception, IOTLB lookup, the SV39
+//! three-level page-table walker, the next-page translation prefetcher
+//! and the fault latch.
+//!
+//! The MMU sits between one DMAC channel's manager ports and the bus:
+//!
+//! * requests popped from the inner channel park in a 1-deep holding
+//!   slot per port until every page they touch translates;
+//! * translated read bursts are re-issued as one sub-burst per page
+//!   (contiguous IOVA, possibly scattered PA) and the returned beats
+//!   are renumbered so the inner channel sees the original burst;
+//! * TLB misses queue a demand walk; the walker reads one PTE per
+//!   level through its own [`Port::Ptw`] manager port, so translation
+//!   pressure is real bus traffic;
+//! * on the first touch of page `N`, the prefetcher speculatively
+//!   walks page `N + 1` while `N` streams — a misprediction costs
+//!   nothing but the wasted walk (paper §II-C philosophy applied to
+//!   the MMU);
+//! * an invalid PTE on a demand walk latches a [`Fault`], raises the
+//!   channel's banked fault IRQ edge and freezes the MMU until the
+//!   driver remaps and calls [`Mmu::resume`].  Speculative walks never
+//!   fault — they are silently abandoned.
+//!
+//! Beats are translated by their *start* address; DMAC traffic is
+//! 8-byte aligned, so a beat never straddles a page boundary.
+
+use super::pagetable::{
+    page_offset, pte_is_leaf, pte_ppn, pte_target, pte_valid, vpn_index, vpn_of, PAGE_SHIFT,
+    PTE_BYTES, PT_LEVELS,
+};
+use super::tlb::IoTlb;
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::dmac::{Controller, IommuParams};
+use crate::sim::Cycle;
+use std::collections::VecDeque;
+
+/// A latched translation fault (the MMU's fault CSR).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub channel: usize,
+    /// Base IOVA of the page that failed to translate.
+    pub iova: u64,
+    /// The faulting access was a write.
+    pub write: bool,
+    /// Walk level at which the invalid PTE was found (2 = root).
+    pub level: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WalkKind {
+    Demand,
+    Prefetch,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Walk {
+    vpn: u64,
+    kind: WalkKind,
+    write: bool,
+    /// Current level (2 = root table, 0 = leaf table).
+    level: u32,
+    /// Physical base of the table being indexed at `level`.
+    pt: u64,
+    /// The PTE read for `level` has not been granted yet.
+    pending_issue: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct DemandReq {
+    vpn: u64,
+    write: bool,
+}
+
+/// One page-aligned slice of a held read burst.
+#[derive(Debug, Clone, Copy)]
+struct Segment {
+    vpn: u64,
+    /// IOVA of the first beat in this segment.
+    va: u64,
+    beat_base: u32,
+    beats: u32,
+    /// Translated physical address of `va` once the page resolves.
+    pa: Option<u64>,
+    /// Hit/miss already accounted for this segment.
+    counted: bool,
+}
+
+#[derive(Debug, Clone)]
+struct HeldAr {
+    req: ReadReq,
+    segs: Vec<Segment>,
+    /// Segments already re-issued on the bus.
+    issued: usize,
+}
+
+#[derive(Debug, Clone)]
+struct HeldW {
+    w: WriteBeat,
+    vpn: u64,
+    pa: Option<u64>,
+    counted: bool,
+}
+
+/// Beat-renumbering record for one issued sub-burst, FIFO per port
+/// (the memory serves per-port FIFO, so arrival order == issue order).
+#[derive(Debug, Clone, Copy)]
+struct SegTrack {
+    beat_base: u32,
+    /// This sub-burst carries the original burst's final beat.
+    last: bool,
+}
+
+/// Walk/fault counters, drained into [`crate::sim::RunStats`] by
+/// `IommuDmac::take_stats` (TLB counters live inside [`IoTlb`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MmuCounters {
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    pub tlb_evictions: u64,
+    pub walks: u64,
+    pub walk_beats: u64,
+    pub prefetch_walks: u64,
+    pub prefetch_aborts: u64,
+    pub faults: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Mmu {
+    channel: usize,
+    params: IommuParams,
+    root: Option<u64>,
+    tlb: IoTlb,
+    fe_ar: Option<HeldAr>,
+    be_ar: Option<HeldAr>,
+    fe_w: Option<HeldW>,
+    be_w: Option<HeldW>,
+    fe_segs: VecDeque<SegTrack>,
+    be_segs: VecDeque<SegTrack>,
+    demand_q: VecDeque<DemandReq>,
+    prefetch_q: VecDeque<u64>,
+    cur: Option<Walk>,
+    fault: Option<Fault>,
+    fault_edges: u64,
+    /// Last page for which a next-page prefetch was triggered, per
+    /// request stream (fe/be × read/write), so one streamed page fires
+    /// at most one speculative walk even when streams interleave
+    /// (e.g. source reads alternating with destination writes).
+    last_prefetch_trigger: [Option<u64>; 4],
+    walks: u64,
+    walk_beats: u64,
+    prefetch_walks: u64,
+    prefetch_aborts: u64,
+    faults: u64,
+}
+
+impl Mmu {
+    pub fn new(channel: usize, params: IommuParams) -> Self {
+        Self {
+            channel,
+            params,
+            root: None,
+            tlb: IoTlb::new(params.tlb_sets.max(1), params.tlb_ways.max(1)),
+            fe_ar: None,
+            be_ar: None,
+            fe_w: None,
+            be_w: None,
+            fe_segs: VecDeque::new(),
+            be_segs: VecDeque::new(),
+            demand_q: VecDeque::new(),
+            prefetch_q: VecDeque::new(),
+            cur: None,
+            fault: None,
+            fault_edges: 0,
+            last_prefetch_trigger: [None; 4],
+            walks: 0,
+            walk_beats: 0,
+            prefetch_walks: 0,
+            prefetch_aborts: 0,
+            faults: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.params.enabled
+    }
+
+    pub fn params(&self) -> IommuParams {
+        self.params
+    }
+
+    pub fn channel(&self) -> usize {
+        self.channel
+    }
+
+    /// Point the walker at a page-table root (the driver writes this
+    /// "CSR" before launching translated work).
+    pub fn set_root(&mut self, root: u64) {
+        self.root = Some(root);
+        self.tlb.flush();
+    }
+
+    pub fn root(&self) -> Option<u64> {
+        self.root
+    }
+
+    pub fn tlb(&self) -> &IoTlb {
+        &self.tlb
+    }
+
+    /// Single-page TLB shootdown (driver `dma_unmap`).
+    pub fn flush_iova(&mut self, iova: u64) {
+        self.tlb.flush_vpn(vpn_of(iova));
+    }
+
+    pub fn fault(&self) -> Option<Fault> {
+        self.fault
+    }
+
+    /// Clear the fault latch after the driver remapped the page; the
+    /// stalled translation relaunches from the root on the next cycle.
+    pub fn resume(&mut self) {
+        self.fault = None;
+    }
+
+    /// Fault IRQ edges raised since the last call.
+    pub fn take_fault_edges(&mut self) -> u64 {
+        std::mem::take(&mut self.fault_edges)
+    }
+
+    pub fn take_counters(&mut self) -> MmuCounters {
+        let c = MmuCounters {
+            tlb_hits: self.tlb.hits,
+            tlb_misses: self.tlb.misses,
+            tlb_evictions: self.tlb.evictions,
+            walks: self.walks,
+            walk_beats: self.walk_beats,
+            prefetch_walks: self.prefetch_walks,
+            prefetch_aborts: self.prefetch_aborts,
+            faults: self.faults,
+        };
+        self.tlb.hits = 0;
+        self.tlb.misses = 0;
+        self.tlb.evictions = 0;
+        self.walks = 0;
+        self.walk_beats = 0;
+        self.prefetch_walks = 0;
+        self.prefetch_aborts = 0;
+        self.faults = 0;
+        c
+    }
+
+    /// Everything drained: no held requests, no tracked beats, no
+    /// queued or active walks, no unserviced fault.
+    pub fn idle(&self) -> bool {
+        !self.params.enabled
+            || (self.fe_ar.is_none()
+                && self.be_ar.is_none()
+                && self.fe_w.is_none()
+                && self.be_w.is_none()
+                && self.fe_segs.is_empty()
+                && self.be_segs.is_empty()
+                && self.demand_q.is_empty()
+                && self.prefetch_q.is_empty()
+                && self.cur.is_none()
+                && self.fault.is_none())
+    }
+
+    /// Conservative event horizon: any in-flight translation state is
+    /// "work this cycle" (safe: early is always allowed).  A latched
+    /// fault is purely input-driven — it waits on [`Mmu::resume`].
+    pub fn next_event(&self) -> Option<Cycle> {
+        if !self.params.enabled || self.fault.is_some() || self.idle() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    /// One MMU cycle: pull fresh requests out of the inner channel,
+    /// run TLB lookups for everything held, and start the next walk.
+    /// Fully frozen while a fault is latched.
+    pub fn step<C: Controller>(&mut self, now: Cycle, inner: &mut C) {
+        if !self.params.enabled || self.fault.is_some() {
+            return;
+        }
+        let fe = Port::frontend_of(self.channel);
+        let be = Port::backend_of(self.channel);
+        if self.fe_ar.is_none() && inner.wants_ar(fe) {
+            if let Some(req) = inner.pop_ar(now, fe) {
+                self.fe_ar = Some(Self::hold_ar(req));
+            }
+        }
+        if self.be_ar.is_none() && inner.wants_ar(be) {
+            if let Some(req) = inner.pop_ar(now, be) {
+                self.be_ar = Some(Self::hold_ar(req));
+            }
+        }
+        if self.fe_w.is_none() && inner.wants_w(fe) {
+            if let Some(w) = inner.pop_w(now, fe) {
+                self.fe_w = Some(Self::hold_w(w));
+            }
+        }
+        if self.be_w.is_none() && inner.wants_w(be) {
+            if let Some(w) = inner.pop_w(now, be) {
+                self.be_w = Some(Self::hold_w(w));
+            }
+        }
+        self.resolve_all();
+        self.start_next_walk();
+    }
+
+    fn hold_ar(req: ReadReq) -> HeldAr {
+        let segs = Self::segments_of(&req);
+        HeldAr { req, segs, issued: 0 }
+    }
+
+    fn hold_w(w: WriteBeat) -> HeldW {
+        HeldW { w, vpn: vpn_of(w.addr), pa: None, counted: false }
+    }
+
+    /// Split a burst into page-aligned sub-bursts by beat start
+    /// address (the memory strides beats by `bytes_per_beat`).
+    fn segments_of(req: &ReadReq) -> Vec<Segment> {
+        let stride = req.bytes_per_beat.max(1) as u64;
+        let mut segs = Vec::new();
+        let mut base = 0u32;
+        let mut cur_vpn = vpn_of(req.addr);
+        for b in 1..req.beats {
+            let addr = req.addr + b as u64 * stride;
+            let v = vpn_of(addr);
+            if v != cur_vpn {
+                segs.push(Segment {
+                    vpn: cur_vpn,
+                    va: req.addr + base as u64 * stride,
+                    beat_base: base,
+                    beats: b - base,
+                    pa: None,
+                    counted: false,
+                });
+                base = b;
+                cur_vpn = v;
+            }
+        }
+        segs.push(Segment {
+            vpn: cur_vpn,
+            va: req.addr + base as u64 * stride,
+            beat_base: base,
+            beats: req.beats - base,
+            pa: None,
+            counted: false,
+        });
+        segs
+    }
+
+    fn resolve_all(&mut self) {
+        let mut slot = self.fe_ar.take();
+        if let Some(h) = slot.as_mut() {
+            self.resolve_ar(h, 0);
+        }
+        self.fe_ar = slot;
+        let mut slot = self.be_ar.take();
+        if let Some(h) = slot.as_mut() {
+            self.resolve_ar(h, 1);
+        }
+        self.be_ar = slot;
+        let mut slot = self.fe_w.take();
+        if let Some(h) = slot.as_mut() {
+            self.resolve_w(h, 2);
+        }
+        self.fe_w = slot;
+        let mut slot = self.be_w.take();
+        if let Some(h) = slot.as_mut() {
+            self.resolve_w(h, 3);
+        }
+        self.be_w = slot;
+    }
+
+    fn resolve_ar(&mut self, h: &mut HeldAr, stream: usize) {
+        for seg in h.segs.iter_mut() {
+            if seg.pa.is_some() {
+                continue;
+            }
+            let found = if seg.counted {
+                self.tlb.probe(seg.vpn)
+            } else {
+                seg.counted = true;
+                self.maybe_prefetch(stream, seg.vpn);
+                self.tlb.lookup(seg.vpn)
+            };
+            match found {
+                Some(ppn) => seg.pa = Some((ppn << PAGE_SHIFT) | page_offset(seg.va)),
+                None => self.queue_demand(seg.vpn, false),
+            }
+        }
+    }
+
+    fn resolve_w(&mut self, h: &mut HeldW, stream: usize) {
+        if h.pa.is_some() {
+            return;
+        }
+        debug_assert!(
+            page_offset(h.w.addr) + h.w.bytes as u64 <= super::pagetable::PAGE_SIZE,
+            "write beat straddles a page boundary"
+        );
+        let found = if h.counted {
+            self.tlb.probe(h.vpn)
+        } else {
+            h.counted = true;
+            self.maybe_prefetch(stream, h.vpn);
+            self.tlb.lookup(h.vpn)
+        };
+        match found {
+            Some(ppn) => h.pa = Some((ppn << PAGE_SHIFT) | page_offset(h.w.addr)),
+            None => self.queue_demand(h.vpn, true),
+        }
+    }
+
+    fn queue_demand(&mut self, vpn: u64, write: bool) {
+        // Dedup against queued demands AND the in-flight walk of either
+        // kind: a prefetch walk already resolving `vpn` makes the
+        // demand redundant (the held request refills from the TLB the
+        // cycle the speculative walk completes).  A write joining an
+        // existing read demand upgrades its flag so a fault reports the
+        // store (kept as-is when deduped against an in-flight prefetch:
+        // speculative walks never fault, and an aborted one re-queues
+        // the demand with the right flag on the next resolve cycle).
+        if let Some(w) = self.cur.as_mut() {
+            if w.vpn == vpn {
+                if w.kind == WalkKind::Demand {
+                    w.write |= write;
+                }
+                return;
+            }
+        }
+        if let Some(d) = self.demand_q.iter_mut().find(|d| d.vpn == vpn) {
+            d.write |= write;
+            return;
+        }
+        self.demand_q.push_back(DemandReq { vpn, write });
+    }
+
+    /// Speculative next-page walk, fired on the *first touch* of each
+    /// streamed page — issuing the walk for page `N + 1` while page `N`
+    /// streams, so the walk overlaps payload movement instead of
+    /// serializing behind the next demand miss.  The trigger latch is
+    /// per request stream, so interleaved streams (source reads vs
+    /// destination writes) cannot ping-pong the latch and re-fire
+    /// walks for a page whose successor keeps aborting.
+    fn maybe_prefetch(&mut self, stream: usize, vpn: u64) {
+        if !self.params.prefetch || self.last_prefetch_trigger[stream] == Some(vpn) {
+            return;
+        }
+        self.last_prefetch_trigger[stream] = Some(vpn);
+        let next = vpn + 1;
+        let walking = matches!(self.cur, Some(w) if w.vpn == next);
+        if walking
+            || self.tlb.probe(next).is_some()
+            || self.prefetch_q.contains(&next)
+            || self.demand_q.iter().any(|d| d.vpn == next)
+        {
+            return;
+        }
+        self.prefetch_q.push_back(next);
+    }
+
+    fn start_next_walk(&mut self) {
+        if self.cur.is_some() {
+            return;
+        }
+        if let Some(d) = self.demand_q.pop_front() {
+            match self.root {
+                Some(root) => {
+                    self.cur = Some(Walk {
+                        vpn: d.vpn,
+                        kind: WalkKind::Demand,
+                        write: d.write,
+                        level: PT_LEVELS - 1,
+                        pt: root,
+                        pending_issue: true,
+                    });
+                }
+                None => self.latch_fault(d.vpn, d.write, PT_LEVELS - 1),
+            }
+            return;
+        }
+        while let Some(vpn) = self.prefetch_q.pop_front() {
+            if self.root.is_none() || self.tlb.probe(vpn).is_some() {
+                continue;
+            }
+            self.prefetch_walks += 1;
+            self.cur = Some(Walk {
+                vpn,
+                kind: WalkKind::Prefetch,
+                write: false,
+                level: PT_LEVELS - 1,
+                pt: self.root.unwrap(),
+                pending_issue: true,
+            });
+            return;
+        }
+    }
+
+    fn latch_fault(&mut self, vpn: u64, write: bool, level: u32) {
+        self.faults += 1;
+        self.fault_edges += 1;
+        self.fault = Some(Fault { channel: self.channel, iova: vpn << PAGE_SHIFT, write, level });
+    }
+
+    // ---- bus-facing side ------------------------------------------
+
+    /// The walker has a PTE read waiting for an AR grant.
+    pub fn wants_ptw_ar(&self) -> bool {
+        self.fault.is_none() && matches!(self.cur, Some(w) if w.pending_issue)
+    }
+
+    pub fn pop_ptw_ar(&mut self, _now: Cycle) -> Option<ReadReq> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let w = self.cur.as_mut()?;
+        if !w.pending_issue {
+            return None;
+        }
+        w.pending_issue = false;
+        self.walk_beats += 1;
+        let addr = w.pt + vpn_index(w.vpn, w.level) * PTE_BYTES;
+        Some(ReadReq::new(Port::ptw_of(self.channel), w.vpn, addr, 1))
+    }
+
+    /// Consume the PTE returned for the active walk level.
+    pub fn on_pte_beat(&mut self, beat: RBeat) {
+        let w = self.cur.as_mut().expect("PTE beat with no active walk");
+        debug_assert_eq!(beat.port, Port::ptw_of(self.channel));
+        let pte = u64::from_le_bytes(beat.data);
+        let bad = !pte_valid(pte)
+            || (pte_is_leaf(pte) && w.level > 0)
+            || (!pte_is_leaf(pte) && w.level == 0);
+        if bad {
+            let (vpn, kind, write, level) = (w.vpn, w.kind, w.write, w.level);
+            self.cur = None;
+            match kind {
+                WalkKind::Demand => self.latch_fault(vpn, write, level),
+                WalkKind::Prefetch => self.prefetch_aborts += 1,
+            }
+        } else if pte_is_leaf(pte) {
+            let vpn = w.vpn;
+            self.cur = None;
+            self.tlb.insert(vpn, pte_ppn(pte));
+            self.walks += 1;
+        } else {
+            w.level -= 1;
+            w.pt = pte_target(pte);
+            w.pending_issue = true;
+        }
+    }
+
+    /// A fully translated sub-burst is ready to issue for this port.
+    pub fn wants_inner_ar(&self, is_fe: bool) -> bool {
+        if self.fault.is_some() {
+            return false;
+        }
+        let h = if is_fe { &self.fe_ar } else { &self.be_ar };
+        matches!(h, Some(h) if h.segs[h.issued].pa.is_some())
+    }
+
+    pub fn pop_inner_ar(&mut self, is_fe: bool) -> Option<ReadReq> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let (slot, segq) = if is_fe {
+            (&mut self.fe_ar, &mut self.fe_segs)
+        } else {
+            (&mut self.be_ar, &mut self.be_segs)
+        };
+        let h = slot.as_mut()?;
+        let seg = h.segs[h.issued];
+        let pa = seg.pa?;
+        segq.push_back(SegTrack { beat_base: seg.beat_base, last: h.issued + 1 == h.segs.len() });
+        let req = ReadReq {
+            port: h.req.port,
+            tag: h.req.tag,
+            addr: pa,
+            beats: seg.beats,
+            bytes_per_beat: h.req.bytes_per_beat,
+        };
+        h.issued += 1;
+        if h.issued == h.segs.len() {
+            *slot = None;
+        }
+        Some(req)
+    }
+
+    pub fn wants_inner_w(&self, is_fe: bool) -> bool {
+        if self.fault.is_some() {
+            return false;
+        }
+        let h = if is_fe { &self.fe_w } else { &self.be_w };
+        matches!(h, Some(h) if h.pa.is_some())
+    }
+
+    pub fn pop_inner_w(&mut self, is_fe: bool) -> Option<WriteBeat> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let slot = if is_fe { &mut self.fe_w } else { &mut self.be_w };
+        let pa = slot.as_ref()?.pa?;
+        let h = slot.take().unwrap();
+        Some(WriteBeat { addr: pa, ..h.w })
+    }
+
+    /// Renumber a returned sub-burst beat back into the coordinates of
+    /// the original (pre-split) burst before the inner channel sees it.
+    pub fn rewrite_r_beat(&mut self, is_fe: bool, beat: RBeat) -> RBeat {
+        let q = if is_fe { &mut self.fe_segs } else { &mut self.be_segs };
+        let t = *q.front().expect("R beat with no tracked sub-burst");
+        let out = RBeat { beat: t.beat_base + beat.beat, last: t.last && beat.last, ..beat };
+        if beat.last {
+            q.pop_front();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> IommuParams {
+        IommuParams::enabled(4, 2, false)
+    }
+
+    #[test]
+    fn bursts_split_at_page_boundaries() {
+        let req = ReadReq::new(Port::Backend, 1, 0x1000 - 16, 6); // 48 B across a boundary
+        let segs = Mmu::segments_of(&req);
+        assert_eq!(segs.len(), 2);
+        assert_eq!((segs[0].beat_base, segs[0].beats), (0, 2));
+        assert_eq!((segs[1].beat_base, segs[1].beats), (2, 4));
+        assert_eq!(segs[1].va, 0x1000);
+        assert_eq!(segs[0].vpn + 1, segs[1].vpn);
+        // Page-interior burst stays whole.
+        let req = ReadReq::new(Port::Backend, 1, 0x2000, 4);
+        assert_eq!(Mmu::segments_of(&req).len(), 1);
+        // 2 KiB max burst touches at most two pages.
+        let req = ReadReq::new(Port::Backend, 1, 0x1008, 256);
+        assert!(Mmu::segments_of(&req).len() <= 2);
+        let total: u32 = Mmu::segments_of(&req).iter().map(|s| s.beats).sum();
+        assert_eq!(total, 256);
+    }
+
+    #[test]
+    fn missing_root_faults_on_first_demand() {
+        let mut m = Mmu::new(0, params());
+        m.queue_demand(0x40, false);
+        m.start_next_walk();
+        let f = m.fault().expect("fault latched");
+        assert_eq!(f.iova, 0x40 << PAGE_SHIFT);
+        assert!(!f.write);
+        assert_eq!(m.take_fault_edges(), 1);
+        assert_eq!(m.take_fault_edges(), 0);
+        assert!(!m.idle(), "latched fault keeps the MMU busy");
+        m.resume();
+        assert!(m.idle());
+    }
+
+    #[test]
+    fn demand_queue_dedupes_by_vpn() {
+        let mut m = Mmu::new(0, params());
+        m.queue_demand(7, false);
+        m.queue_demand(7, true);
+        m.queue_demand(8, false);
+        assert_eq!(m.demand_q.len(), 2);
+    }
+
+    #[test]
+    fn prefetch_triggers_once_per_streamed_page() {
+        let mut m = Mmu::new(0, IommuParams::enabled(4, 2, true));
+        m.tlb.insert(10, 100);
+        m.maybe_prefetch(1, 10);
+        m.maybe_prefetch(1, 10);
+        assert_eq!(m.prefetch_q.len(), 1);
+        assert_eq!(m.prefetch_q[0], 11);
+        // A page already cached is not prefetched.
+        m.tlb.insert(21, 210);
+        m.tlb.insert(22, 220);
+        m.maybe_prefetch(1, 21);
+        assert_eq!(m.prefetch_q.len(), 1);
+        // Interleaved streams do not ping-pong the trigger latch: the
+        // same (stream, page) pair never re-queues, even with another
+        // stream's touches in between.
+        m.maybe_prefetch(3, 30);
+        m.maybe_prefetch(1, 10);
+        m.maybe_prefetch(3, 30);
+        assert_eq!(m.prefetch_q.len(), 2, "only vpn 11 and vpn 31 queued");
+    }
+
+    #[test]
+    fn write_demand_upgrades_a_deduped_read_demand() {
+        let mut m = Mmu::new(0, params());
+        m.queue_demand(9, false);
+        m.queue_demand(9, true);
+        assert_eq!(m.demand_q.len(), 1);
+        assert!(m.demand_q[0].write, "fault CSR must report the store");
+        // Upgrade also reaches an in-flight demand walk.
+        let mut m = Mmu::new(0, params());
+        m.set_root(0x8000);
+        m.queue_demand(5, false);
+        m.start_next_walk();
+        assert!(matches!(m.cur, Some(w) if !w.write));
+        m.queue_demand(5, true);
+        assert!(matches!(m.cur, Some(w) if w.write));
+    }
+
+    #[test]
+    fn walker_issues_one_pte_read_per_level() {
+        let mut m = Mmu::new(0, params());
+        m.set_root(0x8000);
+        m.queue_demand(0x40, false);
+        m.start_next_walk();
+        assert!(m.wants_ptw_ar());
+        let r2 = m.pop_ptw_ar(0).unwrap();
+        assert_eq!(r2.port, Port::ptw_of(0));
+        assert_eq!(r2.beats, 1);
+        assert_eq!(r2.addr, 0x8000 + vpn_index(0x40, 2) * 8);
+        assert!(!m.wants_ptw_ar(), "one outstanding PTE read at a time");
+        // Level 2 PTE points at a table page at 0x9000.
+        let mut data = [0u8; 8];
+        data.copy_from_slice(&super::super::pagetable::pte_table(0x9000).to_le_bytes());
+        m.on_pte_beat(RBeat {
+            port: Port::ptw_of(0),
+            tag: 0x40,
+            beat: 0,
+            last: true,
+            data,
+            bytes: 8,
+        });
+        let r1 = m.pop_ptw_ar(1).unwrap();
+        assert_eq!(r1.addr, 0x9000 + vpn_index(0x40, 1) * 8);
+        let mut data = [0u8; 8];
+        data.copy_from_slice(&super::super::pagetable::pte_table(0xA000).to_le_bytes());
+        m.on_pte_beat(RBeat {
+            port: Port::ptw_of(0),
+            tag: 0x40,
+            beat: 0,
+            last: true,
+            data,
+            bytes: 8,
+        });
+        let r0 = m.pop_ptw_ar(2).unwrap();
+        assert_eq!(r0.addr, 0xA000 + vpn_index(0x40, 0) * 8);
+        let mut data = [0u8; 8];
+        data.copy_from_slice(&super::super::pagetable::pte_leaf(0x0004_2000).to_le_bytes());
+        m.on_pte_beat(RBeat {
+            port: Port::ptw_of(0),
+            tag: 0x40,
+            beat: 0,
+            last: true,
+            data,
+            bytes: 8,
+        });
+        assert_eq!(m.tlb.probe(0x40), Some(0x42));
+        let c = m.take_counters();
+        assert_eq!(c.walks, 1);
+        assert_eq!(c.walk_beats, 3, "three levels, three PTE reads");
+        assert!(m.idle());
+    }
+
+    #[test]
+    fn speculative_walk_abandons_instead_of_faulting() {
+        let mut m = Mmu::new(0, IommuParams::enabled(2, 1, true));
+        m.set_root(0x8000);
+        m.prefetch_q.push_back(0x77);
+        m.start_next_walk();
+        assert!(m.wants_ptw_ar());
+        let _ = m.pop_ptw_ar(0).unwrap();
+        // Invalid root PTE: the prefetch dies silently.
+        m.on_pte_beat(RBeat {
+            port: Port::ptw_of(0),
+            tag: 0x77,
+            beat: 0,
+            last: true,
+            data: [0; 8],
+            bytes: 8,
+        });
+        assert!(m.fault().is_none(), "prefetch never faults");
+        let c = m.take_counters();
+        assert_eq!(c.prefetch_walks, 1);
+        assert_eq!(c.prefetch_aborts, 1);
+        assert_eq!(c.faults, 0);
+        assert!(m.idle());
+    }
+}

@@ -10,8 +10,10 @@
 //!   configurable memory ([`mem`]), our descriptor DMAC with
 //!   speculative prefetching ([`dmac`]), the LogiCORE IP DMA baseline
 //!   ([`baseline`]), the OOC testbench ([`tb`]), a CVA6-like SoC with
-//!   PLIC ([`soc`]), the Linux dmaengine-style driver model
-//!   ([`driver`]), analytic area/timing/utilization models ([`model`]),
+//!   PLIC ([`soc`]), an SV39 IOMMU with IOTLB + translation-prefetching
+//!   page-table walker ([`iommu`]), the Linux dmaengine-style driver
+//!   model with paged `dma_map` ([`driver`]), analytic
+//!   area/timing/utilization models ([`model`]),
 //!   workload generators ([`workload`]) and table printers ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — a JAX compute graph +
 //!   Pallas kernels AOT-lowered to HLO text; the [`runtime`] module
@@ -26,6 +28,7 @@ pub mod baseline;
 pub mod cli;
 pub mod dmac;
 pub mod driver;
+pub mod iommu;
 pub mod mem;
 pub mod model;
 pub mod report;

@@ -12,6 +12,9 @@
 //! idmac contention [--channels N] [--policy rr|wrr|strict] [--weights 4,2,1,1]
 //!                  [--latency …] [--size N] [--transfers N] [--naive] [--out FILE]
 //!                                       # writes BENCH_multichannel.json
+//! idmac translate [--transfers N] [--size N] [--naive] [--out FILE]
+//!                 [--sets N --ways N] [--prefetch] [--pattern seq|stride4|rand]
+//!                 [--latency …]         # writes BENCH_translation.json
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
 //! idmac all     # every table + figure in paper order
@@ -62,6 +65,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("table4") => exp::table4().print(),
         Some("sweep") => sweep(args)?,
         Some("contention") => contention(args)?,
+        Some("translate") => translate(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
         Some("soc-demo") => soc_demo(args)?,
@@ -86,7 +90,8 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     bench-throughput|oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
+                     translate|bench-throughput|oracle-check|soc-demo|all> \
+                     [--threads N] [--naive] [flags]";
 
 fn sweep(args: &Args) -> idmac::Result<()> {
     let cfg = args.dmac_config()?;
@@ -174,6 +179,52 @@ fn contention(args: &Args) -> idmac::Result<()> {
         ct::contention_grid(channels, transfers, size, naive)
     };
     let report = idmac::report::MultiChannelReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Translation sweep (IOTLB shapes × page-access patterns × latency
+/// profiles); emits the deterministic `BENCH_translation.json`.  With
+/// an explicit `--sets`/`--ways`/`--pattern`/`--latency`/`--prefetch`
+/// the grid collapses to that single point.
+fn translate(args: &Args) -> idmac::Result<()> {
+    use idmac::report::translation as tr;
+
+    let transfers = args.get_usize("transfers", 48)?;
+    let size = args.get_usize("size", 256)? as u32;
+    if transfers == 0 || transfers > 1280 {
+        return Err(idmac::Error::Cli("--transfers must be in 1..=1280 (paged arena)".into()));
+    }
+    if size == 0 || size as u64 > idmac::iommu::PAGE_SIZE {
+        return Err(idmac::Error::Cli("--size must be in 1..=4096 (one page)".into()));
+    }
+    let naive = args.naive();
+    let out = args.get_or("out", tr::BENCH_FILE);
+    let single = args.get("sets").is_some()
+        || args.get("ways").is_some()
+        || args.get("pattern").is_some()
+        || args.get("latency").is_some()
+        || args.get_bool("prefetch");
+    let points = if single {
+        let sets = args.get_usize("sets", 8)?;
+        let ways = args.get_usize("ways", 2)?;
+        let pattern = args.pattern()?.unwrap_or(tr::AccessPattern::Sequential);
+        vec![tr::run_translation(
+            sets,
+            ways,
+            args.get_bool("prefetch"),
+            pattern,
+            args.latency()?,
+            transfers,
+            size,
+            naive,
+        )]
+    } else {
+        tr::translation_grid(transfers, size, naive)
+    };
+    let report = idmac::report::TranslationReport::new(points);
     report.to_table().print();
     report.write(&out)?;
     println!("wrote {out}");

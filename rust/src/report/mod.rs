@@ -7,10 +7,12 @@ pub mod contention;
 pub mod experiments;
 pub mod parallel;
 pub mod throughput;
+pub mod translation;
 
 pub use contention::{ContentionPoint, MultiChannelReport};
 pub use parallel::par_map;
 pub use throughput::{ThroughputEntry, ThroughputReport};
+pub use translation::{AccessPattern, TranslationPoint, TranslationReport};
 
 /// A paper-style table.
 #[derive(Debug, Clone, Default)]

@@ -1,0 +1,441 @@
+//! Translation experiments: `BENCH_translation.json`.
+//!
+//! The sweep the IOMMU exists for: a DMAC channel streams a descriptor
+//! chain through **paged** virtual memory, and the grid measures what
+//! translation costs across IOTLB shapes × page-access patterns ×
+//! memory-latency profiles, with and without the next-page translation
+//! prefetcher.  Every point also runs the identical workload on the
+//! untranslated physical path, so `cycles / phys_cycles` is the
+//! translation-cycle overhead the paper-style tables report.
+//!
+//! Everything in the JSON is simulated-time — no wall-clock — so the
+//! file is bit-deterministic and identical under the event-horizon
+//! scheduler and the `--naive` per-cycle loop (CI diffs the two).
+
+use crate::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, IommuParams, DESC_BYTES};
+use crate::driver::DmaMapper;
+use crate::iommu::{IommuDmac, PAGE_SIZE};
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::LatencyProfile;
+use crate::report::parallel::par_map;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::Cycle;
+use crate::tb::System;
+use crate::testutil::SplitMix64;
+use crate::workload::map;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_translation.json";
+
+/// Page-access order of the transfer chain over the paged arenas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Page `i` on transfer `i` — the prefetcher's best case.
+    Sequential,
+    /// Stride-4 page order (4 interleaved sequential streams).
+    Strided,
+    /// Deterministic pseudo-random page permutation (fixed seed).
+    Random,
+}
+
+impl AccessPattern {
+    pub const ALL: [AccessPattern; 3] = [
+        AccessPattern::Sequential,
+        AccessPattern::Strided,
+        AccessPattern::Random,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AccessPattern::Sequential => "seq",
+            AccessPattern::Strided => "stride4",
+            AccessPattern::Random => "rand",
+        }
+    }
+
+    /// The page visited by each transfer: a permutation of `0..n`.
+    pub fn order(self, n: usize) -> Vec<usize> {
+        match self {
+            AccessPattern::Sequential => (0..n).collect(),
+            AccessPattern::Strided => {
+                const STRIDE: usize = 4;
+                let mut v = Vec::with_capacity(n);
+                for lane in 0..STRIDE.min(n.max(1)) {
+                    let mut i = lane;
+                    while i < n {
+                        v.push(i);
+                        i += STRIDE;
+                    }
+                }
+                v
+            }
+            AccessPattern::Random => {
+                let mut v: Vec<usize> = (0..n).collect();
+                SplitMix64::new(0x7A6E_5EED_0F0F_0001).shuffle(&mut v);
+                v
+            }
+        }
+    }
+}
+
+/// One grid point: IOTLB shape × prefetch × pattern × profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TranslationPoint {
+    pub tlb_sets: usize,
+    pub tlb_ways: usize,
+    pub prefetch: bool,
+    pub pattern: &'static str,
+    pub profile: String,
+    pub transfers: usize,
+    pub size: u32,
+    /// End-to-end cycles through the IOMMU.
+    pub cycles: Cycle,
+    /// Same workload on the untranslated physical path.
+    pub phys_cycles: Cycle,
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    pub tlb_evictions: u64,
+    pub walks: u64,
+    pub walk_beats: u64,
+    pub prefetch_walks: u64,
+    pub prefetch_aborts: u64,
+    pub faults: u64,
+}
+
+impl TranslationPoint {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.tlb_hits + self.tlb_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.tlb_hits as f64 / total as f64
+    }
+
+    /// Translation-cycle overhead: paged cycles over physical cycles.
+    pub fn overhead(&self) -> f64 {
+        self.cycles as f64 / self.phys_cycles.max(1) as f64
+    }
+}
+
+/// Descriptor chain walking the paged arenas in `order`, with IOVA
+/// bases `src`/`dst` (or physical bases for the baseline run).
+fn paged_chain(src: u64, dst: u64, order: &[usize], size: u32) -> ChainBuilder {
+    let mut cb = ChainBuilder::new();
+    for (i, &k) in order.iter().enumerate() {
+        let d = Descriptor::new(src + k as u64 * PAGE_SIZE, dst + k as u64 * PAGE_SIZE, size);
+        let d = if i + 1 == order.len() { d.with_irq() } else { d };
+        cb.push_at(map::DESC_BASE + i as u64 * DESC_BYTES, d);
+    }
+    cb
+}
+
+/// Run one translation point: the paged run through the IOMMU plus the
+/// physical baseline of the identical workload.
+#[allow(clippy::too_many_arguments)]
+pub fn run_translation(
+    tlb_sets: usize,
+    tlb_ways: usize,
+    prefetch: bool,
+    pattern: AccessPattern,
+    profile: LatencyProfile,
+    transfers: usize,
+    size: u32,
+    naive: bool,
+) -> TranslationPoint {
+    assert!(transfers > 0 && size > 0);
+    assert!(size as u64 <= PAGE_SIZE, "one transfer per page in this sweep");
+    let order = pattern.order(transfers);
+
+    // Paged run: IOVA-contiguous windows over the physical arenas, the
+    // descriptor pool identity-mapped so CSR addresses and completion
+    // stamps keep their physical values.
+    let cfg = DmacConfig::speculation()
+        .with_iommu(IommuParams::enabled(tlb_sets, tlb_ways, prefetch));
+    let mut sys = System::new(profile, IommuDmac::single(cfg));
+    let mut mapper = DmaMapper::new(&mut sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE)
+        .expect("page-table pool");
+    // One page of slack past the last descriptor: the frontend's
+    // speculative fetches overrun the chain tail (DESIGN.md §8).
+    mapper
+        .map_identity(&mut sys.mem, map::DESC_BASE, transfers as u64 * DESC_BYTES + PAGE_SIZE)
+        .expect("descriptor mapping");
+    let window = transfers as u64 * PAGE_SIZE;
+    let src = mapper.dma_map(&mut sys.mem, map::SRC_BASE, window).expect("src mapping");
+    let dst = mapper.dma_map(&mut sys.mem, map::DST_BASE, window).expect("dst mapping");
+    sys.ctrl.set_root(0, mapper.root());
+    fill_pattern(&mut sys.mem, map::SRC_BASE, size as usize, 1);
+    sys.load_and_launch(0, &paged_chain(src.iova, dst.iova, &order, size));
+    let stats = if naive {
+        sys.run_until_idle_naive().expect("translation run (naive)")
+    } else {
+        sys.run_until_idle().expect("translation run")
+    };
+
+    // Physical baseline: same chain, physical addresses, no IOMMU.
+    let mut base = System::new(profile, Dmac::new(DmacConfig::speculation()));
+    fill_pattern(&mut base.mem, map::SRC_BASE, size as usize, 1);
+    base.load_and_launch(0, &paged_chain(map::SRC_BASE, map::DST_BASE, &order, size));
+    let phys = base.run_until_idle().expect("physical baseline");
+
+    TranslationPoint {
+        tlb_sets,
+        tlb_ways,
+        prefetch,
+        pattern: pattern.name(),
+        profile: profile.name(),
+        transfers,
+        size,
+        cycles: stats.end_cycle,
+        phys_cycles: phys.end_cycle,
+        tlb_hits: stats.tlb_hits,
+        tlb_misses: stats.tlb_misses,
+        tlb_evictions: stats.tlb_evictions,
+        walks: stats.ptw_walks,
+        walk_beats: stats.ptw_beats,
+        prefetch_walks: stats.ptw_prefetch_walks,
+        prefetch_aborts: stats.ptw_prefetch_aborts,
+        faults: stats.iommu_faults,
+    }
+}
+
+/// IOTLB shapes swept by the grid: tiny (thrashes), mid, roomy.
+pub const TLB_SHAPES: [(usize, usize); 3] = [(2, 1), (8, 2), (32, 4)];
+
+/// The full grid: TLB shapes × prefetch on/off × access patterns ×
+/// the three paper memory profiles, in deterministic order on the
+/// parallel sweep executor.
+pub fn translation_grid(transfers: usize, size: u32, naive: bool) -> Vec<TranslationPoint> {
+    let mut tasks = Vec::new();
+    for &(sets, ways) in &TLB_SHAPES {
+        for prefetch in [false, true] {
+            for pattern in AccessPattern::ALL {
+                for profile in
+                    [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+                {
+                    tasks.push((sets, ways, prefetch, pattern, profile));
+                }
+            }
+        }
+    }
+    par_map(tasks, |_, (sets, ways, prefetch, pattern, profile)| {
+        run_translation(sets, ways, prefetch, pattern, profile, transfers, size, naive)
+    })
+}
+
+/// The machine-readable translation report (`BENCH_translation.json`,
+/// schema `idmac-translation/v1`).  Integer-only payload: exact-diffed
+/// by CI across scheduler modes and against the checked-in baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TranslationReport {
+    pub points: Vec<TranslationPoint>,
+}
+
+impl TranslationReport {
+    pub fn new(points: Vec<TranslationPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-translation/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"tlb_sets\": {}, \"tlb_ways\": {}, \"prefetch\": {}, \
+                 \"pattern\": {}, \"profile\": {}, \"transfers\": {}, \"size\": {}, \
+                 \"cycles\": {}, \"phys_cycles\": {}, \"tlb_hits\": {}, \
+                 \"tlb_misses\": {}, \"tlb_evictions\": {}, \"walks\": {}, \
+                 \"walk_beats\": {}, \"prefetch_walks\": {}, \"prefetch_aborts\": {}, \
+                 \"faults\": {}}}{}\n",
+                p.tlb_sets,
+                p.tlb_ways,
+                p.prefetch,
+                json_str(p.pattern),
+                json_str(&p.profile),
+                p.transfers,
+                p.size,
+                p.cycles,
+                p.phys_cycles,
+                p.tlb_hits,
+                p.tlb_misses,
+                p.tlb_evictions,
+                p.walks,
+                p.walk_beats,
+                p.prefetch_walks,
+                p.prefetch_aborts,
+                p.faults,
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable sweep table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Translation — IOTLB shape x access pattern x memory",
+            &["tlb", "pf", "pattern", "memory", "cycles", "overhead", "hit%", "walks", "faults"],
+        );
+        for p in &self.points {
+            t.row(&[
+                format!("{}x{}", p.tlb_sets, p.tlb_ways),
+                if p.prefetch { "on".into() } else { "off".into() },
+                p.pattern.to_string(),
+                p.profile.clone(),
+                p.cycles.to_string(),
+                format!("{:.3}x", p.overhead()),
+                format!("{:.1}", p.hit_rate() * 100.0),
+                p.walks.to_string(),
+                p.faults.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patterns_are_permutations() {
+        for pattern in AccessPattern::ALL {
+            let mut v = pattern.order(23);
+            v.sort_unstable();
+            assert_eq!(v, (0..23).collect::<Vec<_>>(), "{}", pattern.name());
+        }
+        assert_eq!(AccessPattern::Strided.order(8), vec![0, 4, 1, 5, 2, 6, 3, 7]);
+        assert_eq!(AccessPattern::Random.order(16), AccessPattern::Random.order(16));
+    }
+
+    #[test]
+    fn point_is_identical_across_schedulers_and_fault_free() {
+        let fast = run_translation(
+            8,
+            2,
+            true,
+            AccessPattern::Sequential,
+            LatencyProfile::Ddr3,
+            6,
+            256,
+            false,
+        );
+        let naive = run_translation(
+            8,
+            2,
+            true,
+            AccessPattern::Sequential,
+            LatencyProfile::Ddr3,
+            6,
+            256,
+            true,
+        );
+        assert_eq!(fast, naive, "translation point diverged across schedulers");
+        assert_eq!(fast.faults, 0, "fully mapped run must not fault");
+        assert!(fast.walks > 0, "cold TLB must walk");
+        assert!(fast.cycles >= fast.phys_cycles, "translation cannot be free");
+    }
+
+    #[test]
+    fn prefetch_helps_sequential_streams() {
+        let run = |prefetch| {
+            run_translation(
+                32,
+                4,
+                prefetch,
+                AccessPattern::Sequential,
+                LatencyProfile::Ddr3,
+                8,
+                256,
+                false,
+            )
+        };
+        let off = run(false);
+        let on = run(true);
+        assert!(on.prefetch_walks > 0, "prefetcher must fire on a sequential stream");
+        assert_eq!(off.prefetch_walks, 0);
+        // A roomy TLB never evicts here, so speculative fills can only
+        // convert compulsory misses into hits.
+        assert!(
+            on.tlb_misses <= off.tlb_misses,
+            "prefetch added misses: {} vs {}",
+            on.tlb_misses,
+            off.tlb_misses
+        );
+        // A misprediction costs nothing but the wasted walk: the one
+        // trailing next-page walk past the mapped window is the only
+        // allowed slowdown.
+        assert!(
+            on.cycles <= off.cycles + 200,
+            "prefetch slowed a sequential stream: {} vs {}",
+            on.cycles,
+            off.cycles
+        );
+    }
+
+    #[test]
+    fn tiny_tlb_misses_more_than_roomy_tlb() {
+        let run = |sets, ways| {
+            run_translation(
+                sets,
+                ways,
+                false,
+                AccessPattern::Strided,
+                LatencyProfile::Ddr3,
+                12,
+                256,
+                false,
+            )
+        };
+        let tiny = run(1, 1);
+        let roomy = run(32, 4);
+        assert!(
+            tiny.tlb_misses >= roomy.tlb_misses,
+            "1x1 TLB must miss at least as often as 32x4"
+        );
+        assert!(tiny.tlb_evictions > 0, "a 1-entry TLB must evict");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wall_clock_free() {
+        let points = vec![run_translation(
+            2,
+            1,
+            false,
+            AccessPattern::Random,
+            LatencyProfile::Ideal,
+            4,
+            64,
+            false,
+        )];
+        let a = TranslationReport::new(points.clone()).to_json();
+        let b = TranslationReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-translation/v1\""));
+        assert!(a.contains("\"pattern\": \"rand\""));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn grid_covers_every_axis() {
+        let points = translation_grid(3, 64, false);
+        assert_eq!(points.len(), TLB_SHAPES.len() * 2 * 3 * 3);
+        assert!(points.iter().any(|p| p.prefetch && p.pattern == "rand"));
+        assert!(points.iter().any(|p| p.tlb_sets == 32));
+        for p in &points {
+            assert_eq!(p.faults, 0, "grid workloads are fully mapped");
+        }
+        let table = TranslationReport::new(points).to_table();
+        assert!(table.render().contains("stride4"));
+    }
+}

@@ -66,6 +66,23 @@ pub struct RunStats {
     pub eoc_flushes: u64,
     /// Total IRQs raised.
     pub irqs: u64,
+    /// IOTLB hits / misses (one lookup per translated request segment;
+    /// zero on systems without an IOMMU).
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    /// IOTLB entries evicted by capacity/conflict replacement.
+    pub tlb_evictions: u64,
+    /// Page-table walks completed by the IOMMU walker.
+    pub ptw_walks: u64,
+    /// PTE read beats the walker put on the bus (translation overhead
+    /// traffic, the analogue of `wasted_desc_beats` for the IOMMU).
+    pub ptw_beats: u64,
+    /// Speculative next-page walks issued / abandoned (a misprediction
+    /// costs nothing but the wasted walk).
+    pub ptw_prefetch_walks: u64,
+    pub ptw_prefetch_aborts: u64,
+    /// Translation faults latched (each raises the banked fault IRQ).
+    pub iommu_faults: u64,
     /// Final simulation cycle.
     pub end_cycle: Cycle,
 }
@@ -124,6 +141,14 @@ impl RunStats {
         self.spec_misses += other.spec_misses;
         self.eoc_flushes += other.eoc_flushes;
         self.irqs += other.irqs;
+        self.tlb_hits += other.tlb_hits;
+        self.tlb_misses += other.tlb_misses;
+        self.tlb_evictions += other.tlb_evictions;
+        self.ptw_walks += other.ptw_walks;
+        self.ptw_beats += other.ptw_beats;
+        self.ptw_prefetch_walks += other.ptw_prefetch_walks;
+        self.ptw_prefetch_aborts += other.ptw_prefetch_aborts;
+        self.iommu_faults += other.iommu_faults;
         self.end_cycle = self.end_cycle.max(other.end_cycle);
     }
 

@@ -26,6 +26,16 @@ pub fn dmac_irq_source(ch: usize) -> u32 {
     DMAC_IRQ_SOURCE + ch as u32
 }
 
+/// First IOMMU translation-fault source: one dedicated banked source
+/// per channel, above the completion-IRQ bank.
+pub const IOMMU_FAULT_SOURCE: u32 = DMAC_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32;
+
+/// PLIC source id of channel `ch`'s IOMMU fault line.
+pub fn iommu_fault_source(ch: usize) -> u32 {
+    debug_assert!(ch < crate::axi::MAX_CHANNELS);
+    IOMMU_FAULT_SOURCE + ch as u32
+}
+
 /// The in-system integration: the OOC testbench plus CPU + PLIC.
 pub struct Soc<C: Controller> {
     pub sys: System<C>,
@@ -33,6 +43,8 @@ pub struct Soc<C: Controller> {
     pub plic: Plic,
     /// Per-channel IRQ edges already routed to the PLIC gateway.
     irqs_routed: Vec<u64>,
+    /// Per-channel fault edges already routed to the PLIC gateway.
+    faults_routed: Vec<u64>,
 }
 
 impl<C: Controller> Soc<C> {
@@ -42,6 +54,7 @@ impl<C: Controller> Soc<C> {
             cpu: Cpu::default(),
             plic: Plic::new(),
             irqs_routed: Vec::new(),
+            faults_routed: Vec::new(),
         }
     }
 
@@ -62,6 +75,16 @@ impl<C: Controller> Soc<C> {
                 self.plic.raise(dmac_irq_source(ch));
             }
             self.irqs_routed[ch] = self.sys.irq_edges[ch];
+        }
+        if self.faults_routed.len() < self.sys.fault_edges.len() {
+            self.faults_routed.resize(self.sys.fault_edges.len(), 0);
+        }
+        for ch in 0..self.sys.fault_edges.len() {
+            let edges = self.sys.fault_edges[ch] - self.faults_routed[ch];
+            for _ in 0..edges {
+                self.plic.raise(iommu_fault_source(ch));
+            }
+            self.faults_routed[ch] = self.sys.fault_edges[ch];
         }
     }
 
@@ -113,13 +136,14 @@ impl<C: Controller> Soc<C> {
             }
             self.tick();
             // CPU claims and services one interrupt per claim window.
-            // The registered handler serves every DMAC channel (it
-            // scans completion stamps, so the source id selects no
-            // distinct code path — exactly like a shared Linux ISR).
+            // The registered handler serves every DMAC channel and the
+            // IOMMU fault bank (it scans completion stamps / fault
+            // latches, so the source id selects no distinct code path —
+            // exactly like a shared Linux ISR).
             let now = self.sys.now();
             if let Some(src) = self.cpu.maybe_claim(&mut self.plic, now) {
                 debug_assert!(
-                    (DMAC_IRQ_SOURCE..DMAC_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32)
+                    (DMAC_IRQ_SOURCE..IOMMU_FAULT_SOURCE + crate::axi::MAX_CHANNELS as u32)
                         .contains(&src)
                 );
                 handler(&mut self.sys, &mut self.cpu, now);

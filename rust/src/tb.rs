@@ -41,6 +41,9 @@ pub struct System<C: Controller> {
     /// Cumulative IRQ edges per channel (index = channel id; grown on
     /// first edge).  The SoC routes these to banked PLIC sources.
     pub irq_edges: Vec<u64>,
+    /// Cumulative IOMMU translation-fault edges per channel.  The SoC
+    /// routes these to the dedicated banked fault sources.
+    pub fault_edges: Vec<u64>,
     /// First AR issue cycle per port (Table IV `i-rf` / `rf-rb`).
     pub first_ar: Vec<(Port, Cycle)>,
     /// First payload R-beat delivery cycle (Table IV `r-w`).
@@ -68,6 +71,7 @@ impl<C: Controller> System<C> {
             horizon: EventHorizon::default(),
             irqs_seen: 0,
             irq_edges: Vec::new(),
+            fault_edges: Vec::new(),
             first_ar: Vec::new(),
             first_payload_r: None,
             first_payload_w: None,
@@ -197,6 +201,15 @@ impl<C: Controller> System<C> {
             let per_ch = &mut self.irq_edges;
             self.ctrl.take_irq_channels(&mut |ch, n| {
                 *irqs_seen += n;
+                if per_ch.len() <= ch {
+                    per_ch.resize(ch + 1, 0);
+                }
+                per_ch[ch] += n;
+            });
+        }
+        {
+            let per_ch = &mut self.fault_edges;
+            self.ctrl.take_fault_channels(&mut |ch, n| {
                 if per_ch.len() <= ch {
                     per_ch.resize(ch + 1, 0);
                 }

@@ -27,6 +27,15 @@ pub mod map {
     pub const ARENA_BASE: u64 = 0x00F0_0000;
     pub const ARENA_LINES: usize = 1024;
     pub const LINE_BYTES: u64 = 64;
+    /// Physical region the driver carves IOMMU page-table pages from
+    /// (below the descriptor pool; 960 KiB = 240 table pages).
+    pub const PT_BASE: u64 = 0x0001_0000;
+    pub const PT_SIZE: u64 = 0x000F_0000;
+    /// Base of the guest-virtual (IOVA) window handed out by
+    /// `driver::DmaMapper` — deliberately far outside the 16 MiB of
+    /// physical memory, so an untranslated access can never silently
+    /// alias a physical buffer.
+    pub const IOVA_BASE: u64 = 0x40_0000_0000;
 }
 
 /// A uniform sweep workload: `transfers` linear transfers of `size`

@@ -1,0 +1,322 @@
+//! IOMMU subsystem properties: (a) a disabled translation stage is
+//! cycle-identical to the bare DMAC, (b) the event-horizon scheduler
+//! stays bit-identical to the naive loop with translation enabled,
+//! (c) paged gather through scattered physical pages moves every byte,
+//! (d) the fault → remap → relaunch protocol round-trips through the
+//! SoC's banked fault IRQ, and (e) the paged `dma_map` driver API
+//! carries scatter-gather work end to end.
+
+use idmac::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, IommuParams};
+use idmac::driver::{DmaMapper, MultiTenantDriver};
+use idmac::iommu::{IommuDmac, PAGE_SIZE};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::soc::{iommu_fault_source, Soc, IOMMU_FAULT_SOURCE};
+use idmac::tb::System;
+use idmac::testutil::{forall, SplitMix64};
+use idmac::workload::map;
+
+/// Random race-free chain on the physical map (mirrors
+/// `tests/properties.rs`).
+fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
+    let n = rng.range(2, 24) as usize;
+    let mut cb = ChainBuilder::new();
+    let mut meta = Vec::new();
+    let mut dst_slots: Vec<u64> = (0..64).collect();
+    rng.shuffle(&mut dst_slots);
+    let mut desc_addr = map::DESC_BASE;
+    for i in 0..n {
+        let size = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
+        let src = map::SRC_BASE + rng.below(32) * 4096;
+        let dst = map::DST_BASE + dst_slots[i] * 4096;
+        let d = Descriptor::new(src, dst, size);
+        let d = if i + 1 == n { d.with_irq() } else { d };
+        cb.push_at(desc_addr, d);
+        meta.push((src, dst, size));
+        desc_addr += 32 * rng.range(1, 4);
+    }
+    (cb, meta)
+}
+
+fn random_iommu(rng: &mut SplitMix64) -> IommuParams {
+    IommuParams::enabled(
+        rng.range(1, 16) as usize,
+        rng.range(1, 4) as usize,
+        rng.chance(0.5),
+    )
+}
+
+/// Identity-map every region a `random_chain` touches and launch it on
+/// a single translated channel.
+fn identity_mapped_system(
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    cb: &ChainBuilder,
+    seed: u32,
+) -> System<IommuDmac> {
+    let mut sys = System::new(profile, IommuDmac::single(cfg));
+    let mut mapper =
+        DmaMapper::new(&mut sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+    mapper.map_identity(&mut sys.mem, map::DESC_BASE, 0x4000).unwrap();
+    mapper.map_identity(&mut sys.mem, map::SRC_BASE, 32 * 4096).unwrap();
+    mapper.map_identity(&mut sys.mem, map::DST_BASE, 64 * 4096).unwrap();
+    sys.ctrl.set_root(0, mapper.root());
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+    sys.load_and_launch(0, cb);
+    sys
+}
+
+#[test]
+fn prop_disabled_iommu_is_cycle_identical_to_bare_dmac() {
+    // The acceptance property of the wrapper: with translation off, the
+    // extra (never-requesting) walker port changes *nothing* — same
+    // RunStats, final clock and memory image, under both schedulers.
+    forall(15, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = DmacConfig::custom(rng.range(1, 24) as usize, rng.range(0, 24) as usize);
+        let profile = LatencyProfile::Custom(rng.range(1, 110) as u32);
+        let seed = rng.next_u64() as u32;
+        let bare = {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = sys.run_until_idle().unwrap();
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        let wrapped = {
+            let mut sys = System::new(profile, IommuDmac::single(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = sys.run_until_idle().unwrap();
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        assert_eq!(bare.0, wrapped.0, "RunStats diverged: cfg={cfg:?} {profile:?}");
+        assert_eq!(bare.1, wrapped.1, "clock diverged");
+        assert_eq!(bare.2, wrapped.2, "memory image diverged");
+        let wrapped_naive = {
+            let mut sys = System::new(profile, IommuDmac::single(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            sys.run_until_idle_naive().unwrap()
+        };
+        assert_eq!(bare.0, wrapped_naive, "naive wrapped diverged");
+    });
+}
+
+#[test]
+fn prop_enabled_iommu_fast_forward_matches_naive() {
+    forall(12, |rng| {
+        let (cb, meta) = random_chain(rng);
+        let cfg = DmacConfig::custom(rng.range(1, 16) as usize, rng.range(0, 16) as usize)
+            .with_iommu(random_iommu(rng));
+        let profile = LatencyProfile::Custom(rng.range(1, 110) as u32);
+        let seed = rng.next_u64() as u32;
+        let mut fast = identity_mapped_system(cfg, profile, &cb, seed);
+        let mut naive = identity_mapped_system(cfg, profile, &cb, seed);
+        let f = fast.run_until_idle().unwrap();
+        let n = naive.run_until_idle_naive().unwrap();
+        assert_eq!(f, n, "stats diverged: cfg={cfg:?} profile={profile:?}");
+        assert_eq!(fast.now(), naive.now(), "clock diverged");
+        assert_eq!(
+            fast.mem.backdoor_read(map::DST_BASE, 64 * 4096),
+            naive.mem.backdoor_read(map::DST_BASE, 64 * 4096),
+            "memory image diverged"
+        );
+        // Translation actually happened and the payload still moved.
+        assert!(f.tlb_hits + f.tlb_misses > 0, "no translations recorded");
+        assert_eq!(f.iommu_faults, 0, "fully mapped run must not fault");
+        assert_eq!(f.completions.len(), meta.len());
+        for (src, dst, size) in meta {
+            assert_eq!(
+                fast.mem.backdoor_read(src, size as usize).to_vec(),
+                fast.mem.backdoor_read(dst, size as usize).to_vec(),
+                "payload corrupted under translation"
+            );
+        }
+    });
+}
+
+#[test]
+fn paged_gather_streams_scattered_physical_pages() {
+    // Contiguous IOVA, scattered PA: the canonical irregular transfer.
+    let n = 24usize;
+    let mut rng = SplitMix64::new(0x1077);
+    let mut src_pages: Vec<u64> = (0..n as u64).collect();
+    let mut dst_pages: Vec<u64> = (0..n as u64).collect();
+    rng.shuffle(&mut src_pages);
+    rng.shuffle(&mut dst_pages);
+    let cfg = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, true));
+    let mut sys = System::new(LatencyProfile::Ddr3, IommuDmac::single(cfg));
+    let mut mapper =
+        DmaMapper::new(&mut sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+    mapper.map_identity(&mut sys.mem, map::DESC_BASE, n as u64 * 32).unwrap();
+    let src_iova = map::IOVA_BASE;
+    let dst_iova = map::IOVA_BASE + (n as u64) * PAGE_SIZE;
+    for i in 0..n as u64 {
+        let src_pa = map::SRC_BASE + src_pages[i as usize] * PAGE_SIZE;
+        let dst_pa = map::DST_BASE + dst_pages[i as usize] * PAGE_SIZE;
+        mapper.map_page(&mut sys.mem, src_iova + i * PAGE_SIZE, src_pa).unwrap();
+        mapper.map_page(&mut sys.mem, dst_iova + i * PAGE_SIZE, dst_pa).unwrap();
+        fill_pattern(&mut sys.mem, src_pa, 512, i as u32 + 1);
+    }
+    sys.ctrl.set_root(0, mapper.root());
+    let mut cb = ChainBuilder::new();
+    for i in 0..n as u64 {
+        let d = Descriptor::new(src_iova + i * PAGE_SIZE, dst_iova + i * PAGE_SIZE, 512);
+        let d = if i + 1 == n as u64 { d.with_irq() } else { d };
+        cb.push_at(map::DESC_BASE + i * 32, d);
+    }
+    sys.load_and_launch(0, &cb);
+    let stats = sys.run_until_idle().unwrap();
+    assert_eq!(stats.completions.len(), n);
+    assert_eq!(stats.iommu_faults, 0);
+    assert!(stats.ptw_walks > 0, "cold TLB must walk");
+    assert!(stats.ptw_beats >= 3 * stats.ptw_walks, "three PTE reads per completed walk");
+    for i in 0..n as u64 {
+        assert_eq!(
+            sys.mem
+                .backdoor_read(map::SRC_BASE + src_pages[i as usize] * PAGE_SIZE, 512)
+                .to_vec(),
+            sys.mem
+                .backdoor_read(map::DST_BASE + dst_pages[i as usize] * PAGE_SIZE, 512)
+                .to_vec(),
+            "gather element {i} landed wrong"
+        );
+    }
+}
+
+#[test]
+fn fault_remap_relaunch_round_trip_through_the_soc() {
+    // Lazy mapping: the destination page is unmapped at launch.  The
+    // write faults, the banked fault IRQ fires, the handler maps the
+    // page and resumes, and the transfer relaunches to completion.
+    let cfg = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, false));
+    let mut soc = Soc::new(LatencyProfile::Ddr3, IommuDmac::single(cfg));
+    let mut mapper =
+        DmaMapper::new(&mut soc.sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+    mapper.map_identity(&mut soc.sys.mem, map::DESC_BASE, 64).unwrap();
+    let src_iova = map::IOVA_BASE;
+    let dst_iova = map::IOVA_BASE + PAGE_SIZE;
+    mapper.map_page(&mut soc.sys.mem, src_iova, map::SRC_BASE).unwrap();
+    // dst_iova is deliberately left unmapped.
+    soc.sys.ctrl.set_root(0, mapper.root());
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 256, 9);
+    let mut cb = ChainBuilder::new();
+    cb.push_at(map::DESC_BASE, Descriptor::new(src_iova, dst_iova, 256).with_irq());
+    soc.sys.load_and_launch(0, &cb);
+    let mut faults_handled = 0;
+    let stats = soc
+        .run(|sys, _cpu, _now| {
+            if let Some(f) = sys.ctrl.any_fault() {
+                assert_eq!(f.channel, 0);
+                assert!(f.write, "the store to the unmapped page faults");
+                assert_eq!(f.iova, dst_iova, "fault CSR reports the missing page");
+                mapper.map_page(&mut sys.mem, f.iova, map::DST_BASE).unwrap();
+                sys.ctrl.resume(0);
+                faults_handled += 1;
+            }
+        })
+        .unwrap();
+    assert_eq!(faults_handled, 1, "exactly one fault/remap/relaunch cycle");
+    assert_eq!(stats.iommu_faults, 1);
+    assert_eq!(stats.completions.len(), 1);
+    assert_eq!(soc.sys.fault_edges, vec![1]);
+    assert_eq!(
+        soc.sys.mem.backdoor_read(map::SRC_BASE, 256).to_vec(),
+        soc.sys.mem.backdoor_read(map::DST_BASE, 256).to_vec(),
+        "payload must land after the relaunch"
+    );
+    // The fault line is its own banked PLIC source, distinct from the
+    // completion IRQ bank.
+    assert_eq!(iommu_fault_source(0), IOMMU_FAULT_SOURCE);
+    assert!(iommu_fault_source(0) > idmac::soc::dmac_irq_source(idmac::axi::MAX_CHANNELS - 1));
+}
+
+#[test]
+fn dma_map_sg_through_the_multitenant_driver() {
+    // The full software stack: dma_map_sg builds page tables, the
+    // multi-tenant driver submits the guest-virtual SG list, and the
+    // translated DMAC gathers scattered physical buffers.
+    let cfg = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, true));
+    let mut soc = Soc::new(LatencyProfile::Ddr3, IommuDmac::single(cfg));
+    let mut mapper =
+        DmaMapper::new(&mut soc.sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+    mapper.map_identity(&mut soc.sys.mem, map::DESC_BASE, 0x1000).unwrap();
+    // Three scattered source buffers and one destination arena.
+    let srcs = [map::SRC_BASE, map::SRC_BASE + 17 * PAGE_SIZE, map::SRC_BASE + 5 * PAGE_SIZE];
+    for (i, &pa) in srcs.iter().enumerate() {
+        fill_pattern(&mut soc.sys.mem, pa, 1024, i as u32 + 40);
+    }
+    let src_maps = mapper
+        .dma_map_sg(&mut soc.sys.mem, &[(srcs[0], 1024), (srcs[1], 1024), (srcs[2], 1024)])
+        .unwrap();
+    let dst_map = mapper.dma_map(&mut soc.sys.mem, map::DST_BASE, 3 * 1024).unwrap();
+    soc.sys.ctrl.set_root(0, mapper.root());
+    let mut drv = MultiTenantDriver::new(1, map::DESC_BASE, 0x1000, 2);
+    let v = drv.open();
+    let sg: Vec<(u64, u64, u64)> = src_maps
+        .iter()
+        .enumerate()
+        .map(|(i, m)| (dst_map.iova + i as u64 * 1024, m.iova, 1024))
+        .collect();
+    let cookie = drv.submit_sg(v, &sg).unwrap();
+    drv.issue_pending(&mut soc.sys, 0);
+    let stats = soc
+        .run(|sys, _cpu, now| {
+            assert!(sys.ctrl.any_fault().is_none(), "fully mapped run must not fault");
+            drv.irq_handler(sys, now);
+        })
+        .unwrap();
+    assert!(drv.is_complete(cookie));
+    assert_eq!(stats.completions.len(), 3, "one descriptor per SG element");
+    assert_eq!(stats.iommu_faults, 0);
+    for (i, &pa) in srcs.iter().enumerate() {
+        assert_eq!(
+            soc.sys.mem.backdoor_read(pa, 1024).to_vec(),
+            soc.sys.mem.backdoor_read(map::DST_BASE + i as u64 * 1024, 1024).to_vec(),
+            "SG element {i}"
+        );
+    }
+}
+
+#[test]
+fn unmap_shootdown_faults_on_reuse() {
+    // After dma_unmap + IOTLB shootdown, a relaunch over the stale
+    // IOVA faults instead of silently writing the old page.
+    let cfg = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, false));
+    let mut soc = Soc::new(LatencyProfile::Ideal, IommuDmac::single(cfg));
+    let mut mapper =
+        DmaMapper::new(&mut soc.sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+    mapper.map_identity(&mut soc.sys.mem, map::DESC_BASE, 64).unwrap();
+    let src = mapper.dma_map(&mut soc.sys.mem, map::SRC_BASE, 64).unwrap();
+    let dst = mapper.dma_map(&mut soc.sys.mem, map::DST_BASE, 64).unwrap();
+    soc.sys.ctrl.set_root(0, mapper.root());
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 64, 3);
+    let mut cb = ChainBuilder::new();
+    cb.push_at(map::DESC_BASE, Descriptor::new(src.iova, dst.iova, 64).with_irq());
+    soc.sys.load_and_launch(0, &cb);
+    let mut observed_fault = None;
+    let mut relaunched = false;
+    soc.run(|sys, _cpu, now| {
+        if let Some(f) = sys.ctrl.any_fault() {
+            observed_fault = Some(f);
+            // Restore the mapping and resume so the system drains.
+            mapper.map_page(&mut sys.mem, f.iova, map::SRC_BASE).unwrap();
+            sys.ctrl.resume(0);
+        } else if !relaunched {
+            // First completion: tear down the source mapping and shoot
+            // down the TLB, then relaunch the same chain.
+            relaunched = true;
+            mapper.dma_unmap(&mut sys.mem, src).unwrap();
+            sys.ctrl.mmu_mut(0).flush_iova(src.iova);
+            let mut cb = ChainBuilder::new();
+            cb.push_at(map::DESC_BASE, Descriptor::new(src.iova, dst.iova, 64).with_irq());
+            let head = cb.write_to(&mut sys.mem);
+            sys.schedule_launch(now + 1, head);
+        }
+    })
+    .unwrap();
+    let f = observed_fault.expect("stale IOVA access must fault after shootdown");
+    assert!(!f.write, "the load faults first");
+    assert_eq!(f.iova, src.iova & !(PAGE_SIZE - 1), "fault names the shot-down page");
+}

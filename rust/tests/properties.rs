@@ -231,6 +231,36 @@ fn prop_fast_forward_matches_naive_tick_loop() {
 }
 
 #[test]
+fn prop_fast_forward_matches_naive_with_iommu_enabled() {
+    use idmac::report::translation::{run_translation, AccessPattern};
+    // With the SV39 translation stage enabled, the event-horizon
+    // scheduler must remain bit-identical to the naive loop: every
+    // translation sweep point (end cycle, TLB hit/miss/eviction
+    // counts, walk and prefetch accounting) compares equal across the
+    // two schedulers for random TLB shapes, patterns and latencies.
+    forall(10, |rng| {
+        let sets = rng.range(1, 16) as usize;
+        let ways = rng.range(1, 4) as usize;
+        let prefetch = rng.chance(0.5);
+        let pattern = *rng.pick(&[
+            AccessPattern::Sequential,
+            AccessPattern::Strided,
+            AccessPattern::Random,
+        ]);
+        let profile = LatencyProfile::Custom(rng.range(1, 110) as u32);
+        let transfers = rng.range(2, 10) as usize;
+        let size = *rng.pick(&[64u32, 256, 1024]);
+        let fast = run_translation(sets, ways, prefetch, pattern, profile, transfers, size, false);
+        let naive = run_translation(sets, ways, prefetch, pattern, profile, transfers, size, true);
+        assert_eq!(
+            fast, naive,
+            "translation point diverged: {sets}x{ways} pf={prefetch} {pattern:?} {profile:?}"
+        );
+        assert_eq!(fast.faults, 0, "fully mapped sweep must not fault");
+    });
+}
+
+#[test]
 fn prop_fast_forward_matches_naive_on_the_baseline() {
     use idmac::baseline::{LcConfig, LogiCore};
     // Same equivalence for the LogiCORE model, whose serialized chase
