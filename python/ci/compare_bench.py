@@ -22,6 +22,11 @@ fields are ignored by design, so runner speed cannot flake the build:
     protocol as ``multichannel`` (scheduler-mode identity + exact
     baseline match) against the ``idmac-translation/v1`` schema.
 
+``nd``
+    Validates ``BENCH_nd.json``-shaped files (the ND-native vs
+    chain-expanded grid) with the same protocol against the
+    ``idmac-nd/v1`` schema.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -166,6 +171,10 @@ def check_translation(fast_path: str, naive_path: str, baseline_path: str) -> No
     )
 
 
+def check_nd(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(fast_path, naive_path, baseline_path, "idmac-nd/v1", "nd")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -185,13 +194,20 @@ def main() -> None:
     tr.add_argument("--naive", required=True)
     tr.add_argument("--baseline", required=True)
 
+    nd = sub.add_parser("nd")
+    nd.add_argument("--fast", required=True)
+    nd.add_argument("--naive", required=True)
+    nd.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
     elif args.mode == "multichannel":
         check_multichannel(args.fast, args.naive, args.baseline)
-    else:
+    elif args.mode == "translation":
         check_translation(args.fast, args.naive, args.baseline)
+    else:
+        check_nd(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

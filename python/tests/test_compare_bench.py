@@ -1,0 +1,155 @@
+"""Gate logic of ``python/ci/compare_bench.py``: the bench-regression
+comparisons must actually gate — scheduler-mode divergence and baseline
+drift fail, bootstrap-empty baselines warn-and-pass, missing files are
+hard failures (a typo'd path must not disarm the gate)."""
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "ci", "compare_bench.py")
+
+
+def run(args):
+    return subprocess.run(
+        [sys.executable, SCRIPT] + args, capture_output=True, text=True
+    )
+
+
+def write(path, doc):
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def point_doc(schema, points):
+    return {"schema": schema, "points": points}
+
+
+ND_POINT = {
+    "workload": "transpose",
+    "row_bytes": 64,
+    "rows": 64,
+    "payload_bytes": 4096,
+    "profile": "DDR3 (13 cycles)",
+    "nd_cycles": 1000,
+    "chain_cycles": 4000,
+    "nd_desc_beats": 8,
+    "chain_desc_beats": 256,
+    "nd_ext_reuses": 1,
+    "nd_writebacks": 1,
+    "chain_writebacks": 64,
+}
+
+
+def test_nd_identical_grids_pass_with_bootstrap_baseline(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-nd/v1", []))
+    r = run(["nd", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "bootstrap mode" in r.stdout
+
+
+def test_nd_scheduler_divergence_fails(tmp_path):
+    diverged = dict(ND_POINT, nd_cycles=1001)
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", [diverged]))
+    base = write(tmp_path / "base.json", point_doc("idmac-nd/v1", []))
+    r = run(["nd", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "not deterministic" in r.stderr
+
+
+def test_nd_baseline_drift_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    drifted = dict(ND_POINT, chain_cycles=3999)
+    base = write(tmp_path / "base.json", point_doc("idmac-nd/v1", [drifted]))
+    r = run(["nd", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "drifted" in r.stderr
+
+
+def test_nd_armed_baseline_passes_on_exact_match(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    r = run(["nd", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "matches the checked-in baseline" in r.stdout
+
+
+def test_wrong_schema_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-translation/v1", [ND_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-translation/v1", [ND_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-nd/v1", []))
+    r = run(["nd", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "unexpected schema" in r.stderr
+
+
+def test_missing_baseline_is_a_hard_failure(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", [ND_POINT]))
+    r = run(
+        ["nd", "--fast", fast, "--naive", naive, "--baseline", str(tmp_path / "nope.json")]
+    )
+    assert r.returncode == 1
+    assert "does not exist" in r.stderr
+
+
+def test_empty_measured_grid_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", []))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", []))
+    base = write(tmp_path / "base.json", point_doc("idmac-nd/v1", []))
+    r = run(["nd", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "no points" in r.stderr
+
+
+def test_throughput_mode_gates_cycle_identity(tmp_path):
+    entry = {
+        "label": "fig4-grid/DDR3 (13 cycles)",
+        "profile": "DDR3 (13 cycles)",
+        "config": "grid(logicore+base+speculation+scaled)",
+        "mode": "naive",
+        "simulated_cycles": 123456,
+        "wall_seconds": 1.0,
+    }
+    fast_entry = dict(entry, mode="fast_forward", wall_seconds=0.1)
+    measured = write(
+        tmp_path / "m.json",
+        {"schema": "idmac-sim-throughput/v1", "entries": [entry, fast_entry]},
+    )
+    base = write(
+        tmp_path / "b.json",
+        {"schema": "idmac-sim-throughput/v1", "entries": [], "speedups": []},
+    )
+    r = run(["throughput", "--measured", measured, "--baseline", base, "--tolerance", "0.0"])
+    assert r.returncode == 0, r.stderr
+    # Diverging scheduler modes must fail even in bootstrap mode.
+    bad = dict(fast_entry, simulated_cycles=123457)
+    measured = write(
+        tmp_path / "m2.json",
+        {"schema": "idmac-sim-throughput/v1", "entries": [entry, bad]},
+    )
+    r = run(["throughput", "--measured", measured, "--baseline", base, "--tolerance", "0.0"])
+    assert r.returncode == 1
+    assert "diverged" in r.stderr
+
+
+def test_repo_baselines_parse_and_use_known_schemas():
+    repo = os.path.join(os.path.dirname(__file__), "..", "..")
+    expected = {
+        "BENCH_sim_throughput.json": "idmac-sim-throughput/v1",
+        "BENCH_multichannel.json": "idmac-multichannel/v1",
+        "BENCH_translation.json": "idmac-translation/v1",
+        "BENCH_nd.json": "idmac-nd/v1",
+    }
+    for name, schema in expected.items():
+        path = os.path.join(repo, name)
+        assert os.path.exists(path), f"{name} baseline missing"
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+        assert doc.get("schema") == schema, name

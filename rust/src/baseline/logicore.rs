@@ -247,6 +247,7 @@ impl Controller for LogiCore {
                             length: d.length,
                             irq: d.control & LC_CFG_IRQ != 0,
                             desc_addr: f.addr,
+                            nd: None,
                         },
                     ));
                     // Serialized chase: the next descriptor fetch only

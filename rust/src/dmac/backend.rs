@@ -30,6 +30,50 @@ struct Active {
     eligible_at: Cycle,
 }
 
+impl Active {
+    /// Total payload bytes across every ND row (== `length` for plain
+    /// linear transfers).  Saturating: descriptors are parsed from
+    /// memory, so absurd reps/length products must stay defined
+    /// instead of overflow-panicking (they trip the cycle budget long
+    /// before draining).
+    fn total_len(&self) -> u64 {
+        match self.t.nd {
+            None => self.t.length as u64,
+            Some(nd) => nd.total_bytes_of(self.t.length),
+        }
+    }
+
+    /// `(address, row-remaining bytes)` on the read side at linear
+    /// payload offset `off`.  Rows are iterated in hardware: the engine
+    /// never crosses a row boundary within one AXI burst, which is what
+    /// makes the ND-native bursts byte-identical to a chain of one
+    /// descriptor per row.
+    fn src_at(&self, off: u64) -> (u64, u64) {
+        match self.t.nd {
+            None => (self.t.source + off, self.t.length as u64 - off),
+            Some(nd) => {
+                let row_len = self.t.length as u64;
+                let (row, in_row) = (off / row_len, off % row_len);
+                let (src_off, _) = nd.row_offsets(row);
+                (self.t.source + src_off + in_row, row_len - in_row)
+            }
+        }
+    }
+
+    /// Same mapping on the write side.
+    fn dst_at(&self, off: u64) -> (u64, u64) {
+        match self.t.nd {
+            None => (self.t.destination + off, self.t.length as u64 - off),
+            Some(nd) => {
+                let row_len = self.t.length as u64;
+                let (row, in_row) = (off / row_len, off % row_len);
+                let (_, dst_off) = nd.row_offsets(row);
+                (self.t.destination + dst_off + in_row, row_len - in_row)
+            }
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct TransferDone {
     pub cycle: Cycle,
@@ -131,10 +175,7 @@ impl Backend {
             // Only the oldest transfer may move.
             let f = self.active.front()?;
             let oldest_everywhere = self.awaiting_b.is_empty() && self.write_pipe.is_empty();
-            if oldest_everywhere
-                && f.eligible_at <= now
-                && f.read_issued < f.t.length as u64
-            {
+            if oldest_everywhere && f.eligible_at <= now && f.read_issued < f.total_len() {
                 return Some(0);
             }
             return None;
@@ -142,7 +183,7 @@ impl Backend {
         // In-order burst issue: first transfer with outstanding reads.
         self.active
             .iter()
-            .position(|a| a.eligible_at <= now && a.read_issued < a.t.length as u64)
+            .position(|a| a.eligible_at <= now && a.read_issued < a.total_len())
     }
 
     pub fn wants_ar(&self) -> bool {
@@ -150,7 +191,7 @@ impl Backend {
         // eligibility; the testbench calls wants/pop in the same cycle.
         debug_assert_eq!(
             self.reads_pending,
-            self.active.iter().filter(|a| a.read_issued < a.t.length as u64).count()
+            self.active.iter().filter(|a| a.read_issued < a.total_len()).count()
         );
         self.reads_pending > 0
     }
@@ -158,11 +199,15 @@ impl Backend {
     pub fn pop_ar(&mut self, now: Cycle, stats: &mut RunStats) -> Option<ReadReq> {
         let idx = self.next_read(now)?;
         let a = &mut self.active[idx];
-        let remaining = a.t.length as u64 - a.read_issued;
+        // ND rows are expanded here, in the read engine: one strided
+        // burst per row chunk, never crossing a row boundary, so the
+        // AXI traffic is identical to a chain of per-row descriptors.
+        let (addr, row_rem) = a.src_at(a.read_issued);
+        let remaining = (a.total_len() - a.read_issued).min(row_rem);
         let beats = (remaining.div_ceil(BYTES_PER_BEAT) as u32).min(MAX_BURST_BEATS);
-        let req = ReadReq::new(self.port, a.id, a.t.source + a.read_issued, beats);
+        let req = ReadReq::new(self.port, a.id, addr, beats);
         a.read_issued += (beats as u64 * BYTES_PER_BEAT).min(remaining);
-        if a.read_issued >= a.t.length as u64 {
+        if a.read_issued >= a.total_len() {
             self.reads_pending -= 1;
         }
         let _ = stats;
@@ -185,17 +230,12 @@ impl Backend {
         };
         let a = &mut self.active[idx];
         let off = a.read_done;
-        let bytes = (a.t.length as u64 - off).min(BYTES_PER_BEAT) as u32;
+        let total = a.total_len();
+        let (addr, row_rem) = a.dst_at(off);
+        let bytes = row_rem.min(BYTES_PER_BEAT) as u32;
         a.read_done += bytes as u64;
-        let last = a.read_done == a.t.length as u64;
-        let w = WriteBeat {
-            port: self.port,
-            tag: a.id,
-            addr: a.t.destination + off,
-            data: beat.data,
-            bytes,
-            last,
-        };
+        let last = a.read_done == total;
+        let w = WriteBeat { port: self.port, tag: a.id, addr, data: beat.data, bytes, last };
         // Table IV r-w: one cycle between reading and writing the data.
         self.write_pipe.push_at(now + 1, w);
         if last {
@@ -224,7 +264,7 @@ impl Backend {
         let (_, a) = self.awaiting_b.swap_remove(idx);
         self.completions.push(TransferDone {
             cycle: now,
-            bytes: a.t.length as u64,
+            bytes: a.total_len(),
             desc_addr: a.t.desc_addr,
             irq: a.t.irq,
         });
@@ -259,7 +299,7 @@ impl Backend {
             let eligible = self
                 .active
                 .iter()
-                .filter(|a| a.read_issued < a.t.length as u64)
+                .filter(|a| a.read_issued < a.total_len())
                 .map(|a| a.eligible_at)
                 .min();
             h = EventHorizon::merge(h, eligible);
@@ -278,8 +318,21 @@ impl Tickable for Backend {
 mod tests {
     use super::*;
 
+    use crate::dmac::descriptor::NdExt;
+
     fn xfer(src: u64, dst: u64, len: u32) -> ParsedTransfer {
-        ParsedTransfer { source: src, destination: dst, length: len, irq: false, desc_addr: 0 }
+        ParsedTransfer {
+            source: src,
+            destination: dst,
+            length: len,
+            irq: false,
+            desc_addr: 0,
+            nd: None,
+        }
+    }
+
+    fn nd_xfer(src: u64, dst: u64, len: u32, nd: NdExt) -> ParsedTransfer {
+        ParsedTransfer { nd: Some(nd), ..xfer(src, dst, len) }
     }
 
     fn beat(tag: u64, i: u32, last: bool) -> RBeat {
@@ -348,6 +401,102 @@ mod tests {
         assert_eq!(w2.bytes, 4);
         assert_eq!(w2.addr, 0x108);
         assert!(w2.last);
+    }
+
+    #[test]
+    fn nd_rows_issue_one_burst_per_row() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        // 3 rows of 64 B, source stride 256, destination stride 64.
+        let nd = NdExt { reps: [3, 1], src_stride: [256, 0], dst_stride: [64, 0] };
+        b.accept(0, nd_xfer(0x1000, 0x9000, 64, nd));
+        let r0 = b.pop_ar(0, &mut s).unwrap();
+        assert_eq!((r0.addr, r0.beats), (0x1000, 8));
+        let r1 = b.pop_ar(1, &mut s).unwrap();
+        assert_eq!((r1.addr, r1.beats), (0x1100, 8), "row 1 at src + 256");
+        let r2 = b.pop_ar(2, &mut s).unwrap();
+        assert_eq!((r2.addr, r2.beats), (0x1200, 8));
+        assert!(b.pop_ar(3, &mut s).is_none(), "three rows, three bursts");
+    }
+
+    #[test]
+    fn nd_two_level_write_addresses_follow_both_strides() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        // 2x2 rows of 8 B: level 0 strides (16, 32), level 1 (64, 128).
+        let nd = NdExt { reps: [2, 2], src_stride: [16, 64], dst_stride: [32, 128] };
+        b.accept(0, nd_xfer(0x100, 0x800, 8, nd));
+        let reads: Vec<u64> = std::iter::from_fn(|| b.pop_ar(0, &mut s).map(|r| r.addr)).collect();
+        assert_eq!(reads, vec![0x100, 0x110, 0x140, 0x150]);
+        for i in 0..4u32 {
+            b.on_payload_beat(10 + i as Cycle, beat(0, 0, i == 3), &mut s);
+        }
+        let writes: Vec<(u64, bool)> =
+            std::iter::from_fn(|| b.pop_w(100, &mut s).map(|w| (w.addr, w.last))).collect();
+        assert_eq!(
+            writes,
+            vec![(0x800, false), (0x820, false), (0x880, false), (0x8A0, true)],
+            "destination walks dst strides; only the final row's beat is last"
+        );
+    }
+
+    #[test]
+    fn nd_partial_rows_keep_per_row_tail_beats() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        // 2 rows of 12 B: each row is 1 full + 1 half beat.
+        let nd = NdExt { reps: [2, 1], src_stride: [64, 0], dst_stride: [16, 0] };
+        b.accept(0, nd_xfer(0, 0x100, 12, nd));
+        let r0 = b.pop_ar(0, &mut s).unwrap();
+        assert_eq!((r0.addr, r0.beats), (0, 2));
+        let r1 = b.pop_ar(1, &mut s).unwrap();
+        assert_eq!((r1.addr, r1.beats), (64, 2));
+        for i in 0..4 {
+            b.on_payload_beat(5 + i, beat(0, 0, i == 3), &mut s);
+        }
+        let ws: Vec<(u64, u32)> =
+            std::iter::from_fn(|| b.pop_w(100, &mut s).map(|w| (w.addr, w.bytes))).collect();
+        assert_eq!(ws, vec![(0x100, 8), (0x108, 4), (0x110, 8), (0x118, 4)]);
+        b.on_write_b(20, BResp { port: Port::Backend, tag: 0 }, &mut s);
+        let done = b.drain_completions();
+        assert_eq!(done[0].bytes, 24, "completion reports all rows");
+    }
+
+    #[test]
+    fn nd_long_rows_still_split_at_256_beats() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        // 2 rows of 4 KiB: 2 bursts per row, at the row's own base.
+        let nd = NdExt { reps: [2, 1], src_stride: [8192, 0], dst_stride: [4096, 0] };
+        b.accept(0, nd_xfer(0x1000, 0x9000, 4096, nd));
+        let reads: Vec<(u64, u32)> =
+            std::iter::from_fn(|| b.pop_ar(0, &mut s).map(|r| (r.addr, r.beats))).collect();
+        assert_eq!(reads, vec![(0x1000, 256), (0x1800, 256), (0x3000, 256), (0x3800, 256)]);
+    }
+
+    #[test]
+    fn max_length_burst_splitting_covers_every_byte() {
+        // u32::MAX-adjacent lengths through the burst splitter: the
+        // issued bursts must cover the length exactly, with no wrap.
+        for len in [u32::MAX, u32::MAX - 3] {
+            let mut b = Backend::new(1, false, 0);
+            let mut s = RunStats::default();
+            b.accept(0, xfer(0x0, 0x1000_0000, len));
+            let mut issued = 0u64;
+            let mut bursts = 0u64;
+            let mut last_end = 0u64;
+            while let Some(r) = b.pop_ar(0, &mut s) {
+                assert!(r.beats <= MAX_BURST_BEATS);
+                assert_eq!(r.addr, last_end, "bursts are contiguous");
+                let chunk = (r.beats as u64 * BYTES_PER_BEAT).min(len as u64 - issued);
+                issued += chunk;
+                last_end = r.addr + chunk;
+                bursts += 1;
+            }
+            assert_eq!(issued, len as u64, "every byte read exactly once");
+            assert_eq!(bursts, (len as u64).div_ceil(MAX_BURST_BEATS as u64 * BYTES_PER_BEAT));
+            assert!(!b.wants_ar());
+        }
     }
 
     #[test]

@@ -55,6 +55,13 @@ pub struct DmacConfig {
     /// honoured when the channel runs inside an
     /// [`crate::iommu::IommuDmac`]).
     pub iommu: IommuParams,
+    /// ND-affine descriptor support (the optional second descriptor
+    /// word, [`crate::dmac::descriptor::NdExt`]).  Disabled, the
+    /// frontend ignores [`crate::dmac::descriptor::CFG_ND_EXT`] exactly
+    /// like hardware that treats the bit as reserved, and the DMAC is
+    /// cycle-identical to the pre-ND design (property-tested in
+    /// `tests/nd.rs`).
+    pub nd_enabled: bool,
 }
 
 impl DmacConfig {
@@ -68,6 +75,7 @@ impl DmacConfig {
             strict_order: false,
             weight: 1,
             iommu: IommuParams::disabled(),
+            nd_enabled: true,
         }
     }
 
@@ -100,6 +108,13 @@ impl DmacConfig {
     /// Put an SV39 translation stage in front of this channel.
     pub fn with_iommu(mut self, iommu: IommuParams) -> Self {
         self.iommu = iommu;
+        self
+    }
+
+    /// Build the DMAC without ND-affine descriptor support (the
+    /// pre-ND design: `CFG_ND_EXT` is treated as reserved).
+    pub fn without_nd(mut self) -> Self {
+        self.nd_enabled = false;
         self
     }
 
@@ -162,5 +177,14 @@ mod tests {
         let c = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, false));
         assert!(c.iommu.enabled);
         assert_eq!(c.name(), "speculation", "translation does not affect the preset name");
+    }
+
+    #[test]
+    fn nd_defaults_on_and_is_disableable() {
+        assert!(DmacConfig::base().nd_enabled);
+        assert!(DmacConfig::scaled().nd_enabled);
+        let c = DmacConfig::speculation().without_nd();
+        assert!(!c.nd_enabled);
+        assert_eq!(c.name(), "speculation", "ND support does not affect the preset name");
     }
 }

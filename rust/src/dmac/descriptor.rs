@@ -27,6 +27,112 @@ pub const COMPLETION_STAMP: u64 = u64::MAX;
 /// Config-field bits (frontend options; backend AXI parameters live in
 /// the upper half-word and are opaque to the simulator).
 pub const CFG_IRQ_ON_COMPLETION: u32 = 1 << 0;
+/// ND-affine extension present: the 32 bytes at `desc_addr + 32` are a
+/// second descriptor word ([`NdExt`]) and the frontend fetches them as
+/// four extra beats.  DMACs built without ND support
+/// ([`super::DmacConfig::nd_enabled`] = false) ignore the bit, exactly
+/// like hardware that leaves the field reserved.
+pub const CFG_ND_EXT: u32 = 1 << 1;
+
+/// Nesting levels of the ND-affine extension (iDMA/XDMA-style 2-level
+/// affine repetition: enough for 2-D tiles plus a plane loop).
+pub const ND_MAX_LEVELS: usize = 2;
+/// Size of the extension word in memory: 256 bits, like the head word.
+pub const ND_EXT_BYTES: u64 = DESC_BYTES;
+
+/// The optional second 32-byte descriptor word: up to two levels of
+/// affine repetition around the head word's linear `length`-byte unit.
+///
+/// ```text
+/// struct nd_ext {            // at desc_addr + 32, LE
+///     u32 reps[2];           // repetitions per level (>= 1)
+///     u32 src_stride[2];     // source stride per level, bytes
+///     u32 dst_stride[2];     // destination stride per level, bytes
+///     u64 reserved;          // must be zero
+/// }
+/// ```
+///
+/// Semantics: the inner unit is the head word's linear transfer of
+/// `length` bytes.  Level 0 repeats it `reps[0]` times advancing
+/// source/destination by `src_stride[0]`/`dst_stride[0]`; level 1
+/// repeats the whole level-0 loop `reps[1]` times with its own strides.
+/// Total bytes moved = `length * reps[0] * reps[1]`.  A disabled level
+/// is `reps = 1` (strides ignored).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NdExt {
+    pub reps: [u32; ND_MAX_LEVELS],
+    pub src_stride: [u32; ND_MAX_LEVELS],
+    pub dst_stride: [u32; ND_MAX_LEVELS],
+}
+
+impl NdExt {
+    /// Degenerate extension equivalent to a plain linear descriptor.
+    pub fn linear() -> Self {
+        Self {
+            reps: [1; ND_MAX_LEVELS],
+            src_stride: [0; ND_MAX_LEVELS],
+            dst_stride: [0; ND_MAX_LEVELS],
+        }
+    }
+
+    /// Rows across both levels (`reps[0] * reps[1]`; two u32 factors
+    /// always fit a u64).
+    pub fn total_rows(&self) -> u64 {
+        self.reps[0] as u64 * self.reps[1] as u64
+    }
+
+    /// Total payload bytes of `row_bytes`-sized rows, saturating at
+    /// `u64::MAX`: descriptors are parsed from memory, so absurd
+    /// reps/length combinations must stay defined (such a transfer can
+    /// never complete — it trips the cycle budget — but it must not
+    /// overflow-panic the simulator in debug builds).
+    pub fn total_bytes_of(&self, row_bytes: u32) -> u64 {
+        let total = row_bytes as u128 * self.total_rows() as u128;
+        total.min(u64::MAX as u128) as u64
+    }
+
+    /// `(src_offset, dst_offset)` of row `row` (row-major over levels:
+    /// level 0 is the inner loop).
+    pub fn row_offsets(&self, row: u64) -> (u64, u64) {
+        debug_assert!(row < self.total_rows());
+        let r0 = row % self.reps[0] as u64;
+        let r1 = row / self.reps[0] as u64;
+        (
+            r0 * self.src_stride[0] as u64 + r1 * self.src_stride[1] as u64,
+            r0 * self.dst_stride[0] as u64 + r1 * self.dst_stride[1] as u64,
+        )
+    }
+
+    /// Little-endian in-memory layout of the extension word, exactly
+    /// the declared field order: `reps[2]`, `src_stride[2]`,
+    /// `dst_stride[2]`, reserved (the layout test below pins it).
+    pub fn to_bytes(&self) -> [u8; ND_EXT_BYTES as usize] {
+        let mut b = [0u8; ND_EXT_BYTES as usize];
+        b[0..4].copy_from_slice(&self.reps[0].to_le_bytes());
+        b[4..8].copy_from_slice(&self.reps[1].to_le_bytes());
+        b[8..12].copy_from_slice(&self.src_stride[0].to_le_bytes());
+        b[12..16].copy_from_slice(&self.src_stride[1].to_le_bytes());
+        b[16..20].copy_from_slice(&self.dst_stride[0].to_le_bytes());
+        b[20..24].copy_from_slice(&self.dst_stride[1].to_le_bytes());
+        // b[24..32]: reserved, zero.
+        b
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Self {
+        assert!(b.len() >= ND_EXT_BYTES as usize);
+        let u32_at = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        Self {
+            reps: [u32_at(0).max(1), u32_at(4).max(1)],
+            src_stride: [u32_at(8), u32_at(12)],
+            dst_stride: [u32_at(16), u32_at(20)],
+        }
+    }
+
+    /// Extra read beats the extension costs on the 64-bit bus.
+    pub fn fetch_beats() -> u32 {
+        (ND_EXT_BYTES / 8) as u32
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Descriptor {
@@ -35,6 +141,11 @@ pub struct Descriptor {
     pub next: u64,
     pub source: u64,
     pub destination: u64,
+    /// ND-affine extension word, mirrored by [`CFG_ND_EXT`] in
+    /// `config`.  Not part of [`Descriptor::to_bytes`] (the head word);
+    /// writers emit it at `desc_addr + 32` and the frontend reassembles
+    /// it from the extra fetch beats.
+    pub nd: Option<NdExt>,
 }
 
 impl Descriptor {
@@ -45,12 +156,65 @@ impl Descriptor {
     /// prep paths, workload generators) always has a positive length.
     pub fn new(source: u64, destination: u64, length: u32) -> Self {
         debug_assert!(length > 0, "zero-length descriptor (masks driver bugs)");
-        Self { length, config: 0, next: END_OF_CHAIN, source, destination }
+        Self { length, config: 0, next: END_OF_CHAIN, source, destination, nd: None }
     }
 
     pub fn with_irq(mut self) -> Self {
         self.config |= CFG_IRQ_ON_COMPLETION;
         self
+    }
+
+    /// Add one level of affine repetition (level 0 on the first call,
+    /// level 1 on the second; more than [`ND_MAX_LEVELS`] panics).
+    /// Sets [`CFG_ND_EXT`] so the frontend fetches the extension word.
+    pub fn with_nd(mut self, reps: u32, src_stride: u32, dst_stride: u32) -> Self {
+        assert!(reps >= 1, "ND level needs at least one repetition");
+        let mut nd = self.nd.unwrap_or_else(NdExt::linear);
+        let level = if self.nd.is_none() {
+            0
+        } else {
+            assert!(nd.reps[1] == 1, "descriptor already carries {ND_MAX_LEVELS} ND levels");
+            1
+        };
+        nd.reps[level] = reps;
+        nd.src_stride[level] = src_stride;
+        nd.dst_stride[level] = dst_stride;
+        self.with_nd_levels(nd)
+    }
+
+    /// Attach a complete extension word (both levels at once) and set
+    /// [`CFG_ND_EXT`] — the single conversion point shared by the
+    /// driver's `prep_nd` and the workload generators.
+    pub fn with_nd_levels(mut self, nd: NdExt) -> Self {
+        assert!(nd.reps.iter().all(|&r| r >= 1), "ND level needs at least one repetition");
+        self.nd = Some(nd);
+        self.config |= CFG_ND_EXT;
+        self
+    }
+
+    /// The head word's ND flag (meaningful on descriptors parsed from
+    /// memory, where `nd` is attached later from the extension beats).
+    pub fn has_nd_flag(&self) -> bool {
+        self.config & CFG_ND_EXT != 0
+    }
+
+    /// Bytes this descriptor occupies in memory (head word plus the
+    /// optional extension word).
+    pub fn span(&self) -> u64 {
+        if self.has_nd_flag() {
+            DESC_BYTES + ND_EXT_BYTES
+        } else {
+            DESC_BYTES
+        }
+    }
+
+    /// Total payload bytes across all rows (saturating, see
+    /// [`NdExt::total_bytes_of`]).
+    pub fn total_bytes(&self) -> u64 {
+        match self.nd {
+            None => self.length as u64,
+            Some(nd) => nd.total_bytes_of(self.length),
+        }
     }
 
     pub fn with_next(mut self, next: u64) -> Self {
@@ -77,6 +241,9 @@ impl Descriptor {
         b
     }
 
+    /// Parse a head word.  `nd` stays `None` even when [`CFG_ND_EXT`]
+    /// is set — the extension word arrives in its own fetch beats and
+    /// is attached with [`Descriptor::with_ext`].
     pub fn from_bytes(b: &[u8]) -> Self {
         assert!(b.len() >= DESC_BYTES as usize);
         Self {
@@ -85,7 +252,14 @@ impl Descriptor {
             next: u64::from_le_bytes(b[8..16].try_into().unwrap()),
             source: u64::from_le_bytes(b[16..24].try_into().unwrap()),
             destination: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+            nd: None,
         }
+    }
+
+    /// Attach a parsed extension word to a head word.
+    pub fn with_ext(mut self, ext: NdExt) -> Self {
+        self.nd = Some(ext);
+        self
     }
 
     /// Read beats needed on the 64-bit bus: 32 B = 4 beats.
@@ -115,9 +289,28 @@ impl ChainBuilder {
     pub fn push_at(&mut self, desc_addr: u64, d: Descriptor) -> &mut Self {
         assert_eq!(desc_addr % 8, 0, "descriptors must be 8-byte aligned");
         assert_ne!(desc_addr, END_OF_CHAIN);
+        assert_eq!(
+            d.has_nd_flag(),
+            d.nd.is_some(),
+            "CFG_ND_EXT and the nd field must agree when building a chain"
+        );
+        if d.nd.is_some() {
+            assert!(
+                desc_addr.checked_add(DESC_BYTES + ND_EXT_BYTES).is_some(),
+                "ND descriptor's extension word would wrap the address space"
+            );
+        }
         self.transfers.push(d);
         self.addrs.push(desc_addr);
         self
+    }
+
+    /// Append an ND-affine transfer (a descriptor built with
+    /// [`Descriptor::with_nd`]); its extension word occupies
+    /// `desc_addr + 32 .. desc_addr + 64`.
+    pub fn push_nd(&mut self, desc_addr: u64, d: Descriptor) -> &mut Self {
+        assert!(d.nd.is_some(), "push_nd needs a descriptor with an ND extension");
+        self.push_at(desc_addr, d)
     }
 
     pub fn len(&self) -> usize {
@@ -149,6 +342,9 @@ impl ChainBuilder {
             let mut d = *d;
             d.next = if i + 1 < self.addrs.len() { self.addrs[i + 1] } else { END_OF_CHAIN };
             mem.backdoor_write(addr, &d.to_bytes());
+            if let Some(nd) = d.nd {
+                mem.backdoor_write(addr + DESC_BYTES, &nd.to_bytes());
+            }
         }
         self.addrs[0]
     }
@@ -178,6 +374,7 @@ mod tests {
             next: 0x8000_1000,
             source: 0xdead_beef_0000,
             destination: 0x1234_5678_9abc,
+            nd: None,
         };
         assert_eq!(Descriptor::from_bytes(&d.to_bytes()), d);
     }
@@ -190,6 +387,7 @@ mod tests {
             next: 0x1,
             source: 0x2,
             destination: 0x3,
+            nd: None,
         };
         let b = d.to_bytes();
         assert_eq!(&b[0..4], &0x11223344u32.to_le_bytes());
@@ -247,5 +445,131 @@ mod tests {
     #[cfg(debug_assertions)]
     fn zero_length_descriptor_rejected() {
         let _ = Descriptor::new(0x100, 0x200, 0);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn zero_length_is_defined_in_release() {
+        // Release builds skip the debug assert: the descriptor encodes,
+        // round-trips, and reports zero payload (the backend completes
+        // it immediately without moving a byte).
+        let d = Descriptor::new(0x100, 0x200, 0);
+        assert_eq!(d.total_bytes(), 0);
+        assert_eq!(Descriptor::from_bytes(&d.to_bytes()).length, 0);
+    }
+
+    #[test]
+    fn max_length_round_trips() {
+        // u32::MAX-adjacent lengths survive the byte encoding intact.
+        for len in [u32::MAX, u32::MAX - 1, u32::MAX - 7, 1 << 31] {
+            let d = Descriptor::new(0x1000, 0x2000, len);
+            let r = Descriptor::from_bytes(&d.to_bytes());
+            assert_eq!(r.length, len);
+            assert_eq!(r.total_bytes(), len as u64);
+        }
+    }
+
+    #[test]
+    fn nd_ext_round_trips_and_counts_rows() {
+        let d = Descriptor::new(0x1000, 0x8000, 64)
+            .with_nd(16, 256, 64)
+            .with_nd(3, 4096, 1024);
+        assert!(d.has_nd_flag());
+        assert_eq!(d.span(), 64);
+        let nd = d.nd.unwrap();
+        assert_eq!(nd.total_rows(), 48);
+        assert_eq!(d.total_bytes(), 48 * 64);
+        assert_eq!(NdExt::from_bytes(&nd.to_bytes()), nd);
+        // Row-major offsets: level 0 inner, level 1 outer.
+        assert_eq!(nd.row_offsets(0), (0, 0));
+        assert_eq!(nd.row_offsets(1), (256, 64));
+        assert_eq!(nd.row_offsets(16), (4096, 1024));
+        assert_eq!(nd.row_offsets(17), (4096 + 256, 1024 + 64));
+        // Parsing the head word alone leaves the ext for the frontend.
+        let head = Descriptor::from_bytes(&d.to_bytes());
+        assert!(head.has_nd_flag());
+        assert!(head.nd.is_none());
+        assert_eq!(head.with_ext(nd).nd, Some(nd));
+    }
+
+    #[test]
+    fn nd_ext_layout_matches_design_doc() {
+        // The ABI pin for DESIGN.md §9: reps[2] at +0, src_stride[2]
+        // at +8, dst_stride[2] at +16, reserved zeros at +24.
+        let nd = NdExt {
+            reps: [0x0101_0101, 0x0202_0202],
+            src_stride: [0x0303_0303, 0x0404_0404],
+            dst_stride: [0x0505_0505, 0x0606_0606],
+        };
+        let b = nd.to_bytes();
+        assert_eq!(&b[0..4], &0x0101_0101u32.to_le_bytes());
+        assert_eq!(&b[4..8], &0x0202_0202u32.to_le_bytes());
+        assert_eq!(&b[8..12], &0x0303_0303u32.to_le_bytes());
+        assert_eq!(&b[12..16], &0x0404_0404u32.to_le_bytes());
+        assert_eq!(&b[16..20], &0x0505_0505u32.to_le_bytes());
+        assert_eq!(&b[20..24], &0x0606_0606u32.to_le_bytes());
+        assert_eq!(&b[24..32], &[0u8; 8]);
+    }
+
+    #[test]
+    fn nd_total_bytes_saturates_instead_of_overflowing() {
+        // Parsed-from-memory descriptors can carry absurd reps; the
+        // byte total must stay defined (the cycle budget kills the run
+        // long before such a transfer drains).
+        let nd = NdExt { reps: [u32::MAX, u32::MAX], src_stride: [0, 0], dst_stride: [0, 0] };
+        assert_eq!(nd.total_rows(), (u32::MAX as u64) * (u32::MAX as u64));
+        assert_eq!(nd.total_bytes_of(u32::MAX), u64::MAX);
+        assert_eq!(nd.total_bytes_of(0), 0);
+        assert_eq!(NdExt::linear().total_bytes_of(64), 64);
+    }
+
+    #[test]
+    fn with_nd_levels_matches_incremental_with_nd() {
+        let a = Descriptor::new(0, 1, 8).with_nd(4, 64, 32).with_nd(2, 512, 256);
+        let nd = NdExt { reps: [4, 2], src_stride: [64, 512], dst_stride: [32, 256] };
+        let b = Descriptor::new(0, 1, 8).with_nd_levels(nd);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nd_ext_is_four_extra_beats() {
+        assert_eq!(NdExt::fetch_beats(), 4);
+        assert_eq!(ND_EXT_BYTES, 32);
+        assert_eq!(Descriptor::new(0, 1, 8).span(), 32);
+    }
+
+    #[test]
+    fn nd_chain_writes_extension_words() {
+        let mut mem = Memory::new(8192, LatencyProfile::Ideal);
+        let mut cb = ChainBuilder::new();
+        cb.push_nd(0x100, Descriptor::new(0x800, 0x900, 64).with_nd(4, 128, 64));
+        cb.push_at(0x140, Descriptor::new(0x820, 0x920, 64).with_irq());
+        let head = cb.write_to(&mut mem);
+        assert_eq!(head, 0x100);
+        let d0 = Descriptor::from_bytes(mem.backdoor_read(0x100, 32));
+        assert!(d0.has_nd_flag());
+        assert_eq!(d0.next, 0x140, "next skips the extension word");
+        let ext = NdExt::from_bytes(mem.backdoor_read(0x120, 32));
+        assert_eq!(ext.reps, [4, 1]);
+        assert_eq!((ext.src_stride[0], ext.dst_stride[0]), (128, 64));
+    }
+
+    #[test]
+    #[should_panic(expected = "push_nd needs a descriptor")]
+    fn push_nd_rejects_linear_descriptors() {
+        let mut cb = ChainBuilder::new();
+        cb.push_nd(0x100, Descriptor::new(0, 1, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one repetition")]
+    fn nd_zero_reps_rejected() {
+        let _ = Descriptor::new(0, 1, 8).with_nd(0, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already carries")]
+    fn nd_third_level_rejected() {
+        let _ = Descriptor::new(0, 1, 8).with_nd(2, 8, 8).with_nd(2, 8, 8).with_nd(2, 8, 8);
     }
 }

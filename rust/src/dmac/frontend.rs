@@ -20,16 +20,26 @@
 
 use super::backend::Backend;
 use super::config::DmacConfig;
-use super::descriptor::{Descriptor, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN};
+use super::descriptor::{Descriptor, NdExt, CFG_ND_EXT, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN};
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 use std::collections::VecDeque;
 
+/// What a fetch slot's beats carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotKind {
+    /// A 32-byte descriptor head word.
+    Head,
+    /// The 32-byte ND extension word of the walk head at `addr - 32`.
+    Ext,
+}
+
 /// One outstanding (or grant-pending) descriptor fetch.
 #[derive(Debug, Clone)]
 struct FetchSlot {
     addr: u64,
+    kind: SlotKind,
     speculative: bool,
     /// Misprediction flush: beats of this fetch are ignored on arrival.
     discard: bool,
@@ -47,6 +57,8 @@ pub struct ParsedTransfer {
     pub length: u32,
     pub irq: bool,
     pub desc_addr: u64,
+    /// ND-affine repetition (None = plain linear transfer).
+    pub nd: Option<NdExt>,
 }
 
 /// Completion write-back in flight (feedback logic).
@@ -74,6 +86,14 @@ pub struct Frontend {
     /// Chase target that could not be fetched because the in-flight
     /// window was full; issued by `step` as soon as a slot frees.
     pending_chase: Option<u64>,
+    /// ND extension fetch that could not be enqueued at head-word
+    /// beat 0 (window full, no speculative slot to re-tag).  Issued by
+    /// `step` with priority over `pending_chase` and fresh speculation,
+    /// so the extension stays the next live fetch behind its head.
+    pending_ext: Option<u64>,
+    /// A fully received ND head word waiting for its extension word's
+    /// beats to drain: `(head descriptor, head address)`.
+    pending_nd: Option<(Descriptor, u64)>,
     /// Address of the last speculated (or chased) descriptor; the next
     /// speculative fetch goes to `spec_tail + 32`.
     spec_tail: u64,
@@ -110,6 +130,8 @@ impl Frontend {
             handoff: VecDeque::new(),
             chain_active: false,
             pending_chase: None,
+            pending_ext: None,
+            pending_nd: None,
             spec_tail: END_OF_CHAIN,
             wb_queue: VecDeque::new(),
             wb_outstanding: Vec::new(),
@@ -165,12 +187,18 @@ impl Frontend {
     }
 
     fn enqueue_fetch(&mut self, addr: u64, speculative: bool) {
+        self.enqueue_slot(addr, SlotKind::Head, speculative);
+    }
+
+    fn enqueue_slot(&mut self, addr: u64, kind: SlotKind, speculative: bool) {
+        debug_assert!(kind == SlotKind::Head || !speculative, "ext fetches are never speculative");
         self.live_count += 1;
         if speculative {
             self.spec_count += 1;
         }
         self.fetches.push_back(FetchSlot {
             addr,
+            kind,
             speculative,
             discard: false,
             granted: false,
@@ -180,14 +208,67 @@ impl Frontend {
     }
 
     /// Issue speculative fetches up to the configured depth (§II-C).
+    /// Gated while an ND extension fetch is parked (`pending_ext`):
+    /// the extension must stay the next live fetch behind its head, so
+    /// nothing may be enqueued in front of it.
     fn top_up_speculation(&mut self) {
-        if self.cfg.prefetch == 0 || !self.chain_active || self.spec_tail == END_OF_CHAIN {
+        if self.cfg.prefetch == 0
+            || !self.chain_active
+            || self.spec_tail == END_OF_CHAIN
+            || self.pending_ext.is_some()
+        {
             return;
         }
         while self.spec_outstanding() < self.cfg.prefetch && self.can_fetch() {
-            let addr = self.spec_tail.wrapping_add(DESC_BYTES);
+            // Overflow guard: a descriptor pool laid out at the top of
+            // the address space must not speculate across the wrap to
+            // address 0 (a fetch there would stream garbage beats and
+            // could alias real low memory).
+            let Some(addr) = self.spec_tail.checked_add(DESC_BYTES) else {
+                break;
+            };
             self.enqueue_fetch(addr, true);
             self.spec_tail = addr;
+        }
+    }
+
+    /// Address of the ND extension word of the head at `head_addr`,
+    /// or `None` if it would wrap the address space (the descriptor is
+    /// then executed as plain linear — both decision points in
+    /// `on_desc_beat` use this same helper so they cannot disagree).
+    fn ext_addr_of(head_addr: u64) -> Option<u64> {
+        head_addr.checked_add(DESC_BYTES)
+    }
+
+    /// Head-word beat 0 revealed the ND flag: secure the extension
+    /// word's fetch.  If the sequential prefetcher already has a live
+    /// speculative slot at `head + 32` — which in a sequential layout
+    /// holds exactly the extension word — that slot is re-tagged
+    /// instead of fetching twice; this is what keeps speculation
+    /// prefetching at the mixed 32 B / 64 B stride.
+    fn on_nd_flag(&mut self, head_addr: u64, stats: &mut RunStats) {
+        let Some(ext_addr) = Self::ext_addr_of(head_addr) else {
+            return;
+        };
+        if let Some(i) = self
+            .fetches
+            .iter()
+            .position(|f| f.speculative && !f.discard && f.addr == ext_addr)
+        {
+            debug_assert_eq!(self.fetches[i].kind, SlotKind::Head);
+            self.fetches[i].kind = SlotKind::Ext;
+            self.fetches[i].speculative = false;
+            self.spec_count -= 1;
+            stats.nd_ext_reuses += 1;
+        } else if self.can_fetch() {
+            self.enqueue_slot(ext_addr, SlotKind::Ext, false);
+        } else {
+            debug_assert!(self.pending_ext.is_none());
+            self.pending_ext = Some(ext_addr);
+        }
+        // Keep sequential speculation pointed past the extension word.
+        if self.spec_tail == head_addr {
+            self.spec_tail = ext_addr;
         }
     }
 
@@ -263,9 +344,12 @@ impl Frontend {
 
     /// Fetch the confirmed next descriptor, or park it if the
     /// in-flight window is exhausted (issued again from `step`).
+    /// Also parked while an ND extension fetch is waiting for a window
+    /// slot: the extension must enter the fetch queue first so the
+    /// FIFO memory returns its beats before any later descriptor's.
     fn chase(&mut self, next: u64) {
         debug_assert!(self.pending_chase.is_none());
-        if self.can_fetch() {
+        if self.pending_ext.is_none() && self.can_fetch() {
             self.enqueue_fetch(next, false);
             self.spec_tail = next;
         } else {
@@ -286,38 +370,85 @@ impl Frontend {
         slot.beats_seen += 1;
         let discard = slot.discard;
         let addr = slot.addr;
+        let kind = slot.kind;
+        let config = u32::from_le_bytes(slot.data[4..8].try_into().unwrap());
+        let next = u64::from_le_bytes(slot.data[8..16].try_into().unwrap());
+        debug_assert!(
+            discard || kind == SlotKind::Ext || !slot.speculative,
+            "walk head drained while still speculative"
+        );
         if discard {
             stats.wasted_desc_beats += 1;
         }
-        // Beat 1 carries the `next` field (Listing 1): chase decision
-        // happens the cycle this beat is received.
-        if !discard && beat.beat == 1 {
-            let next = u64::from_le_bytes(slot.data[8..16].try_into().unwrap());
-            self.on_next_field(next, stats);
+        if !discard && kind == SlotKind::Head {
+            // Beat 0 carries the config field: an ND head needs its
+            // extension word secured *before* the beat-1 chase/commit
+            // decision consumes (or flushes) the speculative slots.
+            if beat.beat == 0 && self.cfg.nd_enabled && config & CFG_ND_EXT != 0 {
+                self.on_nd_flag(addr, stats);
+            }
+            // Beat 1 carries the `next` field (Listing 1): chase
+            // decision happens the cycle this beat is received.
+            if beat.beat == 1 {
+                self.on_next_field(next, stats);
+            }
         }
         if beat.last {
-            // Re-borrow: on_next_field may have mutated the queue, but
-            // the front slot is never removed by it.
+            // Re-borrow: on_nd_flag/on_next_field may have mutated the
+            // queue, but the front slot is never removed by them.
             let slot = self.fetches.pop_front().unwrap();
             self.granted_count -= 1;
             debug_assert_eq!(slot.addr, addr);
             if !discard {
                 self.live_count -= 1;
-                let d = Descriptor::from_bytes(&slot.data);
-                // Parse register + handoff queue + backend issue stage:
-                // calibrates Table IV rf-rb to exactly 2L + 6.
-                self.handoff.push_back((
-                    now + 3,
-                    ParsedTransfer {
-                        source: d.source,
-                        destination: d.destination,
-                        length: d.length,
-                        irq: d.irq_enabled(),
-                        desc_addr: addr,
-                    },
-                ));
+                match kind {
+                    SlotKind::Head => {
+                        let d = Descriptor::from_bytes(&slot.data);
+                        let nd = self.cfg.nd_enabled
+                            && d.has_nd_flag()
+                            && Self::ext_addr_of(addr).is_some();
+                        if nd {
+                            // Park until the extension word's beats
+                            // drain (its slot is the next live fetch).
+                            debug_assert!(
+                                self.pending_nd.is_none(),
+                                "two ND heads awaiting extensions"
+                            );
+                            self.pending_nd = Some((d, addr));
+                        } else {
+                            self.push_handoff(now, d, addr);
+                        }
+                    }
+                    SlotKind::Ext => {
+                        let (d, head_addr) = self
+                            .pending_nd
+                            .take()
+                            .expect("extension beats with no pending ND head");
+                        debug_assert_eq!(addr, head_addr + DESC_BYTES);
+                        let ext = NdExt::from_bytes(&slot.data);
+                        stats.nd_descriptors += 1;
+                        stats.nd_rows += ext.total_rows();
+                        self.push_handoff(now, d.with_ext(ext), head_addr);
+                    }
+                }
             }
         }
+    }
+
+    /// Parse register + handoff queue + backend issue stage: calibrates
+    /// Table IV rf-rb to exactly 2L + 6.
+    fn push_handoff(&mut self, now: Cycle, d: Descriptor, desc_addr: u64) {
+        self.handoff.push_back((
+            now + 3,
+            ParsedTransfer {
+                source: d.source,
+                destination: d.destination,
+                length: d.length,
+                irq: d.irq_enabled(),
+                desc_addr,
+                nd: d.nd,
+            },
+        ));
     }
 
     /// Feedback logic input: the backend finished the transfer whose
@@ -353,17 +484,27 @@ impl Frontend {
             backend.accept(now, t);
             let _ = stats;
         }
-        // Parked chase gets priority over fresh speculation.
-        if let Some(next) = self.pending_chase {
+        // A parked ND extension fetch outranks everything: it must be
+        // the next live fetch behind its head word.
+        if let Some(ext_addr) = self.pending_ext {
             if self.can_fetch() {
-                self.pending_chase = None;
-                self.enqueue_fetch(next, false);
-                self.spec_tail = next;
+                self.pending_ext = None;
+                self.enqueue_slot(ext_addr, SlotKind::Ext, false);
+            }
+        }
+        // Parked chase gets priority over fresh speculation.
+        if self.pending_ext.is_none() {
+            if let Some(next) = self.pending_chase {
+                if self.can_fetch() {
+                    self.pending_chase = None;
+                    self.enqueue_fetch(next, false);
+                    self.spec_tail = next;
+                }
             }
         }
         // Chain launch: strictly one active chain walk at a time; the
         // CSR queue allows software to enqueue further chains (§II-A).
-        if !self.chain_active && self.pending_chase.is_none() {
+        if !self.chain_active && self.pending_chase.is_none() && self.pending_ext.is_none() {
             if let Some(&(eligible, addr)) = self.csr_queue.front() {
                 if eligible <= now && self.can_fetch() {
                     self.csr_queue.pop_front();
@@ -393,8 +534,12 @@ impl Frontend {
         debug_assert!(!slot.granted);
         slot.granted = true;
         self.granted_count += 1;
-        stats.desc_beats += Descriptor::fetch_beats() as u64;
-        Some(ReadReq::new(self.port, slot.addr, slot.addr, Descriptor::fetch_beats()))
+        let beats = match slot.kind {
+            SlotKind::Head => Descriptor::fetch_beats(),
+            SlotKind::Ext => NdExt::fetch_beats(),
+        };
+        stats.desc_beats += beats as u64;
+        Some(ReadReq::new(self.port, slot.addr, slot.addr, beats))
     }
 
     pub fn wants_w(&self) -> bool {
@@ -422,6 +567,8 @@ impl Frontend {
             && self.fetches.is_empty()
             && self.handoff.is_empty()
             && self.pending_chase.is_none()
+            && self.pending_ext.is_none()
+            && self.pending_nd.is_none()
             && self.wb_queue.is_empty()
             && self.wb_outstanding.is_empty()
             && !self.chain_active
@@ -448,6 +595,7 @@ impl Frontend {
     pub fn next_event(&self) -> Option<Cycle> {
         if self.granted_count < self.fetches.len()
             || self.pending_chase.is_some()
+            || self.pending_ext.is_some()
             || !self.wb_queue.is_empty()
         {
             return Some(0);
@@ -483,8 +631,7 @@ mod tests {
         addrs
     }
 
-    fn deliver_desc(f: &mut Frontend, now: Cycle, d: &Descriptor, stats: &mut RunStats) {
-        let bytes = d.to_bytes();
+    fn deliver_word(f: &mut Frontend, now: Cycle, bytes: &[u8; 32], stats: &mut RunStats) {
         for i in 0..4u32 {
             let mut data = [0u8; 8];
             data.copy_from_slice(&bytes[i as usize * 8..i as usize * 8 + 8]);
@@ -494,6 +641,14 @@ mod tests {
                 stats,
             );
         }
+    }
+
+    fn deliver_desc(f: &mut Frontend, now: Cycle, d: &Descriptor, stats: &mut RunStats) {
+        deliver_word(f, now, &d.to_bytes(), stats);
+    }
+
+    fn deliver_ext(f: &mut Frontend, now: Cycle, nd: &NdExt, stats: &mut RunStats) {
+        deliver_word(f, now, &nd.to_bytes(), stats);
     }
 
     #[test]
@@ -651,6 +806,130 @@ mod tests {
         assert_eq!(f.next_event(), Some(13), "parse->handoff pipe");
         f.step(13, &mut b, &mut s);
         assert_eq!(f.next_event(), None);
+    }
+
+    #[test]
+    fn flush_with_all_prefetch_slots_granted_keeps_bookkeeping_consistent() {
+        // Regression (PR 4 satellite): `flush_speculation` retains a
+        // granted speculative slot with `discard = true` and decrements
+        // `live_count` immediately; the later beat-drain path must not
+        // decrement again.  `fetch_occupancy` recounts the queue in its
+        // debug asserts, so any double decrement trips here.
+        let mut f = fe(3); // in_flight 4: head + 3 speculative slots
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs, vec![0x1000, 0x1020, 0x1040, 0x1060], "every slot granted");
+        assert_eq!(f.fetch_occupancy(), (4, 3));
+        // Mispredict with ALL prefetch slots granted: the three
+        // speculative fetches keep streaming as discards.
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x7000);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(s.spec_misses, 1);
+        // live: -3 flushed specs, -1 drained head, +1 chase, +2 top-up
+        // (window caps at 4 with the handoff entry).
+        assert_eq!(f.fetch_occupancy(), (3, 2));
+        // Drain the three discarded bursts: occupancy must not move.
+        let junk = Descriptor::new(0x1, 0x2, 8);
+        for t in 0..3u64 {
+            deliver_desc(&mut f, 12 + 4 * t, &junk, &mut s);
+            assert_eq!(f.fetch_occupancy(), (3, 2), "double decrement at drain {t}");
+        }
+        assert_eq!(s.wasted_desc_beats, 12, "3 discarded fetches x 4 beats");
+        // The corrective fetch still resolves end to end.
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs, vec![0x7000, 0x7020, 0x7040]);
+        let d = Descriptor::new(0x8040, 0x9040, 64).with_next(0x7020);
+        deliver_desc(&mut f, 30, &d, &mut s);
+        assert_eq!(s.spec_hits, 1);
+        assert_eq!(f.handoff.len(), 2, "head and corrective transfer parsed");
+    }
+
+    #[test]
+    fn speculation_never_wraps_past_the_top_of_the_address_space() {
+        // Satellite: `top_up_speculation` used `wrapping_add`, so a
+        // descriptor pool at the very top of the address space could
+        // speculate across the wrap to address 0.
+        let mut f = fe(4);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        let head = u64::MAX - 63; // 8-aligned, room for exactly one +32
+        f.csr_write(0, head);
+        f.step(3, &mut b, &mut s);
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs, vec![head, head + 32], "speculation stops at the wrap");
+        assert_eq!(f.fetch_occupancy(), (2, 1));
+        // Repeated steps must not sneak a wrapped fetch in later.
+        f.step(4, &mut b, &mut s);
+        f.step(5, &mut b, &mut s);
+        assert!(!f.wants_ar(), "no fetch enqueued at address 0");
+    }
+
+    #[test]
+    fn nd_head_retags_the_sequential_speculative_slot() {
+        let mut f = fe(4);
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        grant_all(&mut f, &mut s); // 0x1000 + specs 0x1020/0x1040/0x1060
+        // ND head: its extension lives at 0x1020, the next descriptor
+        // at 0x1040 (the mixed 32 B / 64 B sequential layout).
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_nd(4, 256, 64).with_next(0x1040);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(s.nd_ext_reuses, 1, "spec slot at head+32 re-tagged, not re-fetched");
+        assert_eq!(s.spec_hits, 1, "next-descriptor prediction at 0x1040 still hits");
+        assert_eq!(s.spec_misses, 0);
+        assert!(f.handoff.is_empty(), "head parks until the extension drains");
+        deliver_ext(&mut f, 14, &d.nd.unwrap(), &mut s);
+        assert_eq!(f.handoff.len(), 1);
+        let (_, t) = f.handoff[0];
+        assert_eq!(t.nd, d.nd);
+        assert_eq!((t.source, t.destination, t.length), (0x8000, 0x9000, 64));
+        assert_eq!(s.nd_descriptors, 1);
+        assert_eq!(s.nd_rows, 4);
+    }
+
+    #[test]
+    fn nd_head_without_speculation_fetches_the_extension_serially() {
+        let mut f = fe(0); // prefetch disabled
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let _ = f.pop_ar(3, &mut s).unwrap();
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_nd(8, 128, 64); // next = EOC
+        deliver_desc(&mut f, 10, &d, &mut s);
+        // The extension fetch was enqueued at beat 0 and is pending.
+        assert!(f.wants_ar());
+        let req = f.pop_ar(11, &mut s).unwrap();
+        assert_eq!(req.addr, 0x1020, "extension word at head + 32");
+        assert_eq!(req.beats, 4);
+        deliver_ext(&mut f, 20, &d.nd.unwrap(), &mut s);
+        assert_eq!(f.handoff.len(), 1);
+        assert_eq!(s.desc_beats, 8, "head + extension = 8 fetch beats");
+        assert_eq!(s.nd_ext_reuses, 0);
+        assert!(!f.chain_active, "EOC processed on the head's next field");
+    }
+
+    #[test]
+    fn nd_disabled_config_treats_the_flag_as_reserved() {
+        let mut f = Frontend::new(DmacConfig::custom(4, 0).without_nd());
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let _ = f.pop_ar(3, &mut s).unwrap();
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_nd(4, 256, 64);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert!(!f.wants_ar(), "no extension fetch on an ND-disabled DMAC");
+        assert_eq!(f.handoff.len(), 1, "parsed as a plain linear descriptor");
+        let (_, t) = f.handoff[0];
+        assert_eq!(t.nd, None);
+        assert_eq!(s.nd_descriptors, 0);
+        assert_eq!(s.desc_beats, 4);
     }
 
     #[test]

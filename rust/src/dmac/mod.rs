@@ -19,7 +19,7 @@ pub mod multichannel;
 pub use backend::Backend;
 pub use config::{DmacConfig, IommuParams};
 pub use controller::Controller;
-pub use descriptor::{ChainBuilder, Descriptor, DESC_BYTES, END_OF_CHAIN};
+pub use descriptor::{ChainBuilder, Descriptor, NdExt, DESC_BYTES, END_OF_CHAIN};
 pub use frontend::Frontend;
 pub use multichannel::MultiChannel;
 

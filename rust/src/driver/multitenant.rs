@@ -19,6 +19,7 @@
 //!   order (deterministic).
 
 use super::dmaengine::{Cookie, DmaDriver};
+use crate::dmac::descriptor::NdExt;
 use crate::dmac::{Controller, DESC_BYTES};
 use crate::sim::Cycle;
 use crate::tb::System;
@@ -113,10 +114,37 @@ impl MultiTenantDriver {
     /// [`submit`](Self::submit).
     pub fn submit_sg(&mut self, vchan: VchanId, sg: &[(u64, u64, u64)]) -> Result<Cookie> {
         let total: u64 = sg.iter().map(|&(_, _, len)| len).sum();
+        self.place_and_commit(vchan, total, |drv| drv.prep_sg(sg))
+    }
+
+    /// ND-affine submit: one descriptor moving
+    /// `row_bytes * nd.total_rows()` bytes as strided rows, placed with
+    /// the same policy as [`submit`](Self::submit).  Addresses may be
+    /// IOVAs; the IOMMU translates each row's pages in flight.
+    pub fn submit_nd(
+        &mut self,
+        vchan: VchanId,
+        dst: u64,
+        src: u64,
+        row_bytes: u32,
+        nd: NdExt,
+    ) -> Result<Cookie> {
+        let total = nd.total_bytes_of(row_bytes);
+        self.place_and_commit(vchan, total, |drv| drv.prep_nd(dst, src, row_bytes, nd))
+    }
+
+    /// Shared placement/commit path: try each candidate channel's pool
+    /// in placement order, stamp the globally monotone cookie, commit.
+    fn place_and_commit(
+        &mut self,
+        vchan: VchanId,
+        total: u64,
+        mut prep: impl FnMut(&mut DmaDriver) -> Result<super::dmaengine::Tx>,
+    ) -> Result<Cookie> {
         let candidates = self.placement_order(vchan);
         let mut last_err = None;
         for ch in candidates {
-            match self.phys[ch].prep_sg(sg) {
+            match prep(&mut self.phys[ch]) {
                 Ok(mut tx) => {
                     let cookie = self.next_cookie;
                     self.next_cookie += 1;
@@ -290,6 +318,21 @@ mod tests {
         // Every slice full -> a clean driver error.
         let err = d.submit(v, map::DST_BASE + 0x3000, map::SRC_BASE, 64);
         assert!(matches!(err, Err(Error::Driver(_))));
+    }
+
+    #[test]
+    fn submit_nd_places_by_row_payload_and_counts_load() {
+        let mut d = mt(2);
+        let a = d.open();
+        // 16 rows x 64 B = 1 KiB of outstanding payload on channel 0.
+        let nd = NdExt { reps: [16, 1], src_stride: [256, 0], dst_stride: [64, 0] };
+        let c0 = d.submit_nd(a, map::DST_BASE, map::SRC_BASE, 64, nd).unwrap();
+        assert_eq!(d.channel_load(0), 16 * 64);
+        assert_eq!(d.channel_load(1), 0);
+        // Next submit lands on the now-lighter channel 1.
+        let c1 = d.submit(a, map::DST_BASE + 0x10000, map::SRC_BASE, 128).unwrap();
+        assert_eq!(d.channel_load(1), 128);
+        assert!(c1 > c0, "cookies stay globally monotone across prep kinds");
     }
 
     #[test]

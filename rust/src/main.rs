@@ -15,6 +15,10 @@
 //! idmac translate [--transfers N] [--size N] [--naive] [--out FILE]
 //!                 [--sets N --ways N] [--prefetch] [--pattern seq|stride4|rand]
 //!                 [--latency …]         # writes BENCH_translation.json
+//! idmac nd [--naive] [--out FILE]       # ND-native vs chain-expanded grid;
+//!                                       # writes BENCH_nd.json
+//! idmac regen-baselines [--dir D]       # rewrite all four BENCH_*.json
+//!                                       # baselines (arms the CI gate)
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
 //! idmac all     # every table + figure in paper order
@@ -66,6 +70,8 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("sweep") => sweep(args)?,
         Some("contention") => contention(args)?,
         Some("translate") => translate(args)?,
+        Some("nd") => nd(args)?,
+        Some("regen-baselines") => regen_baselines(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
         Some("soc-demo") => soc_demo(args)?,
@@ -90,8 +96,58 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     translate|bench-throughput|oracle-check|soc-demo|all> \
+                     translate|nd|regen-baselines|bench-throughput|oracle-check|soc-demo|all> \
                      [--threads N] [--naive] [flags]";
+
+/// Regenerate every checked-in bench baseline in one pass (arming the
+/// CI bench-regression gate after a bootstrap).  Writes the default
+/// file names into `--dir` (default: current directory).
+fn regen_baselines(args: &Args) -> idmac::Result<()> {
+    use idmac::report::{contention as ct, nd as ndr, translation as tr};
+
+    let dir = args.get_or("dir", ".");
+    let naive = args.naive();
+    let path = |name: &str| format!("{dir}/{name}");
+
+    let out = path(ct::BENCH_FILE);
+    idmac::report::MultiChannelReport::new(ct::contention_grid(4, 48, 256, naive))
+        .write(&out)?;
+    println!("wrote {out}");
+
+    let out = path(tr::BENCH_FILE);
+    idmac::report::TranslationReport::new(tr::translation_grid(48, 256, naive)).write(&out)?;
+    println!("wrote {out}");
+
+    let out = path(ndr::BENCH_FILE);
+    idmac::report::NdReport::new(ndr::nd_grid(naive)).write(&out)?;
+    println!("wrote {out}");
+
+    let out = path(idmac::report::throughput::BENCH_FILE);
+    let mut report = idmac::report::ThroughputReport::new();
+    for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
+        let label = format!("fig4-grid/{}", profile.name());
+        exp::push_grid_comparison(&mut report, &label, profile);
+    }
+    report.write(&out)?;
+    println!("wrote {out}");
+    println!("commit the four BENCH_*.json files to arm the CI gate");
+    Ok(())
+}
+
+/// ND-affine grid (workloads × row sizes × latency profiles), ND-native
+/// vs chain-expanded; emits the deterministic `BENCH_nd.json`.
+fn nd(args: &Args) -> idmac::Result<()> {
+    use idmac::report::nd as ndr;
+
+    let naive = args.naive();
+    let out = args.get_or("out", ndr::BENCH_FILE);
+    let points = ndr::nd_grid(naive);
+    let report = idmac::report::NdReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
 
 fn sweep(args: &Args) -> idmac::Result<()> {
     let cfg = args.dmac_config()?;

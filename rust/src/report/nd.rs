@@ -1,0 +1,282 @@
+//! ND-affine descriptor experiments: `BENCH_nd.json`.
+//!
+//! The sweep the ND extension exists for: each grid point runs one
+//! ML-shaped workload (tensor transpose, im2col, 2-D tile scatter)
+//! twice over identical memory — once **ND-native** (one descriptor,
+//! the backend expands rows in hardware) and once **chain-expanded**
+//! (one linear descriptor per row, the pre-ND lowering) — and records
+//! the cycle and descriptor-fetch-traffic gap at 64 B / 256 B / 1 KiB
+//! row sizes across the three paper memory profiles.
+//!
+//! Everything in the JSON is simulated-time — no wall-clock — so the
+//! file is bit-deterministic and identical under the event-horizon
+//! scheduler and the `--naive` per-cycle loop (CI diffs the two).
+
+use crate::dmac::{Dmac, DmacConfig};
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::LatencyProfile;
+use crate::report::parallel::par_map;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::Cycle;
+use crate::tb::System;
+use crate::workload::{map, NdWorkload};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_nd.json";
+
+/// Row sizes swept by the grid (the ISSUE's 64 B / 256 B / 1 KiB).
+pub const ROW_SIZES: [u32; 3] = [64, 256, 1024];
+
+/// The workload shapes of the grid, sized so every form fits the
+/// shared memory map at the largest row size.
+pub fn grid_workloads(row_bytes: u32) -> Vec<NdWorkload> {
+    vec![
+        NdWorkload::transpose(8, 8, row_bytes),
+        NdWorkload::im2col(16, 4, row_bytes, row_bytes * 2),
+        NdWorkload::tile_scatter(16, 4, row_bytes, row_bytes * 2, row_bytes * 16),
+    ]
+}
+
+/// One grid point: workload x row size x memory profile, both forms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdPoint {
+    pub workload: &'static str,
+    pub row_bytes: u32,
+    pub rows: u64,
+    pub payload_bytes: u64,
+    pub profile: String,
+    /// End-to-end cycles of the ND-native form.
+    pub nd_cycles: Cycle,
+    /// End-to-end cycles of the chain-expanded form.
+    pub chain_cycles: Cycle,
+    /// Descriptor-fetch beats on the bus (incl. wasted speculation).
+    pub nd_desc_beats: u64,
+    pub chain_desc_beats: u64,
+    /// Speculative fetches re-tagged as extension reads (ND form).
+    pub nd_ext_reuses: u64,
+    /// Completion write-backs (one per descriptor in either form).
+    pub nd_writebacks: u64,
+    pub chain_writebacks: u64,
+}
+
+impl NdPoint {
+    /// Cycle saving of ND-native over the expanded chain (>1 = faster).
+    pub fn speedup(&self) -> f64 {
+        self.chain_cycles as f64 / self.nd_cycles.max(1) as f64
+    }
+
+    /// Descriptor-traffic reduction factor.
+    pub fn traffic_reduction(&self) -> f64 {
+        self.chain_desc_beats as f64 / self.nd_desc_beats.max(1) as f64
+    }
+}
+
+fn run_form(
+    chain: &crate::dmac::ChainBuilder,
+    profile: LatencyProfile,
+    naive: bool,
+) -> crate::sim::RunStats {
+    let mut sys = System::new(profile, Dmac::new(DmacConfig::speculation()));
+    // Seed the whole source window: both forms read identical data.
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 256 << 10, 0x9D);
+    sys.load_and_launch(0, chain);
+    if naive {
+        sys.run_until_idle_naive().expect("nd run (naive)")
+    } else {
+        sys.run_until_idle().expect("nd run")
+    }
+}
+
+/// Run one ND grid point: the ND-native and chain-expanded forms of
+/// `w` under `profile`.
+pub fn run_nd(w: &NdWorkload, profile: LatencyProfile, naive: bool) -> NdPoint {
+    assert!(w.src_extent() <= map::DST_BASE - map::SRC_BASE, "workload overruns SRC arena");
+    assert!(w.dst_extent() <= map::ARENA_BASE - map::DST_BASE, "workload overruns DST arena");
+    let nd = run_form(&w.chain_nd(), profile, naive);
+    let chain = run_form(&w.chain_expanded(), profile, naive);
+    debug_assert_eq!(nd.total_bytes(), chain.total_bytes(), "forms moved different bytes");
+    NdPoint {
+        workload: w.name,
+        row_bytes: w.row_bytes,
+        rows: w.rows(),
+        payload_bytes: w.payload_bytes(),
+        profile: profile.name(),
+        nd_cycles: nd.end_cycle,
+        chain_cycles: chain.end_cycle,
+        nd_desc_beats: nd.desc_beats,
+        chain_desc_beats: chain.desc_beats,
+        nd_ext_reuses: nd.nd_ext_reuses,
+        nd_writebacks: nd.writeback_beats,
+        chain_writebacks: chain.writeback_beats,
+    }
+}
+
+/// The full grid: workloads x row sizes x the three paper memory
+/// profiles, in deterministic order on the parallel sweep executor.
+pub fn nd_grid(naive: bool) -> Vec<NdPoint> {
+    let mut tasks = Vec::new();
+    for &row_bytes in &ROW_SIZES {
+        for w in grid_workloads(row_bytes) {
+            for profile in
+                [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+            {
+                tasks.push((w, profile));
+            }
+        }
+    }
+    par_map(tasks, |_, (w, profile)| run_nd(&w, profile, naive))
+}
+
+/// The machine-readable ND report (`BENCH_nd.json`, schema
+/// `idmac-nd/v1`).  Integer-only payload: exact-diffed by CI across
+/// scheduler modes and against the checked-in baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NdReport {
+    pub points: Vec<NdPoint>,
+}
+
+impl NdReport {
+    pub fn new(points: Vec<NdPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-nd/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"workload\": {}, \"row_bytes\": {}, \"rows\": {}, \
+                 \"payload_bytes\": {}, \"profile\": {}, \"nd_cycles\": {}, \
+                 \"chain_cycles\": {}, \"nd_desc_beats\": {}, \"chain_desc_beats\": {}, \
+                 \"nd_ext_reuses\": {}, \"nd_writebacks\": {}, \"chain_writebacks\": {}}}{}\n",
+                json_str(p.workload),
+                p.row_bytes,
+                p.rows,
+                p.payload_bytes,
+                json_str(&p.profile),
+                p.nd_cycles,
+                p.chain_cycles,
+                p.nd_desc_beats,
+                p.chain_desc_beats,
+                p.nd_ext_reuses,
+                p.nd_writebacks,
+                p.chain_writebacks,
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable sweep table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "ND-affine — ND-native vs chain-expanded",
+            &[
+                "workload",
+                "row",
+                "rows",
+                "memory",
+                "nd cyc",
+                "chain cyc",
+                "speedup",
+                "beats nd/chain",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.workload.to_string(),
+                p.row_bytes.to_string(),
+                p.rows.to_string(),
+                p.profile.clone(),
+                p.nd_cycles.to_string(),
+                p.chain_cycles.to_string(),
+                format!("{:.3}x", p.speedup()),
+                format!("{}/{}", p.nd_desc_beats, p.chain_desc_beats),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_is_identical_across_schedulers() {
+        let w = NdWorkload::transpose(4, 4, 64);
+        let fast = run_nd(&w, LatencyProfile::Ddr3, false);
+        let naive = run_nd(&w, LatencyProfile::Ddr3, true);
+        assert_eq!(fast, naive, "nd point diverged across schedulers");
+    }
+
+    #[test]
+    fn nd_form_slashes_descriptor_traffic() {
+        let w = NdWorkload::tile_scatter(8, 4, 256, 512, 4096);
+        let p = run_nd(&w, LatencyProfile::Ddr3, false);
+        assert_eq!(p.rows, 32);
+        // Useful ND fetch traffic is 8 beats (head + extension); the
+        // speculation config adds at most its depth in flushed
+        // sequential prefetches at end-of-chain.  The chain pays >= 4
+        // beats per row.
+        assert_eq!(p.nd_ext_reuses, 1, "ext rode a re-tagged speculative fetch");
+        assert!(p.nd_desc_beats <= 8 + 4 * 4, "nd = {} beats", p.nd_desc_beats);
+        assert!(p.chain_desc_beats >= 4 * 32, "chain = {} beats", p.chain_desc_beats);
+        assert!(p.traffic_reduction() >= 5.0);
+        // One write-back per descriptor.
+        assert_eq!(p.nd_writebacks, 1);
+        assert_eq!(p.chain_writebacks, 32);
+    }
+
+    #[test]
+    fn nd_form_is_never_slower_on_fine_rows() {
+        // 64 B rows in deep memory: the regime where per-row descriptor
+        // chaining pays its full static overhead.
+        let w = NdWorkload::transpose(8, 8, 64);
+        let p = run_nd(&w, LatencyProfile::UltraDeep, false);
+        assert!(
+            p.nd_cycles <= p.chain_cycles,
+            "ND-native slower: {} vs {}",
+            p.nd_cycles,
+            p.chain_cycles
+        );
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wall_clock_free() {
+        let points = vec![run_nd(
+            &NdWorkload::im2col(4, 2, 64, 128),
+            LatencyProfile::Ideal,
+            false,
+        )];
+        let a = NdReport::new(points.clone()).to_json();
+        let b = NdReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-nd/v1\""));
+        assert!(a.contains("\"workload\": \"im2col\""));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn grid_covers_every_axis() {
+        let points = nd_grid(false);
+        assert_eq!(points.len(), ROW_SIZES.len() * 3 * 3);
+        for name in ["transpose", "im2col", "tile-scatter"] {
+            assert!(points.iter().any(|p| p.workload == name), "{name} missing");
+        }
+        assert!(points.iter().any(|p| p.row_bytes == 1024));
+        let table = NdReport::new(points).to_table();
+        assert!(table.render().contains("tile-scatter"));
+    }
+}

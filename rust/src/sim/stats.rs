@@ -64,6 +64,13 @@ pub struct RunStats {
     /// Mandatory speculation flushes at end-of-chain (not counted as
     /// mispredictions).
     pub eoc_flushes: u64,
+    /// ND-affine descriptors executed (head + extension word pairs).
+    pub nd_descriptors: u64,
+    /// Rows expanded from ND descriptors by the backend.
+    pub nd_rows: u64,
+    /// Speculative sequential fetches re-tagged as ND extension reads
+    /// (the mixed 32 B / 64 B stride case — no extra bus traffic).
+    pub nd_ext_reuses: u64,
     /// Total IRQs raised.
     pub irqs: u64,
     /// IOTLB hits / misses (one lookup per translated request segment;
@@ -140,6 +147,9 @@ impl RunStats {
         self.spec_hits += other.spec_hits;
         self.spec_misses += other.spec_misses;
         self.eoc_flushes += other.eoc_flushes;
+        self.nd_descriptors += other.nd_descriptors;
+        self.nd_rows += other.nd_rows;
+        self.nd_ext_reuses += other.nd_ext_reuses;
         self.irqs += other.irqs;
         self.tlb_hits += other.tlb_hits;
         self.tlb_misses += other.tlb_misses;

@@ -4,10 +4,12 @@
 //! paper motivates irregular transfers with.
 
 pub mod hitrate;
+pub mod nd;
 pub mod sparse;
 pub mod tensor;
 
 pub use hitrate::HitRateLayout;
+pub use nd::NdWorkload;
 pub use sparse::SparseGather;
 pub use tensor::TensorCopy;
 

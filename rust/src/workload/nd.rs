@@ -1,0 +1,275 @@
+//! ND-affine workloads: the ML-shaped transfers the ND descriptor
+//! extension exists for (tensor transpose, im2col patch extraction,
+//! 2-D tile scatter — cf. iDMA's ND midend and XDMA's layout-flexible
+//! movements in PAPERS.md).
+//!
+//! Every workload is expressible two ways over identical memory:
+//!
+//! * **ND-native** ([`NdWorkload::chain_nd`]): one descriptor whose
+//!   extension word carries the affine repetition — 8 fetch beats for
+//!   the whole transfer;
+//! * **chain-expanded** ([`NdWorkload::chain_expanded`]): the classic
+//!   lowering to one linear descriptor per row — 4 fetch beats *per
+//!   row*, the static-overhead regime the paper attacks.
+//!
+//! `tests/nd.rs` proves the two move identical bytes; `report::nd`
+//! quantifies the descriptor-traffic and cycle gap between them.
+
+use super::map;
+use crate::dmac::descriptor::NdExt;
+use crate::dmac::{ChainBuilder, Descriptor, DESC_BYTES};
+
+/// One ND-affine transfer: `nd.total_rows()` rows of `row_bytes`
+/// starting at `(src, dst)`.
+#[derive(Debug, Clone, Copy)]
+pub struct NdWorkload {
+    pub name: &'static str,
+    pub src: u64,
+    pub dst: u64,
+    pub row_bytes: u32,
+    pub nd: NdExt,
+}
+
+impl NdWorkload {
+    /// Block transpose: a row-major `rows x cols` grid of
+    /// `block_bytes` blocks is rewritten column-major.  Both ND levels
+    /// are exercised: level 0 walks the columns of one source row
+    /// (destination jumps by a whole output column), level 1 advances
+    /// the source row (destination advances by one block).
+    pub fn transpose(rows: u32, cols: u32, block_bytes: u32) -> Self {
+        assert!(rows >= 1 && cols >= 1 && block_bytes >= 1);
+        let b = block_bytes as u64;
+        assert!(cols as u64 * b <= u32::MAX as u64 && rows as u64 * b <= u32::MAX as u64);
+        Self {
+            name: "transpose",
+            src: map::SRC_BASE,
+            dst: map::DST_BASE,
+            row_bytes: block_bytes,
+            nd: NdExt {
+                reps: [cols, rows],
+                src_stride: [block_bytes, cols * block_bytes],
+                dst_stride: [rows * block_bytes, block_bytes],
+            },
+        }
+    }
+
+    /// im2col patch extraction: `windows` vertically sliding windows of
+    /// `kernel_rows` image rows each, packed densely into the output
+    /// (each patch row is `row_bytes` of one image row).  Source
+    /// windows overlap (stride one image row); destinations are unique.
+    pub fn im2col(windows: u32, kernel_rows: u32, row_bytes: u32, image_row_bytes: u32) -> Self {
+        assert!(windows >= 1 && kernel_rows >= 1 && row_bytes >= 1);
+        assert!(image_row_bytes >= row_bytes, "patch row exceeds the image row");
+        assert!(kernel_rows as u64 * row_bytes as u64 <= u32::MAX as u64);
+        Self {
+            name: "im2col",
+            src: map::SRC_BASE,
+            dst: map::DST_BASE,
+            row_bytes,
+            nd: NdExt {
+                reps: [kernel_rows, windows],
+                src_stride: [image_row_bytes, image_row_bytes],
+                dst_stride: [row_bytes, kernel_rows * row_bytes],
+            },
+        }
+    }
+
+    /// 2-D tile scatter: a packed source of `tiles * tile_rows` rows is
+    /// scattered into a strided destination surface — row stride
+    /// `dst_row_stride`, tile stride `dst_tile_stride` (both in bytes,
+    /// non-overlapping by construction when `dst_tile_stride >=
+    /// tile_rows * dst_row_stride`).
+    pub fn tile_scatter(
+        tiles: u32,
+        tile_rows: u32,
+        row_bytes: u32,
+        dst_row_stride: u32,
+        dst_tile_stride: u32,
+    ) -> Self {
+        assert!(tiles >= 1 && tile_rows >= 1 && row_bytes >= 1);
+        assert!(dst_row_stride >= row_bytes, "destination rows overlap");
+        assert!(
+            dst_tile_stride as u64 >= tile_rows as u64 * dst_row_stride as u64,
+            "destination tiles overlap"
+        );
+        assert!(tile_rows as u64 * row_bytes as u64 <= u32::MAX as u64);
+        Self {
+            name: "tile-scatter",
+            src: map::SRC_BASE,
+            dst: map::DST_BASE,
+            row_bytes,
+            nd: NdExt {
+                reps: [tile_rows, tiles],
+                src_stride: [row_bytes, tile_rows * row_bytes],
+                dst_stride: [dst_row_stride, dst_tile_stride],
+            },
+        }
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.nd.total_rows()
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.nd.total_bytes_of(self.row_bytes)
+    }
+
+    /// `(src, dst)` address of every row, in row-major order — the
+    /// verification oracle both chain forms must satisfy.
+    pub fn row_pairs(&self) -> Vec<(u64, u64)> {
+        (0..self.rows())
+            .map(|r| {
+                let (so, do_) = self.nd.row_offsets(r);
+                (self.src + so, self.dst + do_)
+            })
+            .collect()
+    }
+
+    /// Highest destination byte touched (bounds checks in tests and
+    /// the report grid).
+    pub fn dst_extent(&self) -> u64 {
+        self.row_pairs()
+            .iter()
+            .map(|&(_, d)| d + self.row_bytes as u64 - self.dst)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Same for the source window.
+    pub fn src_extent(&self) -> u64 {
+        self.row_pairs()
+            .iter()
+            .map(|&(s, _)| s + self.row_bytes as u64 - self.src)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// ND-native form: one 64-byte descriptor (head + extension word).
+    pub fn chain_nd(&self) -> ChainBuilder {
+        let mut cb = ChainBuilder::new();
+        let d = Descriptor::new(self.src, self.dst, self.row_bytes).with_nd_levels(self.nd);
+        cb.push_nd(map::DESC_BASE, d.with_irq());
+        cb
+    }
+
+    /// Chain-expanded form: one linear descriptor per row, laid out
+    /// sequentially (the prefetcher's best case, so the comparison in
+    /// `report::nd` is against the chain at its fastest).
+    pub fn chain_expanded(&self) -> ChainBuilder {
+        let mut cb = ChainBuilder::new();
+        let pairs = self.row_pairs();
+        let n = pairs.len();
+        assert!(
+            map::DESC_BASE + n as u64 * DESC_BYTES <= map::DESC_BASE + map::DESC_SIZE,
+            "expanded chain exceeds the descriptor pool"
+        );
+        for (i, &(src, dst)) in pairs.iter().enumerate() {
+            let d = Descriptor::new(src, dst, self.row_bytes);
+            let d = if i + 1 == n { d.with_irq() } else { d };
+            cb.push_at(map::DESC_BASE + i as u64 * DESC_BYTES, d);
+        }
+        cb
+    }
+
+    /// Descriptor-fetch beats each form costs on the bus.
+    pub fn nd_fetch_beats(&self) -> u64 {
+        8
+    }
+
+    pub fn expanded_fetch_beats(&self) -> u64 {
+        4 * self.rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmac::{Dmac, DmacConfig};
+    use crate::mem::backdoor::fill_pattern;
+    use crate::mem::LatencyProfile;
+    use crate::tb::System;
+
+    fn run(chain: &ChainBuilder, seed: u32) -> System<Dmac> {
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 256 << 10, seed);
+        sys.load_and_launch(0, chain);
+        sys.run_until_idle().unwrap();
+        sys
+    }
+
+    fn verify_rows(sys: &System<Dmac>, w: &NdWorkload) {
+        for (i, &(src, dst)) in w.row_pairs().iter().enumerate() {
+            assert_eq!(
+                sys.mem.backdoor_read(src, w.row_bytes as usize).to_vec(),
+                sys.mem.backdoor_read(dst, w.row_bytes as usize).to_vec(),
+                "{} row {i}",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn transpose_nd_native_moves_every_block() {
+        let w = NdWorkload::transpose(4, 6, 64);
+        assert_eq!(w.rows(), 24);
+        assert_eq!(w.payload_bytes(), 24 * 64);
+        let sys = run(&w.chain_nd(), 1);
+        verify_rows(&sys, &w);
+        // Block (r, c) of the source lands at block (c, r) of the dest.
+        let b = 64u64;
+        for r in 0..4u64 {
+            for c in 0..6u64 {
+                assert_eq!(
+                    sys.mem.backdoor_read(map::SRC_BASE + (r * 6 + c) * b, 64).to_vec(),
+                    sys.mem.backdoor_read(map::DST_BASE + (c * 4 + r) * b, 64).to_vec(),
+                    "block ({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_windows_overlap_on_source_only() {
+        let w = NdWorkload::im2col(5, 3, 128, 1024);
+        assert_eq!(w.rows(), 15);
+        let pairs = w.row_pairs();
+        // Window 1 re-reads window 0's rows 1..3.
+        assert_eq!(pairs[3].0, pairs[1].0);
+        // Destinations are unique and packed.
+        let mut dsts: Vec<u64> = pairs.iter().map(|p| p.1).collect();
+        dsts.sort_unstable();
+        dsts.dedup();
+        assert_eq!(dsts.len(), 15);
+        let sys = run(&w.chain_nd(), 2);
+        verify_rows(&sys, &w);
+    }
+
+    #[test]
+    fn tile_scatter_respects_both_destination_strides() {
+        let w = NdWorkload::tile_scatter(3, 4, 64, 256, 4096);
+        assert_eq!(w.rows(), 12);
+        let pairs = w.row_pairs();
+        assert_eq!(pairs[0].1, map::DST_BASE);
+        assert_eq!(pairs[1].1, map::DST_BASE + 256);
+        assert_eq!(pairs[4].1, map::DST_BASE + 4096);
+        let sys = run(&w.chain_nd(), 3);
+        verify_rows(&sys, &w);
+    }
+
+    #[test]
+    fn expanded_chain_is_the_per_row_lowering() {
+        let w = NdWorkload::transpose(3, 3, 64);
+        let cb = w.chain_expanded();
+        assert_eq!(cb.len(), 9);
+        assert_eq!(w.expanded_fetch_beats(), 36);
+        assert_eq!(w.nd_fetch_beats(), 8);
+        let sys = run(&cb, 4);
+        verify_rows(&sys, &w);
+    }
+
+    #[test]
+    #[should_panic(expected = "tiles overlap")]
+    fn overlapping_scatter_rejected() {
+        NdWorkload::tile_scatter(2, 4, 64, 256, 512);
+    }
+}

@@ -1,0 +1,259 @@
+//! ND-affine descriptor properties (the PR's acceptance criteria):
+//!
+//! (a) **byte identity** — an ND-native descriptor and its
+//!     chain-expanded lowering (one linear descriptor per row) move
+//!     identical bytes, for random shapes, strides, row sizes and
+//!     memory latencies, under both schedulers;
+//! (b) **cycle identity of ND-disabled configs** — a DMAC built with
+//!     `DmacConfig::without_nd()` is cycle-identical to the default
+//!     build on every linear workload (the extension adds zero cost
+//!     when unused), under both the naive and event-horizon schedulers;
+//! (c) the event-horizon scheduler stays bit-identical to the naive
+//!     loop with ND descriptors in flight;
+//! (d) mixed 32 B / 64 B sequential chains keep a 100 % prefetch hit
+//!     rate (the extension word rides re-tagged speculative fetches).
+
+use idmac::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, NdExt};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::tb::System;
+use idmac::testutil::{forall, SplitMix64};
+use idmac::workload::{map, NdWorkload};
+
+/// Random race-free ND shape: destination rows never overlap (unique
+/// row slots), sources may alias freely (reads are side-effect free and
+/// the arenas are disjoint).
+fn random_shape(rng: &mut SplitMix64) -> (u32, NdExt) {
+    let row_bytes = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
+    let reps0 = rng.range(1, 6) as u32;
+    let reps1 = rng.range(1, 4) as u32;
+    let dst_stride0 = row_bytes + rng.range(0, 3) as u32 * 8;
+    let dst_stride1 = reps0 * dst_stride0 + rng.range(0, 3) as u32 * 64;
+    let src_stride0 = rng.range(0, 2048) as u32;
+    let src_stride1 = rng.range(0, 4096) as u32;
+    (
+        row_bytes,
+        NdExt {
+            reps: [reps0, reps1],
+            src_stride: [src_stride0, src_stride1],
+            dst_stride: [dst_stride0, dst_stride1],
+        },
+    )
+}
+
+fn workload_of(row_bytes: u32, nd: NdExt) -> NdWorkload {
+    NdWorkload { name: "random", src: map::SRC_BASE, dst: map::DST_BASE, row_bytes, nd }
+}
+
+fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
+    LatencyProfile::Custom(rng.range(1, 110) as u32)
+}
+
+fn run_chain(
+    chain: &ChainBuilder,
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    seed: u32,
+    naive: bool,
+) -> (idmac::sim::RunStats, Vec<u8>, u64) {
+    let mut sys = System::new(profile, Dmac::new(cfg));
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 64 << 10, seed);
+    sys.load_and_launch(0, chain);
+    let stats = if naive {
+        sys.run_until_idle_naive().unwrap()
+    } else {
+        sys.run_until_idle().unwrap()
+    };
+    let image = sys.mem.backdoor_read(map::DST_BASE, 256 << 10).to_vec();
+    (stats, image, sys.now())
+}
+
+#[test]
+fn prop_nd_native_and_chain_expanded_move_identical_bytes() {
+    forall(25, |rng| {
+        let (row_bytes, nd) = random_shape(rng);
+        let w = workload_of(row_bytes, nd);
+        let cfg = DmacConfig::custom(rng.range(1, 16) as usize, rng.range(0, 16) as usize);
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let naive = rng.chance(0.5);
+        let (nd_stats, nd_image, _) = run_chain(&w.chain_nd(), cfg, profile, seed, naive);
+        let (ch_stats, ch_image, _) = run_chain(&w.chain_expanded(), cfg, profile, seed, naive);
+        assert_eq!(
+            nd_image, ch_image,
+            "memory diverged: rows={} row_bytes={row_bytes} nd={nd:?} cfg={cfg:?}",
+            w.rows()
+        );
+        // Payload accounting agrees too: same bytes, one completion per
+        // descriptor in either form.
+        assert_eq!(nd_stats.total_bytes(), ch_stats.total_bytes());
+        assert_eq!(nd_stats.total_bytes(), w.payload_bytes());
+        assert_eq!(nd_stats.completions.len(), 1);
+        assert_eq!(ch_stats.completions.len(), w.rows() as usize);
+        assert_eq!(nd_stats.nd_descriptors, 1);
+        assert_eq!(nd_stats.nd_rows, w.rows());
+        assert_eq!(ch_stats.nd_descriptors, 0);
+        assert_eq!(nd_stats.irqs, 1);
+        assert_eq!(ch_stats.irqs, 1);
+        // And both match the directly computed row oracle.
+        let mut sys = System::new(LatencyProfile::Ideal, Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 64 << 10, seed);
+        for &(src, dst) in &w.row_pairs() {
+            let bytes = sys.mem.backdoor_read(src, row_bytes as usize).to_vec();
+            let off = (dst - map::DST_BASE) as usize;
+            assert_eq!(&nd_image[off..off + row_bytes as usize], &bytes[..], "oracle row");
+        }
+    });
+}
+
+#[test]
+fn prop_nd_disabled_config_is_cycle_identical_on_linear_chains() {
+    // The zero-cost property: on any chain of plain linear descriptors
+    // the ND-capable DMAC and the `without_nd` build — today's DMAC —
+    // are bit-identical in stats, final clock and memory, under both
+    // schedulers.
+    forall(20, |rng| {
+        let n = rng.range(2, 24) as usize;
+        let mut cb = ChainBuilder::new();
+        let mut dst_slots: Vec<u64> = (0..64).collect();
+        rng.shuffle(&mut dst_slots);
+        let mut addr = map::DESC_BASE;
+        for i in 0..n {
+            let size = *rng.pick(&[1u32, 8, 64, 256, 1024]);
+            let d = Descriptor::new(
+                map::SRC_BASE + rng.below(32) * 1024,
+                map::DST_BASE + dst_slots[i] * 4096,
+                size,
+            );
+            let d = if i + 1 == n { d.with_irq() } else { d };
+            cb.push_at(addr, d);
+            addr += 32 * rng.range(1, 4);
+        }
+        let cfg = DmacConfig::custom(rng.range(1, 24) as usize, rng.range(0, 24) as usize);
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        for naive in [false, true] {
+            let with_nd = run_chain(&cb, cfg, profile, seed, naive);
+            let without = run_chain(&cb, cfg.without_nd(), profile, seed, naive);
+            assert_eq!(with_nd.0, without.0, "stats diverged: cfg={cfg:?} naive={naive}");
+            assert_eq!(with_nd.2, without.2, "clock diverged");
+            assert_eq!(with_nd.1, without.1, "memory diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_nd_fast_forward_matches_naive_tick_loop() {
+    forall(15, |rng| {
+        let (row_bytes, nd) = random_shape(rng);
+        let w = workload_of(row_bytes, nd);
+        let cfg = DmacConfig::custom(rng.range(1, 16) as usize, rng.range(0, 16) as usize);
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        for chain in [w.chain_nd(), w.chain_expanded()] {
+            let fast = run_chain(&chain, cfg, profile, seed, false);
+            let naive = run_chain(&chain, cfg, profile, seed, true);
+            assert_eq!(fast.0, naive.0, "stats diverged: cfg={cfg:?} {profile:?}");
+            assert_eq!(fast.2, naive.2, "clock diverged");
+            assert_eq!(fast.1, naive.1, "memory diverged");
+        }
+    });
+}
+
+#[test]
+fn mixed_nd_and_linear_sequential_chain_keeps_full_hit_rate() {
+    // The mixed 32 B / 64 B stride: ND extension words ride re-tagged
+    // speculative fetches, so a sequentially laid-out chain of
+    // alternating ND and linear descriptors never mispredicts.
+    let mut cb = ChainBuilder::new();
+    let mut addr = map::DESC_BASE;
+    let n = 16;
+    for i in 0..n {
+        let d = if i % 2 == 0 {
+            Descriptor::new(map::SRC_BASE + i * 8192, map::DST_BASE + i * 8192, 64)
+                .with_nd(8, 256, 64)
+        } else {
+            Descriptor::new(map::SRC_BASE + i * 8192, map::DST_BASE + i * 8192, 256)
+        };
+        let d = if i + 1 == n { d.with_irq() } else { d };
+        let span = d.span();
+        cb.push_at(addr, d);
+        addr += span;
+    }
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::scaled()));
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 256 << 10, 7);
+    sys.load_and_launch(0, &cb);
+    let stats = sys.run_until_idle().unwrap();
+    assert_eq!(stats.completions.len(), n as usize);
+    assert_eq!(stats.spec_misses, 0, "mixed-stride chain must not mispredict");
+    assert!(stats.spec_hits > 0);
+    assert_eq!(stats.nd_descriptors, 8);
+    assert_eq!(stats.nd_rows, 8 * 8);
+    assert!(stats.nd_ext_reuses > 0, "extensions ride re-tagged speculative slots");
+    // Every descriptor carries the completion stamp (extension words
+    // are not stamped — they are not descriptors).
+    for &a in cb.addrs() {
+        assert!(idmac::dmac::descriptor::is_completed(&sys.mem, a));
+    }
+    // ND rows landed: descriptor i=0 moved 8 rows of 64 B.
+    for r in 0..8u64 {
+        assert_eq!(
+            sys.mem.backdoor_read(map::SRC_BASE + r * 256, 64).to_vec(),
+            sys.mem.backdoor_read(map::DST_BASE + r * 64, 64).to_vec(),
+            "nd row {r}"
+        );
+    }
+}
+
+#[test]
+fn nd_rows_compose_with_the_iommu_page_splitter() {
+    // ND row bursts are contiguous ranges like any other burst, so the
+    // IOMMU's one-sub-burst-per-4KiB-page splitting must compose: rows
+    // sized and strided so bursts straddle page boundaries, streamed
+    // through a translated channel with identity mappings.
+    use idmac::dmac::IommuParams;
+    use idmac::driver::DmaMapper;
+    use idmac::iommu::IommuDmac;
+
+    let cfg = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, true));
+    let mut sys = System::new(LatencyProfile::Ddr3, IommuDmac::single(cfg));
+    let mut mapper =
+        DmaMapper::new(&mut sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+    mapper.map_identity(&mut sys.mem, map::DESC_BASE, 0x2000).unwrap();
+    mapper.map_identity(&mut sys.mem, map::SRC_BASE, 64 << 10).unwrap();
+    mapper.map_identity(&mut sys.mem, map::DST_BASE, 64 << 10).unwrap();
+    sys.ctrl.set_root(0, mapper.root());
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 64 << 10, 5);
+    // 2 KiB rows starting half a page in: every row burst crosses a
+    // 4 KiB boundary either on the read or the write side.
+    let w = NdWorkload {
+        name: "paged",
+        src: map::SRC_BASE + 0x800,
+        dst: map::DST_BASE + 0x800,
+        row_bytes: 2048,
+        nd: NdExt { reps: [8, 2], src_stride: [3072, 3072 * 8], dst_stride: [2048, 2048 * 8] },
+    };
+    sys.load_and_launch(0, &w.chain_nd());
+    let stats = sys.run_until_idle().unwrap();
+    assert_eq!(stats.iommu_faults, 0, "fully mapped run must not fault");
+    assert!(stats.ptw_walks > 0, "cold TLB must walk");
+    assert_eq!(stats.nd_descriptors, 1);
+    assert_eq!(stats.total_bytes(), w.payload_bytes());
+    for (i, &(src, dst)) in w.row_pairs().iter().enumerate() {
+        assert_eq!(
+            sys.mem.backdoor_read(src, 2048).to_vec(),
+            sys.mem.backdoor_read(dst, 2048).to_vec(),
+            "translated row {i}"
+        );
+    }
+}
+
+#[test]
+fn nd_report_point_is_deterministic_across_schedulers() {
+    use idmac::report::nd::run_nd;
+    let w = NdWorkload::im2col(6, 3, 256, 512);
+    let fast = run_nd(&w, LatencyProfile::UltraDeep, false);
+    let naive = run_nd(&w, LatencyProfile::UltraDeep, true);
+    assert_eq!(fast, naive, "BENCH_nd.json content depends on the scheduler");
+    assert!(fast.nd_cycles > 0 && fast.chain_cycles > 0);
+}
