@@ -31,13 +31,16 @@ REQUIRED_SECTIONS = {
         "event horizon",
         "Experiment index",
         "Virtual memory & IOMMU",
+        "Rings",
     ],
     "EXPERIMENTS.md": [
         "Contention",
         "Translation",
+        "Rings",
         "BENCH_multichannel.json",
         "BENCH_sim_throughput.json",
         "BENCH_translation.json",
+        "BENCH_rings.json",
     ],
 }
 

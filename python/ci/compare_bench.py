@@ -27,6 +27,11 @@ fields are ignored by design, so runner speed cannot flake the build:
     chain-expanded grid) with the same protocol against the
     ``idmac-nd/v1`` schema.
 
+``rings``
+    Validates ``BENCH_rings.json``-shaped files (the CSR-launch vs
+    ring-doorbell grid) with the same protocol against the
+    ``idmac-rings/v1`` schema.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -175,6 +180,10 @@ def check_nd(fast_path: str, naive_path: str, baseline_path: str) -> None:
     check_point_grid(fast_path, naive_path, baseline_path, "idmac-nd/v1", "nd")
 
 
+def check_rings(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(fast_path, naive_path, baseline_path, "idmac-rings/v1", "rings")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -199,6 +208,11 @@ def main() -> None:
     nd.add_argument("--naive", required=True)
     nd.add_argument("--baseline", required=True)
 
+    rg = sub.add_parser("rings")
+    rg.add_argument("--fast", required=True)
+    rg.add_argument("--naive", required=True)
+    rg.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
@@ -206,8 +220,10 @@ def main() -> None:
         check_multichannel(args.fast, args.naive, args.baseline)
     elif args.mode == "translation":
         check_translation(args.fast, args.naive, args.baseline)
-    else:
+    elif args.mode == "nd":
         check_nd(args.fast, args.naive, args.baseline)
+    else:
+        check_rings(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

@@ -108,6 +108,60 @@ def test_empty_measured_grid_fails(tmp_path):
     assert "no points" in r.stderr
 
 
+RINGS_POINT = {
+    "batch": 64,
+    "size": 256,
+    "profile": "ideal (1 cycle)",
+    "transfers": 192,
+    "ring_cycles": 9000,
+    "csr_cycles": 21000,
+    "ring_irqs": 3,
+    "csr_irqs": 192,
+    "ring_doorbells": 3,
+    "cq_records": 192,
+    "ring_desc_beats": 768,
+    "csr_desc_beats": 768,
+}
+
+
+def test_rings_identical_grids_pass_with_bootstrap_baseline(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-rings/v1", [RINGS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-rings/v1", [RINGS_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-rings/v1", []))
+    r = run(["rings", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "bootstrap mode" in r.stdout
+
+
+def test_rings_scheduler_divergence_fails(tmp_path):
+    diverged = dict(RINGS_POINT, ring_cycles=9001)
+    fast = write(tmp_path / "fast.json", point_doc("idmac-rings/v1", [RINGS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-rings/v1", [diverged]))
+    base = write(tmp_path / "base.json", point_doc("idmac-rings/v1", []))
+    r = run(["rings", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "not deterministic" in r.stderr
+
+
+def test_rings_baseline_drift_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-rings/v1", [RINGS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-rings/v1", [RINGS_POINT]))
+    drifted = dict(RINGS_POINT, csr_cycles=20999)
+    base = write(tmp_path / "base.json", point_doc("idmac-rings/v1", [drifted]))
+    r = run(["rings", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "drifted" in r.stderr
+
+
+def test_rings_rejects_nd_schema(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-nd/v1", [RINGS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-nd/v1", [RINGS_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-rings/v1", []))
+    r = run(["rings", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "unexpected schema" in r.stderr
+
+
 def test_throughput_mode_gates_cycle_identity(tmp_path):
     entry = {
         "label": "fig4-grid/DDR3 (13 cycles)",
@@ -146,6 +200,7 @@ def test_repo_baselines_parse_and_use_known_schemas():
         "BENCH_multichannel.json": "idmac-multichannel/v1",
         "BENCH_translation.json": "idmac-translation/v1",
         "BENCH_nd.json": "idmac-nd/v1",
+        "BENCH_rings.json": "idmac-rings/v1",
     }
     for name, schema in expected.items():
         path = os.path.join(repo, name)

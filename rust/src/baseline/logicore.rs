@@ -248,6 +248,7 @@ impl Controller for LogiCore {
                             irq: d.control & LC_CFG_IRQ != 0,
                             desc_addr: f.addr,
                             nd: None,
+                            ring: false,
                         },
                     ));
                     // Serialized chase: the next descriptor fetch only

@@ -80,6 +80,9 @@ pub struct TransferDone {
     pub bytes: u64,
     pub desc_addr: u64,
     pub irq: bool,
+    /// The transfer was consumed from the submission ring: the
+    /// feedback logic reports it through the completion ring.
+    pub ring: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -157,6 +160,7 @@ impl Backend {
                 bytes: 0,
                 desc_addr: t.desc_addr,
                 irq: t.irq,
+                ring: t.ring,
             });
             return;
         }
@@ -267,6 +271,7 @@ impl Backend {
             bytes: a.total_len(),
             desc_addr: a.t.desc_addr,
             irq: a.t.irq,
+            ring: a.t.ring,
         });
     }
 
@@ -328,6 +333,7 @@ mod tests {
             irq: false,
             desc_addr: 0,
             nd: None,
+            ring: false,
         }
     }
 

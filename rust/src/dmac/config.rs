@@ -29,6 +29,89 @@ impl IommuParams {
     }
 }
 
+/// Per-channel submission/completion ring parameters, consumed by the
+/// [`crate::dmac::Frontend`] when ring mode is enabled.  Disabled (the
+/// default for every Table I preset), the frontend allocates no ring
+/// state and every ring code path is skipped, so a non-ring
+/// configuration is cycle-identical to the pre-ring DMAC
+/// (property-tested in `tests/properties.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingParams {
+    /// Consume descriptors from a memory-resident submission ring.
+    pub enabled: bool,
+    /// Submission ring base address (32-byte descriptor slots; an
+    /// ND-affine descriptor occupies two consecutive slots).
+    pub sq_base: u64,
+    /// Submission ring capacity in 32-byte slots.
+    pub sq_entries: u32,
+    /// Completion ring base address (8-byte records).
+    pub cq_base: u64,
+    /// Completion ring capacity in 8-byte records.
+    pub cq_entries: u32,
+    /// IRQ coalescing threshold: raise the coalesced IRQ once this many
+    /// completions are pending (1 = IRQ per completion).
+    pub irq_threshold: u32,
+    /// IRQ coalescing timeout: raise the coalesced IRQ this many cycles
+    /// after the oldest pending completion even if the threshold was
+    /// not reached.  Must be >= 1 whenever `irq_threshold > 1` (the
+    /// hardware would otherwise sit on completions forever).
+    pub irq_timeout: u32,
+}
+
+impl RingParams {
+    /// Ring mode disabled (the default for every Table I preset).
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            sq_base: 0,
+            sq_entries: 0,
+            cq_base: 0,
+            cq_entries: 0,
+            irq_threshold: 1,
+            irq_timeout: 0,
+        }
+    }
+
+    /// Ring mode enabled with the given geometry; coalescing starts at
+    /// the degenerate threshold 1 (IRQ per completion).
+    pub fn enabled(sq_base: u64, sq_entries: u32, cq_base: u64, cq_entries: u32) -> Self {
+        Self {
+            enabled: true,
+            sq_base,
+            sq_entries: sq_entries.max(1),
+            cq_base,
+            cq_entries: cq_entries.max(1),
+            irq_threshold: 1,
+            irq_timeout: 0,
+        }
+    }
+
+    /// Set the IRQ coalescing threshold + timeout CSRs.
+    pub fn with_coalescing(mut self, threshold: u32, timeout: u32) -> Self {
+        assert!(threshold >= 1, "coalescing threshold must be >= 1");
+        assert!(
+            threshold == 1 || timeout >= 1,
+            "a threshold above 1 needs a finite timeout or completions could pend forever"
+        );
+        self.irq_threshold = threshold;
+        self.irq_timeout = timeout;
+        self
+    }
+
+    /// Memory address of submission slot `index % sq_entries` — the
+    /// single address map shared by the hardware consumer
+    /// ([`crate::dmac::ring::RingState`]) and the software producer
+    /// ([`crate::driver::rings::RingDriver`]).
+    pub fn sq_slot_addr(&self, index: u64) -> u64 {
+        self.sq_base + (index % self.sq_entries.max(1) as u64) * super::descriptor::DESC_BYTES
+    }
+
+    /// Memory address of completion record `index % cq_entries`.
+    pub fn cq_slot_addr(&self, index: u64) -> u64 {
+        self.cq_base + (index % self.cq_entries.max(1) as u64) * super::ring::CQ_RECORD_BYTES
+    }
+}
+
 /// Parameters of the DMAC (the paper's compile-time configuration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DmacConfig {
@@ -62,6 +145,11 @@ pub struct DmacConfig {
     /// cycle-identical to the pre-ND design (property-tested in
     /// `tests/nd.rs`).
     pub nd_enabled: bool,
+    /// Memory-resident submission/completion rings with doorbell
+    /// batching and IRQ coalescing ([`crate::dmac::ring`]).  Disabled
+    /// by default: non-ring configurations stay cycle-identical to the
+    /// pre-ring DMAC (property-tested).
+    pub ring: RingParams,
 }
 
 impl DmacConfig {
@@ -76,6 +164,7 @@ impl DmacConfig {
             weight: 1,
             iommu: IommuParams::disabled(),
             nd_enabled: true,
+            ring: RingParams::disabled(),
         }
     }
 
@@ -115,6 +204,12 @@ impl DmacConfig {
     /// pre-ND design: `CFG_ND_EXT` is treated as reserved).
     pub fn without_nd(mut self) -> Self {
         self.nd_enabled = false;
+        self
+    }
+
+    /// Attach a submission/completion ring pair to this channel.
+    pub fn with_ring(mut self, ring: RingParams) -> Self {
+        self.ring = ring;
         self
     }
 
@@ -177,6 +272,27 @@ mod tests {
         let c = DmacConfig::speculation().with_iommu(IommuParams::enabled(8, 2, false));
         assert!(c.iommu.enabled);
         assert_eq!(c.name(), "speculation", "translation does not affect the preset name");
+    }
+
+    #[test]
+    fn ring_defaults_off_and_floors_geometry() {
+        assert!(!DmacConfig::base().ring.enabled);
+        assert!(!DmacConfig::scaled().ring.enabled);
+        let r = RingParams::enabled(0x1000, 0, 0x2000, 0);
+        assert!(r.enabled);
+        assert_eq!((r.sq_entries, r.cq_entries), (1, 1), "degenerate rings floored to 1 slot");
+        assert_eq!((r.irq_threshold, r.irq_timeout), (1, 0), "default = IRQ per completion");
+        let c = DmacConfig::speculation()
+            .with_ring(RingParams::enabled(0x1000, 64, 0x2000, 64).with_coalescing(8, 128));
+        assert!(c.ring.enabled);
+        assert_eq!((c.ring.irq_threshold, c.ring.irq_timeout), (8, 128));
+        assert_eq!(c.name(), "speculation", "rings do not affect the preset name");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite timeout")]
+    fn coalescing_threshold_above_one_needs_a_timeout() {
+        let _ = RingParams::enabled(0, 8, 0, 8).with_coalescing(4, 0);
     }
 
     #[test]

@@ -35,6 +35,19 @@ pub trait Controller: Tickable {
         self.csr_write(now, desc_addr);
     }
 
+    /// Submission-ring doorbell CSR write on channel `ch`: publish ring
+    /// entries up to free-running tail index `tail` (DESIGN.md §10).
+    /// Controllers without rings must never receive one.
+    fn ring_doorbell(&mut self, _now: Cycle, ch: usize, _tail: u64) {
+        panic!("controller has no submission ring on channel {ch}");
+    }
+
+    /// Completion-ring consumer-index doorbell on channel `ch`:
+    /// software consumed records up to free-running index `head`.
+    fn ring_cq_doorbell(&mut self, _now: Cycle, ch: usize, _head: u64) {
+        panic!("controller has no completion ring on channel {ch}");
+    }
+
     /// Deliver a read-data beat returned by the memory system.
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat);
 
@@ -92,4 +105,20 @@ pub trait Controller: Tickable {
     /// translation stage never fault; the SoC routes channel `c` to the
     /// dedicated banked PLIC source `iommu_fault_source(c)`.
     fn take_fault_channels(&mut self, _sink: &mut dyn FnMut(usize, u64)) {}
+
+    /// Coalesced completion-ring IRQ edges since the last call.
+    /// Controllers without rings never raise one.
+    fn take_ring_irq(&mut self) -> u64 {
+        0
+    }
+
+    /// Per-channel coalesced ring IRQ edges since the last call,
+    /// delivered through `sink(channel, edges)`.  The SoC routes
+    /// channel `c` to the dedicated banked source `ring_irq_source(c)`.
+    fn take_ring_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        let n = self.take_ring_irq();
+        if n > 0 {
+            sink(0, n);
+        }
+    }
 }

@@ -21,6 +21,7 @@
 use super::backend::Backend;
 use super::config::DmacConfig;
 use super::descriptor::{Descriptor, NdExt, CFG_ND_EXT, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN};
+use super::ring::RingState;
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
@@ -29,9 +30,15 @@ use std::collections::VecDeque;
 /// What a fetch slot's beats carry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SlotKind {
-    /// A 32-byte descriptor head word.
+    /// A 32-byte descriptor head word fetched by the chain walk.
     Head,
-    /// The 32-byte ND extension word of the walk head at `addr - 32`.
+    /// A 32-byte descriptor head word consumed from the submission
+    /// ring: the `next` field is reserved (ring order is the chain) and
+    /// completion is reported through the completion ring.
+    RingHead,
+    /// The 32-byte ND extension word of the head that precedes it in
+    /// fetch order (at `addr - 32` for chain walks; at the wrap-aware
+    /// successor slot for ring consumption).
     Ext,
 }
 
@@ -59,13 +66,34 @@ pub struct ParsedTransfer {
     pub desc_addr: u64,
     /// ND-affine repetition (None = plain linear transfer).
     pub nd: Option<NdExt>,
+    /// Consumed from the submission ring: completion goes to the
+    /// completion ring (coalesced IRQ) instead of the in-place stamp.
+    pub ring: bool,
 }
 
-/// Completion write-back in flight (feedback logic).
+/// A fully received ND head word waiting for its extension word's
+/// beats to drain (the extension is the next live fetch behind it).
+#[derive(Debug, Clone, Copy)]
+struct PendingNd {
+    d: Descriptor,
+    head_addr: u64,
+    /// Where the extension word lives (head + 32 on chain walks; the
+    /// wrap-aware successor slot on ring consumption).
+    ext_addr: u64,
+    ring: bool,
+}
+
+/// Feedback-logic write in flight: the in-place completion stamp of a
+/// chain descriptor, or an 8-byte completion-ring record.
 #[derive(Debug, Clone, Copy)]
 struct Writeback {
-    desc_addr: u64,
+    addr: u64,
+    data: [u8; 8],
+    /// Raise the per-descriptor IRQ once the B response lands (chain
+    /// stamps only; ring records coalesce instead).
     irq: bool,
+    /// This write is a completion-ring record.
+    cq: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -92,8 +120,8 @@ pub struct Frontend {
     /// so the extension stays the next live fetch behind its head.
     pending_ext: Option<u64>,
     /// A fully received ND head word waiting for its extension word's
-    /// beats to drain: `(head descriptor, head address)`.
-    pending_nd: Option<(Descriptor, u64)>,
+    /// beats to drain.
+    pending_nd: Option<PendingNd>,
     /// Address of the last speculated (or chased) descriptor; the next
     /// speculative fetch goes to `spec_tail + 32`.
     spec_tail: u64,
@@ -103,6 +131,18 @@ pub struct Frontend {
     wb_outstanding: Vec<(u64, Writeback)>,
     wb_next_tag: u64,
     irq_edges: u64,
+    /// Coalesced completion-ring IRQ edges (routed to the dedicated
+    /// ring IRQ source at the SoC, distinct from the per-descriptor
+    /// chain IRQ line).
+    ring_irq_edges: u64,
+    /// Submission/completion ring state (None = ring mode disabled; no
+    /// ring code path executes and the DMAC is cycle-identical to the
+    /// pre-ring design, property-tested).
+    ring: Option<RingState>,
+    /// Ring fetches (heads + extension words) currently in the fetch
+    /// queue; chain launches wait until the ring drains so the two
+    /// walk machineries never interleave their fetch streams.
+    ring_fetch_live: usize,
     // §Perf: incremental occupancy counters — the request logic runs
     // every cycle, and O(window) rescans of the fetch queue were the
     // top profile entry (see EXPERIMENTS.md §Perf).
@@ -137,6 +177,9 @@ impl Frontend {
             wb_outstanding: Vec::new(),
             wb_next_tag: 0,
             irq_edges: 0,
+            ring_irq_edges: 0,
+            ring: cfg.ring.enabled.then(|| RingState::new(cfg.ring)),
+            ring_fetch_live: 0,
             live_count: 0,
             spec_count: 0,
             granted_count: 0,
@@ -156,6 +199,25 @@ impl Frontend {
     /// (`launch_latency` covers Table IV's `i-rf`).
     pub fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
         self.csr_queue.push_back((now + self.cfg.launch_latency as Cycle, desc_addr));
+    }
+
+    /// Submission-ring doorbell CSR write: publish every ring entry up
+    /// to (free-running) tail index `tail`.  One doorbell launches any
+    /// number of new entries; it traverses the same CSR launch pipeline
+    /// as a chain launch.
+    pub fn ring_doorbell(&mut self, now: Cycle, tail: u64) {
+        let latency = self.cfg.launch_latency as Cycle;
+        let ring = self.ring.as_mut().expect("ring doorbell on a ring-disabled DMAC");
+        ring.push_doorbell(now + latency, tail);
+    }
+
+    /// Completion-ring consumer-index doorbell: software has consumed
+    /// records up to (free-running) index `head`, re-opening those CQ
+    /// slots for the hardware producer.
+    pub fn ring_cq_doorbell(&mut self, now: Cycle, head: u64) {
+        let latency = self.cfg.launch_latency as Cycle;
+        let ring = self.ring.as_mut().expect("CQ doorbell on a ring-disabled DMAC");
+        ring.push_cq_doorbell(now + latency, head);
     }
 
     fn spec_outstanding(&self) -> usize {
@@ -191,7 +253,10 @@ impl Frontend {
     }
 
     fn enqueue_slot(&mut self, addr: u64, kind: SlotKind, speculative: bool) {
-        debug_assert!(kind == SlotKind::Head || !speculative, "ext fetches are never speculative");
+        debug_assert!(
+            kind == SlotKind::Head || !speculative,
+            "only chain walk heads may be speculative"
+        );
         self.live_count += 1;
         if speculative {
             self.spec_count += 1;
@@ -269,6 +334,30 @@ impl Frontend {
         // Keep sequential speculation pointed past the extension word.
         if self.spec_tail == head_addr {
             self.spec_tail = ext_addr;
+        }
+    }
+
+    /// Ring-mode analogue of [`on_nd_flag`](Self::on_nd_flag): the ND
+    /// extension word occupies the successor ring slot.  If that slot's
+    /// fetch is already in flight it is re-tagged (ring fetches issue
+    /// strictly in ring order, so it is the fetch directly behind this
+    /// head — zero extra traffic, like the speculative re-tag on chain
+    /// walks); otherwise the issue loop is told to emit the next slot
+    /// as an extension fetch.
+    fn ring_on_nd_flag(&mut self, head_addr: u64, stats: &mut RunStats) {
+        let ext_addr = self
+            .ring
+            .as_ref()
+            .expect("ring head beat without ring state")
+            .next_slot_addr(head_addr);
+        if let Some(slot) = self.fetches.get_mut(1) {
+            debug_assert_eq!(slot.addr, ext_addr, "ring fetches must issue in ring order");
+            debug_assert_eq!(slot.kind, SlotKind::RingHead);
+            debug_assert!(!slot.speculative && !slot.discard);
+            slot.kind = SlotKind::Ext;
+            stats.nd_ext_reuses += 1;
+        } else {
+            self.ring.as_mut().unwrap().next_is_ext = true;
         }
     }
 
@@ -380,16 +469,23 @@ impl Frontend {
         if discard {
             stats.wasted_desc_beats += 1;
         }
-        if !discard && kind == SlotKind::Head {
+        if !discard && kind != SlotKind::Ext {
             // Beat 0 carries the config field: an ND head needs its
             // extension word secured *before* the beat-1 chase/commit
-            // decision consumes (or flushes) the speculative slots.
+            // decision consumes (or flushes) the speculative slots
+            // (chain walks) or further ring slots are drained.
             if beat.beat == 0 && self.cfg.nd_enabled && config & CFG_ND_EXT != 0 {
-                self.on_nd_flag(addr, stats);
+                match kind {
+                    SlotKind::Head => self.on_nd_flag(addr, stats),
+                    SlotKind::RingHead => self.ring_on_nd_flag(addr, stats),
+                    SlotKind::Ext => unreachable!(),
+                }
             }
             // Beat 1 carries the `next` field (Listing 1): chase
-            // decision happens the cycle this beat is received.
-            if beat.beat == 1 {
+            // decision happens the cycle this beat is received.  Ring
+            // descriptors leave `next` reserved — consumption order is
+            // the ring order, no pointer chase.
+            if beat.beat == 1 && kind == SlotKind::Head {
                 self.on_next_field(next, stats);
             }
         }
@@ -402,11 +498,20 @@ impl Frontend {
             if !discard {
                 self.live_count -= 1;
                 match kind {
-                    SlotKind::Head => {
+                    SlotKind::Head | SlotKind::RingHead => {
+                        let ring = kind == SlotKind::RingHead;
+                        if ring {
+                            stats.ring_entries += 1;
+                            self.ring_fetch_live -= 1;
+                        }
                         let d = Descriptor::from_bytes(&slot.data);
-                        let nd = self.cfg.nd_enabled
-                            && d.has_nd_flag()
-                            && Self::ext_addr_of(addr).is_some();
+                        let ext_addr = if ring {
+                            Some(self.ring.as_ref().unwrap().next_slot_addr(addr))
+                        } else {
+                            Self::ext_addr_of(addr)
+                        };
+                        let nd =
+                            self.cfg.nd_enabled && d.has_nd_flag() && ext_addr.is_some();
                         if nd {
                             // Park until the extension word's beats
                             // drain (its slot is the next live fetch).
@@ -414,21 +519,29 @@ impl Frontend {
                                 self.pending_nd.is_none(),
                                 "two ND heads awaiting extensions"
                             );
-                            self.pending_nd = Some((d, addr));
+                            self.pending_nd = Some(PendingNd {
+                                d,
+                                head_addr: addr,
+                                ext_addr: ext_addr.unwrap(),
+                                ring,
+                            });
                         } else {
-                            self.push_handoff(now, d, addr);
+                            self.push_handoff(now, d, addr, ring);
                         }
                     }
                     SlotKind::Ext => {
-                        let (d, head_addr) = self
+                        let pnd = self
                             .pending_nd
                             .take()
                             .expect("extension beats with no pending ND head");
-                        debug_assert_eq!(addr, head_addr + DESC_BYTES);
+                        debug_assert_eq!(addr, pnd.ext_addr);
+                        if pnd.ring {
+                            self.ring_fetch_live -= 1;
+                        }
                         let ext = NdExt::from_bytes(&slot.data);
                         stats.nd_descriptors += 1;
                         stats.nd_rows += ext.total_rows();
-                        self.push_handoff(now, d.with_ext(ext), head_addr);
+                        self.push_handoff(now, pnd.d.with_ext(ext), pnd.head_addr, pnd.ring);
                     }
                 }
             }
@@ -437,7 +550,7 @@ impl Frontend {
 
     /// Parse register + handoff queue + backend issue stage: calibrates
     /// Table IV rf-rb to exactly 2L + 6.
-    fn push_handoff(&mut self, now: Cycle, d: Descriptor, desc_addr: u64) {
+    fn push_handoff(&mut self, now: Cycle, d: Descriptor, desc_addr: u64, ring: bool) {
         self.handoff.push_back((
             now + 3,
             ParsedTransfer {
@@ -447,26 +560,68 @@ impl Frontend {
                 irq: d.irq_enabled(),
                 desc_addr,
                 nd: d.nd,
+                ring,
             },
         ));
     }
 
     /// Feedback logic input: the backend finished the transfer whose
-    /// descriptor lives at `desc_addr` (paper §II-A, §II-D).
-    pub fn on_transfer_complete(&mut self, _now: Cycle, desc_addr: u64, irq: bool) {
-        self.wb_queue.push_back(Writeback { desc_addr, irq });
+    /// descriptor lives at `desc_addr` (paper §II-A, §II-D).  Chain
+    /// transfers get the in-place completion stamp; ring transfers get
+    /// an 8-byte completion-ring record (dropped, with the sticky
+    /// overflow flag latched, when the consumer let the CQ fill up —
+    /// the completion still counts toward the coalesced IRQ so software
+    /// learns it fell behind).
+    pub fn on_transfer_complete(
+        &mut self,
+        now: Cycle,
+        desc_addr: u64,
+        irq: bool,
+        ring: bool,
+        stats: &mut RunStats,
+    ) {
+        if ring {
+            let state = self.ring.as_mut().expect("ring completion without ring state");
+            let slot = ((desc_addr - state.params.sq_base) / DESC_BYTES) as u32;
+            match state.produce_cq(slot) {
+                Some((addr, data)) => {
+                    stats.cq_records += 1;
+                    self.wb_queue.push_back(Writeback { addr, data, irq: false, cq: true });
+                }
+                None => {
+                    stats.cq_overflows += 1;
+                    if state.coalesce(now) {
+                        self.ring_irq_edges += 1;
+                    }
+                }
+            }
+        } else {
+            self.wb_queue.push_back(Writeback {
+                addr: desc_addr,
+                data: COMPLETION_STAMP.to_le_bytes(),
+                irq,
+                cq: false,
+            });
+        }
     }
 
-    /// B response for a completion write-back: the descriptor stamp is
-    /// in memory; signal the IRQ if configured.
-    pub fn on_writeback_b(&mut self, _now: Cycle, b: BResp, _stats: &mut RunStats) {
+    /// B response for a feedback write: a chain stamp raises its
+    /// per-descriptor IRQ; a completion-ring record (now durable in
+    /// memory, so the handler is guaranteed to see it) counts toward
+    /// the coalesced IRQ.
+    pub fn on_writeback_b(&mut self, now: Cycle, b: BResp, _stats: &mut RunStats) {
         let idx = self
             .wb_outstanding
             .iter()
             .position(|(t, _)| *t == b.tag)
             .expect("B for unknown write-back");
         let (_, wb) = self.wb_outstanding.swap_remove(idx);
-        if wb.irq {
+        if wb.cq {
+            let state = self.ring.as_mut().expect("CQ record B without ring state");
+            if state.coalesce(now) {
+                self.ring_irq_edges += 1;
+            }
+        } else if wb.irq {
             self.irq_edges += 1;
         }
     }
@@ -483,6 +638,13 @@ impl Frontend {
             self.handoff.pop_front();
             backend.accept(now, t);
             let _ = stats;
+        }
+        // Ring consumption: drain doorbells, fire the coalescing
+        // timeout, and pipeline descriptor fetches across published
+        // ring entries (gated while the chain-walk machinery is busy so
+        // the two fetch streams never interleave).
+        if self.ring.is_some() {
+            self.step_ring(now);
         }
         // A parked ND extension fetch outranks everything: it must be
         // the next live fetch behind its head word.
@@ -504,7 +666,13 @@ impl Frontend {
         }
         // Chain launch: strictly one active chain walk at a time; the
         // CSR queue allows software to enqueue further chains (§II-A).
-        if !self.chain_active && self.pending_chase.is_none() && self.pending_ext.is_none() {
+        // Ring consumption in flight also blocks the launch: the chain
+        // walk's fetch stream must not interleave with ring fetches.
+        if !self.chain_active
+            && self.pending_chase.is_none()
+            && self.pending_ext.is_none()
+            && self.ring_allows_launch()
+        {
             if let Some(&(eligible, addr)) = self.csr_queue.front() {
                 if eligible <= now && self.can_fetch() {
                     self.csr_queue.pop_front();
@@ -516,6 +684,49 @@ impl Frontend {
         }
         if self.chain_active {
             self.top_up_speculation();
+        }
+    }
+
+    /// Ring-mode slice of [`step`](Self::step).
+    fn step_ring(&mut self, now: Cycle) {
+        let mut ring = self.ring.take().expect("step_ring without ring state");
+        ring.drain_doorbells(now);
+        if ring.check_timeout(now) {
+            self.ring_irq_edges += 1;
+        }
+        let chain_busy = self.chain_active
+            || self.pending_chase.is_some()
+            || self.pending_ext.is_some();
+        if !chain_busy {
+            // Pipeline fetches across ring entries through the same
+            // fetch slots the prefetcher uses: addresses are known, so
+            // back-to-back entries stream with zero wasted fetches.
+            while ring.fetchable() && self.can_fetch() {
+                let addr = ring.slot_addr(ring.sq_head);
+                if ring.next_is_ext {
+                    ring.next_is_ext = false;
+                    self.enqueue_slot(addr, SlotKind::Ext, false);
+                } else {
+                    self.enqueue_slot(addr, SlotKind::RingHead, false);
+                }
+                self.ring_fetch_live += 1;
+                ring.sq_head += 1;
+            }
+        }
+        self.ring = Some(ring);
+    }
+
+    /// A chain launch may proceed: ring mode is off, or the ring has no
+    /// published, in-flight or about-to-publish work.
+    fn ring_allows_launch(&self) -> bool {
+        match &self.ring {
+            None => true,
+            Some(r) => {
+                !r.fetchable()
+                    && !r.next_is_ext
+                    && !r.doorbell_pending()
+                    && self.ring_fetch_live == 0
+            }
         }
     }
 
@@ -555,8 +766,8 @@ impl Frontend {
         Some(WriteBeat {
             port: self.port,
             tag,
-            addr: wb.desc_addr,
-            data: COMPLETION_STAMP.to_le_bytes(),
+            addr: wb.addr,
+            data: wb.data,
             bytes: 8,
             last: true,
         })
@@ -572,10 +783,22 @@ impl Frontend {
             && self.wb_queue.is_empty()
             && self.wb_outstanding.is_empty()
             && !self.chain_active
+            && self.ring.as_ref().map_or(true, RingState::quiescent)
     }
 
     pub fn take_irq(&mut self) -> u64 {
         std::mem::take(&mut self.irq_edges)
+    }
+
+    /// Coalesced completion-ring IRQ edges since the last call.
+    pub fn take_ring_irq(&mut self) -> u64 {
+        std::mem::take(&mut self.ring_irq_edges)
+    }
+
+    /// Ring diagnostics for tests: `(sq_head, sq_tail, cq_prod,
+    /// overflowed)`; `None` on a ring-disabled frontend.
+    pub fn ring_state(&self) -> Option<(u64, u64, u64, bool)> {
+        self.ring.as_ref().map(|r| (r.sq_head, r.sq_tail, r.cq_prod, r.overflowed))
     }
 
     /// Diagnostics for tests: (live fetches, speculative outstanding).
@@ -600,10 +823,19 @@ impl Frontend {
         {
             return Some(0);
         }
-        EventHorizon::merge(
+        let mut h = EventHorizon::merge(
             self.csr_queue.front().map(|&(at, _)| at),
             self.handoff.front().map(|&(at, _)| at),
-        )
+        );
+        if let Some(r) = &self.ring {
+            // Published ring entries are immediate work only when a
+            // fetch can actually be enqueued this cycle; otherwise the
+            // unblocking event (a memory response freeing the window, a
+            // handoff drain) is input-driven or reported above.
+            let can_issue = !self.chain_active && self.can_fetch();
+            h = EventHorizon::merge(h, r.next_event(can_issue));
+        }
+        h
     }
 }
 
@@ -777,7 +1009,7 @@ mod tests {
     fn writeback_stamps_and_raises_irq_after_b() {
         let mut f = fe(0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(50, 0x1000, true);
+        f.on_transfer_complete(50, 0x1000, true, false, &mut s);
         assert!(f.wants_w());
         let w = f.pop_w(51, &mut s).unwrap();
         assert_eq!(w.addr, 0x1000);
@@ -930,6 +1162,152 @@ mod tests {
         assert_eq!(t.nd, None);
         assert_eq!(s.nd_descriptors, 0);
         assert_eq!(s.desc_beats, 4);
+    }
+
+    fn ring_cfg(in_flight: usize, sq_entries: u32, cq_entries: u32) -> DmacConfig {
+        DmacConfig::custom(in_flight, 0).with_ring(crate::dmac::RingParams::enabled(
+            0x1000, sq_entries, 0x8000, cq_entries,
+        ))
+    }
+
+    #[test]
+    fn ring_doorbell_publishes_and_pipelines_fetches() {
+        let mut f = Frontend::new(ring_cfg(4, 8, 8));
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.ring_doorbell(0, 3); // one doorbell publishes three entries
+        f.step(2, &mut b, &mut s);
+        assert!(!f.wants_ar(), "doorbell still in the launch pipeline");
+        f.step(3, &mut b, &mut s); // launch_latency = 3
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(addrs, vec![0x1000, 0x1020, 0x1040], "back-to-back slot fetches");
+        assert_eq!(f.ring_state().unwrap().0, 3, "sq_head advanced past every fetch");
+        // Ring heads skip the next-field chase entirely.
+        let d = Descriptor::new(0x8000, 0x9000, 64);
+        for i in 0..3u64 {
+            deliver_desc(&mut f, 10 + 4 * i, &d, &mut s);
+        }
+        assert_eq!(f.handoff.len(), 3);
+        assert!(f.handoff.iter().all(|&(_, t)| t.ring));
+        assert_eq!(s.ring_entries, 3);
+        assert_eq!((s.spec_hits, s.spec_misses), (0, 0), "no speculation in ring mode");
+    }
+
+    #[test]
+    fn ring_wraps_at_the_top_index() {
+        let mut f = Frontend::new(ring_cfg(8, 4, 8));
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.ring_doorbell(0, 4);
+        f.ring_doorbell(1, 6); // second lap: slots 0 and 1 again
+        f.step(4, &mut b, &mut s);
+        let addrs = grant_all(&mut f, &mut s);
+        assert_eq!(
+            addrs,
+            vec![0x1000, 0x1020, 0x1040, 0x1060, 0x1000, 0x1020],
+            "index 4 wraps back to slot 0"
+        );
+    }
+
+    #[test]
+    fn ring_nd_head_retags_the_following_slot_fetch() {
+        let mut f = Frontend::new(ring_cfg(4, 8, 8));
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.ring_doorbell(0, 3); // ND head (slot 0) + ext (slot 1) + linear (slot 2)
+        f.step(3, &mut b, &mut s);
+        grant_all(&mut f, &mut s);
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_nd(4, 256, 64);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(s.nd_ext_reuses, 1, "slot-1 fetch re-tagged as the extension read");
+        assert!(f.handoff.is_empty(), "head parks until the extension drains");
+        deliver_ext(&mut f, 14, &d.nd.unwrap(), &mut s);
+        assert_eq!(f.handoff.len(), 1);
+        let (_, t) = f.handoff[0];
+        assert_eq!(t.nd, d.nd);
+        assert!(t.ring);
+        deliver_desc(&mut f, 18, &Descriptor::new(0x8100, 0x9100, 64), &mut s);
+        assert_eq!(f.handoff.len(), 2);
+        assert_eq!(s.ring_entries, 2, "the extension slot is not a descriptor");
+    }
+
+    #[test]
+    fn ring_completions_write_cq_records_and_coalesce_irqs() {
+        let mut f = Frontend::new(DmacConfig::custom(4, 0).with_ring(
+            crate::dmac::RingParams::enabled(0x1000, 8, 0x8000, 8).with_coalescing(2, 1000),
+        ));
+        let mut s = RunStats::default();
+        f.on_transfer_complete(50, 0x1020, false, true, &mut s);
+        assert_eq!(s.cq_records, 1);
+        let w = f.pop_w(51, &mut s).unwrap();
+        assert_eq!(w.addr, 0x8000, "first CQ slot");
+        let rec = crate::dmac::CqRecord::from_bytes(&w.data);
+        assert_eq!(rec.sq_slot, 1, "slot index of the completed head word");
+        assert!(rec.phase, "lap-0 phase");
+        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        assert_eq!(f.take_ring_irq(), 0, "below the coalescing threshold");
+        assert_eq!(f.take_irq(), 0, "ring completions never use the chain IRQ line");
+        // Second completion reaches the threshold once its record lands.
+        f.on_transfer_complete(70, 0x1040, false, true, &mut s);
+        let w2 = f.pop_w(71, &mut s).unwrap();
+        assert_eq!(w2.addr, 0x8008);
+        f.on_writeback_b(80, BResp { port: Port::Frontend, tag: w2.tag }, &mut s);
+        assert_eq!(f.take_ring_irq(), 1, "coalesced IRQ at threshold 2");
+    }
+
+    #[test]
+    fn ring_coalescing_timeout_fires_for_stragglers() {
+        let mut f = Frontend::new(DmacConfig::custom(4, 0).with_ring(
+            crate::dmac::RingParams::enabled(0x1000, 8, 0x8000, 8).with_coalescing(8, 40),
+        ));
+        let mut b = Backend::new(8, false, 0);
+        let mut s = RunStats::default();
+        f.on_transfer_complete(10, 0x1000, false, true, &mut s);
+        let w = f.pop_w(11, &mut s).unwrap();
+        f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        assert!(!f.idle(), "a pending coalesced completion keeps the frontend busy");
+        assert_eq!(f.next_event(), Some(60), "deadline = first pending completion + timeout");
+        f.step(59, &mut b, &mut s);
+        assert_eq!(f.take_ring_irq(), 0);
+        f.step(60, &mut b, &mut s);
+        assert_eq!(f.take_ring_irq(), 1, "forced IRQ at the timeout");
+        assert!(f.idle());
+    }
+
+    #[test]
+    fn cq_overflow_drops_records_but_still_coalesces() {
+        let mut f = Frontend::new(ring_cfg(4, 8, 1));
+        let mut s = RunStats::default();
+        f.on_transfer_complete(10, 0x1000, false, true, &mut s);
+        let w = f.pop_w(11, &mut s).unwrap();
+        f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        assert_eq!(f.take_ring_irq(), 1);
+        // Consumer never advances: the 1-slot CQ is full.
+        f.on_transfer_complete(30, 0x1020, false, true, &mut s);
+        assert!(!f.wants_w(), "dropped record issues no write");
+        assert_eq!(s.cq_overflows, 1);
+        assert!(f.ring_state().unwrap().3, "sticky overflow flag latched");
+        assert_eq!(f.take_ring_irq(), 1, "the completion still coalesces");
+    }
+
+    #[test]
+    fn ring_enabled_but_unused_chain_walk_is_unchanged() {
+        // The cycle-identity pin at the unit level: a ring-capable
+        // frontend that never sees a doorbell launches CSR chains
+        // exactly like the ring-disabled build (the property test in
+        // tests/properties.rs covers full-system identity).
+        let mut f = Frontend::new(ring_cfg(4, 8, 8));
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(5, 0x2000);
+        f.step(8, &mut b, &mut s);
+        assert!(f.wants_ar());
+        assert_eq!(f.pop_ar(8, &mut s).unwrap().addr, 0x2000);
+        let d = Descriptor::new(0x8000, 0x9000, 64);
+        deliver_desc(&mut f, 10, &d, &mut s);
+        assert_eq!(f.handoff.len(), 1);
+        assert!(!f.handoff[0].1.ring);
+        assert_eq!(s.ring_entries, 0);
     }
 
     #[test]

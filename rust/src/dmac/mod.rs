@@ -15,13 +15,15 @@ pub mod controller;
 pub mod descriptor;
 pub mod frontend;
 pub mod multichannel;
+pub mod ring;
 
 pub use backend::Backend;
-pub use config::{DmacConfig, IommuParams};
+pub use config::{DmacConfig, IommuParams, RingParams};
 pub use controller::Controller;
 pub use descriptor::{ChainBuilder, Descriptor, NdExt, DESC_BYTES, END_OF_CHAIN};
 pub use frontend::Frontend;
 pub use multichannel::MultiChannel;
+pub use ring::{CqRecord, CQ_RECORD_BYTES};
 
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS};
 use crate::mem::latency::BResp;
@@ -84,6 +86,21 @@ impl Controller for Dmac {
         self.frontend.csr_write(now, desc_addr);
     }
 
+    fn ring_doorbell(&mut self, now: Cycle, ch: usize, tail: u64) {
+        debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.stats.ring_doorbells += 1;
+        self.frontend.ring_doorbell(now, tail);
+    }
+
+    fn ring_cq_doorbell(&mut self, now: Cycle, ch: usize, head: u64) {
+        debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.frontend.ring_cq_doorbell(now, head);
+    }
+
+    fn take_ring_irq(&mut self) -> u64 {
+        self.frontend.take_ring_irq()
+    }
+
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
         if beat.port == self.frontend.port() {
             self.frontend.on_desc_beat(now, beat, &mut self.stats);
@@ -110,7 +127,8 @@ impl Controller for Dmac {
         self.backend.step(now, &mut self.stats);
         for done in self.backend.drain_completions() {
             self.stats.record_completion(done.cycle, done.bytes);
-            self.frontend.on_transfer_complete(now, done.desc_addr, done.irq);
+            self.frontend
+                .on_transfer_complete(now, done.desc_addr, done.irq, done.ring, &mut self.stats);
         }
         self.frontend.step(now, &mut self.backend, &mut self.stats);
     }

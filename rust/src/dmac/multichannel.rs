@@ -106,6 +106,18 @@ impl Controller for MultiChannel {
         self.channels[ch].csr_write(now, desc_addr);
     }
 
+    fn ring_doorbell(&mut self, now: Cycle, ch: usize, tail: u64) {
+        self.per_channel.clear();
+        self.channels[ch].ring_doorbell(now, 0, tail);
+    }
+
+    fn ring_cq_doorbell(&mut self, now: Cycle, ch: usize, head: u64) {
+        // Like every other MMIO write: new activity invalidates the
+        // last run's stats snapshot.
+        self.per_channel.clear();
+        self.channels[ch].ring_cq_doorbell(now, 0, head);
+    }
+
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
         let ch = self.route(beat.port).expect("R beat for unknown channel");
         self.channels[ch].on_r_beat(now, beat);
@@ -190,6 +202,19 @@ impl Controller for MultiChannel {
             }
         }
     }
+
+    fn take_ring_irq(&mut self) -> u64 {
+        self.channels.iter_mut().map(Controller::take_ring_irq).sum()
+    }
+
+    fn take_ring_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        for (ch, c) in self.channels.iter_mut().enumerate() {
+            let n = Controller::take_ring_irq(c);
+            if n > 0 {
+                sink(ch, n);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -258,7 +283,8 @@ mod tests {
     fn take_irq_channels_attributes_edges() {
         let mut mc = MultiChannel::uniform(DmacConfig::base(), 2);
         // Inject IRQ edges directly through the feedback path.
-        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true);
+        let mut inject = RunStats::default();
+        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true, false, &mut inject);
         let mut s = RunStats::default();
         let w = mc.channels[1].frontend.pop_w(0, &mut s).unwrap();
         mc.channels[1]

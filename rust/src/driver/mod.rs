@@ -20,7 +20,9 @@
 pub mod dmaengine;
 pub mod mapper;
 pub mod multitenant;
+pub mod rings;
 
 pub use dmaengine::{Cookie, DmaDriver, Tx};
 pub use mapper::{DmaMapper, DmaMapping};
 pub use multitenant::{MultiTenantDriver, VchanId};
+pub use rings::{MultiRingDriver, RingDriver, RingEntry};

@@ -1,0 +1,600 @@
+//! Ring-mode driver: the software producer/consumer for the DMAC's
+//! memory-resident submission/completion rings (DESIGN.md §10).
+//!
+//! [`RingDriver`] owns one channel's ring pair: `submit_batch` writes
+//! any number of descriptors into free submission-ring slots and
+//! publishes them all with **one** doorbell write (the launch-path
+//! amortization the rings exist for), and `poll_completions` consumes
+//! completion-ring records by phase bit, frees the submission slots
+//! they retire, and republishes the consumer index through the CQ
+//! doorbell.  It can run pure-polling or be driven from the SoC's
+//! coalesced ring IRQ ([`crate::soc::ring_irq_source`]).
+//!
+//! [`MultiRingDriver`] is the multi-tenant layer: per-client virtual
+//! channels (pinned or deterministically least-loaded) multiplexed
+//! onto the per-channel hardware rings, with globally monotone cookies
+//! — the ring-mode analogue of [`super::MultiTenantDriver`].
+
+use super::dmaengine::Cookie;
+use super::multitenant::VchanId;
+use crate::dmac::config::RingParams;
+use crate::dmac::descriptor::{NdExt, ND_EXT_BYTES};
+use crate::dmac::ring::CqRecord;
+use crate::dmac::{Controller, Descriptor, DESC_BYTES};
+use crate::sim::Cycle;
+use crate::tb::System;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+
+/// One client transfer submitted through the ring.
+#[derive(Debug, Clone, Copy)]
+pub enum RingEntry {
+    /// A linear copy: one 32-byte slot.
+    Memcpy { dst: u64, src: u64, len: u32 },
+    /// An ND-affine transfer: head word + extension word, two
+    /// consecutive slots (wrapping at the top index like everything
+    /// else).
+    Nd { dst: u64, src: u64, row_bytes: u32, nd: NdExt },
+}
+
+impl RingEntry {
+    fn slots(&self) -> u64 {
+        match self {
+            RingEntry::Memcpy { .. } => 1,
+            RingEntry::Nd { .. } => 2,
+        }
+    }
+}
+
+/// A submitted batch entry awaiting its completion record.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    cookie: Cookie,
+    /// SQ slot of the head word (what the CQ record reports).
+    head_slot: u32,
+    /// Slots this entry occupies (freed when the record is consumed).
+    slots: u64,
+    done: bool,
+}
+
+/// Software producer/consumer for one channel's ring pair.
+#[derive(Debug)]
+pub struct RingDriver {
+    channel: usize,
+    params: RingParams,
+    /// Free-running producer index (slots written + published).
+    sq_tail: u64,
+    /// Free-running count of slots whose completion was consumed.
+    sq_freed: u64,
+    /// Free-running CQ consumer index.
+    cq_head: u64,
+    in_flight: VecDeque<InFlight>,
+    next_cookie: Cookie,
+    completed: Vec<Cookie>,
+    callback_cursor: usize,
+}
+
+impl RingDriver {
+    /// Drive channel `channel`'s rings; `params` must match the
+    /// channel's [`crate::dmac::DmacConfig::ring`] geometry.
+    pub fn new(channel: usize, params: RingParams) -> Self {
+        assert!(params.enabled, "RingDriver needs an enabled ring configuration");
+        Self {
+            channel,
+            params,
+            sq_tail: 0,
+            sq_freed: 0,
+            cq_head: 0,
+            in_flight: VecDeque::new(),
+            next_cookie: 1,
+            completed: Vec::new(),
+            callback_cursor: 0,
+        }
+    }
+
+    pub fn channel(&self) -> usize {
+        self.channel
+    }
+
+    /// Submission slots currently free (producer view).
+    pub fn free_slots(&self) -> u64 {
+        self.params.sq_entries as u64 - (self.sq_tail - self.sq_freed)
+    }
+
+    /// Entries submitted and not yet completed.
+    pub fn outstanding(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    fn slot_addr(&self, index: u64) -> u64 {
+        self.params.sq_slot_addr(index)
+    }
+
+    fn cq_slot_addr(&self, index: u64) -> u64 {
+        self.params.cq_slot_addr(index)
+    }
+
+    /// Write `entries` into free submission slots and publish them all
+    /// with a single doorbell scheduled at cycle `at` (the caller's
+    /// MMIO-cost model decides how far after `sys.now()` that is).
+    /// An empty batch still rings the doorbell — a zero-entry doorbell
+    /// is a hardware no-op, pinned by the tests below.  A batch that
+    /// does not fit the free slots is rejected whole (full-ring
+    /// backpressure): nothing is written and no doorbell is rung.
+    pub fn submit_batch<C: Controller>(
+        &mut self,
+        sys: &mut System<C>,
+        at: Cycle,
+        entries: &[RingEntry],
+    ) -> Result<Vec<Cookie>> {
+        let needed: u64 = entries.iter().map(RingEntry::slots).sum();
+        if needed > self.free_slots() {
+            return Err(Error::Driver(format!(
+                "submission ring full: batch needs {needed} slots, {} free",
+                self.free_slots()
+            )));
+        }
+        for e in entries {
+            match *e {
+                RingEntry::Memcpy { len, .. } if len == 0 => {
+                    return Err(Error::Driver("zero-length ring entry".into()));
+                }
+                RingEntry::Nd { row_bytes, nd, .. }
+                    if row_bytes == 0 || nd.reps.iter().any(|&r| r == 0) =>
+                {
+                    return Err(Error::Driver("degenerate ND ring entry".into()));
+                }
+                RingEntry::Nd { .. } if self.params.sq_entries < 2 => {
+                    return Err(Error::Driver(
+                        "an ND entry needs a ring of at least two slots".into(),
+                    ));
+                }
+                _ => {}
+            }
+        }
+        let mut cookies = Vec::with_capacity(entries.len());
+        for e in entries {
+            let head_slot = (self.sq_tail % self.params.sq_entries as u64) as u32;
+            match *e {
+                RingEntry::Memcpy { dst, src, len } => {
+                    let d = Descriptor::new(src, dst, len);
+                    sys.mem.backdoor_write(self.slot_addr(self.sq_tail), &d.to_bytes());
+                }
+                RingEntry::Nd { dst, src, row_bytes, nd } => {
+                    debug_assert_eq!(ND_EXT_BYTES, DESC_BYTES);
+                    let d = Descriptor::new(src, dst, row_bytes).with_nd_levels(nd);
+                    sys.mem.backdoor_write(self.slot_addr(self.sq_tail), &d.to_bytes());
+                    sys.mem.backdoor_write(self.slot_addr(self.sq_tail + 1), &nd.to_bytes());
+                }
+            }
+            let cookie = self.next_cookie;
+            self.next_cookie += 1;
+            self.in_flight.push_back(InFlight {
+                cookie,
+                head_slot,
+                slots: e.slots(),
+                done: false,
+            });
+            self.sq_tail += e.slots();
+            cookies.push(cookie);
+        }
+        sys.schedule_doorbell(at.max(sys.now()), self.channel, self.sq_tail);
+        Ok(cookies)
+    }
+
+    /// Consume completion records (phase-bit valid), free the
+    /// submission slots they retire, and republish the consumer index
+    /// through the CQ doorbell at cycle `at`.  Returns the cookies
+    /// completed by this poll, in CQ order.
+    pub fn poll_completions<C: Controller>(
+        &mut self,
+        sys: &mut System<C>,
+        at: Cycle,
+    ) -> Vec<Cookie> {
+        let mut newly = Vec::new();
+        loop {
+            let rec =
+                CqRecord::from_bytes(sys.mem.backdoor_read(self.cq_slot_addr(self.cq_head), 8));
+            if rec.phase != CqRecord::phase_of(self.cq_head, self.params.cq_entries) {
+                break;
+            }
+            let entry = self
+                .in_flight
+                .iter_mut()
+                .find(|f| !f.done && f.head_slot == rec.sq_slot)
+                .expect("completion record for an unknown submission slot");
+            entry.done = true;
+            newly.push(entry.cookie);
+            self.cq_head += 1;
+        }
+        // Slots free strictly in ring order: release the contiguous
+        // completed prefix (a later entry completing first keeps its
+        // slots allocated until everything before it retires).
+        while self.in_flight.front().is_some_and(|f| f.done) {
+            let f = self.in_flight.pop_front().unwrap();
+            self.sq_freed += f.slots;
+        }
+        if !newly.is_empty() {
+            sys.schedule_cq_doorbell(at.max(sys.now()), self.channel, self.cq_head);
+            self.completed.extend(newly.iter().copied());
+        }
+        newly
+    }
+
+    /// [`poll_completions`](Self::poll_completions) with the CQ
+    /// doorbell scheduled immediately (the common polling-loop call).
+    pub fn poll_now<C: Controller>(&mut self, sys: &mut System<C>) -> Vec<Cookie> {
+        let now = sys.now();
+        self.poll_completions(sys, now)
+    }
+
+    /// [`submit_batch`](Self::submit_batch) with the doorbell
+    /// scheduled immediately.
+    pub fn submit_now<C: Controller>(
+        &mut self,
+        sys: &mut System<C>,
+        entries: &[RingEntry],
+    ) -> Result<Vec<Cookie>> {
+        let now = sys.now();
+        self.submit_batch(sys, now, entries)
+    }
+
+    /// `dma_async_is_tx_complete` equivalent.
+    pub fn is_complete(&self, cookie: Cookie) -> bool {
+        self.completed.contains(&cookie)
+    }
+
+    /// Completion callbacks fired since the last call.
+    pub fn take_completed(&mut self) -> Vec<Cookie> {
+        let new = self.completed[self.callback_cursor..].to_vec();
+        self.callback_cursor = self.completed.len();
+        new
+    }
+
+    fn set_next_cookie(&mut self, cookie: Cookie) {
+        self.next_cookie = cookie;
+    }
+
+    fn next_cookie(&self) -> Cookie {
+        self.next_cookie
+    }
+}
+
+/// Per-client virtual channel of the multi-tenant ring driver.
+#[derive(Debug, Clone)]
+struct RingVchan {
+    pinned: Option<usize>,
+    cookies: Vec<Cookie>,
+}
+
+/// Many client submission queues multiplexed onto per-channel hardware
+/// rings — the ring-mode analogue of [`super::MultiTenantDriver`].
+#[derive(Debug)]
+pub struct MultiRingDriver {
+    rings: Vec<RingDriver>,
+    vchans: Vec<RingVchan>,
+    /// Globally monotone cookie counter shared by every ring.
+    next_cookie: Cookie,
+}
+
+impl MultiRingDriver {
+    /// One [`RingDriver`] per channel configuration; every entry must
+    /// have rings enabled ([`crate::dmac::DmacConfig::ring`]).
+    pub fn new(ring_params: &[RingParams]) -> Self {
+        assert!(!ring_params.is_empty(), "at least one channel");
+        Self {
+            rings: ring_params
+                .iter()
+                .enumerate()
+                .map(|(ch, &p)| RingDriver::new(ch, p))
+                .collect(),
+            vchans: Vec::new(),
+            next_cookie: 1,
+        }
+    }
+
+    pub fn num_channels(&self) -> usize {
+        self.rings.len()
+    }
+
+    pub fn ring(&self, ch: usize) -> &RingDriver {
+        &self.rings[ch]
+    }
+
+    /// Open a client submission queue with least-loaded placement.
+    pub fn open(&mut self) -> VchanId {
+        self.vchans.push(RingVchan { pinned: None, cookies: Vec::new() });
+        self.vchans.len() - 1
+    }
+
+    /// Open a client submission queue pinned to channel `ch`.
+    pub fn open_pinned(&mut self, ch: usize) -> Result<VchanId> {
+        if ch >= self.rings.len() {
+            return Err(Error::Driver(format!(
+                "cannot pin to channel {ch}: only {} channels",
+                self.rings.len()
+            )));
+        }
+        self.vchans.push(RingVchan { pinned: Some(ch), cookies: Vec::new() });
+        Ok(self.vchans.len() - 1)
+    }
+
+    /// Candidate channels in placement order: the pin, or every
+    /// channel sorted by outstanding entries (ties to the lowest id —
+    /// deterministic), falling back across full rings.
+    fn placement_order(&self, vchan: VchanId) -> Vec<usize> {
+        match self.vchans[vchan].pinned {
+            Some(ch) => vec![ch],
+            None => {
+                let mut order: Vec<usize> = (0..self.rings.len()).collect();
+                order.sort_by_key(|&i| (self.rings[i].outstanding(), i));
+                order
+            }
+        }
+    }
+
+    /// Submit one batch from `vchan`: placed on one channel's ring
+    /// (batches are never split across rings — one doorbell each) with
+    /// globally monotone client-visible cookies.
+    pub fn submit_batch<C: Controller>(
+        &mut self,
+        vchan: VchanId,
+        sys: &mut System<C>,
+        at: Cycle,
+        entries: &[RingEntry],
+    ) -> Result<Vec<Cookie>> {
+        let mut last_err = None;
+        for ch in self.placement_order(vchan) {
+            self.rings[ch].set_next_cookie(self.next_cookie);
+            match self.rings[ch].submit_batch(sys, at, entries) {
+                Ok(cookies) => {
+                    self.next_cookie = self.rings[ch].next_cookie();
+                    self.vchans[vchan].cookies.extend(cookies.iter().copied());
+                    return Ok(cookies);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one candidate channel"))
+    }
+
+    /// Poll every channel's completion ring (deterministic channel
+    /// order), returning the cookies completed by this sweep.
+    pub fn poll_completions<C: Controller>(
+        &mut self,
+        sys: &mut System<C>,
+        at: Cycle,
+    ) -> Vec<Cookie> {
+        let mut newly = Vec::new();
+        for r in &mut self.rings {
+            newly.extend(r.poll_completions(sys, at));
+        }
+        newly
+    }
+
+    /// [`poll_completions`](Self::poll_completions) with the CQ
+    /// doorbells scheduled immediately.
+    pub fn poll_now<C: Controller>(&mut self, sys: &mut System<C>) -> Vec<Cookie> {
+        let now = sys.now();
+        self.poll_completions(sys, now)
+    }
+
+    pub fn is_complete(&self, cookie: Cookie) -> bool {
+        self.rings.iter().any(|r| r.is_complete(cookie))
+    }
+
+    /// Cookies issued to `vchan`, in submission order.
+    pub fn cookies_of(&self, vchan: VchanId) -> &[Cookie] {
+        &self.vchans[vchan].cookies
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmac::{Dmac, DmacConfig, MultiChannel};
+    use crate::mem::backdoor::fill_pattern;
+    use crate::mem::LatencyProfile;
+    use crate::workload::map;
+
+    const SQ: u64 = map::DESC_BASE;
+    const CQ: u64 = map::DESC_BASE + 0x10_0000;
+
+    fn ring_params(sq_entries: u32, cq_entries: u32) -> RingParams {
+        RingParams::enabled(SQ, sq_entries, CQ, cq_entries)
+    }
+
+    fn ring_system(params: RingParams) -> System<Dmac> {
+        System::new(
+            LatencyProfile::Ddr3,
+            Dmac::new(DmacConfig::speculation().with_ring(params)),
+        )
+    }
+
+    #[test]
+    fn batch_round_trip_moves_bytes_with_one_doorbell_and_one_irq() {
+        let params = ring_params(64, 64).with_coalescing(8, 10_000);
+        let mut sys = ring_system(params);
+        let mut drv = RingDriver::new(0, params);
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 8 * 4096, 7);
+        let entries: Vec<RingEntry> = (0..8u64)
+            .map(|i| RingEntry::Memcpy {
+                dst: map::DST_BASE + i * 4096,
+                src: map::SRC_BASE + i * 4096,
+                len: 512,
+            })
+            .collect();
+        let cookies = drv.submit_batch(&mut sys, 0, &entries).unwrap();
+        assert_eq!(cookies.len(), 8);
+        assert_eq!(drv.free_slots(), 64 - 8);
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.completions.len(), 8);
+        assert_eq!(stats.ring_doorbells, 1, "one doorbell published the whole batch");
+        assert_eq!(stats.ring_entries, 8);
+        assert_eq!(stats.cq_records, 8);
+        assert_eq!(stats.irqs, 1, "8 completions coalesce into one IRQ");
+        assert_eq!(sys.ring_irq_edges, vec![1]);
+        for i in 0..8u64 {
+            assert_eq!(
+                sys.mem.backdoor_read(map::SRC_BASE + i * 4096, 512).to_vec(),
+                sys.mem.backdoor_read(map::DST_BASE + i * 4096, 512).to_vec(),
+                "transfer {i}"
+            );
+        }
+        let done = drv.poll_now(&mut sys);
+        assert_eq!(done, cookies, "records consumed in ring order");
+        assert_eq!(drv.free_slots(), 64, "slots freed after consumption");
+        assert!(cookies.iter().all(|&c| drv.is_complete(c)));
+    }
+
+    #[test]
+    fn full_ring_backpressure_rejects_the_whole_batch() {
+        // Satellite pin: the producer catching the consumer is
+        // backpressure at the driver, not silent overwrite.
+        let params = ring_params(4, 8);
+        let mut sys = ring_system(params);
+        let mut drv = RingDriver::new(0, params);
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 4096, 3);
+        let e = |i: u64| RingEntry::Memcpy {
+            dst: map::DST_BASE + i * 4096,
+            src: map::SRC_BASE,
+            len: 64,
+        };
+        drv.submit_batch(&mut sys, 0, &[e(0), e(1), e(2), e(3)]).unwrap();
+        assert_eq!(drv.free_slots(), 0);
+        let err = drv.submit_batch(&mut sys, 0, &[e(4)]);
+        assert!(matches!(err, Err(Error::Driver(_))), "full ring must backpressure");
+        sys.run_until_idle().unwrap();
+        assert_eq!(drv.poll_now(&mut sys).len(), 4);
+        assert_eq!(drv.free_slots(), 4);
+        // Freed slots accept the deferred entry (second lap).
+        drv.submit_now(&mut sys, &[e(4)]).unwrap();
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.completions.len(), 1);
+        assert_eq!(drv.poll_now(&mut sys).len(), 1);
+    }
+
+    #[test]
+    fn zero_entry_doorbell_is_a_hardware_noop() {
+        // Satellite pin: a doorbell publishing nothing fetches nothing.
+        let params = ring_params(8, 8);
+        let mut sys = ring_system(params);
+        let mut drv = RingDriver::new(0, params);
+        let cookies = drv.submit_batch(&mut sys, 0, &[]).unwrap();
+        assert!(cookies.is_empty());
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.ring_doorbells, 1, "the doorbell write itself still lands");
+        assert_eq!(stats.ring_entries, 0);
+        assert_eq!(stats.desc_beats, 0, "no descriptor fetch was issued");
+        assert_eq!(stats.irqs, 0);
+        assert!(drv.poll_now(&mut sys).is_empty());
+    }
+
+    #[test]
+    fn nd_entries_wrap_the_extension_word_to_slot_zero() {
+        // Satellite pin (wrap-around at the top index): an ND head in
+        // the last slot continues its extension word at slot 0 on the
+        // next lap, and the rows still land byte-exact.
+        let params = ring_params(4, 8);
+        let mut sys = ring_system(params);
+        let mut drv = RingDriver::new(0, params);
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 16 << 10, 9);
+        // Lap 0: three linear entries (slots 0-2).
+        let lin: Vec<RingEntry> = (0..3u64)
+            .map(|i| RingEntry::Memcpy {
+                dst: map::DST_BASE + i * 4096,
+                src: map::SRC_BASE + i * 4096,
+                len: 128,
+            })
+            .collect();
+        drv.submit_batch(&mut sys, 0, &lin).unwrap();
+        sys.run_until_idle().unwrap();
+        assert_eq!(drv.poll_now(&mut sys).len(), 3);
+        // Lap boundary: the ND head lands in slot 3 (top index), its
+        // extension wraps to slot 0.
+        let nd = NdExt { reps: [4, 1], src_stride: [1024, 0], dst_stride: [256, 0] };
+        let cookies = drv
+            .submit_batch(
+                &mut sys,
+                sys.now(),
+                &[RingEntry::Nd {
+                    dst: map::DST_BASE + 0x40000,
+                    src: map::SRC_BASE,
+                    row_bytes: 256,
+                    nd,
+                }],
+            )
+            .unwrap();
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.nd_descriptors, 1);
+        assert_eq!(stats.nd_rows, 4);
+        assert_eq!(drv.poll_now(&mut sys), cookies);
+        for r in 0..4u64 {
+            assert_eq!(
+                sys.mem.backdoor_read(map::SRC_BASE + r * 1024, 256).to_vec(),
+                sys.mem.backdoor_read(map::DST_BASE + 0x40000 + r * 256, 256).to_vec(),
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn nd_entry_rejected_on_a_one_slot_ring() {
+        let params = ring_params(1, 4);
+        let mut sys = ring_system(params);
+        let mut drv = RingDriver::new(0, params);
+        let nd = NdExt::linear();
+        let err = drv.submit_batch(
+            &mut sys,
+            0,
+            &[RingEntry::Nd { dst: map::DST_BASE, src: map::SRC_BASE, row_bytes: 64, nd }],
+        );
+        assert!(matches!(err, Err(Error::Driver(_))));
+    }
+
+    #[test]
+    fn multi_ring_driver_multiplexes_vchans_with_monotone_cookies() {
+        let p0 = ring_params(32, 32);
+        let p1 = RingParams::enabled(SQ + 0x8000, 32, CQ + 0x8000, 32);
+        let mut sys = System::new(
+            LatencyProfile::Ddr3,
+            MultiChannel::new(&[
+                DmacConfig::speculation().with_ring(p0),
+                DmacConfig::speculation().with_ring(p1),
+            ]),
+        );
+        let mut drv = MultiRingDriver::new(&[p0, p1]);
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 8 * 4096, 5);
+        let a = drv.open();
+        let b = drv.open_pinned(1).unwrap();
+        assert!(drv.open_pinned(7).is_err());
+        let e = |i: u64| RingEntry::Memcpy {
+            dst: map::DST_BASE + i * 4096,
+            src: map::SRC_BASE + (i % 8) * 4096,
+            len: 256,
+        };
+        // a's first batch lands on the least-loaded channel 0; b is
+        // pinned to channel 1; a's second batch balances onto... the
+        // channel with fewer outstanding entries (deterministic).
+        let ca0 = drv.submit_batch(a, &mut sys, 0, &[e(0), e(1)]).unwrap();
+        let cb = drv.submit_batch(b, &mut sys, 0, &[e(2)]).unwrap();
+        let ca1 = drv.submit_batch(a, &mut sys, 0, &[e(3)]).unwrap();
+        assert_eq!(drv.ring(0).outstanding(), 2);
+        assert_eq!(drv.ring(1).outstanding(), 2, "second a-batch balanced to channel 1");
+        // Globally monotone, unique cookies across vchans and rings.
+        let mut all: Vec<Cookie> = ca0.iter().chain(&cb).chain(&ca1).copied().collect();
+        assert!(all.windows(2).all(|w| w[1] > w[0]));
+        all.dedup();
+        assert_eq!(all.len(), 4);
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.completions.len(), 4);
+        let done = drv.poll_now(&mut sys);
+        assert_eq!(done.len(), 4);
+        for &c in &all {
+            assert!(drv.is_complete(c), "cookie {c}");
+        }
+        assert_eq!(drv.cookies_of(a).len(), 3);
+        assert_eq!(drv.cookies_of(b), &cb[..]);
+        sys.run_until_idle().unwrap();
+    }
+}

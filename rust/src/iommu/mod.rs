@@ -123,6 +123,18 @@ impl Controller for IommuDmac {
         self.inner.csr_write_ch(now, ch, desc_addr);
     }
 
+    fn ring_doorbell(&mut self, now: Cycle, ch: usize, tail: u64) {
+        // Doorbells carry ring indices, not addresses: nothing to
+        // translate.  The ring's descriptor fetches and CQ-record
+        // writes go through the channel's MMU like all other frontend
+        // traffic, so ring bases may be IOVAs.
+        self.inner.ring_doorbell(now, ch, tail);
+    }
+
+    fn ring_cq_doorbell(&mut self, now: Cycle, ch: usize, head: u64) {
+        self.inner.ring_cq_doorbell(now, ch, head);
+    }
+
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
         if let Some(ch) = beat.port.ptw_channel() {
             self.mmus[ch].on_pte_beat(beat);
@@ -233,6 +245,14 @@ impl Controller for IommuDmac {
 
     fn take_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
         self.inner.take_irq_channels(sink);
+    }
+
+    fn take_ring_irq(&mut self) -> u64 {
+        self.inner.take_ring_irq()
+    }
+
+    fn take_ring_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        self.inner.take_ring_irq_channels(sink);
     }
 
     fn take_fault_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {

@@ -17,7 +17,10 @@
 //!                 [--latency …]         # writes BENCH_translation.json
 //! idmac nd [--naive] [--out FILE]       # ND-native vs chain-expanded grid;
 //!                                       # writes BENCH_nd.json
-//! idmac regen-baselines [--dir D]       # rewrite all four BENCH_*.json
+//! idmac rings [--naive] [--out FILE]    # CSR-launch vs ring-doorbell grid
+//!             [--batch N] [--size N] [--latency …]
+//!                                       # writes BENCH_rings.json
+//! idmac regen-baselines [--dir D]       # rewrite all five BENCH_*.json
 //!                                       # baselines (arms the CI gate)
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
@@ -71,6 +74,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("contention") => contention(args)?,
         Some("translate") => translate(args)?,
         Some("nd") => nd(args)?,
+        Some("rings") => rings(args)?,
         Some("regen-baselines") => regen_baselines(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
@@ -96,8 +100,8 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     translate|nd|regen-baselines|bench-throughput|oracle-check|soc-demo|all> \
-                     [--threads N] [--naive] [flags]";
+                     translate|nd|rings|regen-baselines|bench-throughput|oracle-check|\
+                     soc-demo|all> [--threads N] [--naive] [flags]";
 
 /// Regenerate every checked-in bench baseline in one pass (arming the
 /// CI bench-regression gate after a bootstrap).  Writes the default
@@ -122,6 +126,10 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     idmac::report::NdReport::new(ndr::nd_grid(naive)).write(&out)?;
     println!("wrote {out}");
 
+    let out = path(idmac::report::rings::BENCH_FILE);
+    idmac::report::RingsReport::new(idmac::report::rings::rings_grid(naive)).write(&out)?;
+    println!("wrote {out}");
+
     let out = path(idmac::report::throughput::BENCH_FILE);
     let mut report = idmac::report::ThroughputReport::new();
     for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
@@ -130,7 +138,38 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     }
     report.write(&out)?;
     println!("wrote {out}");
-    println!("commit the four BENCH_*.json files to arm the CI gate");
+    println!("commit the five BENCH_*.json files to arm the CI gate");
+    Ok(())
+}
+
+/// Ring-submission grid (batch sizes × payload sizes × latency
+/// profiles), CSR-launch vs ring-doorbell; emits the deterministic
+/// `BENCH_rings.json`.  With an explicit `--batch`/`--size`/`--latency`
+/// the grid collapses to that single point.
+fn rings(args: &Args) -> idmac::Result<()> {
+    use idmac::report::rings as rg;
+
+    let naive = args.naive();
+    let out = args.get_or("out", rg::BENCH_FILE);
+    let single =
+        args.get("batch").is_some() || args.get("size").is_some() || args.get("latency").is_some();
+    let points = if single {
+        let batch = args.get_usize("batch", 8)?;
+        if batch == 0 || batch > 1024 {
+            return Err(idmac::Error::Cli("--batch must be in 1..=1024 (ring capacity)".into()));
+        }
+        let size = args.get_usize("size", 256)? as u32;
+        if size == 0 || size > 1024 {
+            return Err(idmac::Error::Cli("--size must be in 1..=1024 (payload arena)".into()));
+        }
+        vec![rg::run_rings(batch, size, args.latency()?, naive)]
+    } else {
+        rg::rings_grid(naive)
+    };
+    let report = idmac::report::RingsReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

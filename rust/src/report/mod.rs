@@ -7,12 +7,14 @@ pub mod contention;
 pub mod experiments;
 pub mod nd;
 pub mod parallel;
+pub mod rings;
 pub mod throughput;
 pub mod translation;
 
 pub use contention::{ContentionPoint, MultiChannelReport};
 pub use nd::{NdPoint, NdReport};
 pub use parallel::par_map;
+pub use rings::{RingPoint, RingsReport};
 pub use throughput::{ThroughputEntry, ThroughputReport};
 pub use translation::{AccessPattern, TranslationPoint, TranslationReport};
 

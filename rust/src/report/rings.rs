@@ -1,0 +1,386 @@
+//! Ring-submission experiments: `BENCH_rings.json`.
+//!
+//! The launch-path sweep the ring subsystem exists for: each grid
+//! point runs the same closed-loop workload twice —
+//!
+//! * **CSR-launch**: every transfer is launched through its own
+//!   serialized CSR write (the pre-ring pathology: one uncached MMIO
+//!   round trip per transfer, one IRQ per transfer), and
+//! * **ring-doorbell**: the batch is written into the submission ring
+//!   and published with one doorbell write, completions coalescing
+//!   into one IRQ per batch (threshold = batch size) —
+//!
+//! across batch sizes 1/8/64/512, payload sizes 64 B/256 B/1 KiB and
+//! the three paper memory profiles.  The loop is closed per batch
+//! (submit → drain → handle the IRQ → submit the next batch), so
+//! cycles-per-transfer directly expose how the per-batch MMIO + IRQ
+//! cost amortizes: on the ideal-memory profile it decreases strictly
+//! with batch size (pinned by a unit test below).
+//!
+//! The MMIO cost model is [`DOORBELL_COST`] simulated cycles per
+//! uncached CSR/doorbell write (covering the CPU's store, the
+//! interconnect round trip and the handler's return path); descriptor
+//! preparation in cacheable memory is treated as free, as in the
+//! paper's launch-latency analysis.
+//!
+//! Everything in the JSON is simulated-time — no wall-clock — so the
+//! file is bit-deterministic and identical under the event-horizon
+//! scheduler and the `--naive` per-cycle loop (CI diffs the two).
+
+use crate::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, RingParams};
+use crate::driver::{RingDriver, RingEntry};
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::LatencyProfile;
+use crate::report::parallel::par_map;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::{Cycle, RunStats};
+use crate::tb::System;
+use crate::workload::map;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_rings.json";
+
+/// Modeled cost of one uncached MMIO write (CSR launch or doorbell),
+/// in cycles: CPU store + interconnect round trip + handler return.
+pub const DOORBELL_COST: Cycle = 24;
+
+/// Doorbell batch sizes swept by the grid.
+pub const BATCH_SIZES: [usize; 4] = [1, 8, 64, 512];
+
+/// Payload sizes swept by the grid (the ISSUE's 64 B/256 B/1 KiB).
+pub const PAYLOAD_SIZES: [u32; 3] = [64, 256, 1024];
+
+/// Closed-loop rounds per grid point (total transfers = batch x this).
+pub const ROUNDS: usize = 3;
+
+/// Submission ring geometry shared by every grid point.
+const SQ_BASE: u64 = map::DESC_BASE;
+const SQ_ENTRIES: u32 = 1024;
+const CQ_BASE: u64 = map::DESC_BASE + 0x20_0000;
+const CQ_ENTRIES: u32 = 1024;
+
+/// One grid point: batch size x payload size x memory profile, both
+/// launch paths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RingPoint {
+    pub batch: usize,
+    pub size: u32,
+    pub profile: String,
+    /// Transfers executed by each form (`batch * ROUNDS`).
+    pub transfers: u64,
+    /// End-to-end cycles of the ring-doorbell closed loop.
+    pub ring_cycles: Cycle,
+    /// End-to-end cycles of the per-transfer CSR-launch closed loop.
+    pub csr_cycles: Cycle,
+    /// IRQ edges of each form (ring: one coalesced IRQ per batch).
+    pub ring_irqs: u64,
+    pub csr_irqs: u64,
+    /// Doorbell writes accepted by the ring form.
+    pub ring_doorbells: u64,
+    /// Completion-ring records written by the ring form.
+    pub cq_records: u64,
+    /// Descriptor-fetch beats of each form.
+    pub ring_desc_beats: u64,
+    pub csr_desc_beats: u64,
+}
+
+impl RingPoint {
+    /// Launch-path cycles per transfer of the ring form.
+    pub fn ring_cpt(&self) -> f64 {
+        self.ring_cycles as f64 / self.transfers.max(1) as f64
+    }
+
+    /// Launch-path cycles per transfer of the CSR form.
+    pub fn csr_cpt(&self) -> f64 {
+        self.csr_cycles as f64 / self.transfers.max(1) as f64
+    }
+
+    /// End-to-end speedup of ring-doorbell over CSR-launch (>1 =
+    /// rings faster).
+    pub fn speedup(&self) -> f64 {
+        self.csr_cycles as f64 / self.ring_cycles.max(1) as f64
+    }
+
+    /// IRQ reduction factor (CSR raises one per transfer).
+    pub fn irq_reduction(&self) -> f64 {
+        self.csr_irqs as f64 / self.ring_irqs.max(1) as f64
+    }
+}
+
+/// Payload stride: line-aligned like `workload::Sweep`.
+fn stride(size: u32) -> u64 {
+    (size as u64).next_multiple_of(map::LINE_BYTES)
+}
+
+fn run_round<C: crate::dmac::Controller>(
+    sys: &mut System<C>,
+    naive: bool,
+    total: &mut RunStats,
+) {
+    let s = if naive {
+        sys.run_until_idle_naive().expect("rings round (naive)")
+    } else {
+        sys.run_until_idle().expect("rings round")
+    };
+    total.absorb(s);
+}
+
+/// Ring-doorbell closed loop: `ROUNDS` batches of `batch` transfers,
+/// one doorbell + one coalesced IRQ each.
+fn run_ring(batch: usize, size: u32, profile: LatencyProfile, naive: bool) -> RunStats {
+    let params = RingParams::enabled(SQ_BASE, SQ_ENTRIES, CQ_BASE, CQ_ENTRIES)
+        .with_coalescing(batch as u32, 1 << 20);
+    let mut sys =
+        System::new(profile, Dmac::new(DmacConfig::speculation().with_ring(params)));
+    let mut drv = RingDriver::new(0, params);
+    let st = stride(size);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, ((batch * ROUNDS) as u64 * st) as usize, 0xB5);
+    let mut total = RunStats::default();
+    // First SQ doorbell lands after one MMIO write.
+    let mut sq_at = DOORBELL_COST;
+    for round in 0..ROUNDS {
+        let entries: Vec<RingEntry> = (0..batch as u64)
+            .map(|k| {
+                let idx = round as u64 * batch as u64 + k;
+                RingEntry::Memcpy {
+                    dst: map::DST_BASE + idx * st,
+                    src: map::SRC_BASE + idx * st,
+                    len: size,
+                }
+            })
+            .collect();
+        // One MMIO write publishes the whole batch.
+        drv.submit_batch(&mut sys, sq_at, &entries).expect("ring sized for the batch");
+        run_round(&mut sys, naive, &mut total);
+        // The handler's CQ-consumer doorbell is an uncached MMIO write
+        // too, serialized before the next batch's SQ doorbell.
+        let cq_at = sys.now() + DOORBELL_COST;
+        let done = drv.poll_completions(&mut sys, cq_at);
+        assert_eq!(done.len(), batch, "every batch entry completed");
+        sq_at = cq_at + DOORBELL_COST;
+    }
+    // Drain the final CQ doorbell so the launch queue empties.
+    run_round(&mut sys, naive, &mut total);
+    // `absorb` summed the per-round cumulative IRQ counters; the
+    // system's edge counter is the ground truth.
+    total.irqs = sys.irqs_seen;
+    total
+}
+
+/// CSR-launch closed loop: the pre-ring pathology — every transfer is
+/// its own chain, launched by its own serialized MMIO write and
+/// signalling its own IRQ.
+fn run_csr(batch: usize, size: u32, profile: LatencyProfile, naive: bool) -> RunStats {
+    let mut sys = System::new(profile, Dmac::new(DmacConfig::speculation()));
+    let st = stride(size);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, ((batch * ROUNDS) as u64 * st) as usize, 0xB5);
+    let mut total = RunStats::default();
+    for round in 0..ROUNDS {
+        let t0 = sys.now();
+        for k in 0..batch as u64 {
+            let idx = round as u64 * batch as u64 + k;
+            let mut cb = ChainBuilder::new();
+            cb.push_at(
+                map::DESC_BASE + k * 32,
+                Descriptor::new(map::SRC_BASE + idx * st, map::DST_BASE + idx * st, size)
+                    .with_irq(),
+            );
+            let head = cb.write_to(&mut sys.mem);
+            // Serialized per-transfer MMIO: write k lands k doorbell
+            // costs after the round starts.
+            sys.schedule_launch(t0 + (k + 1) * DOORBELL_COST, head);
+        }
+        run_round(&mut sys, naive, &mut total);
+    }
+    total.irqs = sys.irqs_seen;
+    total
+}
+
+/// Run one grid point: both launch paths over identical payloads.
+pub fn run_rings(batch: usize, size: u32, profile: LatencyProfile, naive: bool) -> RingPoint {
+    let transfers = (batch * ROUNDS) as u64;
+    assert!(transfers * stride(size) <= map::DST_BASE - map::SRC_BASE, "payload overruns arena");
+    assert!(batch as u32 <= SQ_ENTRIES, "batch exceeds the submission ring");
+    let ring = run_ring(batch, size, profile, naive);
+    let csr = run_csr(batch, size, profile, naive);
+    debug_assert_eq!(ring.total_bytes(), csr.total_bytes(), "forms moved different bytes");
+    RingPoint {
+        batch,
+        size,
+        profile: profile.name(),
+        transfers,
+        ring_cycles: ring.end_cycle,
+        csr_cycles: csr.end_cycle,
+        ring_irqs: ring.irqs,
+        csr_irqs: csr.irqs,
+        ring_doorbells: ring.ring_doorbells,
+        cq_records: ring.cq_records,
+        ring_desc_beats: ring.desc_beats,
+        csr_desc_beats: csr.desc_beats,
+    }
+}
+
+/// The full grid: batch sizes x payload sizes x the three paper memory
+/// profiles, in deterministic order on the parallel sweep executor.
+pub fn rings_grid(naive: bool) -> Vec<RingPoint> {
+    let mut tasks = Vec::new();
+    for &batch in &BATCH_SIZES {
+        for &size in &PAYLOAD_SIZES {
+            for profile in
+                [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+            {
+                tasks.push((batch, size, profile));
+            }
+        }
+    }
+    par_map(tasks, |_, (batch, size, profile)| run_rings(batch, size, profile, naive))
+}
+
+/// The machine-readable rings report (`BENCH_rings.json`, schema
+/// `idmac-rings/v1`).  Integer-only payload: exact-diffed by CI across
+/// scheduler modes and against the checked-in baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RingsReport {
+    pub points: Vec<RingPoint>,
+}
+
+impl RingsReport {
+    pub fn new(points: Vec<RingPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-rings/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"batch\": {}, \"size\": {}, \"profile\": {}, \"transfers\": {}, \
+                 \"ring_cycles\": {}, \"csr_cycles\": {}, \"ring_irqs\": {}, \
+                 \"csr_irqs\": {}, \"ring_doorbells\": {}, \"cq_records\": {}, \
+                 \"ring_desc_beats\": {}, \"csr_desc_beats\": {}}}{}\n",
+                p.batch,
+                p.size,
+                json_str(&p.profile),
+                p.transfers,
+                p.ring_cycles,
+                p.csr_cycles,
+                p.ring_irqs,
+                p.csr_irqs,
+                p.ring_doorbells,
+                p.cq_records,
+                p.ring_desc_beats,
+                p.csr_desc_beats,
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable sweep table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Rings — per-transfer CSR launch vs ring doorbell (closed loop)",
+            &[
+                "batch",
+                "size",
+                "memory",
+                "xfers",
+                "csr cyc/xfer",
+                "ring cyc/xfer",
+                "speedup",
+                "irqs csr/ring",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.batch.to_string(),
+                p.size.to_string(),
+                p.profile.clone(),
+                p.transfers.to_string(),
+                format!("{:.1}", p.csr_cpt()),
+                format!("{:.1}", p.ring_cpt()),
+                format!("{:.3}x", p.speedup()),
+                format!("{}/{}", p.csr_irqs, p.ring_irqs),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_is_identical_across_schedulers() {
+        let fast = run_rings(8, 64, LatencyProfile::Ddr3, false);
+        let naive = run_rings(8, 64, LatencyProfile::Ddr3, true);
+        assert_eq!(fast, naive, "rings point diverged across schedulers");
+    }
+
+    #[test]
+    fn cycles_per_transfer_strictly_decrease_with_batch_on_ideal_memory() {
+        // The acceptance criterion: one doorbell launching a batch
+        // amortizes the MMIO + IRQ cost, so ring cycles-per-transfer
+        // strictly decrease with batch size on the ideal profile.
+        for &size in &PAYLOAD_SIZES {
+            let cpts: Vec<f64> = BATCH_SIZES
+                .iter()
+                .map(|&b| run_rings(b, size, LatencyProfile::Ideal, false).ring_cpt())
+                .collect();
+            for w in cpts.windows(2) {
+                assert!(
+                    w[1] < w[0],
+                    "ring cycles/transfer not strictly decreasing at {size} B: {cpts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rings_beat_per_transfer_csr_launches_and_slash_irqs() {
+        let p = run_rings(64, 64, LatencyProfile::Ideal, false);
+        assert!(p.speedup() > 1.0, "ring form slower: {:?}", p);
+        assert_eq!(p.csr_irqs, p.transfers, "CSR form IRQs per transfer");
+        assert_eq!(p.ring_irqs, ROUNDS as u64, "ring form coalesces one IRQ per batch");
+        assert_eq!(p.ring_doorbells, ROUNDS as u64);
+        assert_eq!(p.cq_records, p.transfers);
+        assert!(p.irq_reduction() >= 60.0);
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wall_clock_free() {
+        let points = vec![run_rings(1, 64, LatencyProfile::Ideal, false)];
+        let a = RingsReport::new(points.clone()).to_json();
+        let b = RingsReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-rings/v1\""));
+        assert!(a.contains("\"batch\": 1"));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn grid_covers_every_axis() {
+        // Small-grid smoke: every batch size appears with every
+        // payload on DDR3 (the full 3-profile grid runs in CI).
+        let points: Vec<RingPoint> = BATCH_SIZES
+            .iter()
+            .flat_map(|&b| PAYLOAD_SIZES.iter().map(move |&s| (b, s)))
+            .map(|(b, s)| run_rings(b, s, LatencyProfile::Ddr3, false))
+            .collect();
+        assert_eq!(points.len(), BATCH_SIZES.len() * PAYLOAD_SIZES.len());
+        let table = RingsReport::new(points).to_table();
+        assert!(table.render().contains("512"));
+    }
+}

@@ -90,6 +90,17 @@ pub struct RunStats {
     pub ptw_prefetch_aborts: u64,
     /// Translation faults latched (each raises the banked fault IRQ).
     pub iommu_faults: u64,
+    /// Submission-ring doorbell writes accepted (ring mode; includes
+    /// empty doorbells that published nothing).
+    pub ring_doorbells: u64,
+    /// Descriptors consumed from submission rings.
+    pub ring_entries: u64,
+    /// Completion-ring records produced (one 8-byte write each).
+    pub cq_records: u64,
+    /// Completion records dropped because the completion ring was full
+    /// (consumer never advanced its doorbell).  Sticky evidence of a
+    /// misbehaving driver; the IRQ still coalesces the completion.
+    pub cq_overflows: u64,
     /// Final simulation cycle.
     pub end_cycle: Cycle,
 }
@@ -159,6 +170,10 @@ impl RunStats {
         self.ptw_prefetch_walks += other.ptw_prefetch_walks;
         self.ptw_prefetch_aborts += other.ptw_prefetch_aborts;
         self.iommu_faults += other.iommu_faults;
+        self.ring_doorbells += other.ring_doorbells;
+        self.ring_entries += other.ring_entries;
+        self.cq_records += other.cq_records;
+        self.cq_overflows += other.cq_overflows;
         self.end_cycle = self.end_cycle.max(other.end_cycle);
     }
 

@@ -36,6 +36,19 @@ pub fn iommu_fault_source(ch: usize) -> u32 {
     IOMMU_FAULT_SOURCE + ch as u32
 }
 
+/// First coalesced completion-ring IRQ source: one dedicated banked
+/// source per channel, above the fault bank.  In ring mode the
+/// per-transfer IRQ is replaced by this single coalesced line
+/// (threshold + timeout CSRs, DESIGN.md §10), so a batch of N
+/// completions costs one interrupt instead of N.
+pub const RING_IRQ_SOURCE: u32 = IOMMU_FAULT_SOURCE + crate::axi::MAX_CHANNELS as u32;
+
+/// PLIC source id of channel `ch`'s coalesced ring IRQ line.
+pub fn ring_irq_source(ch: usize) -> u32 {
+    debug_assert!(ch < crate::axi::MAX_CHANNELS);
+    RING_IRQ_SOURCE + ch as u32
+}
+
 /// The in-system integration: the OOC testbench plus CPU + PLIC.
 pub struct Soc<C: Controller> {
     pub sys: System<C>,
@@ -45,6 +58,8 @@ pub struct Soc<C: Controller> {
     irqs_routed: Vec<u64>,
     /// Per-channel fault edges already routed to the PLIC gateway.
     faults_routed: Vec<u64>,
+    /// Per-channel coalesced ring IRQ edges already routed.
+    ring_irqs_routed: Vec<u64>,
 }
 
 impl<C: Controller> Soc<C> {
@@ -55,6 +70,7 @@ impl<C: Controller> Soc<C> {
             plic: Plic::new(),
             irqs_routed: Vec::new(),
             faults_routed: Vec::new(),
+            ring_irqs_routed: Vec::new(),
         }
     }
 
@@ -85,6 +101,16 @@ impl<C: Controller> Soc<C> {
                 self.plic.raise(iommu_fault_source(ch));
             }
             self.faults_routed[ch] = self.sys.fault_edges[ch];
+        }
+        if self.ring_irqs_routed.len() < self.sys.ring_irq_edges.len() {
+            self.ring_irqs_routed.resize(self.sys.ring_irq_edges.len(), 0);
+        }
+        for ch in 0..self.sys.ring_irq_edges.len() {
+            let edges = self.sys.ring_irq_edges[ch] - self.ring_irqs_routed[ch];
+            for _ in 0..edges {
+                self.plic.raise(ring_irq_source(ch));
+            }
+            self.ring_irqs_routed[ch] = self.sys.ring_irq_edges[ch];
         }
     }
 
@@ -143,7 +169,7 @@ impl<C: Controller> Soc<C> {
             let now = self.sys.now();
             if let Some(src) = self.cpu.maybe_claim(&mut self.plic, now) {
                 debug_assert!(
-                    (DMAC_IRQ_SOURCE..IOMMU_FAULT_SOURCE + crate::axi::MAX_CHANNELS as u32)
+                    (DMAC_IRQ_SOURCE..RING_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32)
                         .contains(&src)
                 );
                 handler(&mut self.sys, &mut self.cpu, now);

@@ -23,13 +23,24 @@ pub const DEFAULT_MEM_BYTES: usize = 16 << 20;
 /// deadlocked (never-jumping) model.
 const BUDGET_CHECK_MASK: u64 = 0xFFF;
 
+/// One scheduled MMIO write of the launch unit.
+#[derive(Debug, Clone, Copy)]
+enum LaunchOp {
+    /// CSR chain launch: the chain head address.
+    Csr(u64),
+    /// Submission-ring doorbell: the new free-running tail index.
+    Doorbell(u64),
+    /// Completion-ring consumer doorbell: the free-running head index.
+    CqDoorbell(u64),
+}
+
 #[derive(Clone)]
 pub struct System<C: Controller> {
     pub mem: Memory,
     pub ctrl: C,
     pub monitor: BusMonitor,
-    /// Launch unit schedule: (cycle, channel, chain head address).
-    launches: VecDeque<(Cycle, usize, u64)>,
+    /// Launch unit schedule: (cycle, channel, MMIO write).
+    launches: VecDeque<(Cycle, usize, LaunchOp)>,
     ar_arb: Arbiter,
     w_arb: Arbiter,
     now: Cycle,
@@ -41,6 +52,9 @@ pub struct System<C: Controller> {
     /// Cumulative IRQ edges per channel (index = channel id; grown on
     /// first edge).  The SoC routes these to banked PLIC sources.
     pub irq_edges: Vec<u64>,
+    /// Cumulative coalesced completion-ring IRQ edges per channel.
+    /// The SoC routes these to the dedicated banked ring sources.
+    pub ring_irq_edges: Vec<u64>,
     /// Cumulative IOMMU translation-fault edges per channel.  The SoC
     /// routes these to the dedicated banked fault sources.
     pub fault_edges: Vec<u64>,
@@ -71,6 +85,7 @@ impl<C: Controller> System<C> {
             horizon: EventHorizon::default(),
             irqs_seen: 0,
             irq_edges: Vec::new(),
+            ring_irq_edges: Vec::new(),
             fault_edges: Vec::new(),
             first_ar: Vec::new(),
             first_payload_r: None,
@@ -114,7 +129,21 @@ impl<C: Controller> System<C> {
     /// Schedule a banked CSR write on channel `ch` at cycle `at`.
     pub fn schedule_launch_on(&mut self, at: Cycle, ch: usize, desc_addr: u64) {
         debug_assert!(at >= self.now);
-        self.launches.push_back((at, ch, desc_addr));
+        self.launches.push_back((at, ch, LaunchOp::Csr(desc_addr)));
+    }
+
+    /// Schedule a submission-ring doorbell write on channel `ch`:
+    /// publish ring entries up to free-running tail index `tail`.
+    pub fn schedule_doorbell(&mut self, at: Cycle, ch: usize, tail: u64) {
+        debug_assert!(at >= self.now);
+        self.launches.push_back((at, ch, LaunchOp::Doorbell(tail)));
+    }
+
+    /// Schedule a completion-ring consumer-doorbell write on channel
+    /// `ch`: software consumed records up to free-running index `head`.
+    pub fn schedule_cq_doorbell(&mut self, at: Cycle, ch: usize, head: u64) {
+        debug_assert!(at >= self.now);
+        self.launches.push_back((at, ch, LaunchOp::CqDoorbell(head)));
     }
 
     /// Backdoor-load a chain and schedule its launch `at` cycle.
@@ -133,13 +162,23 @@ impl<C: Controller> System<C> {
     /// intra-cycle protocol).
     pub fn tick(&mut self) {
         let now = self.now;
-        // Launch unit: CSR writes scheduled for this cycle.
-        while let Some(&(at, ch, addr)) = self.launches.front() {
+        // Launch unit: MMIO writes scheduled for this cycle.  The
+        // schedule need not be time-sorted (independent drivers push
+        // interleaved launches and doorbells), so scan the whole queue;
+        // eligible entries fire in queue order.
+        let mut i = 0;
+        while i < self.launches.len() {
+            let (at, ch, op) = self.launches[i];
             if at > now {
-                break;
+                i += 1;
+                continue;
             }
-            self.launches.pop_front();
-            self.ctrl.csr_write_ch(now, ch, addr);
+            let _ = self.launches.remove(i);
+            match op {
+                LaunchOp::Csr(addr) => self.ctrl.csr_write_ch(now, ch, addr),
+                LaunchOp::Doorbell(tail) => self.ctrl.ring_doorbell(now, ch, tail),
+                LaunchOp::CqDoorbell(head) => self.ctrl.ring_cq_doorbell(now, ch, head),
+            }
         }
         // Memory pipelines advance, then response channels deliver.
         self.mem.tick(now);
@@ -208,6 +247,17 @@ impl<C: Controller> System<C> {
             });
         }
         {
+            let irqs_seen = &mut self.irqs_seen;
+            let per_ch = &mut self.ring_irq_edges;
+            self.ctrl.take_ring_irq_channels(&mut |ch, n| {
+                *irqs_seen += n;
+                if per_ch.len() <= ch {
+                    per_ch.resize(ch + 1, 0);
+                }
+                per_ch[ch] += n;
+            });
+        }
+        {
             let per_ch = &mut self.fault_edges;
             self.ctrl.take_fault_channels(&mut |ch, n| {
                 if per_ch.len() <= ch {
@@ -229,7 +279,9 @@ impl<C: Controller> System<C> {
     /// or the controller's internal state machines.  `None` means the
     /// whole system is input-free (idle or deadlocked).
     pub fn next_event(&self) -> Option<Cycle> {
-        let h = self.launches.front().map(|&(at, _, _)| at);
+        // The launch schedule is not necessarily time-sorted: take the
+        // true minimum, not the front entry.
+        let h = self.launches.iter().map(|&(at, _, _)| at).min();
         let h = EventHorizon::merge(h, self.mem.next_event());
         EventHorizon::merge(h, self.ctrl.next_event())
     }

@@ -1,0 +1,131 @@
+//! Shared randomized-workload generators for the property and stress
+//! suites.
+//!
+//! Before the stress suite existed, `tests/properties.rs`,
+//! `tests/iommu.rs` and `tests/nd.rs` each re-rolled their own
+//! `random_chain`/`random_config`/`random_profile`; this module is the
+//! single generator set they (and `tests/stress.rs`) now share, so a
+//! distribution fix lands everywhere at once.
+
+use super::SplitMix64;
+use crate::dmac::{ChainBuilder, Descriptor, DmacConfig, IommuParams};
+use crate::mem::LatencyProfile;
+use crate::workload::map;
+
+/// Transfer sizes the random chains draw from: byte-granular odd
+/// sizes, bus-aligned sizes and whole-line multiples.
+pub const CHAIN_SIZES: [u32; 7] = [1, 8, 17, 64, 100, 256, 1024];
+
+/// Random race-free chain of at most `max_n` descriptors: unique
+/// destination slots (no write/write races, so overlapped backend
+/// execution equals sequential semantics), sources drawn from a
+/// disjoint region, random sizes, and random — but monotone,
+/// collision-free — descriptor placement that exercises both hits and
+/// misses of the sequential prefetcher.  Returns the chain plus its
+/// `(src, dst, size)` metadata.
+pub fn random_chain_sized(
+    rng: &mut SplitMix64,
+    max_n: u64,
+) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
+    let n = rng.range(2, max_n.clamp(2, 64)) as usize;
+    let mut cb = ChainBuilder::new();
+    let mut meta = Vec::new();
+    let mut dst_slots: Vec<u64> = (0..64).collect();
+    rng.shuffle(&mut dst_slots);
+    let mut desc_addr = map::DESC_BASE;
+    for i in 0..n {
+        let size = *rng.pick(&CHAIN_SIZES);
+        let src = map::SRC_BASE + rng.below(32) * 4096;
+        let dst = map::DST_BASE + dst_slots[i] * 4096;
+        let d = Descriptor::new(src, dst, size);
+        let d = if i + 1 == n { d.with_irq() } else { d };
+        cb.push_at(desc_addr, d);
+        meta.push((src, dst, size));
+        desc_addr += 32 * rng.range(1, 4);
+    }
+    (cb, meta)
+}
+
+/// [`random_chain_sized`] at the historical default of up to 40
+/// descriptors.
+pub fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
+    random_chain_sized(rng, 40)
+}
+
+/// Random in-flight/prefetch configuration (Table I custom point).
+pub fn random_config(rng: &mut SplitMix64) -> DmacConfig {
+    let in_flight = rng.range(1, 32) as usize;
+    let prefetch = rng.range(0, 32) as usize;
+    DmacConfig::custom(in_flight, prefetch)
+}
+
+/// Random one-way memory latency across the paper's whole sweep range.
+pub fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
+    LatencyProfile::Custom(rng.range(1, 120) as u32)
+}
+
+/// Random enabled SV39 translation stage with a small IOTLB.
+pub fn random_iommu(rng: &mut SplitMix64) -> IommuParams {
+    IommuParams::enabled(
+        rng.range(1, 16) as usize,
+        rng.range(1, 4) as usize,
+        rng.chance(0.5),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn chains_are_race_free_and_in_bounds() {
+        forall(25, |rng| {
+            let (cb, meta) = random_chain(rng);
+            assert_eq!(cb.len(), meta.len());
+            assert!((2..=40).contains(&cb.len()));
+            // Unique destination slots; arenas respected.
+            let mut dsts: Vec<u64> = meta.iter().map(|&(_, d, _)| d).collect();
+            dsts.sort_unstable();
+            dsts.dedup();
+            assert_eq!(dsts.len(), meta.len(), "destination slots must be unique");
+            for &(src, dst, size) in &meta {
+                assert!(src >= map::SRC_BASE && src + size as u64 <= map::DST_BASE);
+                assert!(dst >= map::DST_BASE && dst + size as u64 <= map::ARENA_BASE);
+            }
+            // Monotone, collision-free descriptor placement.
+            for w in cb.addrs().windows(2) {
+                assert!(w[1] >= w[0] + 32);
+            }
+            // Only the last descriptor signals.
+            let descs = cb.descriptors();
+            assert!(descs[..descs.len() - 1].iter().all(|d| !d.irq_enabled()));
+            assert!(descs.last().unwrap().irq_enabled());
+        });
+    }
+
+    #[test]
+    fn sized_chains_respect_the_cap() {
+        forall(25, |rng| {
+            let (cb, _) = random_chain_sized(rng, 6);
+            assert!((2..=6).contains(&cb.len()));
+        });
+    }
+
+    #[test]
+    fn configs_and_profiles_stay_in_range() {
+        forall(25, |rng| {
+            let cfg = random_config(rng);
+            assert!((1..=32).contains(&cfg.in_flight));
+            assert!(cfg.prefetch <= 32);
+            let LatencyProfile::Custom(l) = random_profile(rng) else {
+                panic!("random_profile must produce a custom latency");
+            };
+            assert!((1..=120).contains(&l));
+            let io = random_iommu(rng);
+            assert!(io.enabled);
+            assert!((1..=16).contains(&io.tlb_sets));
+            assert!((1..=4).contains(&io.tlb_ways));
+        });
+    }
+}

@@ -6,6 +6,8 @@
 //! al., public-domain mixing function) and [`forall`], a shrinking-free
 //! property runner that reports the failing seed for reproduction.
 
+pub mod gen;
+
 /// SplitMix64: tiny, high-quality, deterministic PRNG.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {

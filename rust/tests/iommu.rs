@@ -14,36 +14,15 @@ use idmac::mem::LatencyProfile;
 use idmac::soc::{iommu_fault_source, Soc, IOMMU_FAULT_SOURCE};
 use idmac::tb::System;
 use idmac::testutil::{forall, SplitMix64};
+// Shared generator set (rust/src/testutil/gen.rs), extracted from the
+// per-file copies this suite used to re-roll.
+use idmac::testutil::gen::{random_chain_sized, random_iommu};
 use idmac::workload::map;
 
-/// Random race-free chain on the physical map (mirrors
-/// `tests/properties.rs`).
+/// Random race-free chain on the physical map, capped at 24
+/// descriptors (the identity maps below cover that arena slice).
 fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
-    let n = rng.range(2, 24) as usize;
-    let mut cb = ChainBuilder::new();
-    let mut meta = Vec::new();
-    let mut dst_slots: Vec<u64> = (0..64).collect();
-    rng.shuffle(&mut dst_slots);
-    let mut desc_addr = map::DESC_BASE;
-    for i in 0..n {
-        let size = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
-        let src = map::SRC_BASE + rng.below(32) * 4096;
-        let dst = map::DST_BASE + dst_slots[i] * 4096;
-        let d = Descriptor::new(src, dst, size);
-        let d = if i + 1 == n { d.with_irq() } else { d };
-        cb.push_at(desc_addr, d);
-        meta.push((src, dst, size));
-        desc_addr += 32 * rng.range(1, 4);
-    }
-    (cb, meta)
-}
-
-fn random_iommu(rng: &mut SplitMix64) -> IommuParams {
-    IommuParams::enabled(
-        rng.range(1, 16) as usize,
-        rng.range(1, 4) as usize,
-        rng.chance(0.5),
-    )
+    random_chain_sized(rng, 24)
 }
 
 /// Identity-map every region a `random_chain` touches and launch it on

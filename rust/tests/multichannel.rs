@@ -6,42 +6,21 @@
 //! (d) QoS policies shape per-channel finish order as designed.
 
 use idmac::axi::{ArbPolicy, Port};
-use idmac::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, MultiChannel};
+use idmac::dmac::{ChainBuilder, Dmac, DmacConfig, MultiChannel};
 use idmac::mem::backdoor::fill_pattern;
 use idmac::mem::LatencyProfile;
 use idmac::report::contention::{channel_chain, run_contention, CH_ARENA_STRIDE};
 use idmac::tb::System;
 use idmac::testutil::{forall, SplitMix64};
+// Shared generator set (rust/src/testutil/gen.rs), extracted from the
+// per-file copies this suite used to re-roll.
+use idmac::testutil::gen::{random_chain_sized, random_config, random_profile};
 use idmac::workload::map;
 
-/// Random race-free chain on channel 0's arena (mirrors
-/// `tests/properties.rs`).
+/// Random race-free chain on channel 0's arena, capped at 30
+/// descriptors.
 fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
-    let n = rng.range(2, 30) as usize;
-    let mut cb = ChainBuilder::new();
-    let mut meta = Vec::new();
-    let mut dst_slots: Vec<u64> = (0..64).collect();
-    rng.shuffle(&mut dst_slots);
-    let mut desc_addr = map::DESC_BASE;
-    for i in 0..n {
-        let size = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
-        let src = map::SRC_BASE + rng.below(32) * 4096;
-        let dst = map::DST_BASE + dst_slots[i] * 4096;
-        let d = Descriptor::new(src, dst, size);
-        let d = if i + 1 == n { d.with_irq() } else { d };
-        cb.push_at(desc_addr, d);
-        meta.push((src, dst, size));
-        desc_addr += 32 * rng.range(1, 4);
-    }
-    (cb, meta)
-}
-
-fn random_config(rng: &mut SplitMix64) -> DmacConfig {
-    DmacConfig::custom(rng.range(1, 24) as usize, rng.range(0, 24) as usize)
-}
-
-fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
-    LatencyProfile::Custom(rng.range(1, 110) as u32)
+    random_chain_sized(rng, 30)
 }
 
 fn random_policy(rng: &mut SplitMix64) -> ArbPolicy {

@@ -45,9 +45,9 @@ fn workload_of(row_bytes: u32, nd: NdExt) -> NdWorkload {
     NdWorkload { name: "random", src: map::SRC_BASE, dst: map::DST_BASE, row_bytes, nd }
 }
 
-fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
-    LatencyProfile::Custom(rng.range(1, 110) as u32)
-}
+// Shared generator (rust/src/testutil/gen.rs), extracted from the
+// per-file copy this suite used to re-roll.
+use idmac::testutil::gen::random_profile;
 
 fn run_chain(
     chain: &ChainBuilder,

@@ -3,49 +3,18 @@
 //! payload integrity, and speculation accounting under randomized
 //! workloads, configurations and memory latencies.
 
-use idmac::dmac::{descriptor, ChainBuilder, Descriptor, Dmac, DmacConfig};
+use idmac::dmac::{descriptor, ChainBuilder, Descriptor, Dmac, DmacConfig, RingParams};
 use idmac::mem::backdoor::fill_pattern;
 use idmac::mem::LatencyProfile;
 use idmac::model::ideal_utilization;
 use idmac::tb::System;
-use idmac::testutil::{forall, SplitMix64};
+use idmac::testutil::forall;
+// Shared generator set (extracted from this file; also used by
+// tests/iommu.rs, tests/nd.rs and tests/stress.rs).
+use idmac::testutil::gen::{random_chain, random_config, random_profile};
 use idmac::workload::map;
 
 const CASES: u64 = 30;
-
-/// Random race-free chain: unique destination slots, sources drawn
-/// from a disjoint region, random sizes.
-fn random_chain(rng: &mut SplitMix64) -> (ChainBuilder, Vec<(u64, u64, u32)>) {
-    let n = rng.range(2, 40) as usize;
-    let mut cb = ChainBuilder::new();
-    let mut meta = Vec::new();
-    let mut dst_slots: Vec<u64> = (0..64).collect();
-    rng.shuffle(&mut dst_slots);
-    let mut desc_addr = map::DESC_BASE;
-    for i in 0..n {
-        let size = *rng.pick(&[1u32, 8, 17, 64, 100, 256, 1024]);
-        let src = map::SRC_BASE + rng.below(32) * 4096;
-        let dst = map::DST_BASE + dst_slots[i] * 4096;
-        let d = Descriptor::new(src, dst, size);
-        let d = if i + 1 == n { d.with_irq() } else { d };
-        cb.push_at(desc_addr, d);
-        meta.push((src, dst, size));
-        // Random (but monotone, collision-free) descriptor placement:
-        // exercises both hits and misses of the prefetcher.
-        desc_addr += 32 * rng.range(1, 4);
-    }
-    (cb, meta)
-}
-
-fn random_config(rng: &mut SplitMix64) -> DmacConfig {
-    let in_flight = rng.range(1, 32) as usize;
-    let prefetch = rng.range(0, 32) as usize;
-    DmacConfig::custom(in_flight, prefetch)
-}
-
-fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
-    LatencyProfile::Custom(rng.range(1, 120) as u32)
-}
 
 #[test]
 fn prop_every_chain_completes_and_moves_payload() {
@@ -227,6 +196,43 @@ fn prop_fast_forward_matches_naive_tick_loop() {
                 assert!(fast.horizon.jumps > 0, "no fast-forward happened at L=100");
             }
         }
+    });
+}
+
+#[test]
+fn prop_ring_capable_config_is_cycle_identical_when_unused() {
+    // The ring subsystem's acceptance property: ring mode off is the
+    // default, and a ring-capable DMAC that never sees a doorbell must
+    // be cycle-identical to the pre-ring DMAC on every chain workload —
+    // same RunStats (completion log, beat counts, IRQ edges), same
+    // final clock, same memory image, under both schedulers.
+    forall(CASES, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let ringed = cfg.with_ring(
+            RingParams::enabled(map::DESC_BASE + 0x20_0000, 64, map::DESC_BASE + 0x28_0000, 64)
+                .with_coalescing(1 + rng.below(4) as u32, 32),
+        );
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let run = |cfg: DmacConfig, naive: bool| {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = if naive {
+                sys.run_until_idle_naive().unwrap()
+            } else {
+                sys.run_until_idle().unwrap()
+            };
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        let bare = run(cfg, false);
+        let ring_fast = run(ringed, false);
+        let ring_naive = run(ringed, true);
+        assert_eq!(bare, ring_fast, "idle ring changed behavior: cfg={cfg:?} {profile:?}");
+        assert_eq!(bare, ring_naive, "idle ring diverged under the naive loop");
+        assert_eq!(ring_fast.0.ring_doorbells, 0);
+        assert_eq!(ring_fast.0.ring_entries, 0);
     });
 }
 

@@ -1,0 +1,349 @@
+//! Cross-feature randomized differential stress suite.
+//!
+//! Every case samples a random point in the full feature cross product
+//! — {multi-channel × IOMMU translation × ND-affine descriptors ×
+//! submission/completion rings × arbitration policy × memory latency}
+//! — builds the identical system twice from one deterministic plan,
+//! runs it under both schedulers, and asserts on every sampled point:
+//!
+//! * **byte conservation** — every expected row (including hardware-
+//!   expanded ND rows) landed byte-exact at its destination, and the
+//!   completion log accounts for exactly the planned payload;
+//! * **naive-vs-event-horizon cycle identity** — bit-identical
+//!   `RunStats`, final clock and memory image across the two loops;
+//! * **IRQ-count conservation** — chain channels raise exactly one
+//!   per-descriptor IRQ (the last descriptor signals), ring channels
+//!   raise between `ceil(n/threshold)` and `n` coalesced edges, and
+//!   completion-ring records account for every ring entry with zero
+//!   overflows.
+//!
+//! Cases are seeded deterministically by `testutil::forall`.  The
+//! quick profile (default, CI matrix) runs a subset; the full ≥200-case
+//! profile runs under `IDMAC_STRESS_FULL=1` (the bench-regression CI
+//! job sets it).
+
+use idmac::axi::ArbPolicy;
+use idmac::dmac::{
+    descriptor, ChainBuilder, Descriptor, DmacConfig, IommuParams, NdExt, RingParams,
+};
+use idmac::driver::{DmaMapper, RingDriver, RingEntry};
+use idmac::iommu::IommuDmac;
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::sim::Cycle;
+use idmac::tb::System;
+use idmac::testutil::{forall, SplitMix64};
+use idmac::workload::map;
+
+/// Quick profile for the CI matrix; `IDMAC_STRESS_FULL=1` runs the
+/// full ≥200-case profile (the bench-regression job).
+fn cases() -> u64 {
+    match std::env::var("IDMAC_STRESS_FULL") {
+        Ok(v) if v == "1" => 200,
+        _ => 48,
+    }
+}
+
+/// Per-channel destination slots (4 KiB each): disjoint ranges keep
+/// the sampled workloads race-free across channels.
+const SLOTS_PER_CHANNEL: u64 = 21;
+
+fn chain_desc_base(ch: usize) -> u64 {
+    map::DESC_BASE + ch as u64 * 0x1_0000
+}
+
+fn sq_base(ch: usize) -> u64 {
+    map::DESC_BASE + 0x10_0000 + ch as u64 * 0x1_0000
+}
+
+fn cq_base(ch: usize) -> u64 {
+    map::DESC_BASE + 0x20_0000 + ch as u64 * 0x1000
+}
+
+fn dst_slot_addr(ch: usize, slot: u64) -> u64 {
+    map::DST_BASE + (ch as u64 * SLOTS_PER_CHANNEL + slot) * 4096
+}
+
+#[derive(Clone)]
+enum ChannelWork {
+    Chain { cb: ChainBuilder, launch_at: Cycle },
+    Ring { params: RingParams, batches: Vec<(Cycle, Vec<RingEntry>)> },
+}
+
+/// A fully deterministic case: building the system twice from one plan
+/// yields bit-identical initial states for the two scheduler runs.
+#[derive(Clone)]
+struct Plan {
+    cfgs: Vec<DmacConfig>,
+    work: Vec<ChannelWork>,
+    policy: ArbPolicy,
+    profile: LatencyProfile,
+    seed: u32,
+    /// Expected `(src, dst, len)` rows, ND expansion included.
+    expected: Vec<(u64, u64, u32)>,
+    /// Descriptors executed (one completion each; an ND descriptor is
+    /// one completion no matter how many rows it expands to).
+    total_descs: usize,
+    /// Ring entries per channel (empty slot = chain channel).
+    ring_entries: Vec<usize>,
+    /// Chain descriptor addresses (carry the completion stamp).
+    chain_stamp_addrs: Vec<u64>,
+    /// Ring head-slot addresses (must NOT be stamped in ring mode).
+    ring_head_addrs: Vec<u64>,
+}
+
+/// Random ND row shape shared by both work kinds: up to 4 rows of up
+/// to 256 B, destination rows packed at 1 KiB strides inside the
+/// 4 KiB slot (race-free by construction).
+fn nd_shape(rng: &mut SplitMix64) -> (u32, u32, u32) {
+    let reps = rng.range(2, 4) as u32;
+    let row = *rng.pick(&[8u32, 64, 256]);
+    let src_stride = rng.range(0, 2048) as u32;
+    (reps, row, src_stride)
+}
+
+fn gen_plan(rng: &mut SplitMix64) -> Plan {
+    let nch = rng.range(1, 3) as usize;
+    let policy = *rng.pick(&[
+        ArbPolicy::RoundRobin,
+        ArbPolicy::WeightedRoundRobin,
+        ArbPolicy::StrictPriority,
+    ]);
+    let profile = LatencyProfile::Custom(rng.range(1, 80) as u32);
+    let seed = rng.next_u64() as u32;
+    let mut plan = Plan {
+        cfgs: Vec::new(),
+        work: Vec::new(),
+        policy,
+        profile,
+        seed,
+        expected: Vec::new(),
+        total_descs: 0,
+        ring_entries: vec![0; nch],
+        chain_stamp_addrs: Vec::new(),
+        ring_head_addrs: Vec::new(),
+    };
+    for c in 0..nch {
+        let mut cfg = DmacConfig::custom(rng.range(1, 10) as usize, rng.range(0, 10) as usize)
+            .with_weight(rng.range(1, 4) as u32);
+        if rng.chance(0.25) {
+            cfg = cfg.without_nd();
+        }
+        if rng.chance(0.35) {
+            cfg = cfg.with_iommu(IommuParams::enabled(
+                rng.range(1, 8) as usize,
+                rng.range(1, 3) as usize,
+                rng.chance(0.5),
+            ));
+        }
+        let mut slots: Vec<u64> = (0..SLOTS_PER_CHANNEL).collect();
+        rng.shuffle(&mut slots);
+        let n = rng.range(2, 8) as usize;
+        if rng.chance(0.45) {
+            // Ring channel: entries split over 1-3 doorbells.
+            let threshold = rng.range(1, 4) as u32;
+            let params = RingParams::enabled(sq_base(c), 32, cq_base(c), 64)
+                .with_coalescing(threshold, rng.range(8, 64) as u32);
+            cfg = cfg.with_ring(params);
+            let mut entries = Vec::new();
+            let mut slot_idx = 0u64; // free-running SQ slot of the next entry
+            for k in 0..n {
+                let dst = dst_slot_addr(c, slots[k]);
+                let src = map::SRC_BASE + rng.below(32) * 4096;
+                plan.ring_head_addrs.push(params.sq_base + (slot_idx % 32) * 32);
+                if cfg.nd_enabled && rng.chance(0.3) {
+                    let (reps, row, src_stride) = nd_shape(rng);
+                    let nd = NdExt {
+                        reps: [reps, 1],
+                        src_stride: [src_stride, 0],
+                        dst_stride: [1024, 0],
+                    };
+                    entries.push(RingEntry::Nd { dst, src, row_bytes: row, nd });
+                    for r in 0..reps as u64 {
+                        plan.expected.push((src + r * src_stride as u64, dst + r * 1024, row));
+                    }
+                    slot_idx += 2;
+                } else {
+                    let len = *rng.pick(&[1u32, 8, 64, 100, 256, 1024]);
+                    entries.push(RingEntry::Memcpy { dst, src, len });
+                    plan.expected.push((src, dst, len));
+                    slot_idx += 1;
+                }
+            }
+            plan.total_descs += n;
+            plan.ring_entries[c] = n;
+            let nb = rng.range(1, 3).min(n as u64) as usize;
+            let per = n.div_ceil(nb);
+            let batches = entries
+                .chunks(per)
+                .map(|chunk| (rng.below(60), chunk.to_vec()))
+                .collect();
+            plan.work.push(ChannelWork::Ring { params, batches });
+        } else {
+            // Chain channel: one CSR-launched chain, last desc IRQs.
+            let mut cb = ChainBuilder::new();
+            let mut desc_addr = chain_desc_base(c);
+            for k in 0..n {
+                let dst = dst_slot_addr(c, slots[k]);
+                let src = map::SRC_BASE + rng.below(32) * 4096;
+                let mut d;
+                if cfg.nd_enabled && rng.chance(0.3) {
+                    let (reps, row, src_stride) = nd_shape(rng);
+                    d = Descriptor::new(src, dst, row).with_nd(reps, src_stride, 1024);
+                    for r in 0..reps as u64 {
+                        plan.expected.push((src + r * src_stride as u64, dst + r * 1024, row));
+                    }
+                } else {
+                    let len = *rng.pick(&[1u32, 8, 64, 100, 256, 1024]);
+                    d = Descriptor::new(src, dst, len);
+                    plan.expected.push((src, dst, len));
+                }
+                if k + 1 == n {
+                    d = d.with_irq();
+                }
+                plan.chain_stamp_addrs.push(desc_addr);
+                cb.push_at(desc_addr, d);
+                // Monotone collision-free placement past the span
+                // (64 B for ND descriptors): hit/miss mix for the
+                // prefetcher.
+                desc_addr += d.span() + 32 * rng.range(0, 2);
+            }
+            plan.total_descs += n;
+            plan.work.push(ChannelWork::Chain { cb, launch_at: rng.below(20) });
+        }
+        plan.cfgs.push(cfg);
+    }
+    plan
+}
+
+/// Deterministically materialize a plan into a ready-to-run system.
+fn build(plan: &Plan) -> System<IommuDmac> {
+    let mut sys =
+        System::new(plan.profile, IommuDmac::new(&plan.cfgs)).with_arbitration(plan.policy);
+    if plan.cfgs.iter().any(|c| c.iommu.enabled) {
+        let mut mapper =
+            DmaMapper::new(&mut sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();
+        // Identity-map everything any channel touches: descriptor
+        // pools + rings, sources, destinations.
+        mapper.map_identity(&mut sys.mem, map::DESC_BASE, map::DESC_SIZE).unwrap();
+        mapper.map_identity(&mut sys.mem, map::SRC_BASE, 40 * 4096).unwrap();
+        mapper
+            .map_identity(&mut sys.mem, map::DST_BASE, 3 * SLOTS_PER_CHANNEL * 4096)
+            .unwrap();
+        for (c, cfg) in plan.cfgs.iter().enumerate() {
+            if cfg.iommu.enabled {
+                sys.ctrl.set_root(c, mapper.root());
+            }
+        }
+    }
+    // Sources: 32 4-KiB windows plus the widest ND source extent.
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096 + 8 * 1024, plan.seed);
+    for (c, w) in plan.work.iter().enumerate() {
+        match w {
+            ChannelWork::Chain { cb, launch_at } => {
+                sys.load_and_launch_on(*launch_at, c, cb);
+            }
+            ChannelWork::Ring { params, batches } => {
+                let mut drv = RingDriver::new(c, *params);
+                for (at, entries) in batches {
+                    drv.submit_batch(&mut sys, *at, entries).expect("ring sized for the plan");
+                }
+            }
+        }
+    }
+    sys
+}
+
+#[test]
+fn stress_cross_feature_differential() {
+    let dst_extent = (3 * SLOTS_PER_CHANNEL * 4096) as usize;
+    forall(cases(), |rng| {
+        let plan = gen_plan(rng);
+        let mut fast = build(&plan);
+        let mut naive = build(&plan);
+        let f = fast.run_until_idle().unwrap();
+        let n = naive.run_until_idle_naive().unwrap();
+
+        // (1) Naive-vs-event-horizon cycle identity.
+        assert_eq!(f, n, "RunStats diverged: {:?} {:?}", plan.policy, plan.profile);
+        assert_eq!(fast.now(), naive.now(), "clock diverged");
+        assert_eq!(
+            fast.mem.backdoor_read(map::DST_BASE, dst_extent),
+            naive.mem.backdoor_read(map::DST_BASE, dst_extent),
+            "memory image diverged"
+        );
+
+        // (2) Byte conservation: every planned row landed byte-exact,
+        // and the completion log accounts for exactly the payload.
+        for &(src, dst, len) in &plan.expected {
+            assert_eq!(
+                fast.mem.backdoor_read(src, len as usize).to_vec(),
+                fast.mem.backdoor_read(dst, len as usize).to_vec(),
+                "row src={src:#x} dst={dst:#x} len={len}"
+            );
+        }
+        assert_eq!(f.completions.len(), plan.total_descs);
+        let planned_bytes: u64 = plan.expected.iter().map(|&(_, _, l)| l as u64).sum();
+        assert_eq!(f.total_bytes(), planned_bytes, "completion log lost payload");
+        assert_eq!(f.iommu_faults, 0, "identity-mapped run must not fault");
+
+        // (3) IRQ-count conservation.
+        let mut expected_chain_irqs: u64 = 0;
+        for (c, w) in plan.work.iter().enumerate() {
+            let chain_edges = fast.irq_edges.get(c).copied().unwrap_or(0);
+            let ring_edges = fast.ring_irq_edges.get(c).copied().unwrap_or(0);
+            match w {
+                ChannelWork::Chain { .. } => {
+                    assert_eq!(chain_edges, 1, "chain channel {c}: one IRQ per chain");
+                    assert_eq!(ring_edges, 0, "chain channel {c} must not touch the ring line");
+                    expected_chain_irqs += 1;
+                }
+                ChannelWork::Ring { params, .. } => {
+                    let entries = plan.ring_entries[c] as u64;
+                    let threshold = params.irq_threshold as u64;
+                    assert_eq!(chain_edges, 0, "ring channel {c} must not stamp-IRQ");
+                    assert!(
+                        ring_edges >= entries.div_ceil(threshold) && ring_edges <= entries,
+                        "ring channel {c}: {ring_edges} edges for {entries} entries \
+                         at threshold {threshold}"
+                    );
+                }
+            }
+        }
+        let ring_total: u64 = plan.ring_entries.iter().map(|&n| n as u64).sum();
+        assert_eq!(f.cq_records, ring_total, "every ring entry gets a CQ record");
+        assert_eq!(f.cq_overflows, 0, "sized CQs must not overflow");
+        assert_eq!(f.ring_entries, ring_total);
+        assert_eq!(
+            f.irqs,
+            expected_chain_irqs
+                + plan
+                    .work
+                    .iter()
+                    .enumerate()
+                    .map(|(c, _)| fast.ring_irq_edges.get(c).copied().unwrap_or(0))
+                    .sum::<u64>(),
+            "total IRQ edges = chain edges + coalesced ring edges"
+        );
+
+        // (4) Feedback-path invariants: chain descriptors carry the
+        // in-place stamp; ring slots never do (completion goes to the
+        // CQ instead).
+        for &addr in &plan.chain_stamp_addrs {
+            assert!(descriptor::is_completed(&fast.mem, addr), "unstamped chain desc {addr:#x}");
+        }
+        for &addr in &plan.ring_head_addrs {
+            assert!(!descriptor::is_completed(&fast.mem, addr), "stamped ring slot {addr:#x}");
+        }
+    });
+}
+
+#[test]
+fn stress_profile_is_env_switchable() {
+    // The CI matrix runs the quick profile; IDMAC_STRESS_FULL=1 (set
+    // by the bench-regression job) runs the full sweep.
+    assert!(cases() >= 48);
+    if std::env::var("IDMAC_STRESS_FULL").as_deref() == Ok("1") {
+        assert!(cases() >= 200, "full profile must run at least 200 cases");
+    }
+}
