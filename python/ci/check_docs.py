@@ -32,15 +32,18 @@ REQUIRED_SECTIONS = {
         "Experiment index",
         "Virtual memory & IOMMU",
         "Rings",
+        "Error model and recovery",
     ],
     "EXPERIMENTS.md": [
         "Contention",
         "Translation",
         "Rings",
+        "Faults",
         "BENCH_multichannel.json",
         "BENCH_sim_throughput.json",
         "BENCH_translation.json",
         "BENCH_rings.json",
+        "BENCH_faults.json",
     ],
 }
 

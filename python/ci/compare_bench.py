@@ -32,6 +32,12 @@ fields are ignored by design, so runner speed cannot flake the build:
     ring-doorbell grid) with the same protocol against the
     ``idmac-rings/v1`` schema.
 
+``faults``
+    Validates ``BENCH_faults.json``-shaped files (the fault-injection
+    goodput/recovery grid) with the same protocol against the
+    ``idmac-faults/v1`` schema.  The fault plan is a pure function of
+    its seed, so the grid is exact-diffed like every other point grid.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -184,6 +190,10 @@ def check_rings(fast_path: str, naive_path: str, baseline_path: str) -> None:
     check_point_grid(fast_path, naive_path, baseline_path, "idmac-rings/v1", "rings")
 
 
+def check_faults(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(fast_path, naive_path, baseline_path, "idmac-faults/v1", "faults")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -213,6 +223,11 @@ def main() -> None:
     rg.add_argument("--naive", required=True)
     rg.add_argument("--baseline", required=True)
 
+    fl = sub.add_parser("faults")
+    fl.add_argument("--fast", required=True)
+    fl.add_argument("--naive", required=True)
+    fl.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
@@ -222,8 +237,10 @@ def main() -> None:
         check_translation(args.fast, args.naive, args.baseline)
     elif args.mode == "nd":
         check_nd(args.fast, args.naive, args.baseline)
-    else:
+    elif args.mode == "rings":
         check_rings(args.fast, args.naive, args.baseline)
+    else:
+        check_faults(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

@@ -162,6 +162,66 @@ def test_rings_rejects_nd_schema(tmp_path):
     assert "unexpected schema" in r.stderr
 
 
+FAULTS_POINT = {
+    "rate_ppm": 10000,
+    "size": 4096,
+    "profile": "DDR3 (13 cycles)",
+    "transfers": 12,
+    "completed": 11,
+    "failed": 1,
+    "retries": 9,
+    "resets": 2,
+    "cycles": 480000,
+    "recovery_cycles": 65000,
+    "goodput_bytes": 45056,
+    "axi_slverrs": 14,
+    "fault_halts": 2,
+    "aborted_transfers": 12,
+    "watchdog_trips": 0,
+    "error_irqs": 14,
+}
+
+
+def test_faults_identical_grids_pass_with_bootstrap_baseline(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-faults/v1", [FAULTS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-faults/v1", [FAULTS_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-faults/v1", []))
+    r = run(["faults", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "bootstrap mode" in r.stdout
+
+
+def test_faults_scheduler_divergence_fails(tmp_path):
+    # A fault plan that fired differently across schedulers shows up as
+    # diverging counters, not just cycles — any field difference gates.
+    diverged = dict(FAULTS_POINT, axi_slverrs=15)
+    fast = write(tmp_path / "fast.json", point_doc("idmac-faults/v1", [FAULTS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-faults/v1", [diverged]))
+    base = write(tmp_path / "base.json", point_doc("idmac-faults/v1", []))
+    r = run(["faults", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "not deterministic" in r.stderr
+
+
+def test_faults_baseline_drift_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-faults/v1", [FAULTS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-faults/v1", [FAULTS_POINT]))
+    drifted = dict(FAULTS_POINT, recovery_cycles=64999)
+    base = write(tmp_path / "base.json", point_doc("idmac-faults/v1", [drifted]))
+    r = run(["faults", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "drifted" in r.stderr
+
+
+def test_faults_rejects_rings_schema(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-rings/v1", [FAULTS_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-rings/v1", [FAULTS_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-faults/v1", []))
+    r = run(["faults", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "unexpected schema" in r.stderr
+
+
 def test_throughput_mode_gates_cycle_identity(tmp_path):
     entry = {
         "label": "fig4-grid/DDR3 (13 cycles)",
@@ -201,6 +261,7 @@ def test_repo_baselines_parse_and_use_known_schemas():
         "BENCH_translation.json": "idmac-translation/v1",
         "BENCH_nd.json": "idmac-nd/v1",
         "BENCH_rings.json": "idmac-rings/v1",
+        "BENCH_faults.json": "idmac-faults/v1",
     }
     for name, schema in expected.items():
         path = os.path.join(repo, name)

@@ -19,5 +19,6 @@ pub mod types;
 pub use arbiter::{ArbPolicy, Arbiter};
 pub use monitor::BusMonitor;
 pub use types::{
-    Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, CHANNEL_TRIPLES, MAX_CHANNELS,
+    Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, CHANNEL_TRIPLES,
+    ERR_DECERR, ERR_SLVERR, ERR_TIMEOUT, MAX_CHANNELS,
 };

@@ -179,6 +179,46 @@ impl Port {
     }
 }
 
+/// AXI4 response status carried on R beats and B responses.
+///
+/// The variant order is the containment-severity order (`Okay` <
+/// `SlvErr` < `DecErr`), so a burst's worst response is `fold(max)`
+/// over its beats — exactly how the model collapses a multi-beat write
+/// burst into the single B response AXI defines for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Resp {
+    /// Transfer succeeded.
+    #[default]
+    Okay,
+    /// Slave error: the target exists but failed the access.
+    SlvErr,
+    /// Decode error: no slave at this address (out-of-range traffic).
+    DecErr,
+}
+
+impl Resp {
+    pub fn is_err(self) -> bool {
+        self != Resp::Okay
+    }
+
+    /// Channel-error CSR code for this response (0 is reserved for
+    /// "no error", [`ERR_TIMEOUT`] for watchdog timeouts).
+    pub fn error_code(self) -> u16 {
+        match self {
+            Resp::Okay => 0,
+            Resp::SlvErr => ERR_SLVERR,
+            Resp::DecErr => ERR_DECERR,
+        }
+    }
+}
+
+/// Channel-error CSR code: AXI SLVERR on a beat or response.
+pub const ERR_SLVERR: u16 = 1;
+/// Channel-error CSR code: AXI DECERR (address decode failure).
+pub const ERR_DECERR: u16 = 2;
+/// Channel-error CSR code: per-channel watchdog timeout.
+pub const ERR_TIMEOUT: u16 = 3;
+
 /// A read request (AR): `beats` R beats will be returned in order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReadReq {
@@ -221,6 +261,8 @@ pub struct RBeat {
     /// Beat payload; only the first `bytes` entries are valid.
     pub data: [u8; 8],
     pub bytes: u32,
+    /// Per-beat response status (AXI `rresp`).
+    pub resp: Resp,
 }
 
 /// One write beat (fused AW+W): 1..=8 bytes at `addr`.

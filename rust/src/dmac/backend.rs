@@ -9,7 +9,7 @@
 //! transfers for semantics tests with intra-chain data dependences.
 
 use super::frontend::ParsedTransfer;
-use crate::axi::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT};
+use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT};
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, MonotonicQueue, RunStats, Tickable};
 use std::collections::VecDeque;
@@ -25,6 +25,16 @@ struct Active {
     read_issued: u64,
     /// Bytes received from memory (and pushed into the write pipe).
     read_done: u64,
+    /// Read beats issued / received — the drain accounting an abort
+    /// needs (byte offsets can't recover beat counts across ND rows
+    /// with partial tail beats).
+    beats_issued: u64,
+    beats_done: u64,
+    /// First error observed on this transfer (0 = clean).  Once set,
+    /// the engine stops issuing reads and writes for the transfer and
+    /// merely drains its in-flight beats; the completion is poisoned
+    /// with this code.
+    error: u16,
     /// Eligible to start issuing reads at this cycle (engine start
     /// overhead; 0 for our backend, >0 for the LogiCORE model).
     eligible_at: Cycle,
@@ -83,6 +93,10 @@ pub struct TransferDone {
     /// The transfer was consumed from the submission ring: the
     /// feedback logic reports it through the completion ring.
     pub ring: bool,
+    /// Completion status: 0 = clean, otherwise the channel error code
+    /// (SLVERR/DECERR/TIMEOUT) — the feedback logic poisons the stamp
+    /// or CQ record with it.
+    pub status: u16,
 }
 
 #[derive(Debug, Clone)]
@@ -102,7 +116,16 @@ pub struct Backend {
     next_id: u64,
     /// §Perf: number of `active` transfers with unissued read bursts —
     /// `wants_ar` runs every cycle and must not rescan the queue.
+    /// Counts only clean transfers: an errored one stops reading.
     reads_pending: usize,
+    /// Aborted transfers with read beats still in flight: `(tag, beats
+    /// remaining)`.  Arriving beats are swallowed until each burst
+    /// drains (the bus contract: every issued beat is delivered).
+    draining: Vec<(u64, u64)>,
+    /// B responses owed to transfers that were flushed by a channel
+    /// reset: a late B for an unknown tag is tolerated while this is
+    /// nonzero (it may also never arrive, if withheld).
+    flushed_b: usize,
 }
 
 impl Backend {
@@ -128,6 +151,8 @@ impl Backend {
             completions: Vec::new(),
             next_id: 0,
             reads_pending: 0,
+            draining: Vec::new(),
+            flushed_b: 0,
         }
     }
 
@@ -161,6 +186,7 @@ impl Backend {
                 desc_addr: t.desc_addr,
                 irq: t.irq,
                 ring: t.ring,
+                status: 0,
             });
             return;
         }
@@ -169,6 +195,9 @@ impl Backend {
             t,
             read_issued: 0,
             read_done: 0,
+            beats_issued: 0,
+            beats_done: 0,
+            error: 0,
             eligible_at: now + self.start_overhead as Cycle,
         });
         self.reads_pending += 1;
@@ -179,15 +208,20 @@ impl Backend {
             // Only the oldest transfer may move.
             let f = self.active.front()?;
             let oldest_everywhere = self.awaiting_b.is_empty() && self.write_pipe.is_empty();
-            if oldest_everywhere && f.eligible_at <= now && f.read_issued < f.total_len() {
+            if oldest_everywhere
+                && f.error == 0
+                && f.eligible_at <= now
+                && f.read_issued < f.total_len()
+            {
                 return Some(0);
             }
             return None;
         }
-        // In-order burst issue: first transfer with outstanding reads.
+        // In-order burst issue: first clean transfer with outstanding
+        // reads (an errored transfer only drains, it never reads more).
         self.active
             .iter()
-            .position(|a| a.eligible_at <= now && a.read_issued < a.total_len())
+            .position(|a| a.error == 0 && a.eligible_at <= now && a.read_issued < a.total_len())
     }
 
     pub fn wants_ar(&self) -> bool {
@@ -195,7 +229,7 @@ impl Backend {
         // eligibility; the testbench calls wants/pop in the same cycle.
         debug_assert_eq!(
             self.reads_pending,
-            self.active.iter().filter(|a| a.read_issued < a.total_len()).count()
+            self.active.iter().filter(|a| a.error == 0 && a.read_issued < a.total_len()).count()
         );
         self.reads_pending > 0
     }
@@ -211,6 +245,7 @@ impl Backend {
         let beats = (remaining.div_ceil(BYTES_PER_BEAT) as u32).min(MAX_BURST_BEATS);
         let req = ReadReq::new(self.port, a.id, addr, beats);
         a.read_issued += (beats as u64 * BYTES_PER_BEAT).min(remaining);
+        a.beats_issued += beats as u64;
         if a.read_issued >= a.total_len() {
             self.reads_pending -= 1;
         }
@@ -219,8 +254,25 @@ impl Backend {
     }
 
     /// Payload read-data beat: enters the 1-cycle r→w datapath.
+    ///
+    /// An errored beat aborts its transfer: the engine stops issuing
+    /// reads and writes for it, drains the beats already in flight
+    /// (every issued beat is delivered — the bus contract), and pushes
+    /// a poisoned completion once the last one lands.  Beats for
+    /// transfers flushed by `abort_all`/`reset` are swallowed through
+    /// the `draining` list.
     pub fn on_payload_beat(&mut self, now: Cycle, beat: RBeat, stats: &mut RunStats) {
         stats.payload_read_beats += 1;
+        if beat.resp.is_err() {
+            stats.count_axi_error(beat.resp);
+        }
+        if let Some(i) = self.draining.iter().position(|(tag, _)| *tag == beat.tag) {
+            self.draining[i].1 -= 1;
+            if self.draining[i].1 == 0 {
+                self.draining.swap_remove(i);
+            }
+            return;
+        }
         // §Perf: the memory serves per-port FIFO, so beats almost
         // always belong to the oldest active transfer — check it first
         // before falling back to a scan.
@@ -233,6 +285,29 @@ impl Backend {
                 .expect("payload beat for unknown transfer"),
         };
         let a = &mut self.active[idx];
+        a.beats_done += 1;
+        if a.error != 0 || beat.resp.is_err() {
+            if a.error == 0 {
+                a.error = beat.resp.error_code();
+                stats.aborted_transfers += 1;
+                if a.read_issued < a.total_len() {
+                    // Unissued bursts are cancelled by the abort.
+                    self.reads_pending -= 1;
+                }
+            }
+            if a.beats_done == a.beats_issued {
+                let done = self.active.remove(idx).unwrap();
+                self.completions.push(TransferDone {
+                    cycle: now,
+                    bytes: 0,
+                    desc_addr: done.t.desc_addr,
+                    irq: done.t.irq,
+                    ring: done.t.ring,
+                    status: done.error,
+                });
+            }
+            return;
+        }
         let off = a.read_done;
         let total = a.total_len();
         let (addr, row_rem) = a.dst_at(off);
@@ -258,20 +333,34 @@ impl Backend {
         Some(w)
     }
 
-    /// B response of the last write beat: the transfer is complete.
-    pub fn on_write_b(&mut self, now: Cycle, b: BResp, _stats: &mut RunStats) {
-        let idx = self
-            .awaiting_b
-            .iter()
-            .position(|(id, _)| *id == b.tag)
-            .expect("B for unknown transfer");
+    /// B response of the last write beat: the transfer is complete —
+    /// cleanly, or poisoned with the burst's error code when the write
+    /// side faulted.
+    pub fn on_write_b(&mut self, now: Cycle, b: BResp, stats: &mut RunStats) {
+        if b.resp.is_err() {
+            stats.count_axi_error(b.resp);
+        }
+        let idx = match self.awaiting_b.iter().position(|(id, _)| *id == b.tag) {
+            Some(idx) => idx,
+            None => {
+                // A late B for a transfer flushed by a channel reset.
+                debug_assert!(self.flushed_b > 0, "B for unknown transfer");
+                self.flushed_b = self.flushed_b.saturating_sub(1);
+                return;
+            }
+        };
         let (_, a) = self.awaiting_b.swap_remove(idx);
+        let status = b.resp.error_code();
+        if status != 0 {
+            stats.aborted_transfers += 1;
+        }
         self.completions.push(TransferDone {
             cycle: now,
-            bytes: a.total_len(),
+            bytes: if status == 0 { a.total_len() } else { 0 },
             desc_addr: a.t.desc_addr,
             irq: a.t.irq,
             ring: a.t.ring,
+            status,
         });
     }
 
@@ -279,6 +368,75 @@ impl Backend {
 
     pub fn drain_completions(&mut self) -> Vec<TransferDone> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// The engine is owed a bus response: read beats in flight (active
+    /// or draining) or an outstanding B.  This is the condition that
+    /// arms the channel watchdog — a wedge can only happen while a
+    /// response is owed.
+    pub fn awaiting_response(&self) -> bool {
+        !self.awaiting_b.is_empty()
+            || !self.draining.is_empty()
+            || self.active.iter().any(|a| a.beats_done < a.beats_issued)
+    }
+
+    /// Watchdog abort: poison-complete every in-flight transfer with
+    /// `code`, cancel queued work, and leave only the drain accounting
+    /// for beats the bus still owes us.  Returns how many transfers
+    /// were aborted.
+    pub fn abort_all(&mut self, now: Cycle, code: u16, stats: &mut RunStats) -> usize {
+        debug_assert!(code != 0);
+        let mut aborted = 0;
+        for a in std::mem::take(&mut self.active) {
+            if a.beats_done < a.beats_issued {
+                self.draining.push((a.id, a.beats_issued - a.beats_done));
+            }
+            aborted += 1;
+            self.completions.push(TransferDone {
+                cycle: now,
+                bytes: 0,
+                desc_addr: a.t.desc_addr,
+                irq: a.t.irq,
+                ring: a.t.ring,
+                status: if a.error != 0 { a.error } else { code },
+            });
+        }
+        for (_, a) in std::mem::take(&mut self.awaiting_b) {
+            // Their last W went out and the B never came back (withheld
+            // or wedged); if it does arrive late, tolerate it.
+            self.flushed_b += 1;
+            aborted += 1;
+            self.completions.push(TransferDone {
+                cycle: now,
+                bytes: 0,
+                desc_addr: a.t.desc_addr,
+                irq: a.t.irq,
+                ring: a.t.ring,
+                status: code,
+            });
+        }
+        self.write_pipe = MonotonicQueue::new();
+        self.reads_pending = 0;
+        stats.aborted_transfers += aborted as u64;
+        aborted
+    }
+
+    /// Channel reset (driver-initiated): drop all transfer state
+    /// without producing completions — software resubmits.  Keeps the
+    /// drain accounting for in-flight beats, the late-B tolerance for
+    /// outstanding B responses, and the monotonic tag counter (a fresh
+    /// transfer must never reuse the tag of a beat still in flight).
+    pub fn reset(&mut self) {
+        for a in std::mem::take(&mut self.active) {
+            if a.beats_done < a.beats_issued {
+                self.draining.push((a.id, a.beats_issued - a.beats_done));
+            }
+        }
+        self.flushed_b += self.awaiting_b.len();
+        self.awaiting_b.clear();
+        self.write_pipe = MonotonicQueue::new();
+        self.completions.clear();
+        self.reads_pending = 0;
     }
 
     pub fn idle(&self) -> bool {
@@ -342,7 +500,15 @@ mod tests {
     }
 
     fn beat(tag: u64, i: u32, last: bool) -> RBeat {
-        RBeat { port: Port::Backend, tag, beat: i, last, data: [i as u8; 8], bytes: 8 }
+        RBeat { port: Port::Backend, tag, beat: i, last, data: [i as u8; 8], bytes: 8, resp: Resp::Okay }
+    }
+
+    fn bad_beat(tag: u64, i: u32, last: bool, resp: Resp) -> RBeat {
+        RBeat { resp, ..beat(tag, i, last) }
+    }
+
+    fn ok_b(tag: u64) -> BResp {
+        BResp { port: Port::Backend, tag, resp: Resp::Okay }
     }
 
     #[test]
@@ -384,7 +550,7 @@ mod tests {
         assert!(b.pop_w(7, &mut s).is_some());
         assert!(b.pop_w(8, &mut s).is_some());
         assert!(b.drain_completions().is_empty());
-        b.on_write_b(20, BResp { port: Port::Backend, tag: 0 }, &mut s);
+        b.on_write_b(20, ok_b(0), &mut s);
         let done = b.drain_completions();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].bytes, 16);
@@ -463,7 +629,7 @@ mod tests {
         let ws: Vec<(u64, u32)> =
             std::iter::from_fn(|| b.pop_w(100, &mut s).map(|w| (w.addr, w.bytes))).collect();
         assert_eq!(ws, vec![(0x100, 8), (0x108, 4), (0x110, 8), (0x118, 4)]);
-        b.on_write_b(20, BResp { port: Port::Backend, tag: 0 }, &mut s);
+        b.on_write_b(20, ok_b(0), &mut s);
         let done = b.drain_completions();
         assert_eq!(done[0].bytes, 24, "completion reports all rows");
     }
@@ -537,7 +703,7 @@ mod tests {
         b.on_payload_beat(5, beat(0, 0, true), &mut s);
         assert!(b.pop_ar(6, &mut s).is_none(), "still blocked until B");
         let _ = b.pop_w(6, &mut s).unwrap();
-        b.on_write_b(10, BResp { port: Port::Backend, tag: 0 }, &mut s);
+        b.on_write_b(10, ok_b(0), &mut s);
         b.drain_completions();
         assert!(b.pop_ar(11, &mut s).is_some());
     }
@@ -574,9 +740,117 @@ mod tests {
         assert_eq!(b.next_event(), Some(21), "r->w datapath");
         let _ = b.pop_w(21, &mut s).unwrap();
         assert_eq!(b.next_event(), None, "awaiting B is input-driven");
-        b.on_write_b(30, BResp { port: Port::Backend, tag: 0 }, &mut s);
+        b.on_write_b(30, ok_b(0), &mut s);
         assert_eq!(b.next_event(), Some(0), "undrained completion is immediate work");
         b.drain_completions();
         assert_eq!(b.next_event(), None);
+    }
+
+    #[test]
+    fn errored_read_beat_aborts_drains_and_poisons_the_completion() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        b.accept(0, xfer(0, 0x100, 32)); // 4 beats, one burst
+        let _ = b.pop_ar(0, &mut s).unwrap();
+        b.on_payload_beat(5, beat(0, 0, false), &mut s);
+        b.on_payload_beat(6, bad_beat(0, 1, false, Resp::SlvErr), &mut s);
+        assert_eq!(s.axi_slverrs, 1);
+        assert_eq!(s.aborted_transfers, 1);
+        assert!(!b.wants_ar(), "aborted transfer issues no more reads");
+        assert!(b.drain_completions().is_empty(), "in-flight beats still draining");
+        assert!(b.awaiting_response(), "owed two more beats of the burst");
+        b.on_payload_beat(7, beat(0, 2, false), &mut s);
+        b.on_payload_beat(8, beat(0, 3, true), &mut s);
+        let done = b.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!((done[0].bytes, done[0].status), (0, crate::axi::ERR_SLVERR));
+        // The two pre-error write beats are flushed with the rest of
+        // the pipe on the channel reset that recovery performs; here
+        // they simply sit in the pipe and idle() reflects that.
+        assert!(!b.awaiting_response());
+    }
+
+    #[test]
+    fn error_on_the_last_beat_of_the_burst_completes_at_once() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        b.accept(0, xfer(0, 0x100, 16)); // 2 beats
+        let _ = b.pop_ar(0, &mut s).unwrap();
+        b.on_payload_beat(5, beat(0, 0, false), &mut s);
+        b.on_payload_beat(6, bad_beat(0, 1, true, Resp::DecErr), &mut s);
+        let done = b.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!((done[0].bytes, done[0].status), (0, crate::axi::ERR_DECERR));
+        assert_eq!(s.axi_decerrs, 1);
+        assert!(!b.awaiting_response());
+    }
+
+    #[test]
+    fn errored_b_response_poisons_the_completion() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        b.accept(0, xfer(0, 0x100, 8));
+        let _ = b.pop_ar(0, &mut s).unwrap();
+        b.on_payload_beat(5, beat(0, 0, true), &mut s);
+        let _ = b.pop_w(6, &mut s).unwrap();
+        b.on_write_b(10, BResp { port: Port::Backend, tag: 0, resp: Resp::SlvErr }, &mut s);
+        let done = b.drain_completions();
+        assert_eq!((done[0].bytes, done[0].status), (0, crate::axi::ERR_SLVERR));
+        assert_eq!(s.axi_slverrs, 1);
+        assert_eq!(s.aborted_transfers, 1);
+    }
+
+    #[test]
+    fn abort_all_poisons_everything_and_tolerates_the_late_b() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        // Transfer 0: last W issued, B withheld.  Transfer 1: burst
+        // issued, one of two beats still in flight.
+        b.accept(0, xfer(0, 0x100, 8));
+        b.accept(0, xfer(0x200, 0x300, 16));
+        let _ = b.pop_ar(0, &mut s).unwrap();
+        let _ = b.pop_ar(0, &mut s).unwrap();
+        b.on_payload_beat(5, beat(0, 0, true), &mut s);
+        b.on_payload_beat(6, beat(1, 0, false), &mut s);
+        let _ = b.pop_w(6, &mut s).unwrap();
+        assert!(b.awaiting_response());
+        let aborted = b.abort_all(100, crate::axi::ERR_TIMEOUT, &mut s);
+        assert_eq!(aborted, 2);
+        assert_eq!(s.aborted_transfers, 2);
+        let done = b.drain_completions();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|d| d.bytes == 0 && d.status == crate::axi::ERR_TIMEOUT));
+        assert!(b.idle(), "aborted engine accepts new work");
+        assert!(b.awaiting_response(), "still owed transfer 1's second beat");
+        // The bus delivers what it owes: the in-flight beat drains, and
+        // a late B for the flushed transfer is swallowed.
+        b.on_payload_beat(101, beat(1, 1, true), &mut s);
+        b.on_write_b(102, ok_b(0), &mut s);
+        assert!(!b.awaiting_response());
+        assert!(b.drain_completions().is_empty(), "drained beats complete nothing");
+    }
+
+    #[test]
+    fn reset_drops_state_silently_and_new_tags_do_not_collide() {
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        b.accept(0, xfer(0, 0x100, 16));
+        let _ = b.pop_ar(0, &mut s).unwrap();
+        b.on_payload_beat(5, beat(0, 0, false), &mut s);
+        b.reset();
+        assert!(b.idle());
+        assert_eq!(s.aborted_transfers, 0, "reset completes nothing");
+        // The fresh transfer must get a fresh tag: the old transfer's
+        // second beat is still in flight under tag 0.
+        b.accept(10, xfer(0x400, 0x500, 8));
+        let r = b.pop_ar(10, &mut s).unwrap();
+        assert_eq!(r.tag, 1);
+        b.on_payload_beat(11, beat(0, 1, true), &mut s); // stale beat drains
+        b.on_payload_beat(12, beat(1, 0, true), &mut s); // new transfer's beat
+        let _ = b.pop_w(13, &mut s).unwrap();
+        b.on_write_b(20, ok_b(1), &mut s);
+        let done = b.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!((done[0].bytes, done[0].status), (8, 0));
     }
 }

@@ -1,5 +1,7 @@
 //! Compile-time parameter sets of the DMAC (paper Table I).
 
+use crate::mem::FaultConfig;
+
 /// Per-channel IOMMU parameters, consumed by [`crate::iommu::IommuDmac`]
 /// when it banks an SV39 translation stage in front of this channel's
 /// manager ports.  The bare [`crate::dmac::Dmac`] ignores them, so a
@@ -150,6 +152,16 @@ pub struct DmacConfig {
     /// by default: non-ring configurations stay cycle-identical to the
     /// pre-ring DMAC (property-tested).
     pub ring: RingParams,
+    /// Deterministic AXI fault injection at the memory boundary
+    /// ([`crate::mem::faults`]).  Disabled by default: a fault-free
+    /// configuration installs no plan and stays cycle-identical to the
+    /// pre-fault DMAC (property-tested).
+    pub faults: FaultConfig,
+    /// Per-channel watchdog CSR: trip a TIMEOUT channel error when the
+    /// channel is awaiting a bus response and none arrives for this
+    /// many cycles.  0 disables the watchdog (the default — the
+    /// fault-free bus always answers).
+    pub watchdog: u32,
 }
 
 impl DmacConfig {
@@ -165,6 +177,8 @@ impl DmacConfig {
             iommu: IommuParams::disabled(),
             nd_enabled: true,
             ring: RingParams::disabled(),
+            faults: FaultConfig::disabled(),
+            watchdog: 0,
         }
     }
 
@@ -210,6 +224,22 @@ impl DmacConfig {
     /// Attach a submission/completion ring pair to this channel.
     pub fn with_ring(mut self, ring: RingParams) -> Self {
         self.ring = ring;
+        self
+    }
+
+    /// Install a fault-injection plan at this channel's memory
+    /// boundary (multi-channel systems install the first enabled
+    /// channel plan into the shared memory).
+    pub fn with_faults(mut self, faults: FaultConfig) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Arm the per-channel watchdog: a TIMEOUT channel error trips
+    /// when a bus response is owed and nothing progresses for
+    /// `cycles` cycles.
+    pub fn with_watchdog(mut self, cycles: u32) -> Self {
+        self.watchdog = cycles;
         self
     }
 
@@ -293,6 +323,21 @@ mod tests {
     #[should_panic(expected = "finite timeout")]
     fn coalescing_threshold_above_one_needs_a_timeout() {
         let _ = RingParams::enabled(0, 8, 0, 8).with_coalescing(4, 0);
+    }
+
+    #[test]
+    fn faults_default_off_and_are_settable() {
+        for c in DmacConfig::paper_configs() {
+            assert!(!c.faults.enabled);
+            assert_eq!(c.watchdog, 0, "watchdog disarmed by default");
+        }
+        let c = DmacConfig::base()
+            .with_faults(FaultConfig::seeded(42).with_read_slverr(1000))
+            .with_watchdog(5000);
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.seed, 42);
+        assert_eq!(c.watchdog, 5000);
+        assert_eq!(c.name(), "base", "fault knobs do not affect the preset name");
     }
 
     #[test]

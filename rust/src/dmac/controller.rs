@@ -15,7 +15,9 @@
 //!    testbench grants at most one AR and one W beat per cycle across
 //!    all ports (fair round-robin).
 
+use super::frontend::ChannelError;
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::mem::faults::FaultConfig;
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, RunStats, Tickable};
 
@@ -117,6 +119,41 @@ pub trait Controller: Tickable {
     /// channel `c` to the dedicated banked source `ring_irq_source(c)`.
     fn take_ring_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
         let n = self.take_ring_irq();
+        if n > 0 {
+            sink(0, n);
+        }
+    }
+
+    /// Fault-injection plan this controller's memory should run with
+    /// (`FaultConfig::disabled()` unless the device was configured for
+    /// fault testing).  Read once by the testbench when the memory is
+    /// installed.
+    fn fault_config(&self) -> FaultConfig {
+        FaultConfig::disabled()
+    }
+
+    /// Channel-reset CSR write: clear channel `ch`'s sticky fault and
+    /// drop its queued work so software can resubmit.  Controllers
+    /// without an error model treat it as a no-op.
+    fn channel_reset(&mut self, _now: Cycle, _ch: usize) {}
+
+    /// The sticky per-channel error CSR (`None` = healthy or no error
+    /// model).
+    fn error_csr(&self, _ch: usize) -> Option<ChannelError> {
+        None
+    }
+
+    /// Banked error-IRQ edges since the last call.  Controllers without
+    /// an error model never raise one.
+    fn take_error_irq(&mut self) -> u64 {
+        0
+    }
+
+    /// Per-channel error-IRQ edges since the last call, delivered
+    /// through `sink(channel, edges)`.  The SoC routes channel `c` to
+    /// the dedicated banked source `error_irq_source(c)`.
+    fn take_error_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        let n = self.take_error_irq();
         if n > 0 {
             sink(0, n);
         }

@@ -24,6 +24,28 @@ pub const END_OF_CHAIN: u64 = u64::MAX;
 /// Value written over `length`+`config` on completion.
 pub const COMPLETION_STAMP: u64 = u64::MAX;
 
+/// `length`-field value of an *error* stamp: a poisoned completion
+/// overwrites `length`+`config` with `error_stamp(code)` instead of
+/// [`COMPLETION_STAMP`].  The value is distinguishable from both a
+/// successful stamp (whose low word is all-ones) and any legal
+/// descriptor the driver writes (drivers never use lengths above
+/// 4 GiB - 2).
+pub const ERROR_STAMP_LENGTH: u32 = 0xFFFF_FFFE;
+
+/// The 8-byte stamp written over `length`+`config` when a transfer is
+/// aborted: the error code (see [`crate::axi::Resp::error_code`] and
+/// [`crate::axi::ERR_TIMEOUT`]) lands in the `config` half-word.
+pub fn error_stamp(code: u16) -> u64 {
+    debug_assert!(code != 0, "error stamps need a nonzero code");
+    ((code as u64) << 32) | ERROR_STAMP_LENGTH as u64
+}
+
+/// If the descriptor at `addr` carries an error stamp, its code.
+pub fn error_status(mem: &Memory, addr: u64) -> Option<u16> {
+    let v = mem.backdoor_read_u64(addr);
+    (v as u32 == ERROR_STAMP_LENGTH).then(|| (v >> 32) as u16)
+}
+
 /// Config-field bits (frontend options; backend AXI parameters live in
 /// the upper half-word and are opaque to the simulator).
 pub const CFG_IRQ_ON_COMPLETION: u32 = 1 << 0;
@@ -359,6 +381,30 @@ impl Default for ChainBuilder {
 /// True if the descriptor at `addr` carries the completion stamp.
 pub fn is_completed(mem: &Memory, addr: u64) -> bool {
     mem.backdoor_read_u64(addr) == COMPLETION_STAMP
+}
+
+#[cfg(test)]
+mod error_stamp_tests {
+    use super::*;
+    use crate::mem::LatencyProfile;
+
+    #[test]
+    fn error_stamp_is_distinct_and_round_trips() {
+        let mut mem = Memory::new(4096, LatencyProfile::Ideal);
+        for code in [1u16, 2, 3] {
+            assert_ne!(error_stamp(code), COMPLETION_STAMP);
+            mem.backdoor_write_u64(0x100, error_stamp(code));
+            assert_eq!(error_status(&mem, 0x100), Some(code));
+            assert!(!is_completed(&mem, 0x100));
+        }
+        // A successful stamp is not an error stamp; a fresh descriptor
+        // is neither.
+        mem.backdoor_write_u64(0x100, COMPLETION_STAMP);
+        assert_eq!(error_status(&mem, 0x100), None);
+        mem.backdoor_write(0x140, &Descriptor::new(0x800, 0x900, 64).to_bytes());
+        assert_eq!(error_status(&mem, 0x140), None);
+        assert!(!is_completed(&mem, 0x140));
+    }
 }
 
 #[cfg(test)]

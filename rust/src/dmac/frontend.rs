@@ -20,12 +20,30 @@
 
 use super::backend::Backend;
 use super::config::DmacConfig;
-use super::descriptor::{Descriptor, NdExt, CFG_ND_EXT, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN};
+use super::descriptor::{
+    error_stamp, Descriptor, NdExt, CFG_ND_EXT, COMPLETION_STAMP, DESC_BYTES, END_OF_CHAIN,
+};
 use super::ring::RingState;
-use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, ERR_TIMEOUT};
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 use std::collections::VecDeque;
+
+/// Sticky per-channel error CSR, latched when the channel halts into
+/// the Faulted state (descriptor-path error or watchdog timeout).
+/// Software reads it to diagnose the fault, then clears it with the
+/// channel-reset CSR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelError {
+    /// `ERR_SLVERR` / `ERR_DECERR` / `ERR_TIMEOUT`.
+    pub code: u16,
+    /// Faulting bus address (0 when the watchdog tripped with no
+    /// specific address, e.g. a withheld write response).
+    pub addr: u64,
+    /// Descriptors this channel had parsed when the fault latched —
+    /// tells recovery software where in the chain the walk stopped.
+    pub desc_index: u64,
+}
 
 /// What a fetch slot's beats carry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,6 +71,10 @@ struct FetchSlot {
     /// AR has been granted; beats will arrive for this slot in order.
     granted: bool,
     beats_seen: u32,
+    /// First AXI error seen on this fetch's beats (0 = clean).  An
+    /// errored fetch never parses: field handling is gated and the
+    /// channel faults when the last beat drains.
+    error: u16,
     data: [u8; DESC_BYTES as usize],
 }
 
@@ -94,6 +116,9 @@ struct Writeback {
     irq: bool,
     /// This write is a completion-ring record.
     cq: bool,
+    /// This write is a poisoned chain stamp (`error_stamp`): its B
+    /// raises the banked error IRQ instead of the completion IRQ.
+    error: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -153,6 +178,17 @@ pub struct Frontend {
     /// of *ungranted* slots only), so this is the index of the first
     /// ungranted slot.
     granted_count: usize,
+    /// Sticky fault latch: `Some` halts the channel (no launches, no
+    /// fetches, no handoff) until software writes the channel-reset CSR.
+    error: Option<ChannelError>,
+    /// Banked error-IRQ edges (fault halts and poisoned chain stamps).
+    error_irq_edges: u64,
+    /// Descriptors parsed so far — the fault CSR's descriptor index.
+    descs_parsed: u64,
+    /// Feedback writes flushed by a watchdog trip or channel reset
+    /// while their B was outstanding: late Bs for unknown tags are
+    /// tolerated while this is nonzero.
+    flushed_wb: usize,
 }
 
 impl Frontend {
@@ -183,6 +219,10 @@ impl Frontend {
             live_count: 0,
             spec_count: 0,
             granted_count: 0,
+            error: None,
+            error_irq_edges: 0,
+            descs_parsed: 0,
+            flushed_wb: 0,
         }
     }
 
@@ -268,6 +308,7 @@ impl Frontend {
             discard: false,
             granted: false,
             beats_seen: 0,
+            error: 0,
             data: [0; DESC_BYTES as usize],
         });
     }
@@ -447,6 +488,11 @@ impl Frontend {
     }
 
     /// Deliver one descriptor-fetch beat from the memory system.
+    ///
+    /// An errored beat (SLVERR/DECERR) poisons its fetch: field
+    /// handling is gated — the DMAC must not chase a corrupt `next`
+    /// pointer or trust a corrupt config word — and the channel halts
+    /// into the Faulted state when the fetch's last beat drains.
     pub fn on_desc_beat(&mut self, now: Cycle, beat: RBeat, stats: &mut RunStats) {
         let slot = self
             .fetches
@@ -457,9 +503,16 @@ impl Frontend {
         let off = beat.beat as usize * 8;
         slot.data[off..off + 8].copy_from_slice(&beat.data);
         slot.beats_seen += 1;
+        if beat.resp.is_err() {
+            stats.count_axi_error(beat.resp);
+            if slot.error == 0 {
+                slot.error = beat.resp.error_code();
+            }
+        }
         let discard = slot.discard;
         let addr = slot.addr;
         let kind = slot.kind;
+        let slot_error = slot.error;
         let config = u32::from_le_bytes(slot.data[4..8].try_into().unwrap());
         let next = u64::from_le_bytes(slot.data[8..16].try_into().unwrap());
         debug_assert!(
@@ -469,7 +522,7 @@ impl Frontend {
         if discard {
             stats.wasted_desc_beats += 1;
         }
-        if !discard && kind != SlotKind::Ext {
+        if !discard && slot_error == 0 && kind != SlotKind::Ext {
             // Beat 0 carries the config field: an ND head needs its
             // extension word secured *before* the beat-1 chase/commit
             // decision consumes (or flushes) the speculative slots
@@ -495,6 +548,15 @@ impl Frontend {
             let slot = self.fetches.pop_front().unwrap();
             self.granted_count -= 1;
             debug_assert_eq!(slot.addr, addr);
+            if !discard && slot_error != 0 {
+                // A live descriptor fetch errored: the walk cannot
+                // continue (the descriptor is garbage).  Halt the
+                // channel — `fault` discards every other live fetch and
+                // recomputes the occupancy counters.
+                self.live_count -= 1;
+                self.fault(slot_error, addr, stats);
+                return;
+            }
             if !discard {
                 self.live_count -= 1;
                 match kind {
@@ -551,6 +613,7 @@ impl Frontend {
     /// Parse register + handoff queue + backend issue stage: calibrates
     /// Table IV rf-rb to exactly 2L + 6.
     fn push_handoff(&mut self, now: Cycle, d: Descriptor, desc_addr: u64, ring: bool) {
+        self.descs_parsed += 1;
         self.handoff.push_back((
             now + 3,
             ParsedTransfer {
@@ -566,27 +629,40 @@ impl Frontend {
     }
 
     /// Feedback logic input: the backend finished the transfer whose
-    /// descriptor lives at `desc_addr` (paper §II-A, §II-D).  Chain
-    /// transfers get the in-place completion stamp; ring transfers get
-    /// an 8-byte completion-ring record (dropped, with the sticky
-    /// overflow flag latched, when the consumer let the CQ fill up —
-    /// the completion still counts toward the coalesced IRQ so software
-    /// learns it fell behind).
+    /// descriptor lives at `desc_addr` (paper §II-A, §II-D), with
+    /// `status` 0 for a clean completion or the channel error code of a
+    /// poisoned one.  Chain transfers get the in-place completion stamp
+    /// (an `error_stamp` carrying the code when poisoned); ring
+    /// transfers get an 8-byte completion-ring record with the status
+    /// in the record (dropped, with the sticky overflow flag latched,
+    /// when the consumer let the CQ fill up — the completion still
+    /// counts toward the coalesced IRQ so software learns it fell
+    /// behind).
     pub fn on_transfer_complete(
         &mut self,
         now: Cycle,
         desc_addr: u64,
         irq: bool,
         ring: bool,
+        status: u16,
         stats: &mut RunStats,
     ) {
         if ring {
             let state = self.ring.as_mut().expect("ring completion without ring state");
             let slot = ((desc_addr - state.params.sq_base) / DESC_BYTES) as u32;
-            match state.produce_cq(slot) {
+            match state.produce_cq(slot, status) {
                 Some((addr, data)) => {
                     stats.cq_records += 1;
-                    self.wb_queue.push_back(Writeback { addr, data, irq: false, cq: true });
+                    if status != 0 {
+                        stats.cq_error_records += 1;
+                    }
+                    self.wb_queue.push_back(Writeback {
+                        addr,
+                        data,
+                        irq: false,
+                        cq: true,
+                        error: false,
+                    });
                 }
                 None => {
                     stats.cq_overflows += 1;
@@ -595,28 +671,56 @@ impl Frontend {
                     }
                 }
             }
+        } else if status != 0 {
+            self.wb_queue.push_back(Writeback {
+                addr: desc_addr,
+                data: error_stamp(status).to_le_bytes(),
+                irq: false,
+                cq: false,
+                error: true,
+            });
         } else {
             self.wb_queue.push_back(Writeback {
                 addr: desc_addr,
                 data: COMPLETION_STAMP.to_le_bytes(),
                 irq,
                 cq: false,
+                error: false,
             });
         }
     }
 
     /// B response for a feedback write: a chain stamp raises its
-    /// per-descriptor IRQ; a completion-ring record (now durable in
-    /// memory, so the handler is guaranteed to see it) counts toward
-    /// the coalesced IRQ.
-    pub fn on_writeback_b(&mut self, now: Cycle, b: BResp, _stats: &mut RunStats) {
-        let idx = self
-            .wb_outstanding
-            .iter()
-            .position(|(t, _)| *t == b.tag)
-            .expect("B for unknown write-back");
+    /// per-descriptor IRQ (the banked error IRQ for a poisoned stamp);
+    /// a completion-ring record (now durable in memory, so the handler
+    /// is guaranteed to see it) counts toward the coalesced IRQ.
+    ///
+    /// An errored B means the feedback write itself failed to land —
+    /// software would wait forever for a stamp that isn't there, so the
+    /// channel halts into the Faulted state.  A B for an unknown tag is
+    /// tolerated while `flushed_wb` is nonzero (the write-back was
+    /// flushed by a watchdog trip or channel reset).
+    pub fn on_writeback_b(&mut self, now: Cycle, b: BResp, stats: &mut RunStats) {
+        if b.resp.is_err() {
+            stats.count_axi_error(b.resp);
+        }
+        let idx = match self.wb_outstanding.iter().position(|(t, _)| *t == b.tag) {
+            Some(idx) => idx,
+            None => {
+                debug_assert!(self.flushed_wb > 0, "B for unknown write-back");
+                self.flushed_wb = self.flushed_wb.saturating_sub(1);
+                return;
+            }
+        };
         let (_, wb) = self.wb_outstanding.swap_remove(idx);
-        if wb.cq {
+        if b.resp.is_err() {
+            self.fault(b.resp.error_code(), wb.addr, stats);
+            return;
+        }
+        if wb.error {
+            self.error_irq_edges += 1;
+            stats.error_irqs += 1;
+        } else if wb.cq {
             let state = self.ring.as_mut().expect("CQ record B without ring state");
             if state.coalesce(now) {
                 self.ring_irq_edges += 1;
@@ -626,9 +730,105 @@ impl Frontend {
         }
     }
 
+    /// Halt the channel into the Faulted state: latch the sticky error
+    /// CSR (first fault wins), raise the banked error IRQ, and stop the
+    /// descriptor walk — granted fetches keep streaming and their beats
+    /// drain as wasted traffic (the bus contract), ungranted fetches
+    /// are cancelled for free, and parked/parsed work is dropped.
+    /// Queued CSR launches and published ring entries freeze in place
+    /// until the channel-reset CSR clears the fault.
+    fn fault(&mut self, code: u16, addr: u64, stats: &mut RunStats) {
+        if self.error.is_none() {
+            self.error = Some(ChannelError { code, addr, desc_index: self.descs_parsed });
+            stats.fault_halts += 1;
+            self.error_irq_edges += 1;
+            stats.error_irqs += 1;
+        }
+        self.halt_fetches();
+    }
+
+    /// Watchdog trip: halt like a fault (code TIMEOUT, addressed at the
+    /// oldest outstanding fetch if any) and additionally flush feedback
+    /// writes whose B never came back — those are exactly the writes a
+    /// wedged bus is sitting on.
+    pub fn on_watchdog(&mut self, stats: &mut RunStats) {
+        let addr = self.fetches.front().map_or(0, |f| f.addr);
+        self.fault(ERR_TIMEOUT, addr, stats);
+        self.flushed_wb += self.wb_outstanding.len();
+        self.wb_outstanding.clear();
+    }
+
+    /// Stop the descriptor-walk machinery (fault entry / channel
+    /// reset).  After this, `fetches` holds only granted discard slots
+    /// draining their beats.
+    fn halt_fetches(&mut self) {
+        self.fetches.retain_mut(|f| {
+            if f.discard {
+                return true;
+            }
+            if f.granted {
+                f.discard = true;
+                true
+            } else {
+                false
+            }
+        });
+        self.live_count = 0;
+        self.spec_count = 0;
+        self.granted_count = self.fetches.len();
+        self.ring_fetch_live = 0;
+        self.pending_chase = None;
+        self.pending_ext = None;
+        self.pending_nd = None;
+        self.chain_active = false;
+        self.spec_tail = END_OF_CHAIN;
+        self.handoff.clear();
+    }
+
+    /// Channel-reset CSR: clear the sticky fault and every queued or
+    /// parked piece of work — software resubmits what it still wants.
+    /// In-flight bus traffic is not (and cannot be) recalled: granted
+    /// fetches drain as discards and outstanding feedback writes become
+    /// tolerated late Bs.  Ring state is rebuilt from scratch (indices
+    /// to zero, CQ phase restarts); a final coalesced-IRQ edge fires
+    /// first if completions were pending, so software never misses
+    /// records that landed before the reset.
+    pub fn channel_reset(&mut self) {
+        self.halt_fetches();
+        self.error = None;
+        self.csr_queue.clear();
+        self.wb_queue.clear();
+        self.flushed_wb += self.wb_outstanding.len();
+        self.wb_outstanding.clear();
+        if let Some(r) = &self.ring {
+            if r.pending_irq > 0 {
+                self.ring_irq_edges += 1;
+            }
+            self.ring = Some(RingState::new(r.params));
+        }
+    }
+
+    /// The sticky per-channel error CSR (`None` = channel healthy).
+    pub fn error_csr(&self) -> Option<ChannelError> {
+        self.error
+    }
+
+    /// The channel is owed a bus response: descriptor beats for granted
+    /// fetches, or a B for an issued feedback write.  Arms the channel
+    /// watchdog.
+    pub fn awaiting_response(&self) -> bool {
+        self.granted_count > 0 || !self.wb_outstanding.is_empty()
+    }
+
     /// Advance one cycle: launch eligible chains and push parsed
     /// descriptors into the backend queue.
     pub fn step(&mut self, now: Cycle, backend: &mut Backend, stats: &mut RunStats) {
+        // A faulted channel is halted: no launches, no fetches, no
+        // handoff.  Only the discard drains and the feedback machinery
+        // (driven from pop_w / the response handlers) stay live.
+        if self.error.is_some() {
+            return;
+        }
         // Handoff pipeline into the backend queue (bounded in_flight);
         // drained first so the freed window slots are usable below.
         while let Some(&(ready, t)) = self.handoff.front() {
@@ -746,7 +946,7 @@ impl Frontend {
         slot.granted = true;
         self.granted_count += 1;
         let beats = match slot.kind {
-            SlotKind::Head => Descriptor::fetch_beats(),
+            SlotKind::Head | SlotKind::RingHead => Descriptor::fetch_beats(),
             SlotKind::Ext => NdExt::fetch_beats(),
         };
         stats.desc_beats += beats as u64;
@@ -774,6 +974,15 @@ impl Frontend {
     }
 
     pub fn idle(&self) -> bool {
+        if self.error.is_some() {
+            // A faulted channel is quiescent once its in-flight bus
+            // traffic has drained: queued launches and published ring
+            // entries are frozen (not pending work) until software
+            // resets the channel.
+            return self.fetches.is_empty()
+                && self.wb_queue.is_empty()
+                && self.wb_outstanding.is_empty();
+        }
         self.csr_queue.is_empty()
             && self.fetches.is_empty()
             && self.handoff.is_empty()
@@ -793,6 +1002,11 @@ impl Frontend {
     /// Coalesced completion-ring IRQ edges since the last call.
     pub fn take_ring_irq(&mut self) -> u64 {
         std::mem::take(&mut self.ring_irq_edges)
+    }
+
+    /// Banked error-IRQ edges since the last call.
+    pub fn take_error_irq(&mut self) -> u64 {
+        std::mem::take(&mut self.error_irq_edges)
     }
 
     /// Ring diagnostics for tests: `(sq_head, sq_tail, cq_prod,
@@ -816,6 +1030,11 @@ impl Frontend {
     /// chain/window state, so the reported cycle can only be early,
     /// never late.
     pub fn next_event(&self) -> Option<Cycle> {
+        if self.error.is_some() {
+            // Faulted: only queued feedback writes are self-driven
+            // work; everything else is frozen or input-driven.
+            return (!self.wb_queue.is_empty()).then_some(0);
+        }
         if self.granted_count < self.fetches.len()
             || self.pending_chase.is_some()
             || self.pending_ext.is_some()
@@ -869,7 +1088,15 @@ mod tests {
             data.copy_from_slice(&bytes[i as usize * 8..i as usize * 8 + 8]);
             f.on_desc_beat(
                 now,
-                RBeat { port: Port::Frontend, tag: 0, beat: i, last: i == 3, data, bytes: 8 },
+                RBeat {
+                    port: Port::Frontend,
+                    tag: 0,
+                    beat: i,
+                    last: i == 3,
+                    data,
+                    bytes: 8,
+                    resp: Resp::Okay,
+                },
                 stats,
             );
         }
@@ -1009,14 +1236,14 @@ mod tests {
     fn writeback_stamps_and_raises_irq_after_b() {
         let mut f = fe(0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(50, 0x1000, true, false, &mut s);
+        f.on_transfer_complete(50, 0x1000, true, false, 0, &mut s);
         assert!(f.wants_w());
         let w = f.pop_w(51, &mut s).unwrap();
         assert_eq!(w.addr, 0x1000);
         assert_eq!(w.data, [0xFF; 8]);
         assert!(w.last);
         assert_eq!(f.take_irq(), 0, "IRQ only after the stamp lands");
-        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
         assert_eq!(f.take_irq(), 1);
         assert_eq!(f.take_irq(), 0);
     }
@@ -1237,21 +1464,21 @@ mod tests {
             crate::dmac::RingParams::enabled(0x1000, 8, 0x8000, 8).with_coalescing(2, 1000),
         ));
         let mut s = RunStats::default();
-        f.on_transfer_complete(50, 0x1020, false, true, &mut s);
+        f.on_transfer_complete(50, 0x1020, false, true, 0, &mut s);
         assert_eq!(s.cq_records, 1);
         let w = f.pop_w(51, &mut s).unwrap();
         assert_eq!(w.addr, 0x8000, "first CQ slot");
         let rec = crate::dmac::CqRecord::from_bytes(&w.data);
         assert_eq!(rec.sq_slot, 1, "slot index of the completed head word");
         assert!(rec.phase, "lap-0 phase");
-        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
         assert_eq!(f.take_ring_irq(), 0, "below the coalescing threshold");
         assert_eq!(f.take_irq(), 0, "ring completions never use the chain IRQ line");
         // Second completion reaches the threshold once its record lands.
-        f.on_transfer_complete(70, 0x1040, false, true, &mut s);
+        f.on_transfer_complete(70, 0x1040, false, true, 0, &mut s);
         let w2 = f.pop_w(71, &mut s).unwrap();
         assert_eq!(w2.addr, 0x8008);
-        f.on_writeback_b(80, BResp { port: Port::Frontend, tag: w2.tag }, &mut s);
+        f.on_writeback_b(80, BResp { port: Port::Frontend, tag: w2.tag, resp: Resp::Okay }, &mut s);
         assert_eq!(f.take_ring_irq(), 1, "coalesced IRQ at threshold 2");
     }
 
@@ -1262,9 +1489,9 @@ mod tests {
         ));
         let mut b = Backend::new(8, false, 0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(10, 0x1000, false, true, &mut s);
+        f.on_transfer_complete(10, 0x1000, false, true, 0, &mut s);
         let w = f.pop_w(11, &mut s).unwrap();
-        f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
         assert!(!f.idle(), "a pending coalesced completion keeps the frontend busy");
         assert_eq!(f.next_event(), Some(60), "deadline = first pending completion + timeout");
         f.step(59, &mut b, &mut s);
@@ -1278,12 +1505,12 @@ mod tests {
     fn cq_overflow_drops_records_but_still_coalesces() {
         let mut f = Frontend::new(ring_cfg(4, 8, 1));
         let mut s = RunStats::default();
-        f.on_transfer_complete(10, 0x1000, false, true, &mut s);
+        f.on_transfer_complete(10, 0x1000, false, true, 0, &mut s);
         let w = f.pop_w(11, &mut s).unwrap();
-        f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag }, &mut s);
+        f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
         assert_eq!(f.take_ring_irq(), 1);
         // Consumer never advances: the 1-slot CQ is full.
-        f.on_transfer_complete(30, 0x1020, false, true, &mut s);
+        f.on_transfer_complete(30, 0x1020, false, true, 0, &mut s);
         assert!(!f.wants_w(), "dropped record issues no write");
         assert_eq!(s.cq_overflows, 1);
         assert!(f.ring_state().unwrap().3, "sticky overflow flag latched");
@@ -1324,5 +1551,112 @@ mod tests {
         assert!(f.wants_ar(), "chase issued on next-field receipt");
         assert_eq!(f.pop_ar(9, &mut s).unwrap().addr, 0x2000);
         assert_eq!(s.spec_hits + s.spec_misses, 0);
+    }
+
+    fn deliver_word_with_err(
+        f: &mut Frontend,
+        now: Cycle,
+        bytes: &[u8; 32],
+        err_beat: u32,
+        resp: Resp,
+        stats: &mut RunStats,
+    ) {
+        for i in 0..4u32 {
+            let mut data = [0u8; 8];
+            data.copy_from_slice(&bytes[i as usize * 8..i as usize * 8 + 8]);
+            f.on_desc_beat(
+                now,
+                RBeat {
+                    port: Port::Frontend,
+                    tag: 0,
+                    beat: i,
+                    last: i == 3,
+                    data,
+                    bytes: 8,
+                    resp: if i == err_beat { resp } else { Resp::Okay },
+                },
+                stats,
+            );
+        }
+    }
+
+    #[test]
+    fn errored_descriptor_fetch_halts_the_channel_and_never_chases() {
+        let mut f = fe(0);
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let _ = f.pop_ar(3, &mut s).unwrap();
+        // Beat 1 carries the next pointer and arrives with SLVERR: the
+        // pointer is garbage, so no chase may be issued.
+        let d = Descriptor::new(0x8000, 0x9000, 64).with_next(0x2000);
+        deliver_word_with_err(&mut f, 10, &d.to_bytes(), 1, Resp::SlvErr, &mut s);
+        assert!(!f.wants_ar(), "corrupt next pointer is never chased");
+        assert!(f.handoff.is_empty(), "corrupt descriptor is never parsed");
+        let e = f.error_csr().expect("channel faulted");
+        assert_eq!((e.code, e.addr, e.desc_index), (crate::axi::ERR_SLVERR, 0x1000, 0));
+        assert_eq!(s.fault_halts, 1);
+        assert_eq!(s.axi_slverrs, 1);
+        assert_eq!(f.take_error_irq(), 1);
+        assert_eq!(f.take_error_irq(), 0, "edge reported once");
+        assert!(f.idle(), "all in-flight traffic drained; the halt is quiescent");
+        // Launches written while faulted freeze in place.
+        f.csr_write(20, 0x5000);
+        f.step(23, &mut b, &mut s);
+        assert!(!f.wants_ar());
+        assert!(f.idle(), "frozen launch queue does not count as pending work");
+    }
+
+    #[test]
+    fn channel_reset_clears_the_fault_and_allows_relaunch() {
+        let mut f = fe(0);
+        let mut b = Backend::new(4, false, 0);
+        let mut s = RunStats::default();
+        f.csr_write(0, 0x1000);
+        f.step(3, &mut b, &mut s);
+        let _ = f.pop_ar(3, &mut s).unwrap();
+        let d = Descriptor::new(0x8000, 0x9000, 64);
+        deliver_word_with_err(&mut f, 10, &d.to_bytes(), 3, Resp::DecErr, &mut s);
+        assert!(f.error_csr().is_some());
+        f.channel_reset();
+        assert_eq!(f.error_csr(), None);
+        // The channel launches fresh chains again.
+        f.csr_write(100, 0x3000);
+        f.step(103, &mut b, &mut s);
+        assert_eq!(f.pop_ar(103, &mut s).unwrap().addr, 0x3000);
+        let ok = Descriptor::new(0x8000, 0x9000, 64);
+        deliver_desc(&mut f, 110, &ok, &mut s);
+        assert_eq!(f.handoff.len(), 1, "recovered channel parses normally");
+    }
+
+    #[test]
+    fn poisoned_completion_writes_the_error_stamp_and_raises_the_error_irq() {
+        let mut f = fe(0);
+        let mut s = RunStats::default();
+        f.on_transfer_complete(50, 0x1000, true, false, crate::axi::ERR_DECERR, &mut s);
+        let w = f.pop_w(51, &mut s).unwrap();
+        assert_eq!(w.addr, 0x1000);
+        assert_eq!(w.data, error_stamp(crate::axi::ERR_DECERR).to_le_bytes());
+        f.on_writeback_b(60, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
+        assert_eq!(f.take_error_irq(), 1, "poisoned stamp raises the error IRQ");
+        assert_eq!(f.take_irq(), 0, "never the completion IRQ");
+        assert_eq!(s.error_irqs, 1);
+        assert!(f.error_csr().is_none(), "a data fault poisons the transfer, not the channel");
+    }
+
+    #[test]
+    fn watchdog_fault_flushes_outstanding_feedback_writes() {
+        let mut f = fe(0);
+        let mut s = RunStats::default();
+        f.on_transfer_complete(10, 0x1000, true, false, 0, &mut s);
+        let w = f.pop_w(11, &mut s).unwrap();
+        assert!(f.awaiting_response(), "stamp B outstanding arms the watchdog");
+        f.on_watchdog(&mut s);
+        assert_eq!(f.error_csr().unwrap().code, ERR_TIMEOUT);
+        assert!(f.idle(), "flushed write-back no longer blocks quiescence");
+        // The withheld B finally arrives: tolerated, raises nothing.
+        f.on_writeback_b(99, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
+        assert_eq!(f.take_irq(), 0);
     }
 }

@@ -21,11 +21,12 @@ pub use backend::Backend;
 pub use config::{DmacConfig, IommuParams, RingParams};
 pub use controller::Controller;
 pub use descriptor::{ChainBuilder, Descriptor, NdExt, DESC_BYTES, END_OF_CHAIN};
-pub use frontend::Frontend;
+pub use frontend::{ChannelError, Frontend};
 pub use multichannel::MultiChannel;
 pub use ring::{CqRecord, CQ_RECORD_BYTES};
 
-use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS};
+use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS, ERR_TIMEOUT};
+use crate::mem::faults::FaultConfig;
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 
@@ -40,6 +41,11 @@ pub struct Dmac {
     pub backend: Backend,
     channel: usize,
     stats: RunStats,
+    /// Last cycle this channel made observable progress (a beat moved,
+    /// a response landed, a CSR was written).  The per-channel watchdog
+    /// trips when `now - last_progress` reaches `cfg.watchdog` while a
+    /// bus response is owed.
+    last_progress: Cycle,
 }
 
 impl Dmac {
@@ -59,6 +65,7 @@ impl Dmac {
             ),
             channel: ch,
             stats: RunStats::default(),
+            last_progress: 0,
         }
     }
 
@@ -69,6 +76,32 @@ impl Dmac {
     pub fn channel(&self) -> usize {
         self.channel
     }
+
+    /// The channel is owed a bus response — the only state in which a
+    /// wedge is possible, and therefore the only state that arms the
+    /// watchdog (a channel merely waiting for software, or for its own
+    /// coalescing deadline, must never trip).
+    fn awaiting_response(&self) -> bool {
+        self.frontend.awaiting_response() || self.backend.awaiting_response()
+    }
+
+    /// Watchdog expiry cycle, when armed.  Folded into `next_event` so
+    /// the fast-forward scheduler wakes exactly at the deadline — the
+    /// trip cycle is then bit-identical to the naive per-cycle loop
+    /// (progress updates only happen at event cycles, which the two
+    /// schedulers already share).
+    fn watchdog_deadline(&self) -> Option<Cycle> {
+        let wd = self.config().watchdog;
+        if wd > 0 && self.awaiting_response() {
+            Some(self.last_progress + wd as Cycle)
+        } else {
+            None
+        }
+    }
+
+    fn progress(&mut self, now: Cycle) {
+        self.last_progress = now;
+    }
 }
 
 impl Tickable for Dmac {
@@ -77,23 +110,29 @@ impl Tickable for Dmac {
     }
 
     fn next_event(&self) -> Option<Cycle> {
-        EventHorizon::merge(self.frontend.next_event(), self.backend.next_event())
+        EventHorizon::merge(
+            EventHorizon::merge(self.frontend.next_event(), self.backend.next_event()),
+            self.watchdog_deadline(),
+        )
     }
 }
 
 impl Controller for Dmac {
     fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
+        self.progress(now);
         self.frontend.csr_write(now, desc_addr);
     }
 
     fn ring_doorbell(&mut self, now: Cycle, ch: usize, tail: u64) {
         debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.progress(now);
         self.stats.ring_doorbells += 1;
         self.frontend.ring_doorbell(now, tail);
     }
 
     fn ring_cq_doorbell(&mut self, now: Cycle, ch: usize, head: u64) {
         debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.progress(now);
         self.frontend.ring_cq_doorbell(now, head);
     }
 
@@ -102,6 +141,7 @@ impl Controller for Dmac {
     }
 
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
+        self.progress(now);
         if beat.port == self.frontend.port() {
             self.frontend.on_desc_beat(now, beat, &mut self.stats);
         } else if beat.port == self.backend.port() {
@@ -112,6 +152,7 @@ impl Controller for Dmac {
     }
 
     fn on_b(&mut self, now: Cycle, b: BResp) {
+        self.progress(now);
         if b.port == self.frontend.port() {
             self.frontend.on_writeback_b(now, b, &mut self.stats);
         } else if b.port == self.backend.port() {
@@ -122,13 +163,32 @@ impl Controller for Dmac {
     }
 
     fn step(&mut self, now: Cycle) {
+        // Watchdog: responses delivered earlier this cycle already
+        // updated `last_progress`, so a trip only fires when the bus
+        // sat silent for the full window while owing us a response.
+        let wd = self.config().watchdog;
+        if wd > 0 && now >= self.last_progress + wd as Cycle && self.awaiting_response() {
+            self.stats.watchdog_trips += 1;
+            self.frontend.on_watchdog(&mut self.stats);
+            self.backend.abort_all(now, ERR_TIMEOUT, &mut self.stats);
+            // Restart the window: the aborted state may still owe drain
+            // beats, and a repeat-trip loop at every following cycle
+            // would distort the trip counter.
+            self.progress(now);
+        }
         // Backend first: completions produced this cycle feed the
         // frontend's feedback logic in the same cycle.
         self.backend.step(now, &mut self.stats);
         for done in self.backend.drain_completions() {
             self.stats.record_completion(done.cycle, done.bytes);
-            self.frontend
-                .on_transfer_complete(now, done.desc_addr, done.irq, done.ring, &mut self.stats);
+            self.frontend.on_transfer_complete(
+                now,
+                done.desc_addr,
+                done.irq,
+                done.ring,
+                done.status,
+                &mut self.stats,
+            );
         }
         self.frontend.step(now, &mut self.backend, &mut self.stats);
     }
@@ -144,13 +204,17 @@ impl Controller for Dmac {
     }
 
     fn pop_ar(&mut self, now: Cycle, port: Port) -> Option<ReadReq> {
-        if port == self.frontend.port() {
+        let req = if port == self.frontend.port() {
             self.frontend.pop_ar(now, &mut self.stats)
         } else if port == self.backend.port() {
             self.backend.pop_ar(now, &mut self.stats)
         } else {
             None
+        };
+        if req.is_some() {
+            self.progress(now);
         }
+        req
     }
 
     fn wants_w(&self, port: Port) -> bool {
@@ -164,13 +228,17 @@ impl Controller for Dmac {
     }
 
     fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat> {
-        if port == self.frontend.port() {
+        let w = if port == self.frontend.port() {
             self.frontend.pop_w(now, &mut self.stats)
         } else if port == self.backend.port() {
             self.backend.pop_w(now, &mut self.stats)
         } else {
             None
+        };
+        if w.is_some() {
+            self.progress(now);
         }
+        w
     }
 
     fn ports(&self) -> &'static [Port] {
@@ -195,5 +263,26 @@ impl Controller for Dmac {
 
     fn take_irq(&mut self) -> u64 {
         self.frontend.take_irq()
+    }
+
+    fn fault_config(&self) -> FaultConfig {
+        self.config().faults
+    }
+
+    fn channel_reset(&mut self, now: Cycle, ch: usize) {
+        debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.stats.channel_resets += 1;
+        self.frontend.channel_reset();
+        self.backend.reset();
+        self.progress(now);
+    }
+
+    fn error_csr(&self, ch: usize) -> Option<ChannelError> {
+        debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
+        self.frontend.error_csr()
+    }
+
+    fn take_error_irq(&mut self) -> u64 {
+        self.frontend.take_error_irq()
     }
 }

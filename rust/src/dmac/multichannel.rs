@@ -21,8 +21,10 @@
 //! structurally — and, property-tested, cycle-for-cycle — identical to
 //! a bare [`Dmac`].
 
+use super::frontend::ChannelError;
 use super::{Controller, Dmac, DmacConfig};
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS, MAX_CHANNELS};
+use crate::mem::faults::FaultConfig;
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 
@@ -215,6 +217,35 @@ impl Controller for MultiChannel {
             }
         }
     }
+
+    /// All channels share one fault plan at the memory — the plan of
+    /// channel 0's config (fault configs are a whole-memory property,
+    /// not a per-channel one).
+    fn fault_config(&self) -> FaultConfig {
+        self.channels[0].fault_config()
+    }
+
+    fn channel_reset(&mut self, now: Cycle, ch: usize) {
+        self.per_channel.clear();
+        self.channels[ch].channel_reset(now, 0);
+    }
+
+    fn error_csr(&self, ch: usize) -> Option<ChannelError> {
+        self.channels[ch].error_csr(0)
+    }
+
+    fn take_error_irq(&mut self) -> u64 {
+        self.channels.iter_mut().map(Controller::take_error_irq).sum()
+    }
+
+    fn take_error_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        for (ch, c) in self.channels.iter_mut().enumerate() {
+            let n = Controller::take_error_irq(c);
+            if n > 0 {
+                sink(ch, n);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -284,12 +315,14 @@ mod tests {
         let mut mc = MultiChannel::uniform(DmacConfig::base(), 2);
         // Inject IRQ edges directly through the feedback path.
         let mut inject = RunStats::default();
-        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true, false, &mut inject);
+        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true, false, 0, &mut inject);
         let mut s = RunStats::default();
         let w = mc.channels[1].frontend.pop_w(0, &mut s).unwrap();
-        mc.channels[1]
-            .frontend
-            .on_writeback_b(1, BResp { port: w.port, tag: w.tag }, &mut s);
+        mc.channels[1].frontend.on_writeback_b(
+            1,
+            BResp { port: w.port, tag: w.tag, resp: crate::axi::Resp::Okay },
+            &mut s,
+        );
         let mut seen = Vec::new();
         mc.take_irq_channels(&mut |ch, n| seen.push((ch, n)));
         assert_eq!(seen, vec![(1, 1)]);

@@ -194,15 +194,18 @@ impl RingState {
 
     /// Produce a completion record for the descriptor whose head word
     /// lives at SQ slot `sq_slot`, or `None` (record dropped) when the
-    /// consumer let the CQ fill up.
-    pub fn produce_cq(&mut self, sq_slot: u32) -> Option<(u64, [u8; 8])> {
+    /// consumer let the CQ fill up.  `status` is 0 for a clean
+    /// completion or the channel error code of a poisoned one — an
+    /// errored ring entry still completes through the CQ (with the
+    /// code in the record), so rings never wedge on a data fault.
+    pub fn produce_cq(&mut self, sq_slot: u32, status: u16) -> Option<(u64, [u8; 8])> {
         if self.cq_prod - self.cq_head >= self.params.cq_entries as u64 {
             self.overflowed = true;
             return None;
         }
         let rec = CqRecord {
             sq_slot,
-            status: 0,
+            status,
             phase: CqRecord::phase_of(self.cq_prod, self.params.cq_entries),
         };
         let addr = self.cq_slot_addr(self.cq_prod);
@@ -341,21 +344,47 @@ mod tests {
         // record is dropped (never written over live records) and the
         // sticky overflow flag latches.
         let mut r = RingState::new(params(8, 2));
-        let (a0, b0) = r.produce_cq(0).unwrap();
+        let (a0, b0) = r.produce_cq(0, 0).unwrap();
         assert_eq!(a0, 0x8000);
         assert!(CqRecord::from_bytes(&b0).phase);
-        let (a1, _) = r.produce_cq(1).unwrap();
+        let (a1, _) = r.produce_cq(1, 0).unwrap();
         assert_eq!(a1, 0x8008);
         assert!(!r.overflowed);
-        assert!(r.produce_cq(2).is_none(), "full CQ drops the record");
+        assert!(r.produce_cq(2, 0).is_none(), "full CQ drops the record");
         assert!(r.overflowed);
         // Consumer catches up: production resumes on the next lap with
         // the toggled phase.
         r.push_cq_doorbell(0, 2);
         r.drain_doorbells(0);
-        let (a2, b2) = r.produce_cq(3).unwrap();
+        let (a2, b2) = r.produce_cq(3, 0).unwrap();
         assert_eq!(a2, 0x8000, "lap 1 reuses slot 0");
         assert!(!CqRecord::from_bytes(&b2).phase, "lap 1 phase is toggled");
+    }
+
+    #[test]
+    fn error_status_records_coexist_with_the_sticky_overflow_flag() {
+        // The satellite's CQ error-status pin: a poisoned completion
+        // carries its code in the record, and neither direction
+        // clobbers the other — an overflow doesn't erase a pending
+        // error status, and an errored record doesn't reset the sticky
+        // overflow flag.
+        let mut r = RingState::new(params(8, 2));
+        let (_, b0) = r.produce_cq(0, 1).unwrap();
+        let rec = CqRecord::from_bytes(&b0);
+        assert_eq!(rec.status, 1, "SLVERR code rides in the record");
+        assert_eq!(rec.sq_slot, 0);
+        assert!(rec.phase);
+        let (_, b1) = r.produce_cq(1, 0).unwrap();
+        assert_eq!(CqRecord::from_bytes(&b1).status, 0, "clean record after an errored one");
+        // CQ full: an errored record is dropped like any other, and the
+        // overflow flag latches without disturbing earlier statuses.
+        assert!(r.produce_cq(2, 3).is_none());
+        assert!(r.overflowed);
+        r.push_cq_doorbell(0, 2);
+        r.drain_doorbells(0);
+        let (_, b3) = r.produce_cq(3, 2).unwrap();
+        assert_eq!(CqRecord::from_bytes(&b3).status, 2, "DECERR code after the overflow");
+        assert!(r.overflowed, "sticky flag survives later error records");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The dmaengine-style *memcpy* driver state machine.
 
-use crate::dmac::descriptor::{NdExt, ND_EXT_BYTES};
+use super::retry::RetryPolicy;
+use crate::dmac::descriptor::{error_status, is_completed, NdExt, ND_EXT_BYTES};
 use crate::dmac::{Controller, Descriptor, DESC_BYTES, END_OF_CHAIN};
 use crate::sim::Cycle;
 use crate::tb::System;
@@ -26,6 +27,11 @@ struct Chain {
     head: u64,
     last_desc: u64,
     cookies: Vec<Cookie>,
+    /// The sealed descriptor list, kept so a failed chain can be
+    /// rewritten (error stamps cleared) and resubmitted.
+    descs: Vec<(u64, Descriptor)>,
+    /// Resubmissions so far (bounded by the driver's [`RetryPolicy`]).
+    attempts: u32,
 }
 
 #[derive(Debug)]
@@ -54,6 +60,16 @@ pub struct DmaDriver {
     /// while `is_complete` remains a stable status query).
     callback_cursor: usize,
     pub irqs_handled: u64,
+    /// Channel-error recovery policy; [`RetryPolicy::none`] fails a
+    /// chain on its first error.
+    pub retry: RetryPolicy,
+    /// Cookies whose chain errored and exhausted the retry budget.
+    failed: Vec<Cookie>,
+    failed_cursor: usize,
+    /// Channel resets issued by the recovery path.
+    pub resets_issued: u64,
+    /// Chain resubmissions scheduled by the recovery path.
+    pub retries_scheduled: u64,
 }
 
 impl DmaDriver {
@@ -72,6 +88,11 @@ impl DmaDriver {
             completed: Vec::new(),
             callback_cursor: 0,
             irqs_handled: 0,
+            retry: RetryPolicy::none(),
+            failed: Vec::new(),
+            failed_cursor: 0,
+            resets_issued: 0,
+            retries_scheduled: 0,
         }
     }
 
@@ -79,6 +100,12 @@ impl DmaDriver {
     /// writes and promoted chains launch there).
     pub fn on_channel(mut self, ch: usize) -> Self {
         self.channel = ch;
+        self
+    }
+
+    /// Enable bounded reset-and-resubmit recovery for errored chains.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
         self
     }
 
@@ -191,13 +218,14 @@ impl DmaDriver {
         }
         // Only the last descriptor of the chain signals (§II-E).
         flat[n - 1].1 = flat[n - 1].1.with_irq();
-        for (addr, d) in &flat {
-            sys.mem.backdoor_write(*addr, &d.to_bytes());
-            if let Some(nd) = d.nd {
-                sys.mem.backdoor_write(*addr + DESC_BYTES, &nd.to_bytes());
-            }
-        }
-        let chain = Chain { head: flat[0].0, last_desc: flat[n - 1].0, cookies };
+        write_chain(sys, &flat);
+        let chain = Chain {
+            head: flat[0].0,
+            last_desc: flat[n - 1].0,
+            cookies,
+            descs: flat,
+            attempts: 0,
+        };
         if self.active.len() < self.max_chains {
             sys.schedule_launch_on(now + 1, self.channel, chain.head);
             self.active.push(chain);
@@ -208,18 +236,52 @@ impl DmaDriver {
 
     /// The interrupt handler: detect completed chains via the
     /// in-memory completion stamp of their last descriptor, fire
-    /// callbacks, and schedule stored chains.
+    /// callbacks, recover errored chains (reset + bounded resubmit),
+    /// and schedule stored chains.
+    ///
+    /// Registered for both the completion IRQ and the channel error
+    /// IRQ — like a shared Linux ISR, the source selects no distinct
+    /// code path; the handler re-scans stamps and the error CSR.
     pub fn irq_handler<C: Controller>(&mut self, sys: &mut System<C>, now: Cycle) {
         self.irqs_handled += 1;
+        // A halted channel froze everything still queued on it: every
+        // incomplete active chain must be rewritten and relaunched
+        // after the reset, not just the one named by the error CSR.
+        let halted = sys.ctrl.error_csr(self.channel).is_some();
+        let mut to_recover = Vec::new();
         let mut still_active = Vec::new();
         for chain in self.active.drain(..) {
-            if crate::dmac::descriptor::is_completed(&sys.mem, chain.last_desc) {
+            let errored =
+                chain.descs.iter().any(|&(addr, _)| error_status(&sys.mem, addr).is_some());
+            if !errored && is_completed(&sys.mem, chain.last_desc) {
                 self.completed.extend(chain.cookies.iter().copied());
+            } else if errored || halted {
+                to_recover.push(chain);
             } else {
                 still_active.push(chain);
             }
         }
         self.active = still_active;
+        if halted {
+            sys.schedule_reset(now + 1, self.channel);
+            self.resets_issued += 1;
+        }
+        for mut chain in to_recover {
+            if self.retry.allows(chain.attempts) {
+                // Rewrite the whole chain: clears error stamps and the
+                // completion stamps of already-finished members (a
+                // memcpy re-run is idempotent), then relaunch behind
+                // the reset with exponential backoff.
+                let delay = 2 + self.retry.backoff(chain.attempts);
+                chain.attempts += 1;
+                self.retries_scheduled += 1;
+                write_chain(sys, &chain.descs);
+                sys.schedule_launch_on(now + delay, self.channel, chain.head);
+                self.active.push(chain);
+            } else {
+                self.failed.extend(chain.cookies.iter().copied());
+            }
+        }
         while self.active.len() < self.max_chains {
             match self.stored.pop_front() {
                 Some(chain) => {
@@ -236,10 +298,23 @@ impl DmaDriver {
         self.completed.contains(&cookie)
     }
 
+    /// The transaction errored and exhausted its retry budget
+    /// (dmaengine's `DMA_ERROR` cookie status).
+    pub fn is_failed(&self, cookie: Cookie) -> bool {
+        self.failed.contains(&cookie)
+    }
+
     /// Completion callbacks fired since the last call.
     pub fn take_completed(&mut self) -> Vec<Cookie> {
         let new = self.completed[self.callback_cursor..].to_vec();
         self.callback_cursor = self.completed.len();
+        new
+    }
+
+    /// Failure callbacks fired since the last call.
+    pub fn take_failed(&mut self) -> Vec<Cookie> {
+        let new = self.failed[self.failed_cursor..].to_vec();
+        self.failed_cursor = self.failed.len();
         new
     }
 
@@ -254,6 +329,17 @@ impl DmaDriver {
     /// Free all descriptors (client teardown).
     pub fn reset_pool(&mut self) {
         self.pool_cursor = 0;
+    }
+}
+
+/// Write a sealed descriptor list into simulated memory (initial
+/// submission and retry rewrites share this path).
+fn write_chain<C: Controller>(sys: &mut System<C>, descs: &[(u64, Descriptor)]) {
+    for (addr, d) in descs {
+        sys.mem.backdoor_write(*addr, &d.to_bytes());
+        if let Some(nd) = d.nd {
+            sys.mem.backdoor_write(*addr + DESC_BYTES, &nd.to_bytes());
+        }
     }
 }
 
@@ -383,6 +469,60 @@ mod tests {
         }
         assert_eq!(drv_cell.stored_chains(), 0);
         assert_eq!(drv_cell.irqs_handled, 3);
+    }
+
+    #[test]
+    fn fetch_fault_recovery_round_trip_through_the_soc() {
+        use crate::mem::FaultConfig;
+        // Exactly one SLVERR, landing on the first descriptor-fetch
+        // beat: the channel halts, the error IRQ fires, and the driver
+        // resets + resubmits to a now-clean bus.
+        let cfg = DmacConfig::speculation()
+            .with_faults(FaultConfig::seeded(5).with_read_slverr(1_000_000).with_max_faults(1))
+            .with_watchdog(5000);
+        let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        let mut drv = driver().with_retry(crate::driver::RetryPolicy::bounded(3, 32));
+        fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 4096, 7);
+        let tx = drv.prep_memcpy(map::DST_BASE, map::SRC_BASE, 4096).unwrap();
+        let cookie = drv.tx_submit(tx);
+        drv.issue_pending(&mut soc.sys, 0);
+        let mut drv_cell = drv;
+        let stats = soc.run(|sys, _cpu, now| drv_cell.irq_handler(sys, now)).unwrap();
+        assert!(drv_cell.is_complete(cookie), "recovered after reset + resubmit");
+        assert!(!drv_cell.is_failed(cookie));
+        assert_eq!(drv_cell.resets_issued, 1);
+        assert_eq!(drv_cell.retries_scheduled, 1);
+        assert_eq!(stats.fault_halts, 1);
+        assert_eq!(stats.channel_resets, 1);
+        assert_eq!(
+            soc.sys.mem.backdoor_read(map::SRC_BASE, 4096).to_vec(),
+            soc.sys.mem.backdoor_read(map::DST_BASE, 4096).to_vec()
+        );
+    }
+
+    #[test]
+    fn persistent_decerr_exhausts_retries_and_fails_the_cookie() {
+        use crate::mem::FaultConfig;
+        // The source buffer sits in a DECERR hole that stays bad on
+        // every retry: the bounded policy gives up and the cookie
+        // fails without ever halting the channel.
+        let cfg = DmacConfig::base().with_faults(
+            FaultConfig::seeded(6).with_decerr_window(map::SRC_BASE, map::SRC_BASE + 0x1000),
+        );
+        let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        let mut drv = driver().with_retry(crate::driver::RetryPolicy::bounded(2, 16));
+        let tx = drv.prep_memcpy(map::DST_BASE, map::SRC_BASE, 256).unwrap();
+        let cookie = drv.tx_submit(tx);
+        drv.issue_pending(&mut soc.sys, 0);
+        let mut drv_cell = drv;
+        let stats = soc.run(|sys, _cpu, now| drv_cell.irq_handler(sys, now)).unwrap();
+        assert!(drv_cell.is_failed(cookie));
+        assert!(!drv_cell.is_complete(cookie));
+        assert_eq!(drv_cell.take_failed(), vec![cookie]);
+        assert_eq!(drv_cell.resets_issued, 0, "data errors never halt the channel");
+        assert_eq!(drv_cell.retries_scheduled, 2);
+        // Initial attempt + 2 retries, all aborted.
+        assert_eq!(stats.aborted_transfers, 3);
     }
 
     #[test]

@@ -20,9 +20,11 @@
 pub mod dmaengine;
 pub mod mapper;
 pub mod multitenant;
+pub mod retry;
 pub mod rings;
 
 pub use dmaengine::{Cookie, DmaDriver, Tx};
 pub use mapper::{DmaMapper, DmaMapping};
 pub use multitenant::{MultiTenantDriver, VchanId};
+pub use retry::RetryPolicy;
 pub use rings::{MultiRingDriver, RingDriver, RingEntry};

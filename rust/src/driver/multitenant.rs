@@ -16,9 +16,15 @@
 //! * the **interrupt handler** is shared: every physical channel's
 //!   chains are scanned for completion stamps, stored chains are
 //!   promoted per channel, and completion callbacks fire in channel
-//!   order (deterministic).
+//!   order (deterministic);
+//! * a vchan whose requests keep failing after the per-channel
+//!   [`RetryPolicy`] is exhausted gets **quarantined**: further
+//!   submissions are rejected so one misbehaving client (a bad IOVA
+//!   range, an unbacked window) cannot monopolise the retry machinery
+//!   while healthy clients starve.
 
 use super::dmaengine::{Cookie, DmaDriver};
+use super::retry::RetryPolicy;
 use crate::dmac::descriptor::NdExt;
 use crate::dmac::{Controller, DESC_BYTES};
 use crate::sim::Cycle;
@@ -34,6 +40,10 @@ struct Vchan {
     pinned: Option<usize>,
     /// Cookies issued to this client, in submission order.
     cookies: Vec<Cookie>,
+    /// Requests that failed after retry exhaustion.
+    failures: u32,
+    /// Quarantined clients get `Err` from every submission.
+    quarantined: bool,
 }
 
 #[derive(Debug)]
@@ -45,6 +55,11 @@ pub struct MultiTenantDriver {
     outstanding: Vec<(Cookie, usize, u64)>,
     completed: Vec<Cookie>,
     callback_cursor: usize,
+    /// Failed requests of a vchan before it is quarantined;
+    /// 0 disables quarantine.
+    quarantine_after: u32,
+    failed: Vec<Cookie>,
+    failed_cursor: usize,
 }
 
 impl MultiTenantDriver {
@@ -65,7 +80,27 @@ impl MultiTenantDriver {
             outstanding: Vec::new(),
             completed: Vec::new(),
             callback_cursor: 0,
+            quarantine_after: 0,
+            failed: Vec::new(),
+            failed_cursor: 0,
         }
+    }
+
+    /// Install `policy` on every physical channel's driver, so a
+    /// faulted chain is reset-and-resubmitted up to the policy's cap
+    /// before its cookies surface as failed.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        for d in &mut self.phys {
+            d.retry = policy;
+        }
+        self
+    }
+
+    /// Quarantine a vchan once `n` of its requests have failed
+    /// (post-retry).  `n = 0` (the default) disables quarantine.
+    pub fn with_quarantine(mut self, n: u32) -> Self {
+        self.quarantine_after = n;
+        self
     }
 
     pub fn num_channels(&self) -> usize {
@@ -74,7 +109,12 @@ impl MultiTenantDriver {
 
     /// Open a client submission queue with least-loaded placement.
     pub fn open(&mut self) -> VchanId {
-        self.vchans.push(Vchan { pinned: None, cookies: Vec::new() });
+        self.vchans.push(Vchan {
+            pinned: None,
+            cookies: Vec::new(),
+            failures: 0,
+            quarantined: false,
+        });
         self.vchans.len() - 1
     }
 
@@ -86,7 +126,12 @@ impl MultiTenantDriver {
                 self.phys.len()
             )));
         }
-        self.vchans.push(Vchan { pinned: Some(ch), cookies: Vec::new() });
+        self.vchans.push(Vchan {
+            pinned: Some(ch),
+            cookies: Vec::new(),
+            failures: 0,
+            quarantined: false,
+        });
         Ok(self.vchans.len() - 1)
     }
 
@@ -141,6 +186,12 @@ impl MultiTenantDriver {
         total: u64,
         mut prep: impl FnMut(&mut DmaDriver) -> Result<super::dmaengine::Tx>,
     ) -> Result<Cookie> {
+        if self.vchans[vchan].quarantined {
+            return Err(Error::Driver(format!(
+                "vchan {vchan} is quarantined after {} failed requests",
+                self.vchans[vchan].failures
+            )));
+        }
         let candidates = self.placement_order(vchan);
         let mut last_err = None;
         for ch in candidates {
@@ -201,6 +252,26 @@ impl MultiTenantDriver {
             self.outstanding.retain(|&(c, _, _)| !done.contains(&c));
             self.completed.extend(newly);
         }
+        let mut newly_failed = Vec::new();
+        for d in &mut self.phys {
+            newly_failed.extend(d.take_failed());
+        }
+        if !newly_failed.is_empty() {
+            // Failed work will never complete: stop counting it as
+            // load, charge the owning vchan, and quarantine repeat
+            // offenders.
+            let dead: std::collections::HashSet<Cookie> = newly_failed.iter().copied().collect();
+            self.outstanding.retain(|&(c, _, _)| !dead.contains(&c));
+            for &cookie in &newly_failed {
+                if let Some(v) = self.vchans.iter_mut().find(|v| v.cookies.contains(&cookie)) {
+                    v.failures += 1;
+                    if self.quarantine_after > 0 && v.failures >= self.quarantine_after {
+                        v.quarantined = true;
+                    }
+                }
+            }
+            self.failed.extend(newly_failed);
+        }
     }
 
     pub fn is_complete(&self, cookie: Cookie) -> bool {
@@ -212,6 +283,23 @@ impl MultiTenantDriver {
         let new = self.completed[self.callback_cursor..].to_vec();
         self.callback_cursor = self.completed.len();
         new
+    }
+
+    /// Did `cookie` fail after retry exhaustion on its channel?
+    pub fn is_failed(&self, cookie: Cookie) -> bool {
+        self.failed.contains(&cookie)
+    }
+
+    /// Failure callbacks fired since the last call.
+    pub fn take_failed(&mut self) -> Vec<Cookie> {
+        let new = self.failed[self.failed_cursor..].to_vec();
+        self.failed_cursor = self.failed.len();
+        new
+    }
+
+    /// Is this client quarantined (all submissions rejected)?
+    pub fn is_quarantined(&self, vchan: VchanId) -> bool {
+        self.vchans[vchan].quarantined
     }
 
     /// Cookies issued to `vchan`, in submission order.
@@ -333,6 +421,48 @@ mod tests {
         let c1 = d.submit(a, map::DST_BASE + 0x10000, map::SRC_BASE, 128).unwrap();
         assert_eq!(d.channel_load(1), 128);
         assert!(c1 > c0, "cookies stay globally monotone across prep kinds");
+    }
+
+    #[test]
+    fn repeatedly_faulting_vchan_is_quarantined_while_others_flow() {
+        use crate::dmac::{DmacConfig, MultiChannel};
+        use crate::mem::backdoor::fill_pattern;
+        use crate::mem::{FaultConfig, LatencyProfile};
+        use crate::soc::Soc;
+
+        // One client's source window decode-errors on every access (an
+        // unbacked IOVA range): its requests exhaust the retry policy
+        // and fail, and after two failures the vchan is quarantined —
+        // while the healthy client keeps completing on its channel.
+        let bad_src = map::SRC_BASE + 0x2000;
+        let cfg = DmacConfig::speculation()
+            .with_faults(FaultConfig::seeded(9).with_decerr_window(bad_src, bad_src + 0x1000));
+        let mut soc = Soc::new(LatencyProfile::Ddr3, MultiChannel::uniform(cfg, 2));
+        fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 1024, 0xBAD);
+        let mut d = MultiTenantDriver::new(2, map::DESC_BASE, map::DESC_SIZE, 2)
+            .with_retry(crate::driver::RetryPolicy::bounded(1, 16))
+            .with_quarantine(2);
+        let healthy = d.open_pinned(0).unwrap();
+        let sick = d.open_pinned(1).unwrap();
+        let good = d.submit(healthy, map::DST_BASE, map::SRC_BASE, 1024).unwrap();
+        let bad_a = d.submit(sick, map::DST_BASE + 0x10000, bad_src, 512).unwrap();
+        let bad_b = d.submit(sick, map::DST_BASE + 0x20000, bad_src + 0x200, 512).unwrap();
+        d.issue_pending(&mut soc.sys, 0);
+        soc.run(|sys, _cpu, now| d.irq_handler(sys, now)).unwrap();
+        assert!(d.is_complete(good));
+        assert!(d.is_failed(bad_a) && d.is_failed(bad_b));
+        assert_eq!(d.take_failed(), vec![bad_a, bad_b]);
+        assert!(d.is_quarantined(sick));
+        assert!(!d.is_quarantined(healthy));
+        assert_eq!(d.channel_load(1), 0, "failed work no longer counts as load");
+        // The quarantined client is cut off; the healthy one continues.
+        let refused = d.submit(sick, map::DST_BASE + 0x30000, map::SRC_BASE, 64);
+        assert!(matches!(refused, Err(Error::Driver(_))));
+        let again = d.submit(healthy, map::DST_BASE + 0x40000, map::SRC_BASE, 64).unwrap();
+        let now = soc.now();
+        d.issue_pending(&mut soc.sys, now);
+        soc.run(|sys, _cpu, now| d.irq_handler(sys, now)).unwrap();
+        assert!(d.is_complete(again));
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Bounded retry with deterministic backoff.
+//!
+//! Linux DMA drivers recover from channel errors by resetting the
+//! channel and resubmitting the failed request a bounded number of
+//! times (e.g. the dmaengine `device_terminate_all` + resubmit dance).
+//! [`RetryPolicy`] captures that loop for the simulated drivers: a cap
+//! on resubmissions per request and an exponential cycle-based backoff
+//! between them.  Everything is integer cycle arithmetic — no wall
+//! clock — so recovery schedules are bit-identical across runs and
+//! schedulers.
+
+/// Retry knobs shared by [`super::DmaDriver`], [`super::RingDriver`]
+/// and [`super::MultiTenantDriver`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum resubmissions per request; 0 = fail on first error.
+    pub max_retries: u32,
+    /// Base backoff in cycles; retry `n` waits `backoff_cycles << n`.
+    pub backoff_cycles: u64,
+}
+
+impl RetryPolicy {
+    /// No retries: the first error fails the request (the default).
+    pub fn none() -> Self {
+        Self { max_retries: 0, backoff_cycles: 0 }
+    }
+
+    /// Up to `max_retries` resubmissions with exponential backoff from
+    /// `backoff_cycles`.
+    pub fn bounded(max_retries: u32, backoff_cycles: u64) -> Self {
+        Self { max_retries, backoff_cycles }
+    }
+
+    /// May a request that already failed `attempts` times go again?
+    pub fn allows(&self, attempts: u32) -> bool {
+        attempts < self.max_retries
+    }
+
+    /// Backoff before retry number `attempt` (0-based): exponential,
+    /// with the shift clamped so pathological attempt counts cannot
+    /// overflow the cycle space.
+    pub fn backoff(&self, attempt: u32) -> u64 {
+        self.backoff_cycles << attempt.min(16)
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_allows() {
+        let p = RetryPolicy::none();
+        assert!(!p.allows(0));
+        assert_eq!(p.backoff(0), 0);
+    }
+
+    #[test]
+    fn bounded_allows_up_to_the_cap() {
+        let p = RetryPolicy::bounded(2, 100);
+        assert!(p.allows(0));
+        assert!(p.allows(1));
+        assert!(!p.allows(2));
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_clamped() {
+        let p = RetryPolicy::bounded(40, 16);
+        assert_eq!(p.backoff(0), 16);
+        assert_eq!(p.backoff(1), 32);
+        assert_eq!(p.backoff(3), 128);
+        assert_eq!(p.backoff(63), 16 << 16, "shift clamps at 16");
+    }
+}

@@ -17,9 +17,10 @@
 
 use super::dmaengine::Cookie;
 use super::multitenant::VchanId;
+use super::retry::RetryPolicy;
 use crate::dmac::config::RingParams;
 use crate::dmac::descriptor::{NdExt, ND_EXT_BYTES};
-use crate::dmac::ring::CqRecord;
+use crate::dmac::ring::{CqRecord, CQ_RECORD_BYTES};
 use crate::dmac::{Controller, Descriptor, DESC_BYTES};
 use crate::sim::Cycle;
 use crate::tb::System;
@@ -55,6 +56,22 @@ struct InFlight {
     /// Slots this entry occupies (freed when the record is consumed).
     slots: u64,
     done: bool,
+    /// The original request, kept so an errored or halted entry can be
+    /// rewritten into fresh slots and resubmitted.
+    entry: RingEntry,
+    /// Resubmissions so far (bounded by the driver's [`RetryPolicy`]).
+    attempts: u32,
+}
+
+/// A retired entry whose CQ record carried a nonzero status, awaiting
+/// [`RingDriver::resubmit_errored`] (or failure once the retry budget
+/// is spent).
+#[derive(Debug, Clone, Copy)]
+struct Errored {
+    cookie: Cookie,
+    status: u16,
+    entry: RingEntry,
+    attempts: u32,
 }
 
 /// Software producer/consumer for one channel's ring pair.
@@ -72,6 +89,20 @@ pub struct RingDriver {
     next_cookie: Cookie,
     completed: Vec<Cookie>,
     callback_cursor: usize,
+    /// Channel-error recovery policy; [`RetryPolicy::none`] fails an
+    /// entry on its first error.
+    pub retry: RetryPolicy,
+    /// Per-cookie CQ status of every retired entry (0 = success).
+    statuses: Vec<(Cookie, u16)>,
+    /// Errored entries awaiting resubmission or failure.
+    errored: VecDeque<Errored>,
+    /// Cookies that errored and exhausted the retry budget.
+    failed: Vec<Cookie>,
+    failed_cursor: usize,
+    /// Channel resets issued by [`Self::recover`].
+    pub resets_issued: u64,
+    /// Entry resubmissions scheduled by the recovery paths.
+    pub retries_scheduled: u64,
 }
 
 impl RingDriver {
@@ -89,7 +120,20 @@ impl RingDriver {
             next_cookie: 1,
             completed: Vec::new(),
             callback_cursor: 0,
+            retry: RetryPolicy::none(),
+            statuses: Vec::new(),
+            errored: VecDeque::new(),
+            failed: Vec::new(),
+            failed_cursor: 0,
+            resets_issued: 0,
+            retries_scheduled: 0,
         }
+    }
+
+    /// Enable bounded resubmit recovery for errored entries.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
     }
 
     pub fn channel(&self) -> usize {
@@ -154,38 +198,55 @@ impl RingDriver {
         }
         let mut cookies = Vec::with_capacity(entries.len());
         for e in entries {
-            let head_slot = (self.sq_tail % self.params.sq_entries as u64) as u32;
-            match *e {
-                RingEntry::Memcpy { dst, src, len } => {
-                    let d = Descriptor::new(src, dst, len);
-                    sys.mem.backdoor_write(self.slot_addr(self.sq_tail), &d.to_bytes());
-                }
-                RingEntry::Nd { dst, src, row_bytes, nd } => {
-                    debug_assert_eq!(ND_EXT_BYTES, DESC_BYTES);
-                    let d = Descriptor::new(src, dst, row_bytes).with_nd_levels(nd);
-                    sys.mem.backdoor_write(self.slot_addr(self.sq_tail), &d.to_bytes());
-                    sys.mem.backdoor_write(self.slot_addr(self.sq_tail + 1), &nd.to_bytes());
-                }
-            }
             let cookie = self.next_cookie;
             self.next_cookie += 1;
-            self.in_flight.push_back(InFlight {
-                cookie,
-                head_slot,
-                slots: e.slots(),
-                done: false,
-            });
-            self.sq_tail += e.slots();
+            self.push_entry(sys, *e, cookie, 0);
             cookies.push(cookie);
         }
         sys.schedule_doorbell(at.max(sys.now()), self.channel, self.sq_tail);
         Ok(cookies)
     }
 
+    /// Write one entry into the next free submission slots and track it
+    /// in flight (no doorbell — the caller batches that).
+    fn push_entry<C: Controller>(
+        &mut self,
+        sys: &mut System<C>,
+        e: RingEntry,
+        cookie: Cookie,
+        attempts: u32,
+    ) {
+        let head_slot = (self.sq_tail % self.params.sq_entries as u64) as u32;
+        match e {
+            RingEntry::Memcpy { dst, src, len } => {
+                let d = Descriptor::new(src, dst, len);
+                sys.mem.backdoor_write(self.slot_addr(self.sq_tail), &d.to_bytes());
+            }
+            RingEntry::Nd { dst, src, row_bytes, nd } => {
+                debug_assert_eq!(ND_EXT_BYTES, DESC_BYTES);
+                let d = Descriptor::new(src, dst, row_bytes).with_nd_levels(nd);
+                sys.mem.backdoor_write(self.slot_addr(self.sq_tail), &d.to_bytes());
+                sys.mem.backdoor_write(self.slot_addr(self.sq_tail + 1), &nd.to_bytes());
+            }
+        }
+        self.in_flight.push_back(InFlight {
+            cookie,
+            head_slot,
+            slots: e.slots(),
+            done: false,
+            entry: e,
+            attempts,
+        });
+        self.sq_tail += e.slots();
+    }
+
     /// Consume completion records (phase-bit valid), free the
     /// submission slots they retire, and republish the consumer index
     /// through the CQ doorbell at cycle `at`.  Returns the cookies
-    /// completed by this poll, in CQ order.
+    /// retired by this poll, in CQ order — including errored entries,
+    /// whose nonzero CQ status is surfaced through
+    /// [`status_of`](Self::status_of) / [`take_failed`](Self::take_failed)
+    /// rather than completing them.
     pub fn poll_completions<C: Controller>(
         &mut self,
         sys: &mut System<C>,
@@ -205,6 +266,17 @@ impl RingDriver {
                 .expect("completion record for an unknown submission slot");
             entry.done = true;
             newly.push(entry.cookie);
+            self.statuses.push((entry.cookie, rec.status));
+            if rec.status == 0 {
+                self.completed.push(entry.cookie);
+            } else {
+                self.errored.push_back(Errored {
+                    cookie: entry.cookie,
+                    status: rec.status,
+                    entry: entry.entry,
+                    attempts: entry.attempts,
+                });
+            }
             self.cq_head += 1;
         }
         // Slots free strictly in ring order: release the contiguous
@@ -216,9 +288,77 @@ impl RingDriver {
         }
         if !newly.is_empty() {
             sys.schedule_cq_doorbell(at.max(sys.now()), self.channel, self.cq_head);
-            self.completed.extend(newly.iter().copied());
         }
         newly
+    }
+
+    /// Resubmit every errored entry whose retry budget allows it (same
+    /// cookie, fresh submission slots, one doorbell); entries beyond
+    /// the budget fail.  Returns the resubmitted cookies.
+    pub fn resubmit_errored<C: Controller>(
+        &mut self,
+        sys: &mut System<C>,
+        at: Cycle,
+    ) -> Vec<Cookie> {
+        let mut resubmitted = Vec::new();
+        let mut max_attempts = 0;
+        while let Some(e) = self.errored.pop_front() {
+            if self.retry.allows(e.attempts) && e.entry.slots() <= self.free_slots() {
+                max_attempts = max_attempts.max(e.attempts);
+                self.retries_scheduled += 1;
+                self.push_entry(sys, e.entry, e.cookie, e.attempts + 1);
+                resubmitted.push(e.cookie);
+            } else {
+                self.failed.push(e.cookie);
+            }
+        }
+        if !resubmitted.is_empty() {
+            let delay = 1 + self.retry.backoff(max_attempts);
+            sys.schedule_doorbell(at.max(sys.now()) + delay, self.channel, self.sq_tail);
+        }
+        resubmitted
+    }
+
+    /// Recover a *halted* channel (sticky error CSR): reset it, zero
+    /// the CQ memory (the hardware ring state restarts at index 0, so
+    /// stale records would alias the fresh phase parity), rebuild the
+    /// software ring view, and resubmit everything that was in flight.
+    /// Counts one attempt against each resubmitted entry; entries
+    /// beyond the retry budget fail.  Returns the resubmitted cookies.
+    pub fn recover<C: Controller>(&mut self, sys: &mut System<C>, at: Cycle) -> Vec<Cookie> {
+        let t = at.max(sys.now());
+        sys.schedule_reset(t, self.channel);
+        self.resets_issued += 1;
+        for i in 0..self.params.cq_entries as u64 {
+            sys.mem.backdoor_write(self.cq_slot_addr(i), &[0u8; CQ_RECORD_BYTES as usize]);
+        }
+        self.sq_tail = 0;
+        self.sq_freed = 0;
+        self.cq_head = 0;
+        let pending: Vec<InFlight> = std::mem::take(&mut self.in_flight).into();
+        let mut resubmitted = Vec::new();
+        let mut max_attempts = 0;
+        for f in pending {
+            if f.done {
+                // Already retired (out of order, behind an undone
+                // head): its status is recorded; nothing to resubmit.
+                continue;
+            }
+            if self.retry.allows(f.attempts) {
+                max_attempts = max_attempts.max(f.attempts);
+                self.retries_scheduled += 1;
+                self.push_entry(sys, f.entry, f.cookie, f.attempts + 1);
+                resubmitted.push(f.cookie);
+            } else {
+                self.statuses.push((f.cookie, crate::axi::ERR_TIMEOUT));
+                self.failed.push(f.cookie);
+            }
+        }
+        if !resubmitted.is_empty() {
+            let delay = 1 + self.retry.backoff(max_attempts);
+            sys.schedule_doorbell(t + delay, self.channel, self.sq_tail);
+        }
+        resubmitted
     }
 
     /// [`poll_completions`](Self::poll_completions) with the CQ
@@ -244,10 +384,29 @@ impl RingDriver {
         self.completed.contains(&cookie)
     }
 
+    /// Latest CQ status of `cookie`: `None` until a record retires it,
+    /// `Some(0)` on success, `Some(code)` on error (a resubmitted
+    /// entry's later success appends a newer status).
+    pub fn status_of(&self, cookie: Cookie) -> Option<u16> {
+        self.statuses.iter().rev().find(|&&(c, _)| c == cookie).map(|&(_, s)| s)
+    }
+
+    /// The entry errored and exhausted its retry budget.
+    pub fn is_failed(&self, cookie: Cookie) -> bool {
+        self.failed.contains(&cookie)
+    }
+
     /// Completion callbacks fired since the last call.
     pub fn take_completed(&mut self) -> Vec<Cookie> {
         let new = self.completed[self.callback_cursor..].to_vec();
         self.callback_cursor = self.completed.len();
+        new
+    }
+
+    /// Failure callbacks fired since the last call.
+    pub fn take_failed(&mut self) -> Vec<Cookie> {
+        let new = self.failed[self.failed_cursor..].to_vec();
+        self.failed_cursor = self.failed.len();
         new
     }
 
@@ -550,6 +709,82 @@ mod tests {
             &[RingEntry::Nd { dst: map::DST_BASE, src: map::SRC_BASE, row_bytes: 64, nd }],
         );
         assert!(matches!(err, Err(Error::Driver(_))));
+    }
+
+    #[test]
+    fn errored_entry_surfaces_its_cq_status_and_fails_without_retry() {
+        use crate::axi::ERR_DECERR;
+        use crate::mem::FaultConfig;
+        // One entry reads from a DECERR hole, one from healthy memory:
+        // both retire through the CQ, only the healthy one completes.
+        let params = ring_params(16, 16);
+        let cfg = DmacConfig::speculation().with_ring(params).with_faults(
+            FaultConfig::seeded(21).with_decerr_window(map::SRC_BASE, map::SRC_BASE + 0x100),
+        );
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        let mut drv = RingDriver::new(0, params);
+        fill_pattern(&mut sys.mem, map::SRC_BASE + 0x1000, 256, 4);
+        let bad = RingEntry::Memcpy { dst: map::DST_BASE, src: map::SRC_BASE, len: 64 };
+        let good =
+            RingEntry::Memcpy { dst: map::DST_BASE + 4096, src: map::SRC_BASE + 0x1000, len: 256 };
+        let cookies = drv.submit_batch(&mut sys, 0, &[bad, good]).unwrap();
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.cq_records, 2, "errored entries still retire through the CQ");
+        assert_eq!(stats.cq_error_records, 1);
+        assert_eq!(stats.aborted_transfers, 1);
+        assert!(sys.ctrl.error_csr(0).is_none(), "ring data errors never halt the channel");
+        let retired = drv.poll_now(&mut sys);
+        assert_eq!(retired.len(), 2);
+        assert_eq!(drv.status_of(cookies[0]), Some(ERR_DECERR));
+        assert_eq!(drv.status_of(cookies[1]), Some(0));
+        assert!(!drv.is_complete(cookies[0]));
+        assert!(drv.is_complete(cookies[1]));
+        // Default policy: no retries — the errored cookie fails.
+        assert!(drv.resubmit_errored(&mut sys, sys.now()).is_empty());
+        assert_eq!(drv.take_failed(), vec![cookies[0]]);
+        assert!(drv.is_failed(cookies[0]));
+    }
+
+    #[test]
+    fn halted_ring_channel_recovers_and_the_entry_completes() {
+        use crate::mem::FaultConfig;
+        // Exactly one SLVERR, landing on the first read beat — the SQ
+        // descriptor fetch — so the channel halts with a sticky error
+        // CSR and the published entry freezes.
+        let params = ring_params(16, 16);
+        let cfg = DmacConfig::speculation()
+            .with_ring(params)
+            .with_faults(FaultConfig::seeded(22).with_read_slverr(1_000_000).with_max_faults(1));
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        let mut drv =
+            RingDriver::new(0, params).with_retry(crate::driver::RetryPolicy::bounded(2, 16));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 512, 6);
+        let cookies = drv
+            .submit_now(&mut sys, &[RingEntry::Memcpy {
+                dst: map::DST_BASE,
+                src: map::SRC_BASE,
+                len: 512,
+            }])
+            .unwrap();
+        sys.run_until_idle().unwrap();
+        assert!(sys.ctrl.error_csr(0).is_some(), "SQ fetch fault halts the channel");
+        assert!(drv.poll_now(&mut sys).is_empty(), "nothing retired before recovery");
+        // Reset, rewrite, resubmit: the fault budget is spent, so the
+        // retry runs on a clean bus.
+        let now = sys.now();
+        let resubmitted = drv.recover(&mut sys, now);
+        assert_eq!(resubmitted, cookies);
+        assert_eq!(drv.resets_issued, 1);
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.channel_resets, 1);
+        assert!(sys.ctrl.error_csr(0).is_none());
+        assert_eq!(drv.poll_now(&mut sys), cookies);
+        assert_eq!(drv.status_of(cookies[0]), Some(0));
+        assert!(drv.is_complete(cookies[0]));
+        assert_eq!(
+            sys.mem.backdoor_read(map::SRC_BASE, 512).to_vec(),
+            sys.mem.backdoor_read(map::DST_BASE, 512).to_vec()
+        );
     }
 
     #[test]

@@ -263,6 +263,26 @@ impl Controller for IommuDmac {
             }
         }
     }
+
+    fn fault_config(&self) -> crate::mem::faults::FaultConfig {
+        self.inner.fault_config()
+    }
+
+    fn channel_reset(&mut self, now: Cycle, ch: usize) {
+        self.inner.channel_reset(now, ch);
+    }
+
+    fn error_csr(&self, ch: usize) -> Option<crate::dmac::ChannelError> {
+        self.inner.error_csr(ch)
+    }
+
+    fn take_error_irq(&mut self) -> u64 {
+        self.inner.take_error_irq()
+    }
+
+    fn take_error_irq_channels(&mut self, sink: &mut dyn FnMut(usize, u64)) {
+        self.inner.take_error_irq_channels(sink);
+    }
 }
 
 #[cfg(test)]

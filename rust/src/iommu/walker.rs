@@ -532,7 +532,12 @@ impl Mmu {
         let w = self.cur.as_mut().expect("PTE beat with no active walk");
         debug_assert_eq!(beat.port, Port::ptw_of(self.channel));
         let pte = u64::from_le_bytes(beat.data);
-        let bad = !pte_valid(pte)
+        // An errored PTE fetch (SLVERR/DECERR from the memory system)
+        // means the page table itself is unreachable: treat it exactly
+        // like an invalid PTE — demand walks latch a fault, prefetches
+        // abort silently.
+        let bad = beat.resp.is_err()
+            || !pte_valid(pte)
             || (pte_is_leaf(pte) && w.level > 0)
             || (!pte_is_leaf(pte) && w.level == 0);
         if bad {
@@ -733,6 +738,7 @@ mod tests {
             last: true,
             data,
             bytes: 8,
+            resp: crate::axi::Resp::Okay,
         });
         let r1 = m.pop_ptw_ar(1).unwrap();
         assert_eq!(r1.addr, 0x9000 + vpn_index(0x40, 1) * 8);
@@ -745,6 +751,7 @@ mod tests {
             last: true,
             data,
             bytes: 8,
+            resp: crate::axi::Resp::Okay,
         });
         let r0 = m.pop_ptw_ar(2).unwrap();
         assert_eq!(r0.addr, 0xA000 + vpn_index(0x40, 0) * 8);
@@ -757,6 +764,7 @@ mod tests {
             last: true,
             data,
             bytes: 8,
+            resp: crate::axi::Resp::Okay,
         });
         assert_eq!(m.tlb.probe(0x40), Some(0x42));
         let c = m.take_counters();
@@ -781,6 +789,7 @@ mod tests {
             last: true,
             data: [0; 8],
             bytes: 8,
+            resp: crate::axi::Resp::Okay,
         });
         assert!(m.fault().is_none(), "prefetch never faults");
         let c = m.take_counters();
@@ -788,5 +797,31 @@ mod tests {
         assert_eq!(c.prefetch_aborts, 1);
         assert_eq!(c.faults, 0);
         assert!(m.idle());
+    }
+
+    #[test]
+    fn errored_pte_fetch_faults_a_demand_walk() {
+        let mut m = Mmu::new(0, params());
+        m.set_root(0x8000);
+        m.queue_demand(0x40, true);
+        m.start_next_walk();
+        let _ = m.pop_ptw_ar(0).unwrap();
+        // The beat carries a perfectly valid table PTE, but the bus says
+        // SLVERR: the walk must not trust the payload.
+        let mut data = [0u8; 8];
+        data.copy_from_slice(&super::super::pagetable::pte_table(0x9000).to_le_bytes());
+        m.on_pte_beat(RBeat {
+            port: Port::ptw_of(0),
+            tag: 0x40,
+            beat: 0,
+            last: true,
+            data,
+            bytes: 8,
+            resp: crate::axi::Resp::SlvErr,
+        });
+        let f = m.fault().expect("demand walk faulted on the errored beat");
+        assert_eq!(f.iova, 0x40 << PAGE_SHIFT);
+        assert!(f.write);
+        assert!(!m.wants_ptw_ar(), "no further PTE reads after the fault");
     }
 }

@@ -20,7 +20,10 @@
 //! idmac rings [--naive] [--out FILE]    # CSR-launch vs ring-doorbell grid
 //!             [--batch N] [--size N] [--latency …]
 //!                                       # writes BENCH_rings.json
-//! idmac regen-baselines [--dir D]       # rewrite all five BENCH_*.json
+//! idmac faults [--naive] [--out FILE]   # fault-rate x size x latency grid
+//!             [--rate PPM] [--size N] [--latency …]
+//!                                       # writes BENCH_faults.json
+//! idmac regen-baselines [--dir D]       # rewrite all six BENCH_*.json
 //!                                       # baselines (arms the CI gate)
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
@@ -75,6 +78,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("translate") => translate(args)?,
         Some("nd") => nd(args)?,
         Some("rings") => rings(args)?,
+        Some("faults") => faults(args)?,
         Some("regen-baselines") => regen_baselines(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
@@ -100,8 +104,8 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     translate|nd|rings|regen-baselines|bench-throughput|oracle-check|\
-                     soc-demo|all> [--threads N] [--naive] [flags]";
+                     translate|nd|rings|faults|regen-baselines|bench-throughput|\
+                     oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
 
 /// Regenerate every checked-in bench baseline in one pass (arming the
 /// CI bench-regression gate after a bootstrap).  Writes the default
@@ -130,6 +134,10 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     idmac::report::RingsReport::new(idmac::report::rings::rings_grid(naive)).write(&out)?;
     println!("wrote {out}");
 
+    let out = path(idmac::report::faults::BENCH_FILE);
+    idmac::report::FaultsReport::new(idmac::report::faults::faults_grid(naive)).write(&out)?;
+    println!("wrote {out}");
+
     let out = path(idmac::report::throughput::BENCH_FILE);
     let mut report = idmac::report::ThroughputReport::new();
     for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
@@ -138,7 +146,7 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     }
     report.write(&out)?;
     println!("wrote {out}");
-    println!("commit the five BENCH_*.json files to arm the CI gate");
+    println!("commit the six BENCH_*.json files to arm the CI gate");
     Ok(())
 }
 
@@ -167,6 +175,37 @@ fn rings(args: &Args) -> idmac::Result<()> {
         rg::rings_grid(naive)
     };
     let report = idmac::report::RingsReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Fault-injection grid (fault rates × transfer sizes × latency
+/// profiles), closed-loop recovery driver; emits the deterministic
+/// `BENCH_faults.json`.  With an explicit `--rate`/`--size`/`--latency`
+/// the grid collapses to that single point.
+fn faults(args: &Args) -> idmac::Result<()> {
+    use idmac::report::faults as fl;
+
+    let naive = args.naive();
+    let out = args.get_or("out", fl::BENCH_FILE);
+    let single =
+        args.get("rate").is_some() || args.get("size").is_some() || args.get("latency").is_some();
+    let points = if single {
+        let rate = args.get_usize("rate", 10_000)?;
+        if rate > 1_000_000 {
+            return Err(idmac::Error::Cli("--rate is ppm, must be in 0..=1000000".into()));
+        }
+        let size = args.get_usize("size", 256)? as u32;
+        if size == 0 || size > 65536 {
+            return Err(idmac::Error::Cli("--size must be in 1..=65536 (payload arena)".into()));
+        }
+        vec![fl::run_faults(rate as u32, size, args.latency()?, naive)]
+    } else {
+        fl::faults_grid(naive)
+    };
+    let report = idmac::report::FaultsReport::new(points);
     report.to_table().print();
     report.write(&out)?;
     println!("wrote {out}");

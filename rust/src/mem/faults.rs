@@ -1,0 +1,291 @@
+//! Deterministic AXI fault injection.
+//!
+//! A [`FaultPlan`] wraps the memory model's accept path and decides,
+//! per accepted beat, whether to corrupt the response: SLVERR on read
+//! or write beats, DECERR for a configured address window, extra
+//! request-pipe stall cycles, or a withheld B response (the write is
+//! applied but the slave never acknowledges it — the scenario the
+//! per-channel watchdog exists for).
+//!
+//! Determinism is load-bearing: the same plan must fire the same
+//! faults under the naive per-cycle scheduler and the event-horizon
+//! fast-forward scheduler, or the bit-identity oracle breaks.  Both
+//! schedulers accept requests in the same order at the same cycles, so
+//! every decision is a pure function of the plan seed and a monotonic
+//! draw counter — no wall clock, no global RNG, no cycle numbers.
+
+use crate::axi::Resp;
+use crate::sim::Cycle;
+
+/// Denominator of the per-beat fault rates: rates are parts-per-million
+/// of accepted beats.
+pub const PPM: u64 = 1_000_000;
+
+/// Fault-injection knobs, carried by `DmacConfig::faults`.
+///
+/// The default (and [`FaultConfig::disabled`]) injects nothing and the
+/// memory model never consults a plan, so a disabled config is
+/// cycle-identical to a build without the fault layer (property-tested
+/// under both schedulers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Master switch; `false` means no [`FaultPlan`] is installed.
+    pub enabled: bool,
+    /// Seed for the per-beat decision stream.
+    pub seed: u64,
+    /// SLVERR probability per accepted read beat, in ppm.
+    pub read_slverr_ppm: u32,
+    /// SLVERR probability per accepted write beat, in ppm.
+    pub write_slverr_ppm: u32,
+    /// Probability that an accepted read beat picks up extra
+    /// request-pipe latency, in ppm.
+    pub stall_ppm: u32,
+    /// Extra cycles added to a stalled beat's service deadline.
+    pub stall_cycles: u32,
+    /// Probability that a write burst's B response is withheld, in ppm.
+    /// The data still reaches the array; the acknowledgement never
+    /// does, wedging the channel until its watchdog trips.
+    pub withheld_b_ppm: u32,
+    /// Optional `[lo, hi)` address window answering DECERR, modelling a
+    /// hole in the system address map.  Window hits are not counted
+    /// against [`FaultConfig::max_faults`]: a bad address stays bad on
+    /// retry, which is exactly what drives the quarantine path.
+    pub decerr_window: Option<(u64, u64)>,
+    /// Cap on injected random faults (SLVERR + withheld B); 0 means
+    /// unlimited.  A cap of 1 with a 100% rate yields exactly one
+    /// fault and a guaranteed-clean retry — the recovery round-trip
+    /// tests are built on it.
+    pub max_faults: u32,
+}
+
+impl FaultConfig {
+    /// The no-injection configuration (also `Default`).
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            seed: 0,
+            read_slverr_ppm: 0,
+            write_slverr_ppm: 0,
+            stall_ppm: 0,
+            stall_cycles: 0,
+            withheld_b_ppm: 0,
+            decerr_window: None,
+            max_faults: 0,
+        }
+    }
+
+    /// Enabled plan with a seed and everything else off; chain the
+    /// `with_*` builders to select fault kinds.
+    pub fn seeded(seed: u64) -> Self {
+        Self { enabled: true, seed, ..Self::disabled() }
+    }
+
+    pub fn with_read_slverr(mut self, ppm: u32) -> Self {
+        self.read_slverr_ppm = ppm;
+        self
+    }
+
+    pub fn with_write_slverr(mut self, ppm: u32) -> Self {
+        self.write_slverr_ppm = ppm;
+        self
+    }
+
+    pub fn with_stalls(mut self, ppm: u32, cycles: u32) -> Self {
+        self.stall_ppm = ppm;
+        self.stall_cycles = cycles;
+        self
+    }
+
+    pub fn with_withheld_b(mut self, ppm: u32) -> Self {
+        self.withheld_b_ppm = ppm;
+        self
+    }
+
+    pub fn with_decerr_window(mut self, lo: u64, hi: u64) -> Self {
+        debug_assert!(lo < hi);
+        self.decerr_window = Some((lo, hi));
+        self
+    }
+
+    pub fn with_max_faults(mut self, n: u32) -> Self {
+        self.max_faults = n;
+        self
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// SplitMix64 finalizer (Steele et al., public domain).  A private copy
+/// rather than a `testutil` import: production code must not depend on
+/// the test-only crate surface.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The runtime side of a [`FaultConfig`]: a monotonic draw counter
+/// hashed with the seed.  Owned by `Memory`, cloned with it, so the
+/// naive and fast-forward replicas of a system consume identical
+/// decision streams.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    draws: u64,
+    injected: u32,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Self {
+        debug_assert!(cfg.enabled);
+        Self { cfg, draws: 0, injected: 0 }
+    }
+
+    pub fn config(&self) -> FaultConfig {
+        self.cfg
+    }
+
+    /// Random faults injected so far (SLVERR + withheld B).
+    pub fn injected(&self) -> u32 {
+        self.injected
+    }
+
+    /// One Bernoulli draw at `ppm` parts-per-million.  Every call
+    /// advances the counter, so the decision stream depends only on
+    /// the sequence of accepted beats — identical across schedulers.
+    fn draw(&mut self, ppm: u32) -> bool {
+        let z = mix64(self.cfg.seed ^ self.draws.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.draws += 1;
+        (z % PPM) < ppm as u64
+    }
+
+    /// A capped draw: fires only while the injection budget lasts.
+    fn draw_fault(&mut self, ppm: u32) -> bool {
+        if self.cfg.max_faults != 0 && self.injected >= self.cfg.max_faults {
+            return false;
+        }
+        let hit = self.draw(ppm);
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    fn in_window(&self, addr: u64) -> bool {
+        matches!(self.cfg.decerr_window, Some((lo, hi)) if (lo..hi).contains(&addr))
+    }
+
+    /// Response for an accepted read beat at `addr`.
+    pub fn read_beat_resp(&mut self, addr: u64) -> Resp {
+        if self.in_window(addr) {
+            return Resp::DecErr;
+        }
+        if self.draw_fault(self.cfg.read_slverr_ppm) {
+            return Resp::SlvErr;
+        }
+        Resp::Okay
+    }
+
+    /// Extra request-pipe cycles for an accepted read beat.
+    pub fn read_stall(&mut self) -> Cycle {
+        if self.cfg.stall_cycles > 0 && self.draw(self.cfg.stall_ppm) {
+            self.cfg.stall_cycles as Cycle
+        } else {
+            0
+        }
+    }
+
+    /// Response for an accepted write beat at `addr`.
+    pub fn write_beat_resp(&mut self, addr: u64) -> Resp {
+        if self.in_window(addr) {
+            return Resp::DecErr;
+        }
+        if self.draw_fault(self.cfg.write_slverr_ppm) {
+            return Resp::SlvErr;
+        }
+        Resp::Okay
+    }
+
+    /// Whether the B response of the burst ending with this beat is
+    /// withheld.
+    pub fn withhold_b(&mut self) -> bool {
+        self.draw_fault(self.cfg.withheld_b_ppm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_default() {
+        assert_eq!(FaultConfig::default(), FaultConfig::disabled());
+        assert!(!FaultConfig::disabled().enabled);
+    }
+
+    #[test]
+    fn decision_stream_is_deterministic() {
+        let cfg = FaultConfig::seeded(0xFEED).with_read_slverr(250_000);
+        let mut a = FaultPlan::new(cfg);
+        let mut b = FaultPlan::new(cfg);
+        for i in 0..1000 {
+            assert_eq!(a.read_beat_resp(i * 8), b.read_beat_resp(i * 8));
+        }
+    }
+
+    #[test]
+    fn rates_are_roughly_honoured() {
+        let mut p = FaultPlan::new(FaultConfig::seeded(7).with_read_slverr(250_000));
+        let errs = (0..100_000).filter(|i| p.read_beat_resp(i * 8).is_err()).count();
+        assert!((20_000..30_000).contains(&errs), "errs = {errs}");
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let mut p = FaultPlan::new(FaultConfig::seeded(9));
+        for i in 0..10_000 {
+            assert_eq!(p.read_beat_resp(i), Resp::Okay);
+            assert_eq!(p.write_beat_resp(i), Resp::Okay);
+            assert_eq!(p.read_stall(), 0);
+            assert!(!p.withhold_b());
+        }
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn max_faults_caps_injection() {
+        let cfg = FaultConfig::seeded(3).with_read_slverr(1_000_000).with_max_faults(1);
+        let mut p = FaultPlan::new(cfg);
+        assert_eq!(p.read_beat_resp(0), Resp::SlvErr);
+        for i in 1..100 {
+            assert_eq!(p.read_beat_resp(i * 8), Resp::Okay, "budget spent, beat {i}");
+        }
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn decerr_window_hits_exactly_and_is_uncapped() {
+        let cfg = FaultConfig::seeded(5).with_decerr_window(0x1000, 0x1100).with_max_faults(1);
+        let mut p = FaultPlan::new(cfg);
+        assert_eq!(p.read_beat_resp(0xFF8), Resp::Okay);
+        assert_eq!(p.read_beat_resp(0x1000), Resp::DecErr);
+        assert_eq!(p.read_beat_resp(0x10F8), Resp::DecErr);
+        assert_eq!(p.read_beat_resp(0x1100), Resp::Okay);
+        // Window hits don't consume the random-fault budget...
+        assert_eq!(p.injected(), 0);
+        // ...and keep firing on retry.
+        assert_eq!(p.write_beat_resp(0x1080), Resp::DecErr);
+    }
+
+    #[test]
+    fn stall_returns_configured_cycles() {
+        let mut p = FaultPlan::new(FaultConfig::seeded(11).with_stalls(1_000_000, 40));
+        assert_eq!(p.read_stall(), 40);
+        // Stalls are perturbations, not faults: no budget consumed.
+        assert_eq!(p.injected(), 0);
+    }
+}

@@ -1,6 +1,7 @@
 //! The latency-configurable memory model.
 
-use crate::axi::{Port, RBeat, ReadReq, WriteBeat, BYTES_PER_BEAT};
+use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT};
+use crate::mem::faults::{FaultConfig, FaultPlan};
 use crate::sim::{Cycle, EventHorizon, MonotonicQueue, Tickable};
 use std::collections::VecDeque;
 
@@ -48,12 +49,22 @@ struct ScheduledWrite {
     port: Port,
     tag: u64,
     last: bool,
+    /// This beat's own response; errored beats do not reach the array.
+    resp: Resp,
+    /// Worst response across the burst, folded at the last beat — what
+    /// the single AXI B response reports.
+    burst_resp: Resp,
+    /// Fault injection: the write is applied but its B response never
+    /// travels back (watchdog-recovery scenario).
+    withheld: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BResp {
     pub port: Port,
     pub tag: u64,
+    /// Burst status (AXI `bresp`): the worst beat response of the burst.
+    pub resp: Resp,
 }
 
 /// One read beat waiting for its R-channel service slot.
@@ -65,6 +76,7 @@ struct PendingBeat {
     last: bool,
     tag: u64,
     bytes: u32,
+    resp: Resp,
 }
 
 /// Byte-addressable memory with a request/response latency pipeline.
@@ -98,6 +110,12 @@ pub struct Memory {
     /// B responses in flight on the response pipe.
     b_queue: MonotonicQueue<BResp>,
     last_w_cycle: Option<Cycle>,
+    /// In-progress write bursts' worst-so-far beat responses, keyed by
+    /// `(port, tag)`; folded into the B response at the last beat.
+    w_burst_resp: Vec<((Port, u64), Resp)>,
+    /// Installed fault-injection plan (None = fault-free memory,
+    /// bit-identical to the pre-fault model).
+    faults: Option<FaultPlan>,
     pub reads_accepted: u64,
     pub writes_accepted: u64,
 }
@@ -114,6 +132,8 @@ impl Memory {
             w_queue: MonotonicQueue::new(),
             b_queue: MonotonicQueue::new(),
             last_w_cycle: None,
+            w_burst_resp: Vec::new(),
+            faults: None,
             reads_accepted: 0,
             writes_accepted: 0,
         }
@@ -123,6 +143,18 @@ impl Memory {
         self.bytes.len()
     }
 
+    /// Install (or remove) the fault-injection plan.  A disabled config
+    /// installs nothing, so the accept paths never draw and the model
+    /// is cycle-identical to a fault-free build.
+    pub fn install_faults(&mut self, cfg: FaultConfig) {
+        self.faults = cfg.enabled.then(|| FaultPlan::new(cfg));
+    }
+
+    /// Random faults injected so far by the installed plan.
+    pub fn faults_injected(&self) -> u32 {
+        self.faults.as_ref().map_or(0, |f| f.injected())
+    }
+
     pub fn latency(&self) -> Cycle {
         self.latency
     }
@@ -130,9 +162,17 @@ impl Memory {
     /// Accept a read request (AR) at cycle `now`.  The system arbiter
     /// must enforce the 1-AR-per-cycle limit; the memory schedules the
     /// burst's beats onto the shared R channel.
+    ///
+    /// Each beat is bounds-checked against [`Memory::size`]: a beat
+    /// extending past the last valid line answers DECERR (with zero
+    /// data), exactly like an interconnect decoding a hole.  The
+    /// installed [`FaultPlan`], if any, may further corrupt or stall
+    /// individual beats.
     pub fn push_read(&mut self, now: Cycle, req: ReadReq) {
         self.reads_accepted += 1;
         let ready_at = now + self.latency; // request-path traversal
+        let size = self.bytes.len() as u64;
+        let mut faults = self.faults.as_mut();
         let queue = match self.r_pending.iter_mut().find(|(p, _)| *p == req.port) {
             Some((_, q)) => q,
             None => {
@@ -141,13 +181,25 @@ impl Memory {
             }
         };
         for i in 0..req.beats {
+            let addr = req.addr + i as u64 * req.bytes_per_beat as u64;
+            let mut resp = if addr + req.bytes_per_beat as u64 > size {
+                Resp::DecErr
+            } else {
+                Resp::Okay
+            };
+            let mut stall = 0;
+            if let Some(f) = faults.as_deref_mut() {
+                resp = resp.max(f.read_beat_resp(addr));
+                stall = f.read_stall();
+            }
             queue.push_back(PendingBeat {
-                ready_at,
-                addr: req.addr + i as u64 * req.bytes_per_beat as u64,
+                ready_at: ready_at + stall,
+                addr,
                 beat_idx: i,
                 last: i + 1 == req.beats,
                 tag: req.tag,
                 bytes: req.bytes_per_beat,
+                resp,
             });
         }
         self.r_pending_beats += req.beats as usize;
@@ -191,6 +243,7 @@ impl Memory {
                     last: b.last,
                     data,
                     bytes: b.bytes,
+                    resp: b.resp,
                 },
             );
             self.r_rr = (idx + 1) % n;
@@ -206,6 +259,12 @@ impl Memory {
 
     /// Accept a write beat (fused AW+W) at cycle `now`.  One beat per
     /// cycle; debug-asserted because the system arbiter enforces it.
+    ///
+    /// Beats are bounds-checked like reads: a beat past the last valid
+    /// line is dropped and the burst's B response reports DECERR.  The
+    /// per-burst worst response is accumulated across interleaved
+    /// bursts by `(port, tag)` and folded into the single B emitted at
+    /// the last beat.
     pub fn push_write(&mut self, now: Cycle, w: WriteBeat) {
         debug_assert!(
             self.last_w_cycle != Some(now),
@@ -213,6 +272,32 @@ impl Memory {
         );
         self.last_w_cycle = Some(now);
         self.writes_accepted += 1;
+        let size = self.bytes.len() as u64;
+        let mut resp = if w.addr + w.bytes as u64 > size { Resp::DecErr } else { Resp::Okay };
+        let mut withheld = false;
+        if let Some(f) = self.faults.as_mut() {
+            resp = resp.max(f.write_beat_resp(w.addr));
+            if w.last {
+                withheld = f.withhold_b();
+            }
+        }
+        let burst_resp = if w.last {
+            let sofar = self
+                .w_burst_resp
+                .iter()
+                .position(|(k, _)| *k == (w.port, w.tag))
+                .map(|i| self.w_burst_resp.swap_remove(i).1)
+                .unwrap_or(Resp::Okay);
+            sofar.max(resp)
+        } else {
+            if resp.is_err() {
+                match self.w_burst_resp.iter_mut().find(|(k, _)| *k == (w.port, w.tag)) {
+                    Some((_, worst)) => *worst = (*worst).max(resp),
+                    None => self.w_burst_resp.push(((w.port, w.tag), resp)),
+                }
+            }
+            resp
+        };
         self.w_queue.push_at(
             now + self.latency,
             ScheduledWrite {
@@ -222,6 +307,9 @@ impl Memory {
                 port: w.port,
                 tag: w.tag,
                 last: w.last,
+                resp,
+                burst_resp,
+                withheld,
             },
         );
     }
@@ -239,13 +327,19 @@ impl Memory {
         while let Some(w) = self.w_queue.pop_ready(now) {
             let addr = w.addr as usize;
             let n = (w.bytes as usize).min(8);
-            if addr < self.bytes.len() {
+            // Errored beats never reach the array: an OOB beat has no
+            // slave behind it and an injected SLVERR models a target
+            // that refused the access.
+            if !w.resp.is_err() && addr < self.bytes.len() {
                 let end = (addr + n).min(self.bytes.len());
                 self.bytes[addr..end].copy_from_slice(&w.data[..end - addr]);
             }
-            if w.last {
+            if w.last && !w.withheld {
                 // B response travels back through the response pipe.
-                self.b_queue.push_at(now + self.latency, BResp { port: w.port, tag: w.tag });
+                self.b_queue.push_at(
+                    now + self.latency,
+                    BResp { port: w.port, tag: w.tag, resp: w.burst_resp },
+                );
             }
         }
     }
@@ -481,7 +575,7 @@ mod tests {
         assert_eq!(m.backdoor_read(0x200, 8), &[0xAA; 8]);
         // B response after the return pipe.
         assert_eq!(m.pop_b(9), None);
-        assert_eq!(m.pop_b(10), Some(BResp { port: Port::Backend, tag: 3 }));
+        assert_eq!(m.pop_b(10), Some(BResp { port: Port::Backend, tag: 3, resp: Resp::Okay }));
         assert!(m.quiescent());
     }
 
@@ -551,7 +645,149 @@ mod tests {
         assert_eq!(m.next_event(), Some(10), "write reaches the array at 3+7");
         m.tick(10);
         assert_eq!(m.next_event(), Some(17), "B response pipe");
-        assert_eq!(m.pop_b(17), Some(BResp { port: Port::Backend, tag: 1 }));
+        assert_eq!(m.pop_b(17), Some(BResp { port: Port::Backend, tag: 1, resp: Resp::Okay }));
         assert!(m.quiescent());
+    }
+
+    /// Collect every beat / B of a short run, for the bounds tests.
+    fn drain(m: &mut Memory, until: Cycle) -> (Vec<RBeat>, Vec<BResp>) {
+        let (mut beats, mut bs) = (Vec::new(), Vec::new());
+        for now in 0..until {
+            m.tick(now);
+            if let Some(b) = m.pop_read_beat(now) {
+                beats.push(b);
+            }
+            if let Some(b) = m.pop_b(now) {
+                bs.push(b);
+            }
+        }
+        (beats, bs)
+    }
+
+    #[test]
+    fn read_at_last_valid_line_is_okay_one_past_is_decerr() {
+        let mut m = mem(1); // 4096 bytes: last valid 8-byte line at 4088
+        m.backdoor_write(4088, &[0x5A; 8]);
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 4088, 1));
+        m.push_read(1, ReadReq::new(Port::Backend, 1, 4096, 1));
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.len(), 2);
+        assert_eq!(beats[0].resp, Resp::Okay);
+        assert_eq!(beats[0].data, [0x5A; 8]);
+        assert_eq!(beats[1].resp, Resp::DecErr);
+        assert_eq!(beats[1].data, [0; 8], "DECERR beats carry zero data");
+        assert!(m.quiescent());
+    }
+
+    #[test]
+    fn burst_straddling_the_end_errs_only_the_oob_beats() {
+        let mut m = mem(1);
+        // 2 beats from 4088: beat 0 in range, beat 1 past the end.
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 4088, 2));
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.len(), 2);
+        assert_eq!(beats[0].resp, Resp::Okay);
+        assert_eq!(beats[1].resp, Resp::DecErr);
+    }
+
+    #[test]
+    fn write_at_last_valid_line_ok_one_past_is_decerr_and_not_applied() {
+        let mut m = mem(1);
+        let w = |tag: u64, addr: u64| WriteBeat {
+            port: Port::Backend,
+            tag,
+            addr,
+            data: [0xBB; 8],
+            bytes: 8,
+            last: true,
+        };
+        m.push_write(0, w(0, 4088));
+        m.push_write(1, w(1, 4096));
+        let (_, bs) = drain(&mut m, 64);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].resp, Resp::Okay);
+        assert_eq!(bs[1].resp, Resp::DecErr);
+        assert_eq!(m.backdoor_read(4088, 8), &[0xBB; 8]);
+        assert!(m.quiescent());
+    }
+
+    #[test]
+    fn write_burst_b_reports_worst_beat_response() {
+        let mut m = mem(1);
+        // 3-beat burst whose middle beat runs past the end: the single
+        // B must fold the DECERR even though the last beat is clean.
+        let mk = |addr: u64, last: bool| WriteBeat {
+            port: Port::Backend,
+            tag: 9,
+            addr,
+            data: [1; 8],
+            bytes: 8,
+            last,
+        };
+        m.push_write(0, mk(0x200, false));
+        m.push_write(1, mk(4096, false));
+        m.push_write(2, mk(0x210, true));
+        let (_, bs) = drain(&mut m, 64);
+        assert_eq!(bs, vec![BResp { port: Port::Backend, tag: 9, resp: Resp::DecErr }]);
+        // In-range beats still landed.
+        assert_eq!(m.backdoor_read(0x200, 1)[0], 1);
+        assert_eq!(m.backdoor_read(0x210, 1)[0], 1);
+    }
+
+    #[test]
+    fn injected_slverr_read_beat_reports_and_counts() {
+        let mut m = mem(1);
+        m.install_faults(FaultConfig::seeded(1).with_read_slverr(1_000_000).with_max_faults(1));
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x100, 2));
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.len(), 2);
+        assert_eq!(beats[0].resp, Resp::SlvErr);
+        assert_eq!(beats[1].resp, Resp::Okay, "injection budget spent");
+        assert_eq!(m.faults_injected(), 1);
+    }
+
+    #[test]
+    fn withheld_b_applies_data_but_never_acknowledges() {
+        let mut m = mem(1);
+        m.install_faults(FaultConfig::seeded(2).with_withheld_b(1_000_000).with_max_faults(1));
+        m.push_write(
+            0,
+            WriteBeat {
+                port: Port::Backend,
+                tag: 4,
+                addr: 0x80,
+                data: [0xCD; 8],
+                bytes: 8,
+                last: true,
+            },
+        );
+        let (_, bs) = drain(&mut m, 64);
+        assert!(bs.is_empty(), "B was withheld");
+        assert_eq!(m.backdoor_read(0x80, 8), &[0xCD; 8], "data still landed");
+        assert!(m.quiescent(), "nothing left in flight — the requester is wedged, not us");
+    }
+
+    #[test]
+    fn stalled_beat_delays_delivery_by_the_configured_cycles() {
+        let mut m = mem(1);
+        m.install_faults(FaultConfig::seeded(3).with_stalls(1_000_000, 25));
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x100, 1));
+        assert_eq!(m.next_event(), Some(1 + 25), "stall lands in the service deadline");
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.len(), 1);
+        assert_eq!(beats[0].resp, Resp::Okay, "stalls perturb timing, not status");
+    }
+
+    #[test]
+    fn installed_but_all_zero_plan_changes_nothing() {
+        let run = |install: bool| {
+            let mut m = mem(5);
+            if install {
+                m.install_faults(FaultConfig::seeded(77));
+            }
+            m.push_read(0, ReadReq::new(Port::Backend, 0, 0x100, 4));
+            drain(&mut m, 128)
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -10,6 +10,8 @@
 //! curves are measured against.
 
 pub mod backdoor;
+pub mod faults;
 pub mod latency;
 
+pub use faults::{FaultConfig, FaultPlan};
 pub use latency::{LatencyProfile, Memory};

@@ -1,0 +1,408 @@
+//! Fault-injection experiments: `BENCH_faults.json`.
+//!
+//! The robustness sweep the error-containment machinery exists for:
+//! each grid point runs a closed loop of [`TRANSFERS`] memcpy chains
+//! through a fault-injecting memory system (per-beat SLVERR on reads
+//! and writes plus request-pipe stalls at the point's ppm rate) and
+//! recovers exactly like the Linux driver would — on a poisoned
+//! completion the chain is rewritten and relaunched after a bounded
+//! exponential backoff; on a channel halt (descriptor-fetch fault or
+//! watchdog timeout) the channel is reset first.  A transfer that
+//! still fails after [`MAX_RETRIES`] resubmissions is abandoned.
+//!
+//! The point reports **goodput under faults** (bytes of transfers
+//! that completed vs end-to-end cycles) and **recovery latency**
+//! (cycles spent re-running faulted transfers beyond their first
+//! attempt), swept across fault rates, transfer sizes and the three
+//! paper memory profiles.
+//!
+//! Everything in the JSON is simulated-time and integer-only — the
+//! fault plan is a pure function of its seed and a draw counter — so
+//! the file is bit-deterministic and identical under the event-horizon
+//! scheduler and the `--naive` per-cycle loop (CI diffs the two).
+
+use crate::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig};
+use crate::dmac::descriptor::is_completed;
+use crate::driver::RetryPolicy;
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::{FaultConfig, LatencyProfile};
+use crate::report::parallel::par_map;
+use crate::report::rings::DOORBELL_COST;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::{Cycle, RunStats};
+use crate::tb::System;
+use crate::workload::map;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_faults.json";
+
+/// Per-beat fault rates swept by the grid, in ppm of accepted beats
+/// (applied to read SLVERR, write SLVERR and request-pipe stalls
+/// alike).  Rate 0 is the clean baseline: fault injection disabled.
+pub const FAULT_RATES_PPM: [u32; 4] = [0, 1_000, 10_000, 100_000];
+
+/// Transfer sizes swept by the grid.
+pub const PAYLOAD_SIZES: [u32; 2] = [256, 4096];
+
+/// Closed-loop transfers per grid point.
+pub const TRANSFERS: usize = 12;
+
+/// Resubmissions per transfer before it is abandoned.
+pub const MAX_RETRIES: u32 = 4;
+
+/// Base backoff before a resubmission (exponential per attempt).
+pub const BACKOFF_CYCLES: Cycle = 32;
+
+/// Extra request-pipe cycles a stalled beat picks up.
+const STALL_CYCLES: u32 = 32;
+
+/// Per-channel watchdog deadline for every faulted point.
+const WATCHDOG: u32 = 20_000;
+
+/// One grid point: fault rate x transfer size x memory profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPoint {
+    pub rate_ppm: u32,
+    pub size: u32,
+    pub profile: String,
+    /// Transfers attempted by the closed loop.
+    pub transfers: u64,
+    /// Transfers that completed (possibly after retries).
+    pub completed: u64,
+    /// Transfers abandoned after retry exhaustion.
+    pub failed: u64,
+    /// Resubmissions issued by the recovery loop.
+    pub retries: u64,
+    /// Channel resets issued on halts (hardware counter).
+    pub resets: u64,
+    /// End-to-end cycles of the whole closed loop.
+    pub cycles: Cycle,
+    /// Cycles spent re-running faulted transfers beyond their first
+    /// attempt — the recovery latency the retry machinery costs.
+    pub recovery_cycles: Cycle,
+    /// Bytes of transfers that completed.
+    pub goodput_bytes: u64,
+    /// Errored AXI beats observed by the DMAC.
+    pub axi_slverrs: u64,
+    /// Descriptor-path faults that halted the channel.
+    pub fault_halts: u64,
+    /// Data-path faults that poisoned a transfer.
+    pub aborted_transfers: u64,
+    pub watchdog_trips: u64,
+    /// Error-IRQ edges raised across the loop.
+    pub error_irqs: u64,
+}
+
+impl FaultPoint {
+    /// Goodput in bytes per cycle (completed payload only).
+    pub fn goodput(&self) -> f64 {
+        self.goodput_bytes as f64 / self.cycles.max(1) as f64
+    }
+
+    /// Fraction of transfers that completed.
+    pub fn completion_rate(&self) -> f64 {
+        self.completed as f64 / self.transfers.max(1) as f64
+    }
+
+    /// Mean recovery cycles per retried-or-failed transfer event.
+    pub fn recovery_per_retry(&self) -> f64 {
+        self.recovery_cycles as f64 / self.retries.max(1) as f64
+    }
+}
+
+/// Payload stride: line-aligned like `workload::Sweep`.
+fn stride(size: u32) -> u64 {
+    (size as u64).next_multiple_of(map::LINE_BYTES)
+}
+
+/// Per-point fault seed: a pure function of the grid coordinates, so
+/// every point draws an independent but reproducible decision stream.
+fn point_seed(rate: u32, size: u32, profile: LatencyProfile) -> u64 {
+    let mut seed = 0xFA_5EED_u64 ^ ((rate as u64) << 32) ^ ((size as u64) << 8);
+    for b in profile.name().bytes() {
+        seed = seed.wrapping_mul(31).wrapping_add(b as u64);
+    }
+    seed
+}
+
+fn run_round(sys: &mut System<Dmac>, naive: bool, total: &mut RunStats) {
+    let s = if naive {
+        sys.run_until_idle_naive().expect("faults round (naive)")
+    } else {
+        sys.run_until_idle().expect("faults round")
+    };
+    total.absorb(s);
+}
+
+/// Run one grid point: the closed recovery loop described in the
+/// module docs.
+pub fn run_faults(rate: u32, size: u32, profile: LatencyProfile, naive: bool) -> FaultPoint {
+    let faults = if rate == 0 {
+        FaultConfig::disabled()
+    } else {
+        FaultConfig::seeded(point_seed(rate, size, profile))
+            .with_read_slverr(rate)
+            .with_write_slverr(rate)
+            .with_stalls(rate, STALL_CYCLES)
+    };
+    let cfg = DmacConfig::speculation().with_watchdog(WATCHDOG).with_faults(faults);
+    let mut sys = System::new(profile, Dmac::new(cfg));
+    let st = stride(size);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, (TRANSFERS as u64 * st) as usize, 0xFA);
+    let retry = RetryPolicy::bounded(MAX_RETRIES, BACKOFF_CYCLES);
+    let mut total = RunStats::default();
+    let (mut completed, mut failed, mut retries) = (0u64, 0u64, 0u64);
+    let mut recovery_cycles: Cycle = 0;
+    for i in 0..TRANSFERS as u64 {
+        let src = map::SRC_BASE + i * st;
+        let dst = map::DST_BASE + i * st;
+        let mut attempts = 0u32;
+        let mut first_attempt_end = 0;
+        // Backoff carried into the next attempt's launch time.
+        let mut backoff: Cycle = 0;
+        let ok = loop {
+            // (Re)write the chain — idempotent, and it clears any
+            // error stamp from the previous attempt.
+            let mut cb = ChainBuilder::new();
+            cb.push_at(map::DESC_BASE, Descriptor::new(src, dst, size).with_irq());
+            let head = cb.write_to(&mut sys.mem);
+            let at = sys.now() + backoff + DOORBELL_COST;
+            sys.schedule_launch(at, head);
+            run_round(&mut sys, naive, &mut total);
+            if attempts == 0 {
+                first_attempt_end = sys.now();
+            }
+            // The error ISR's job: a halted channel is reset before
+            // anything else runs on it.  The reset op is queued one
+            // cycle out; the relaunch (or the drain below) trails it.
+            let halted = sys.ctrl.error_csr(0).is_some();
+            if halted {
+                sys.schedule_reset(sys.now() + 1, 0);
+            }
+            if !halted && is_completed(&sys.mem, head) {
+                break true;
+            }
+            if !retry.allows(attempts) {
+                if halted {
+                    // Drain the queued reset so the next transfer
+                    // starts on a healthy channel.
+                    run_round(&mut sys, naive, &mut total);
+                }
+                break false;
+            }
+            retries += 1;
+            backoff = 2 + retry.backoff(attempts);
+            attempts += 1;
+        };
+        if ok {
+            completed += 1;
+        } else {
+            failed += 1;
+        }
+        if attempts > 0 {
+            recovery_cycles += sys.now() - first_attempt_end;
+        }
+    }
+    FaultPoint {
+        rate_ppm: rate,
+        size,
+        profile: profile.name(),
+        transfers: TRANSFERS as u64,
+        completed,
+        failed,
+        retries,
+        resets: total.channel_resets,
+        cycles: sys.now(),
+        recovery_cycles,
+        goodput_bytes: completed * size as u64,
+        axi_slverrs: total.axi_slverrs,
+        fault_halts: total.fault_halts,
+        aborted_transfers: total.aborted_transfers,
+        watchdog_trips: total.watchdog_trips,
+        error_irqs: total.error_irqs,
+    }
+}
+
+/// The full grid: fault rates x transfer sizes x the three paper
+/// memory profiles, in deterministic order on the parallel executor.
+pub fn faults_grid(naive: bool) -> Vec<FaultPoint> {
+    let mut tasks = Vec::new();
+    for &rate in &FAULT_RATES_PPM {
+        for &size in &PAYLOAD_SIZES {
+            for profile in
+                [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+            {
+                tasks.push((rate, size, profile));
+            }
+        }
+    }
+    par_map(tasks, |_, (rate, size, profile)| run_faults(rate, size, profile, naive))
+}
+
+/// The machine-readable faults report (`BENCH_faults.json`, schema
+/// `idmac-faults/v1`).  Integer-only payload: exact-diffed by CI
+/// across scheduler modes and against the checked-in baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultsReport {
+    pub points: Vec<FaultPoint>,
+}
+
+impl FaultsReport {
+    pub fn new(points: Vec<FaultPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-faults/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rate_ppm\": {}, \"size\": {}, \"profile\": {}, \
+                 \"transfers\": {}, \"completed\": {}, \"failed\": {}, \
+                 \"retries\": {}, \"resets\": {}, \"cycles\": {}, \
+                 \"recovery_cycles\": {}, \"goodput_bytes\": {}, \
+                 \"axi_slverrs\": {}, \"fault_halts\": {}, \
+                 \"aborted_transfers\": {}, \"watchdog_trips\": {}, \
+                 \"error_irqs\": {}}}{}\n",
+                p.rate_ppm,
+                p.size,
+                json_str(&p.profile),
+                p.transfers,
+                p.completed,
+                p.failed,
+                p.retries,
+                p.resets,
+                p.cycles,
+                p.recovery_cycles,
+                p.goodput_bytes,
+                p.axi_slverrs,
+                p.fault_halts,
+                p.aborted_transfers,
+                p.watchdog_trips,
+                p.error_irqs,
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable sweep table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Faults — goodput and recovery latency under AXI error injection",
+            &[
+                "rate ppm",
+                "size",
+                "memory",
+                "ok/total",
+                "retries",
+                "resets",
+                "aborts",
+                "halts",
+                "cycles",
+                "recovery cyc",
+                "goodput B/cyc",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.rate_ppm.to_string(),
+                p.size.to_string(),
+                p.profile.clone(),
+                format!("{}/{}", p.completed, p.transfers),
+                p.retries.to_string(),
+                p.resets.to_string(),
+                p.aborted_transfers.to_string(),
+                p.fault_halts.to_string(),
+                p.cycles.to_string(),
+                p.recovery_cycles.to_string(),
+                format!("{:.4}", p.goodput()),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_is_identical_across_schedulers() {
+        let fast = run_faults(10_000, 256, LatencyProfile::Ddr3, false);
+        let naive = run_faults(10_000, 256, LatencyProfile::Ddr3, true);
+        assert_eq!(fast, naive, "faults point diverged across schedulers");
+    }
+
+    #[test]
+    fn zero_rate_point_is_clean() {
+        let p = run_faults(0, 256, LatencyProfile::Ideal, false);
+        assert_eq!(p.completed, TRANSFERS as u64);
+        assert_eq!(p.failed, 0);
+        assert_eq!(p.retries, 0);
+        assert_eq!(p.recovery_cycles, 0);
+        assert_eq!(p.axi_slverrs, 0);
+        assert_eq!(p.error_irqs, 0);
+        assert_eq!(p.goodput_bytes, TRANSFERS as u64 * 256);
+        assert!((p.completion_rate() - 1.0).abs() < f64::EPSILON);
+    }
+
+    #[test]
+    fn faulted_point_retries_and_recovers() {
+        let p = run_faults(10_000, 4096, LatencyProfile::Ddr3, false);
+        assert!(p.axi_slverrs > 0, "no faults fired: {p:?}");
+        assert!(p.retries > 0, "faults fired but nothing retried: {p:?}");
+        assert!(p.recovery_cycles > 0);
+        assert_eq!(p.completed + p.failed, p.transfers);
+        assert!(p.completed > 0, "bounded retry should rescue some transfers: {p:?}");
+        assert_eq!(p.goodput_bytes, p.completed * 4096);
+        assert!(p.error_irqs > 0, "every fault raises an error IRQ edge");
+        // Every halt was recovered by a reset: the loop never leaves a
+        // channel wedged.
+        assert_eq!(p.resets, p.fault_halts + p.watchdog_trips);
+    }
+
+    #[test]
+    fn goodput_degrades_with_the_fault_rate() {
+        let clean = run_faults(0, 4096, LatencyProfile::Ddr3, false);
+        let hot = run_faults(100_000, 4096, LatencyProfile::Ddr3, false);
+        assert!(hot.goodput() < clean.goodput(), "clean {clean:?} vs hot {hot:?}");
+        assert!(hot.completed < clean.completed || hot.cycles > clean.cycles);
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wall_clock_free() {
+        let points = vec![run_faults(1_000, 256, LatencyProfile::Ideal, false)];
+        let a = FaultsReport::new(points.clone()).to_json();
+        let b = FaultsReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-faults/v1\""));
+        assert!(a.contains("\"rate_ppm\": 1000"));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn grid_covers_every_axis() {
+        // Small-grid smoke: every rate appears with every size on the
+        // ideal profile (the full 3-profile grid runs in CI).
+        let points: Vec<FaultPoint> = FAULT_RATES_PPM
+            .iter()
+            .flat_map(|&r| PAYLOAD_SIZES.iter().map(move |&s| (r, s)))
+            .map(|(r, s)| run_faults(r, s, LatencyProfile::Ideal, false))
+            .collect();
+        assert_eq!(points.len(), FAULT_RATES_PPM.len() * PAYLOAD_SIZES.len());
+        let table = FaultsReport::new(points).to_table();
+        assert!(table.render().contains("100000"));
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod contention;
 pub mod experiments;
+pub mod faults;
 pub mod nd;
 pub mod parallel;
 pub mod rings;
@@ -12,6 +13,7 @@ pub mod throughput;
 pub mod translation;
 
 pub use contention::{ContentionPoint, MultiChannelReport};
+pub use faults::{FaultPoint, FaultsReport};
 pub use nd::{NdPoint, NdReport};
 pub use parallel::par_map;
 pub use rings::{RingPoint, RingsReport};

@@ -101,6 +101,25 @@ pub struct RunStats {
     /// (consumer never advanced its doorbell).  Sticky evidence of a
     /// misbehaving driver; the IRQ still coalesces the completion.
     pub cq_overflows: u64,
+    /// AXI SLVERR / DECERR responses observed at the DMAC's manager
+    /// interfaces (descriptor fetch, payload read, write B).
+    pub axi_slverrs: u64,
+    pub axi_decerrs: u64,
+    /// Channels halted into the Faulted state by a descriptor-path or
+    /// data-path error (each latches the error CSR and raises the
+    /// banked error IRQ).
+    pub fault_halts: u64,
+    /// Transfers aborted mid-flight with a poisoned completion.
+    pub aborted_transfers: u64,
+    /// Per-channel watchdog expirations (no beat progress for the
+    /// configured number of cycles while a response was owed).
+    pub watchdog_trips: u64,
+    /// Driver-initiated channel resets (recovery path).
+    pub channel_resets: u64,
+    /// Banked error IRQ edges delivered.
+    pub error_irqs: u64,
+    /// Completion-ring records produced with a nonzero error status.
+    pub cq_error_records: u64,
     /// Final simulation cycle.
     pub end_cycle: Cycle,
 }
@@ -108,6 +127,15 @@ pub struct RunStats {
 impl RunStats {
     pub fn record_completion(&mut self, cycle: Cycle, bytes: u64) {
         self.completions.push(Completion { cycle, bytes });
+    }
+
+    /// Count one AXI error response by kind (no-op for OKAY).
+    pub fn count_axi_error(&mut self, resp: crate::axi::Resp) {
+        match resp {
+            crate::axi::Resp::Okay => {}
+            crate::axi::Resp::SlvErr => self.axi_slverrs += 1,
+            crate::axi::Resp::DecErr => self.axi_decerrs += 1,
+        }
     }
 
     /// Measurement window over the middle half of the completion log,
@@ -174,6 +202,14 @@ impl RunStats {
         self.ring_entries += other.ring_entries;
         self.cq_records += other.cq_records;
         self.cq_overflows += other.cq_overflows;
+        self.axi_slverrs += other.axi_slverrs;
+        self.axi_decerrs += other.axi_decerrs;
+        self.fault_halts += other.fault_halts;
+        self.aborted_transfers += other.aborted_transfers;
+        self.watchdog_trips += other.watchdog_trips;
+        self.channel_resets += other.channel_resets;
+        self.error_irqs += other.error_irqs;
+        self.cq_error_records += other.cq_error_records;
         self.end_cycle = self.end_cycle.max(other.end_cycle);
     }
 

@@ -49,6 +49,19 @@ pub fn ring_irq_source(ch: usize) -> u32 {
     RING_IRQ_SOURCE + ch as u32
 }
 
+/// First channel error-IRQ source: one dedicated banked source per
+/// channel, above the ring bank.  Raised on descriptor-fetch faults,
+/// poisoned completions and watchdog timeouts (DESIGN.md §11); the
+/// recovery driver's ISR reads the channel's error CSR, resets the
+/// channel and resubmits.
+pub const ERROR_IRQ_SOURCE: u32 = RING_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32;
+
+/// PLIC source id of channel `ch`'s error IRQ line.
+pub fn error_irq_source(ch: usize) -> u32 {
+    debug_assert!(ch < crate::axi::MAX_CHANNELS);
+    ERROR_IRQ_SOURCE + ch as u32
+}
+
 /// The in-system integration: the OOC testbench plus CPU + PLIC.
 pub struct Soc<C: Controller> {
     pub sys: System<C>,
@@ -60,6 +73,8 @@ pub struct Soc<C: Controller> {
     faults_routed: Vec<u64>,
     /// Per-channel coalesced ring IRQ edges already routed.
     ring_irqs_routed: Vec<u64>,
+    /// Per-channel error IRQ edges already routed.
+    error_irqs_routed: Vec<u64>,
 }
 
 impl<C: Controller> Soc<C> {
@@ -71,6 +86,7 @@ impl<C: Controller> Soc<C> {
             irqs_routed: Vec::new(),
             faults_routed: Vec::new(),
             ring_irqs_routed: Vec::new(),
+            error_irqs_routed: Vec::new(),
         }
     }
 
@@ -111,6 +127,16 @@ impl<C: Controller> Soc<C> {
                 self.plic.raise(ring_irq_source(ch));
             }
             self.ring_irqs_routed[ch] = self.sys.ring_irq_edges[ch];
+        }
+        if self.error_irqs_routed.len() < self.sys.error_irq_edges.len() {
+            self.error_irqs_routed.resize(self.sys.error_irq_edges.len(), 0);
+        }
+        for ch in 0..self.sys.error_irq_edges.len() {
+            let edges = self.sys.error_irq_edges[ch] - self.error_irqs_routed[ch];
+            for _ in 0..edges {
+                self.plic.raise(error_irq_source(ch));
+            }
+            self.error_irqs_routed[ch] = self.sys.error_irq_edges[ch];
         }
     }
 
@@ -169,7 +195,7 @@ impl<C: Controller> Soc<C> {
             let now = self.sys.now();
             if let Some(src) = self.cpu.maybe_claim(&mut self.plic, now) {
                 debug_assert!(
-                    (DMAC_IRQ_SOURCE..RING_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32)
+                    (DMAC_IRQ_SOURCE..ERROR_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32)
                         .contains(&src)
                 );
                 handler(&mut self.sys, &mut self.cpu, now);

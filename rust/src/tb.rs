@@ -32,6 +32,9 @@ enum LaunchOp {
     Doorbell(u64),
     /// Completion-ring consumer doorbell: the free-running head index.
     CqDoorbell(u64),
+    /// Channel-reset CSR write: clear the sticky fault and drop queued
+    /// work so a recovery driver can resubmit.
+    Reset,
 }
 
 #[derive(Clone)]
@@ -58,6 +61,10 @@ pub struct System<C: Controller> {
     /// Cumulative IOMMU translation-fault edges per channel.  The SoC
     /// routes these to the dedicated banked fault sources.
     pub fault_edges: Vec<u64>,
+    /// Cumulative channel error-IRQ edges per channel (descriptor-fetch
+    /// faults, poisoned completions, watchdog timeouts).  The SoC
+    /// routes these to the dedicated banked error sources.
+    pub error_irq_edges: Vec<u64>,
     /// First AR issue cycle per port (Table IV `i-rf` / `rf-rb`).
     pub first_ar: Vec<(Port, Cycle)>,
     /// First payload R-beat delivery cycle (Table IV `r-w`).
@@ -71,8 +78,12 @@ impl<C: Controller> System<C> {
         Self::with_memory(Memory::new(DEFAULT_MEM_BYTES, profile), ctrl)
     }
 
-    pub fn with_memory(mem: Memory, ctrl: C) -> Self {
+    pub fn with_memory(mut mem: Memory, ctrl: C) -> Self {
         let ports = ctrl.ports().to_vec();
+        // The device under test owns the fault plan (it is part of its
+        // configuration), but the plan runs inside the memory model:
+        // install it here, once, when the two meet.
+        mem.install_faults(ctrl.fault_config());
         Self {
             mem,
             ctrl,
@@ -87,6 +98,7 @@ impl<C: Controller> System<C> {
             irq_edges: Vec::new(),
             ring_irq_edges: Vec::new(),
             fault_edges: Vec::new(),
+            error_irq_edges: Vec::new(),
             first_ar: Vec::new(),
             first_payload_r: None,
             first_payload_w: None,
@@ -146,6 +158,14 @@ impl<C: Controller> System<C> {
         self.launches.push_back((at, ch, LaunchOp::CqDoorbell(head)));
     }
 
+    /// Schedule a channel-reset CSR write on channel `ch` at cycle
+    /// `at`: clears the sticky error CSR and drops the channel's queued
+    /// work so a recovery driver can resubmit.
+    pub fn schedule_reset(&mut self, at: Cycle, ch: usize) {
+        debug_assert!(at >= self.now);
+        self.launches.push_back((at, ch, LaunchOp::Reset));
+    }
+
     /// Backdoor-load a chain and schedule its launch `at` cycle.
     pub fn load_and_launch(&mut self, at: Cycle, chain: &ChainBuilder) -> u64 {
         self.load_and_launch_on(at, 0, chain)
@@ -178,6 +198,7 @@ impl<C: Controller> System<C> {
                 LaunchOp::Csr(addr) => self.ctrl.csr_write_ch(now, ch, addr),
                 LaunchOp::Doorbell(tail) => self.ctrl.ring_doorbell(now, ch, tail),
                 LaunchOp::CqDoorbell(head) => self.ctrl.ring_cq_doorbell(now, ch, head),
+                LaunchOp::Reset => self.ctrl.channel_reset(now, ch),
             }
         }
         // Memory pipelines advance, then response channels deliver.
@@ -260,6 +281,18 @@ impl<C: Controller> System<C> {
         {
             let per_ch = &mut self.fault_edges;
             self.ctrl.take_fault_channels(&mut |ch, n| {
+                if per_ch.len() <= ch {
+                    per_ch.resize(ch + 1, 0);
+                }
+                per_ch[ch] += n;
+            });
+        }
+        {
+            // Error IRQs, like IOMMU faults, count separately from the
+            // completion IRQ total (`irqs_seen` stays a completion-path
+            // metric; `RunStats::error_irqs` tracks the error edges).
+            let per_ch = &mut self.error_irq_edges;
+            self.ctrl.take_error_irq_channels(&mut |ch, n| {
                 if per_ch.len() <= ch {
                     per_ch.resize(ch + 1, 0);
                 }
@@ -572,6 +605,101 @@ mod tests {
         let mut sys = checked_system(LatencyProfile::Ddr3, DmacConfig::speculation());
         let stats = sys.run_until_idle_cross_checked().unwrap();
         assert_eq!(stats.completions.len(), 8);
+    }
+
+    #[test]
+    fn descriptor_fault_halts_then_reset_and_relaunch_recover() {
+        use crate::axi::ERR_SLVERR;
+        use crate::mem::FaultConfig;
+        // One guaranteed SLVERR on the very first read beat — the
+        // descriptor fetch — then a clean bus for the retry.
+        let cfg = DmacConfig::base()
+            .with_faults(FaultConfig::seeded(1).with_read_slverr(1_000_000).with_max_faults(1));
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, 0x10_0000, 256, 42);
+        let chain = simple_chain(1, 256);
+        let head = sys.load_and_launch(0, &chain);
+        let stats = sys.run_until_idle_cross_checked().unwrap();
+        let err = sys.ctrl.error_csr(0).expect("channel halted on the errored fetch");
+        assert_eq!(err.code, ERR_SLVERR);
+        assert_eq!(err.addr, head);
+        assert_eq!(stats.fault_halts, 1);
+        assert_eq!(stats.axi_slverrs, 1);
+        assert_eq!(sys.error_irq_edges, vec![1], "banked error IRQ raised");
+        assert_eq!(stats.completions.len(), 0, "nothing completed");
+        // Recovery: reset the channel, relaunch the same chain.
+        let now = sys.now();
+        sys.schedule_reset(now + 1, 0);
+        sys.schedule_launch(now + 2, head);
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.channel_resets, 1);
+        assert_eq!(stats.completions.len(), 1);
+        assert!(sys.ctrl.error_csr(0).is_none(), "reset cleared the CSR");
+        assert_eq!(sys.mem.backdoor_read_u64(head), u64::MAX);
+        assert_eq!(
+            sys.mem.backdoor_read(0x10_0000, 256).to_vec(),
+            sys.mem.backdoor_read(0x20_0000, 256).to_vec()
+        );
+    }
+
+    #[test]
+    fn withheld_b_trips_the_watchdog_and_reset_recovers() {
+        use crate::axi::ERR_TIMEOUT;
+        use crate::dmac::descriptor::error_stamp;
+        use crate::mem::FaultConfig;
+        // The payload write's B response is withheld exactly once: the
+        // channel wedges awaiting the acknowledgement until the
+        // watchdog trips, aborts the transfer, and halts the channel.
+        let cfg = DmacConfig::base()
+            .with_faults(FaultConfig::seeded(2).with_withheld_b(1_000_000).with_max_faults(1))
+            .with_watchdog(500);
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, 0x10_0000, 64, 9);
+        let chain = simple_chain(1, 64);
+        let head = sys.load_and_launch(0, &chain);
+        let stats = sys.run_until_idle_cross_checked().unwrap();
+        assert_eq!(stats.watchdog_trips, 1);
+        assert_eq!(stats.aborted_transfers, 1);
+        let err = sys.ctrl.error_csr(0).expect("watchdog halted the channel");
+        assert_eq!(err.code, ERR_TIMEOUT);
+        // The poisoned completion stamped the descriptor with the
+        // timeout code, not the all-ones success stamp.
+        assert_eq!(sys.mem.backdoor_read_u64(head), error_stamp(ERR_TIMEOUT));
+        // Recovery: the withheld-B budget is spent, so the retry's
+        // acknowledgement arrives and the transfer completes.
+        let now = sys.now();
+        sys.schedule_reset(now + 1, 0);
+        sys.schedule_launch(now + 2, head);
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.completions.len(), 1);
+        assert_eq!(sys.mem.backdoor_read_u64(head), u64::MAX);
+        assert_eq!(
+            sys.mem.backdoor_read(0x10_0000, 64).to_vec(),
+            sys.mem.backdoor_read(0x20_0000, 64).to_vec()
+        );
+    }
+
+    #[test]
+    fn decerr_data_beat_poisons_the_transfer_without_halting() {
+        use crate::axi::ERR_DECERR;
+        use crate::dmac::descriptor::error_stamp;
+        use crate::mem::FaultConfig;
+        // The source buffer sits in a DECERR hole: the data beats
+        // error, the transfer aborts and its completion is poisoned,
+        // but the channel itself stays healthy (a data error is the
+        // transfer's problem, not the channel's).
+        let cfg = DmacConfig::base().with_faults(
+            FaultConfig::seeded(3).with_decerr_window(0x10_0000, 0x10_1000),
+        );
+        let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+        let chain = simple_chain(1, 64);
+        let head = sys.load_and_launch(0, &chain);
+        let stats = sys.run_until_idle_cross_checked().unwrap();
+        assert_eq!(stats.aborted_transfers, 1);
+        assert!(stats.axi_decerrs > 0);
+        assert!(sys.ctrl.error_csr(0).is_none(), "data errors do not halt the channel");
+        assert_eq!(sys.mem.backdoor_read_u64(head), error_stamp(ERR_DECERR));
+        assert_eq!(sys.error_irq_edges, vec![1], "poisoned stamp raises the error IRQ");
     }
 
     #[test]

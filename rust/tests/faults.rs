@@ -1,0 +1,167 @@
+//! End-to-end error containment and recovery through the full SoC
+//! (CPU + PLIC + testbench): the acceptance round trip
+//! fault → banked error IRQ → channel reset → retry → success, on
+//! both the CSR-launch (dmaengine) path and the submission-ring path,
+//! plus the bounds-check DECERR e2e and a watchdog-timeout recovery.
+//!
+//! Containment contract under test (DESIGN.md §11): descriptor-path
+//! errors and watchdog trips *halt* the channel (sticky error CSR +
+//! error IRQ on its own PLIC bank); data-beat errors only *poison*
+//! the one transfer and leave the channel healthy.
+
+use idmac::axi::ERR_DECERR;
+use idmac::dmac::{descriptor, ChainBuilder, Controller, Descriptor, Dmac, DmacConfig, RingParams};
+use idmac::driver::{DmaDriver, RetryPolicy, RingDriver, RingEntry};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::{FaultConfig, LatencyProfile};
+use idmac::soc::{error_irq_source, Soc};
+use idmac::tb::System;
+use idmac::workload::map;
+
+/// CSR-launch path: one SLVERR on the first descriptor-fetch beat
+/// halts the channel; the error edge rides its own banked PLIC
+/// source; the dmaengine ISR resets and resubmits to a now-clean bus.
+#[test]
+fn csr_launch_fault_error_irq_reset_retry_round_trip() {
+    let cfg = DmacConfig::speculation()
+        .with_faults(FaultConfig::seeded(1).with_read_slverr(1_000_000).with_max_faults(1))
+        .with_watchdog(5_000);
+    let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 4096, 0xE1);
+    let mut drv = DmaDriver::new(map::DESC_BASE, map::DESC_SIZE, 2)
+        .with_retry(RetryPolicy::bounded(3, 32));
+    let tx = drv.prep_memcpy(map::DST_BASE, map::SRC_BASE, 2048).unwrap();
+    let cookie = drv.tx_submit(tx);
+    drv.issue_pending(&mut soc.sys, 0);
+
+    let stats = soc.run(|sys, _cpu, now| drv.irq_handler(sys, now)).unwrap();
+
+    assert!(drv.is_complete(cookie), "recovered after reset + resubmit");
+    assert!(!drv.is_failed(cookie));
+    assert_eq!(drv.resets_issued, 1);
+    assert_eq!(drv.retries_scheduled, 1);
+    assert_eq!(stats.fault_halts, 1, "the first read beat is the descriptor fetch");
+    assert_eq!(stats.channel_resets, 1);
+    assert_eq!(stats.error_irqs, 1);
+    assert_eq!(stats.axi_slverrs, 1);
+    assert!(soc.sys.ctrl.error_csr(0).is_none(), "reset cleared the sticky CSR");
+    // PLIC accounting: one completion IRQ (the successful relaunch)
+    // plus one error IRQ, each claimed and completed on its own source.
+    assert_eq!(soc.plic.raises, stats.irqs + stats.error_irqs);
+    assert_eq!(soc.plic.completes, soc.plic.raises);
+    assert_eq!(soc.plic.pending(), 0);
+    assert!(!soc.plic.is_claimed(error_irq_source(0)));
+    assert_eq!(
+        soc.sys.mem.backdoor_read(map::SRC_BASE, 2048).to_vec(),
+        soc.sys.mem.backdoor_read(map::DST_BASE, 2048).to_vec()
+    );
+}
+
+/// Ring path: the SQ slot fetch takes the one SLVERR, the channel
+/// halts with the published entry frozen, and the ring ISR recovers
+/// (reset + rewrite + doorbell) entirely from interrupt context.
+#[test]
+fn ring_path_fault_error_irq_reset_retry_round_trip() {
+    let params = RingParams::enabled(map::DESC_BASE, 64, map::DESC_BASE + 0x8000, 64)
+        .with_coalescing(1, 64);
+    let cfg = DmacConfig::speculation()
+        .with_ring(params)
+        .with_faults(FaultConfig::seeded(5).with_read_slverr(1_000_000).with_max_faults(1))
+        .with_watchdog(5_000);
+    let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 1024, 0xE2);
+    let mut drv = RingDriver::new(0, params).with_retry(RetryPolicy::bounded(2, 16));
+    let cookies = drv
+        .submit_batch(
+            &mut soc.sys,
+            0,
+            &[RingEntry::Memcpy { dst: map::DST_BASE, src: map::SRC_BASE, len: 512 }],
+        )
+        .unwrap();
+
+    let stats = soc
+        .run(|sys, _cpu, now| {
+            if sys.ctrl.error_csr(0).is_some() {
+                // Error-IRQ claim: reset the halted channel and
+                // republish everything still in flight.
+                let _ = drv.recover(sys, now + 1);
+            } else {
+                // Ring-IRQ claim: consume CQ records, retry errored.
+                let _ = drv.poll_completions(sys, now + 1);
+                let _ = drv.resubmit_errored(sys, now + 2);
+            }
+        })
+        .unwrap();
+
+    assert_eq!(stats.fault_halts, 1, "the SQ fetch faulted");
+    assert_eq!(stats.channel_resets, 1);
+    assert_eq!(stats.error_irqs, 1);
+    assert_eq!(stats.cq_records, 1, "the retried entry retired through the CQ");
+    assert_eq!(drv.resets_issued, 1);
+    assert_eq!(drv.take_completed(), cookies);
+    assert_eq!(drv.status_of(cookies[0]), Some(0));
+    assert!(!drv.is_failed(cookies[0]));
+    assert!(soc.sys.ctrl.error_csr(0).is_none());
+    assert_eq!(soc.plic.completes, soc.plic.raises);
+    assert!(!soc.plic.is_claimed(error_irq_source(0)));
+    assert_eq!(
+        soc.sys.mem.backdoor_read(map::SRC_BASE, 512).to_vec(),
+        soc.sys.mem.backdoor_read(map::DST_BASE, 512).to_vec()
+    );
+}
+
+/// Bounds-check e2e: a transfer walking off the top of physical
+/// memory gets DECERR beats from the memory model itself (no fault
+/// plan installed), which poisons the completion stamp without
+/// halting the channel.
+#[test]
+fn out_of_range_transfer_poisons_with_decerr_without_halting() {
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(DmacConfig::speculation()));
+    let end = sys.mem.size() as u64;
+    let mut cb = ChainBuilder::new();
+    // First line in range, the remaining three past the end.
+    cb.push_at(map::DESC_BASE, Descriptor::new(end - 64, map::DST_BASE, 256).with_irq());
+    let head = sys.load_and_launch(0, &cb);
+    let stats = sys.run_until_idle().unwrap();
+
+    assert!(stats.axi_decerrs > 0, "beats past the top of memory must DECERR");
+    assert_eq!(stats.aborted_transfers, 1);
+    assert_eq!(stats.fault_halts, 0, "a data-beat error never halts the channel");
+    assert!(sys.ctrl.error_csr(0).is_none());
+    assert_eq!(stats.error_irqs, 1, "the poisoned stamp raises the error line");
+    assert!(!descriptor::is_completed(&sys.mem, head));
+    assert_eq!(descriptor::error_status(&sys.mem, head), Some(ERR_DECERR));
+}
+
+/// Watchdog path through the SoC: a withheld B-response wedges the
+/// write pipe, the per-channel watchdog trips TIMEOUT, the channel
+/// halts, and the dmaengine ISR recovers exactly like a fetch fault.
+#[test]
+fn withheld_b_trips_the_watchdog_and_recovery_completes() {
+    let cfg = DmacConfig::speculation()
+        .with_faults(FaultConfig::seeded(11).with_withheld_b(1_000_000).with_max_faults(1))
+        .with_watchdog(400);
+    let mut soc = Soc::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+    fill_pattern(&mut soc.sys.mem, map::SRC_BASE, 2048, 0xE3);
+    let mut drv = DmaDriver::new(map::DESC_BASE, map::DESC_SIZE, 2)
+        .with_retry(RetryPolicy::bounded(2, 16));
+    let tx = drv.prep_memcpy(map::DST_BASE, map::SRC_BASE, 2048).unwrap();
+    let cookie = drv.tx_submit(tx);
+    drv.issue_pending(&mut soc.sys, 0);
+
+    let stats = soc.run(|sys, _cpu, now| drv.irq_handler(sys, now)).unwrap();
+
+    assert_eq!(stats.watchdog_trips, 1, "the withheld B starved progress");
+    assert_eq!(stats.fault_halts, 1, "a trip halts like a fault, code TIMEOUT");
+    assert_eq!(stats.aborted_transfers, 1, "the wedged transfer was drained");
+    assert_eq!(stats.channel_resets, 1);
+    assert!(drv.is_complete(cookie), "retry after reset ran on a clean bus");
+    assert!(!drv.is_failed(cookie));
+    assert_eq!(drv.resets_issued, 1);
+    assert!(soc.sys.ctrl.error_csr(0).is_none());
+    assert_eq!(soc.plic.completes, soc.plic.raises);
+    assert_eq!(
+        soc.sys.mem.backdoor_read(map::SRC_BASE, 2048).to_vec(),
+        soc.sys.mem.backdoor_read(map::DST_BASE, 2048).to_vec()
+    );
+}

@@ -237,6 +237,51 @@ fn prop_ring_capable_config_is_cycle_identical_when_unused() {
 }
 
 #[test]
+fn prop_fault_capable_config_is_cycle_identical_when_disabled() {
+    use idmac::mem::FaultConfig;
+    // The fault subsystem's acceptance property: injection off is the
+    // default, and a fault-capable DMAC (watchdog armed, fault plan
+    // absent or present-but-zero-rate) must be cycle-identical to the
+    // pre-fault DMAC on every chain workload — same RunStats, same
+    // final clock, same memory image, under both schedulers.
+    forall(CASES, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        // Disabled plan: the memory model installs nothing.
+        let disabled = cfg.with_watchdog(200_000).with_faults(FaultConfig::disabled());
+        // Armed plan with every rate at zero: the plan draws nothing
+        // that can fire, so the decision stream is inert.
+        let armed_idle = cfg.with_watchdog(200_000).with_faults(FaultConfig::seeded(rng.next_u64()));
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let run = |cfg: DmacConfig, naive: bool| {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = if naive {
+                sys.run_until_idle_naive().unwrap()
+            } else {
+                sys.run_until_idle().unwrap()
+            };
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        let bare = run(cfg, false);
+        for (label, hardened) in [("disabled", disabled), ("armed-idle", armed_idle)] {
+            let fast = run(hardened, false);
+            let naive = run(hardened, true);
+            assert_eq!(bare, fast, "{label} fault config changed behavior: cfg={cfg:?} {profile:?}");
+            assert_eq!(bare, naive, "{label} fault config diverged under the naive loop");
+            assert_eq!(fast.0.axi_slverrs, 0);
+            assert_eq!(fast.0.axi_decerrs, 0);
+            assert_eq!(fast.0.fault_halts, 0);
+            assert_eq!(fast.0.watchdog_trips, 0);
+            assert_eq!(fast.0.aborted_transfers, 0);
+            assert_eq!(fast.0.error_irqs, 0);
+        }
+    });
+}
+
+#[test]
 fn prop_fast_forward_matches_naive_with_iommu_enabled() {
     use idmac::report::translation::{run_translation, AccessPattern};
     // With the SV39 translation stage enabled, the event-horizon

@@ -2,9 +2,10 @@
 //!
 //! Every case samples a random point in the full feature cross product
 //! — {multi-channel × IOMMU translation × ND-affine descriptors ×
-//! submission/completion rings × arbitration policy × memory latency}
-//! — builds the identical system twice from one deterministic plan,
-//! runs it under both schedulers, and asserts on every sampled point:
+//! submission/completion rings × AXI fault injection × arbitration
+//! policy × memory latency} — builds the identical system twice from
+//! one deterministic plan, runs it under both schedulers, and asserts
+//! on every sampled point:
 //!
 //! * **byte conservation** — every expected row (including hardware-
 //!   expanded ND rows) landed byte-exact at its destination, and the
@@ -16,6 +17,14 @@
 //!   raise between `ceil(n/threshold)` and `n` coalesced edges, and
 //!   completion-ring records account for every ring entry with zero
 //!   overflows.
+//!
+//! Half the cases enable deterministic fault injection (SLVERR rates,
+//! stalls, withheld B responses under an armed watchdog).  When a
+//! fault actually fires the conservation assertions relax to the
+//! containment contract: the run still terminates (no deadlock, both
+//! schedulers in lockstep) and every chain descriptor that completed
+//! cleanly still moved its rows byte-exact.  Stall-only perturbation
+//! keeps the full conservation contract — stalls move time, not data.
 //!
 //! Cases are seeded deterministically by `testutil::forall`.  The
 //! quick profile (default, CI matrix) runs a subset; the full ≥200-case
@@ -29,7 +38,7 @@ use idmac::dmac::{
 use idmac::driver::{DmaMapper, RingDriver, RingEntry};
 use idmac::iommu::IommuDmac;
 use idmac::mem::backdoor::fill_pattern;
-use idmac::mem::LatencyProfile;
+use idmac::mem::{FaultConfig, LatencyProfile};
 use idmac::sim::Cycle;
 use idmac::tb::System;
 use idmac::testutil::{forall, SplitMix64};
@@ -86,8 +95,10 @@ struct Plan {
     total_descs: usize,
     /// Ring entries per channel (empty slot = chain channel).
     ring_entries: Vec<usize>,
-    /// Chain descriptor addresses (carry the completion stamp).
-    chain_stamp_addrs: Vec<u64>,
+    /// Chain descriptors: stamp address plus the rows that descriptor
+    /// moves (for faulted cases, rows are only checked when the stamp
+    /// reports a clean completion).
+    chain_descs: Vec<(u64, Vec<(u64, u64, u32)>)>,
     /// Ring head-slot addresses (must NOT be stamped in ring mode).
     ring_head_addrs: Vec<u64>,
 }
@@ -111,6 +122,27 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
     ]);
     let profile = LatencyProfile::Custom(rng.range(1, 80) as u32);
     let seed = rng.next_u64() as u32;
+    // Half the cases arm the fault injector (low rates: most faulted
+    // plans fire a handful of faults or none, exercising both the
+    // containment path and injection-armed-but-inert timing).
+    let faults = if rng.chance(0.5) {
+        let mut fc = FaultConfig::seeded(rng.next_u64());
+        if rng.chance(0.5) {
+            fc = fc.with_read_slverr(rng.range(100, 2_000) as u32);
+        }
+        if rng.chance(0.5) {
+            fc = fc.with_write_slverr(rng.range(100, 2_000) as u32);
+        }
+        if rng.chance(0.5) {
+            fc = fc.with_stalls(rng.range(1_000, 20_000) as u32, rng.range(4, 64) as u32);
+        }
+        if rng.chance(0.25) {
+            fc = fc.with_withheld_b(rng.range(100, 1_000) as u32);
+        }
+        fc
+    } else {
+        FaultConfig::disabled()
+    };
     let mut plan = Plan {
         cfgs: Vec::new(),
         work: Vec::new(),
@@ -120,12 +152,22 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
         expected: Vec::new(),
         total_descs: 0,
         ring_entries: vec![0; nch],
-        chain_stamp_addrs: Vec::new(),
+        chain_descs: Vec::new(),
         ring_head_addrs: Vec::new(),
     };
     for c in 0..nch {
         let mut cfg = DmacConfig::custom(rng.range(1, 10) as usize, rng.range(0, 10) as usize)
             .with_weight(rng.range(1, 4) as u32);
+        if faults.enabled {
+            // The memory-level plan is owned by channel 0's config; an
+            // armed watchdog on every channel bounds withheld-B wedges.
+            // It must sit far above the worst honest silence (ring IRQ
+            // timeout + stall + two deep-memory round trips).
+            cfg = cfg.with_watchdog(50_000);
+            if c == 0 {
+                cfg = cfg.with_faults(faults);
+            }
+        }
         if rng.chance(0.25) {
             cfg = cfg.without_nd();
         }
@@ -187,21 +229,23 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
                 let dst = dst_slot_addr(c, slots[k]);
                 let src = map::SRC_BASE + rng.below(32) * 4096;
                 let mut d;
+                let mut rows = Vec::new();
                 if cfg.nd_enabled && rng.chance(0.3) {
                     let (reps, row, src_stride) = nd_shape(rng);
                     d = Descriptor::new(src, dst, row).with_nd(reps, src_stride, 1024);
                     for r in 0..reps as u64 {
-                        plan.expected.push((src + r * src_stride as u64, dst + r * 1024, row));
+                        rows.push((src + r * src_stride as u64, dst + r * 1024, row));
                     }
                 } else {
                     let len = *rng.pick(&[1u32, 8, 64, 100, 256, 1024]);
                     d = Descriptor::new(src, dst, len);
-                    plan.expected.push((src, dst, len));
+                    rows.push((src, dst, len));
                 }
+                plan.expected.extend(rows.iter().copied());
                 if k + 1 == n {
                     d = d.with_irq();
                 }
-                plan.chain_stamp_addrs.push(desc_addr);
+                plan.chain_descs.push((desc_addr, rows));
                 cb.push_at(desc_addr, d);
                 // Monotone collision-free placement past the span
                 // (64 B for ND descriptors): hit/miss mix for the
@@ -273,6 +317,36 @@ fn stress_cross_feature_differential() {
             "memory image diverged"
         );
 
+        // Did the injector actually corrupt anything?  Most faulted
+        // plans fire nothing (low rates) and stall-only perturbation
+        // moves time, not data — both keep the full conservation
+        // contract.  Only a fired fault relaxes it to containment.
+        let clean = f.axi_slverrs == 0
+            && f.axi_decerrs == 0
+            && f.fault_halts == 0
+            && f.aborted_transfers == 0
+            && f.watchdog_trips == 0
+            && f.iommu_faults == 0;
+        if !clean {
+            // Containment contract: the faulted run terminated (both
+            // schedulers in lockstep, asserted above), the system
+            // drained to idle rather than wedging, and every chain
+            // descriptor that completed cleanly still moved its rows.
+            assert!(fast.is_idle(), "faulted run left residual work");
+            for (addr, rows) in &plan.chain_descs {
+                if descriptor::is_completed(&fast.mem, *addr) {
+                    for &(src, dst, len) in rows {
+                        assert_eq!(
+                            fast.mem.backdoor_read(src, len as usize).to_vec(),
+                            fast.mem.backdoor_read(dst, len as usize).to_vec(),
+                            "completed desc {addr:#x} lost row dst={dst:#x}"
+                        );
+                    }
+                }
+            }
+            return;
+        }
+
         // (2) Byte conservation: every planned row landed byte-exact,
         // and the completion log accounts for exactly the payload.
         for &(src, dst, len) in &plan.expected {
@@ -329,7 +403,7 @@ fn stress_cross_feature_differential() {
         // (4) Feedback-path invariants: chain descriptors carry the
         // in-place stamp; ring slots never do (completion goes to the
         // CQ instead).
-        for &addr in &plan.chain_stamp_addrs {
+        for &(addr, _) in &plan.chain_descs {
             assert!(descriptor::is_completed(&fast.mem, addr), "unstamped chain desc {addr:#x}");
         }
         for &addr in &plan.ring_head_addrs {
