@@ -25,7 +25,7 @@ MARKDOWN_FILES = [
 ]
 
 REQUIRED_SECTIONS = {
-    "README.md": ["Quickstart", "translate", "bench-regression gate"],
+    "README.md": ["Quickstart", "translate", "faults", "dram", "bench-regression gate"],
     "DESIGN.md": [
         "Multi-channel",
         "event horizon",
@@ -33,17 +33,20 @@ REQUIRED_SECTIONS = {
         "Virtual memory & IOMMU",
         "Rings",
         "Error model and recovery",
+        "DRAM backend",
     ],
     "EXPERIMENTS.md": [
         "Contention",
         "Translation",
         "Rings",
         "Faults",
+        "DRAM",
         "BENCH_multichannel.json",
         "BENCH_sim_throughput.json",
         "BENCH_translation.json",
         "BENCH_rings.json",
         "BENCH_faults.json",
+        "BENCH_dram.json",
     ],
 }
 

@@ -38,6 +38,11 @@ fields are ignored by design, so runner speed cannot flake the build:
     ``idmac-faults/v1`` schema.  The fault plan is a pure function of
     its seed, so the grid is exact-diffed like every other point grid.
 
+``dram``
+    Validates ``BENCH_dram.json``-shaped files (the row-buffer
+    locality grid on the banked DRAM timing backend) with the same
+    protocol against the ``idmac-dram/v1`` schema.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -194,6 +199,10 @@ def check_faults(fast_path: str, naive_path: str, baseline_path: str) -> None:
     check_point_grid(fast_path, naive_path, baseline_path, "idmac-faults/v1", "faults")
 
 
+def check_dram(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(fast_path, naive_path, baseline_path, "idmac-dram/v1", "dram")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -228,6 +237,11 @@ def main() -> None:
     fl.add_argument("--naive", required=True)
     fl.add_argument("--baseline", required=True)
 
+    dr = sub.add_parser("dram")
+    dr.add_argument("--fast", required=True)
+    dr.add_argument("--naive", required=True)
+    dr.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
@@ -239,8 +253,10 @@ def main() -> None:
         check_nd(args.fast, args.naive, args.baseline)
     elif args.mode == "rings":
         check_rings(args.fast, args.naive, args.baseline)
-    else:
+    elif args.mode == "faults":
         check_faults(args.fast, args.naive, args.baseline)
+    else:
+        check_dram(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

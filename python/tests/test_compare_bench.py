@@ -222,6 +222,61 @@ def test_faults_rejects_rings_schema(tmp_path):
     assert "unexpected schema" in r.stderr
 
 
+DRAM_POINT = {
+    "workload": "gather",
+    "size": 64,
+    "banks": 2,
+    "transfers": 512,
+    "bytes": 32768,
+    "cycles": 150000,
+    "row_hits": 400,
+    "row_misses": 120,
+    "row_conflicts": 900,
+    "refreshes": 48,
+}
+
+
+def test_dram_identical_grids_pass_with_bootstrap_baseline(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-dram/v1", [DRAM_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-dram/v1", [DRAM_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-dram/v1", []))
+    r = run(["dram", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "bootstrap mode" in r.stdout
+
+
+def test_dram_scheduler_divergence_fails(tmp_path):
+    # The event-horizon scheduler skipping a refresh window or issuing a
+    # command early shows up in the counters, not just cycles — any
+    # field difference gates.
+    diverged = dict(DRAM_POINT, row_conflicts=901)
+    fast = write(tmp_path / "fast.json", point_doc("idmac-dram/v1", [DRAM_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-dram/v1", [diverged]))
+    base = write(tmp_path / "base.json", point_doc("idmac-dram/v1", []))
+    r = run(["dram", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "not deterministic" in r.stderr
+
+
+def test_dram_baseline_drift_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-dram/v1", [DRAM_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-dram/v1", [DRAM_POINT]))
+    drifted = dict(DRAM_POINT, cycles=149999)
+    base = write(tmp_path / "base.json", point_doc("idmac-dram/v1", [drifted]))
+    r = run(["dram", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "drifted" in r.stderr
+
+
+def test_dram_rejects_faults_schema(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-faults/v1", [DRAM_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-faults/v1", [DRAM_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-dram/v1", []))
+    r = run(["dram", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "unexpected schema" in r.stderr
+
+
 def test_throughput_mode_gates_cycle_identity(tmp_path):
     entry = {
         "label": "fig4-grid/DDR3 (13 cycles)",
@@ -262,6 +317,7 @@ def test_repo_baselines_parse_and_use_known_schemas():
         "BENCH_nd.json": "idmac-nd/v1",
         "BENCH_rings.json": "idmac-rings/v1",
         "BENCH_faults.json": "idmac-faults/v1",
+        "BENCH_dram.json": "idmac-dram/v1",
     }
     for name, schema in expected.items():
         path = os.path.join(repo, name)

@@ -1,6 +1,6 @@
 //! Compile-time parameter sets of the DMAC (paper Table I).
 
-use crate::mem::FaultConfig;
+use crate::mem::{FaultConfig, MemBackend};
 
 /// Per-channel IOMMU parameters, consumed by [`crate::iommu::IommuDmac`]
 /// when it banks an SV39 translation stage in front of this channel's
@@ -162,6 +162,12 @@ pub struct DmacConfig {
     /// many cycles.  0 disables the watchdog (the default — the
     /// fault-free bus always answers).
     pub watchdog: u32,
+    /// Memory timing backend this configuration runs against
+    /// ([`crate::mem::dram`], DESIGN.md §12).  Like the fault plan it
+    /// is a whole-memory property installed once by the testbench; the
+    /// default [`MemBackend::Pipe`] stays cycle-identical to the
+    /// pre-DRAM model (property-tested).
+    pub mem: MemBackend,
 }
 
 impl DmacConfig {
@@ -179,6 +185,7 @@ impl DmacConfig {
             ring: RingParams::disabled(),
             faults: FaultConfig::disabled(),
             watchdog: 0,
+            mem: MemBackend::Pipe,
         }
     }
 
@@ -240,6 +247,14 @@ impl DmacConfig {
     /// `cycles` cycles.
     pub fn with_watchdog(mut self, cycles: u32) -> Self {
         self.watchdog = cycles;
+        self
+    }
+
+    /// Select the memory timing backend (multi-channel systems install
+    /// channel 0's backend into the shared memory, like the fault
+    /// plan).
+    pub fn with_mem_backend(mut self, mem: MemBackend) -> Self {
+        self.mem = mem;
         self
     }
 
@@ -338,6 +353,17 @@ mod tests {
         assert_eq!(c.faults.seed, 42);
         assert_eq!(c.watchdog, 5000);
         assert_eq!(c.name(), "base", "fault knobs do not affect the preset name");
+    }
+
+    #[test]
+    fn mem_backend_defaults_to_pipe_and_is_settable() {
+        use crate::mem::DramParams;
+        for c in DmacConfig::paper_configs() {
+            assert_eq!(c.mem, MemBackend::Pipe);
+        }
+        let c = DmacConfig::base().with_mem_backend(MemBackend::Dram(DramParams::ddr3_like(8)));
+        assert!(matches!(c.mem, MemBackend::Dram(p) if p.banks == 8));
+        assert_eq!(c.name(), "base", "the backend does not affect the preset name");
     }
 
     #[test]

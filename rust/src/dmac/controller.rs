@@ -17,6 +17,7 @@
 
 use super::frontend::ChannelError;
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
+use crate::mem::dram::MemBackend;
 use crate::mem::faults::FaultConfig;
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, RunStats, Tickable};
@@ -130,6 +131,14 @@ pub trait Controller: Tickable {
     /// installed.
     fn fault_config(&self) -> FaultConfig {
         FaultConfig::disabled()
+    }
+
+    /// Memory timing backend this controller's memory should run with
+    /// (the pipe unless the device was configured for a DRAM model,
+    /// DESIGN.md §12).  Read once by the testbench when the memory is
+    /// installed, like [`fault_config`](Self::fault_config).
+    fn mem_backend(&self) -> MemBackend {
+        MemBackend::Pipe
     }
 
     /// Channel-reset CSR write: clear channel `ch`'s sticky fault and

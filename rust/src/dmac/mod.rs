@@ -26,6 +26,7 @@ pub use multichannel::MultiChannel;
 pub use ring::{CqRecord, CQ_RECORD_BYTES};
 
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS, ERR_TIMEOUT};
+use crate::mem::dram::MemBackend;
 use crate::mem::faults::FaultConfig;
 use crate::mem::latency::BResp;
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
@@ -267,6 +268,10 @@ impl Controller for Dmac {
 
     fn fault_config(&self) -> FaultConfig {
         self.config().faults
+    }
+
+    fn mem_backend(&self) -> MemBackend {
+        self.config().mem
     }
 
     fn channel_reset(&mut self, now: Cycle, ch: usize) {

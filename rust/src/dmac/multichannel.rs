@@ -225,6 +225,12 @@ impl Controller for MultiChannel {
         self.channels[0].fault_config()
     }
 
+    /// Like the fault plan, the timing backend is a whole-memory
+    /// property: the shared memory runs channel 0's configured backend.
+    fn mem_backend(&self) -> crate::mem::dram::MemBackend {
+        self.channels[0].mem_backend()
+    }
+
     fn channel_reset(&mut self, now: Cycle, ch: usize) {
         self.per_channel.clear();
         self.channels[ch].channel_reset(now, 0);

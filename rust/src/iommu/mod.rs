@@ -268,6 +268,10 @@ impl Controller for IommuDmac {
         self.inner.fault_config()
     }
 
+    fn mem_backend(&self) -> crate::mem::dram::MemBackend {
+        self.inner.mem_backend()
+    }
+
     fn channel_reset(&mut self, now: Cycle, ch: usize) {
         self.inner.channel_reset(now, ch);
     }

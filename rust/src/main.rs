@@ -23,7 +23,10 @@
 //! idmac faults [--naive] [--out FILE]   # fault-rate x size x latency grid
 //!             [--rate PPM] [--size N] [--latency …]
 //!                                       # writes BENCH_faults.json
-//! idmac regen-baselines [--dir D]       # rewrite all six BENCH_*.json
+//! idmac dram [--naive] [--out FILE]     # access-pattern x size x bank grid
+//!             [--workload streaming|strided|gather] [--size N] [--banks N]
+//!                                       # writes BENCH_dram.json
+//! idmac regen-baselines [--dir D]       # rewrite all seven BENCH_*.json
 //!                                       # baselines (arms the CI gate)
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
@@ -79,6 +82,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("nd") => nd(args)?,
         Some("rings") => rings(args)?,
         Some("faults") => faults(args)?,
+        Some("dram") => dram(args)?,
         Some("regen-baselines") => regen_baselines(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
@@ -104,7 +108,7 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     translate|nd|rings|faults|regen-baselines|bench-throughput|\
+                     translate|nd|rings|faults|dram|regen-baselines|bench-throughput|\
                      oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
 
 /// Regenerate every checked-in bench baseline in one pass (arming the
@@ -138,6 +142,10 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     idmac::report::FaultsReport::new(idmac::report::faults::faults_grid(naive)).write(&out)?;
     println!("wrote {out}");
 
+    let out = path(idmac::report::dram::BENCH_FILE);
+    idmac::report::DramReport::new(idmac::report::dram::dram_grid(naive)).write(&out)?;
+    println!("wrote {out}");
+
     let out = path(idmac::report::throughput::BENCH_FILE);
     let mut report = idmac::report::ThroughputReport::new();
     for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
@@ -146,7 +154,7 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     }
     report.write(&out)?;
     println!("wrote {out}");
-    println!("commit the six BENCH_*.json files to arm the CI gate");
+    println!("commit the seven BENCH_*.json files to arm the CI gate");
     Ok(())
 }
 
@@ -206,6 +214,48 @@ fn faults(args: &Args) -> idmac::Result<()> {
         fl::faults_grid(naive)
     };
     let report = idmac::report::FaultsReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// DRAM locality grid (access patterns × transfer sizes × bank counts)
+/// on the banked DRAM timing backend; emits the deterministic
+/// `BENCH_dram.json`.  With an explicit `--workload`/`--size`/`--banks`
+/// the grid collapses to that single point.
+fn dram(args: &Args) -> idmac::Result<()> {
+    use idmac::report::dram as dr;
+
+    let naive = args.naive();
+    let out = args.get_or("out", dr::BENCH_FILE);
+    let single = args.get("workload").is_some()
+        || args.get("size").is_some()
+        || args.get("banks").is_some();
+    let points = if single {
+        let workload = match args.get_or("workload", "gather").as_str() {
+            "streaming" => dr::DramWorkload::Streaming,
+            "strided" => dr::DramWorkload::Strided,
+            "gather" => dr::DramWorkload::Gather,
+            other => {
+                return Err(idmac::Error::Cli(format!(
+                    "--workload must be streaming|strided|gather, got `{other}`"
+                )));
+            }
+        };
+        let size = args.get_usize("size", 64)? as u32;
+        if size == 0 || size > 4096 {
+            return Err(idmac::Error::Cli("--size must be in 1..=4096 (payload arena)".into()));
+        }
+        let banks = args.get_usize("banks", 4)?;
+        if banks == 0 || banks > 64 {
+            return Err(idmac::Error::Cli("--banks must be in 1..=64".into()));
+        }
+        vec![dr::run_dram(workload, size, banks as u32, naive)]
+    } else {
+        dr::dram_grid(naive)
+    };
+    let report = idmac::report::DramReport::new(points);
     report.to_table().print();
     report.write(&out)?;
     println!("wrote {out}");

@@ -1,0 +1,748 @@
+//! Banked DRAM timing backend with row-buffer locality (ROADMAP item
+//! 1, DESIGN.md §12).
+//!
+//! [`DramCore`] replaces the fixed service depth of the pipe backend
+//! with a bank/row state machine: the address space is striped across
+//! `banks` row-interleaved banks, each with at most one open row.  An
+//! access to the open row is a **row hit** (`t_cas`); an access to an
+//! idle bank is a **row miss** (`t_rcd + t_cas`, the activate); an
+//! access to a bank holding a *different* open row is a **row
+//! conflict** (`t_rp + t_rcd + t_cas`, precharge + activate).  This is
+//! the one mechanism the paper's irregular-transfer thesis needs:
+//! a linear stream stays inside open rows and round-robins the banks,
+//! while a random gather precharges almost every access — so equal
+//! byte counts stop costing equal cycles.
+//!
+//! Commands are scheduled FR-FCFS style (first-ready, first-come
+//! first-served), restricted to the per-port queue heads so AXI
+//! per-ID ordering is preserved by construction; writes sit in a
+//! coalescing queue and drain opportunistically (see
+//! [`DramParams::wq_watermark`]).  Periodic refresh closes every row
+//! and occupies all banks for `t_rfc` cycles each `t_refi` cycles.
+//!
+//! The backend lives *behind* [`super::latency::Memory`]: the AXI
+//! surface (`push_read` / `push_write` / `pop_read_beat` / `pop_b`),
+//! the bounds-check DECERR path and the fault injector are shared with
+//! the pipe, so every existing workload runs unchanged on either
+//! backend.  See the `mem` module docs for the contract a backend must
+//! uphold (ordering, `next_event` obligations, determinism).
+
+use crate::axi::{Port, RBeat, Resp, BYTES_PER_BEAT};
+use crate::mem::latency::{BResp, ScheduledWrite};
+use crate::sim::{Cycle, EventHorizon, MonotonicQueue};
+use std::collections::VecDeque;
+
+/// Which timing model serves AXI traffic at the memory (DESIGN.md §7,
+/// §12).  Part of `DmacConfig` — like the fault plan, the backend is a
+/// whole-memory property read once by the testbench at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemBackend {
+    /// The fixed-depth request/response pipe of `mem::latency`: every
+    /// access costs the same, regardless of address pattern.  The
+    /// default, bit-identical to the pre-DRAM model.
+    #[default]
+    Pipe,
+    /// The banked row-buffer model of this module.
+    Dram(DramParams),
+}
+
+/// Integer timing parameters of the DRAM backend.  All latencies are
+/// in bus-clock cycles; see DESIGN.md §12 for the calibration table
+/// against the `LatencyProfile` pipe depths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramParams {
+    /// Number of row-interleaved banks (floored to 1).  Consecutive
+    /// rows map to consecutive banks, so streams overlap their
+    /// activates and gathers fight over row buffers.
+    pub banks: u32,
+    /// Bytes per DRAM row (the row-buffer size; floored to 64).
+    pub row_bytes: u32,
+    /// Column access latency: the cost of a row hit.
+    pub t_cas: u32,
+    /// Activate latency: a row miss costs `t_rcd + t_cas`.
+    pub t_rcd: u32,
+    /// Precharge latency: a row conflict costs `t_rp + t_rcd + t_cas`.
+    pub t_rp: u32,
+    /// Refresh interval; every `t_refi` cycles all banks close their
+    /// rows and go busy for [`t_rfc`](Self::t_rfc).  `0` disables
+    /// refresh.
+    pub t_refi: u32,
+    /// Refresh cycle time: how long a refresh occupies every bank.
+    pub t_rfc: u32,
+    /// Write-queue drain watermark: queued writes are held (reads have
+    /// priority) until this many beats accumulate, the read queues go
+    /// empty, or a read needs a row a queued write targets.
+    pub wq_watermark: u32,
+}
+
+impl DramParams {
+    /// DDR3-flavored defaults at bus-clock scale, matching the
+    /// `LatencyProfile::Ddr3` calibration in DESIGN.md §12.
+    pub fn ddr3_like(banks: u32) -> Self {
+        Self {
+            banks: banks.max(1),
+            row_bytes: 2048,
+            t_cas: 6,
+            t_rcd: 6,
+            t_rp: 6,
+            t_refi: 3120,
+            t_rfc: 104,
+            wq_watermark: 12,
+        }
+    }
+
+    /// Clamp degenerate geometry so the model stays well-defined.
+    fn floored(self) -> Self {
+        Self {
+            banks: self.banks.max(1),
+            row_bytes: self.row_bytes.max(64),
+            t_cas: self.t_cas.max(1),
+            wq_watermark: self.wq_watermark.max(1),
+            ..self
+        }
+    }
+}
+
+/// Row-buffer accounting, exposed through `Memory::dram_stats` and the
+/// `idmac dram` report grid.  Deterministic integers — safe for the CI
+/// bench gate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DramStats {
+    /// Commands that found their row open.
+    pub row_hits: u64,
+    /// Commands that activated a row in an idle bank.
+    pub row_misses: u64,
+    /// Commands that had to precharge another row first.
+    pub row_conflicts: u64,
+    /// Refresh windows applied.
+    pub refreshes: u64,
+}
+
+/// Per-bank state: the open row (None = precharged/idle) and the cycle
+/// until which the bank is occupied by an in-progress command or a
+/// refresh.
+#[derive(Debug, Clone, Copy, Default)]
+struct Bank {
+    open_row: Option<u64>,
+    busy_until: Cycle,
+}
+
+/// One read beat as the DRAM command queue carries it: the fault plan
+/// and bounds check have already run (in `Memory::push_read`, shared
+/// with the pipe backend), so the beat arrives with its final response
+/// and stall attached.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DramReadBeat {
+    pub(crate) addr: u64,
+    pub(crate) beat_idx: u32,
+    pub(crate) last: bool,
+    pub(crate) bytes: u32,
+    pub(crate) resp: Resp,
+    pub(crate) stall: Cycle,
+}
+
+/// A read command: one same-row segment of an AR burst.  Bursts that
+/// cross a row boundary split into one command per row touched.
+#[derive(Debug, Clone)]
+struct ReadCmd {
+    arrive_at: Cycle,
+    tag: u64,
+    bank: usize,
+    row: u64,
+    beats: Vec<DramReadBeat>,
+}
+
+/// A write command: same-row write beats coalesced at the queue tail.
+#[derive(Debug, Clone)]
+struct WriteCmd {
+    arrive_at: Cycle,
+    bank: usize,
+    row: u64,
+    beats: Vec<ScheduledWrite>,
+}
+
+/// The banked DRAM command scheduler.  Owned by `Memory` (present only
+/// when a [`MemBackend::Dram`] is installed); `Memory` routes accepted
+/// traffic here and this core pushes responses into the shared
+/// delivery queues.
+///
+/// Scheduling rules (FR-FCFS, one command per cycle):
+///
+/// 1. Candidates are the *heads* of the per-port read FIFOs and the
+///    head of the write queue — never younger entries, so per-ID AXI
+///    ordering holds by construction.
+/// 2. A read head is eligible when it has traversed the request pipe,
+///    its bank is free, and no queued write targets its row (RAW
+///    hazard, checked at row granularity — an over-approximation that
+///    is always sound, since overlapping bytes share a row).
+/// 3. The write head is considered only when draining is on
+///    (watermark reached, read queues empty, or a read blocked on a
+///    queued write) and then takes priority over reads.
+/// 4. Among eligible reads: row hits first, then oldest arrival.
+///
+/// Responses enter the shared delivery queues at strictly increasing
+/// cycles (matching the pipe's one-beat-per-cycle R and B channels),
+/// with the whole command's data sampled/applied at issue.
+#[derive(Debug, Clone)]
+pub(crate) struct DramCore {
+    params: DramParams,
+    banks: Vec<Bank>,
+    /// Per-port read command FIFOs (AR order within a port).
+    reads: Vec<(Port, VecDeque<ReadCmd>)>,
+    writes: VecDeque<WriteCmd>,
+    /// Beats across `writes` (watermark checks without iteration).
+    wq_beats: usize,
+    /// Beats across `reads` (O(1) idle checks, like the pipe).
+    pending_read_beats: usize,
+    /// Next refresh boundary (0 = refresh disabled).  Applied lazily:
+    /// `tick` catches up on every boundary that has passed, which is
+    /// confluent — the same final bank state whether the boundaries
+    /// were ticked one by one (naive loop) or in one catch-up after a
+    /// fast-forward jump.
+    next_refresh: Cycle,
+    /// Last R / B delivery keys handed to the shared queues; pushes
+    /// clamp to `last + 1` so delivery stays monotone and one per
+    /// cycle even when a short-latency command issues right after a
+    /// long one.
+    last_r_push: Cycle,
+    last_b_push: Cycle,
+    stats: DramStats,
+}
+
+impl DramCore {
+    pub(crate) fn new(params: DramParams) -> Self {
+        let p = params.floored();
+        Self {
+            params: p,
+            banks: vec![Bank::default(); p.banks as usize],
+            reads: Vec::new(),
+            writes: VecDeque::new(),
+            wq_beats: 0,
+            pending_read_beats: 0,
+            next_refresh: p.t_refi as Cycle,
+            last_r_push: 0,
+            last_b_push: 0,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub(crate) fn stats(&self) -> DramStats {
+        self.stats
+    }
+
+    pub(crate) fn quiescent(&self) -> bool {
+        self.pending_read_beats == 0 && self.writes.is_empty()
+    }
+
+    /// Queue an accepted AR burst, split into one command per row
+    /// touched.  `ready_at` is the end of the request-pipe traversal;
+    /// a fault-injected stall delays the whole segment carrying it.
+    pub(crate) fn push_read_burst(
+        &mut self,
+        ready_at: Cycle,
+        port: Port,
+        tag: u64,
+        beats: &[DramReadBeat],
+    ) {
+        self.pending_read_beats += beats.len();
+        let row_bytes = self.params.row_bytes as u64;
+        let nbanks = self.params.banks as u64;
+        let queue = match self.reads.iter_mut().position(|(p, _)| *p == port) {
+            Some(i) => &mut self.reads[i].1,
+            None => {
+                self.reads.push((port, VecDeque::new()));
+                &mut self.reads.last_mut().unwrap().1
+            }
+        };
+        let mut seg: Option<ReadCmd> = None;
+        for b in beats {
+            let row = b.addr / row_bytes;
+            match seg.as_mut() {
+                Some(cmd) if cmd.row == row => {
+                    cmd.arrive_at = cmd.arrive_at.max(ready_at + b.stall);
+                    cmd.beats.push(*b);
+                }
+                _ => {
+                    if let Some(done) = seg.take() {
+                        queue.push_back(done);
+                    }
+                    seg = Some(ReadCmd {
+                        arrive_at: ready_at + b.stall,
+                        tag,
+                        bank: (row % nbanks) as usize,
+                        row,
+                        beats: vec![*b],
+                    });
+                }
+            }
+        }
+        if let Some(done) = seg {
+            queue.push_back(done);
+        }
+    }
+
+    /// Queue an accepted write beat.  Same-row beats coalesce at the
+    /// queue tail (the write-combining a real controller's write queue
+    /// does); a coalesced command issues when its youngest beat has
+    /// traversed the request pipe.
+    pub(crate) fn push_write_beat(&mut self, arrive_at: Cycle, w: ScheduledWrite) {
+        let row = w.addr / self.params.row_bytes as u64;
+        self.wq_beats += 1;
+        let coalesce = matches!(self.writes.back(), Some(cmd) if cmd.row == row);
+        if coalesce {
+            let cmd = self.writes.back_mut().unwrap();
+            cmd.arrive_at = cmd.arrive_at.max(arrive_at);
+            cmd.beats.push(w);
+        } else {
+            let bank = (row % self.params.banks as u64) as usize;
+            self.writes.push_back(WriteCmd { arrive_at, bank, row, beats: vec![w] });
+        }
+    }
+
+    /// Row hit / miss / conflict classification for a command issuing
+    /// on `bank` for `row`, counting it in the stats.
+    fn access_latency(&mut self, bank: usize, row: u64) -> Cycle {
+        let p = self.params;
+        match self.banks[bank].open_row {
+            Some(open) if open == row => {
+                self.stats.row_hits += 1;
+                p.t_cas as Cycle
+            }
+            Some(_) => {
+                self.stats.row_conflicts += 1;
+                (p.t_rp + p.t_rcd + p.t_cas) as Cycle
+            }
+            None => {
+                self.stats.row_misses += 1;
+                (p.t_rcd + p.t_cas) as Cycle
+            }
+        }
+    }
+
+    /// True when some queued write command targets `row` — the RAW
+    /// block for read heads (rule 2 above).
+    fn write_blocks_row(&self, row: u64) -> bool {
+        self.writes.iter().any(|c| c.row == row)
+    }
+
+    /// Write-drain policy (rule 3): the watermark is full, the read
+    /// side is idle, or a read is blocked on a queued write's row.
+    fn drain_ok(&self) -> bool {
+        if self.writes.is_empty() {
+            return false;
+        }
+        self.wq_beats >= self.params.wq_watermark as usize
+            || self.pending_read_beats == 0
+            || self
+                .reads
+                .iter()
+                .any(|(_, q)| q.front().map_or(false, |c| self.write_blocks_row(c.row)))
+    }
+
+    /// Apply every refresh boundary that has passed.  Confluent (see
+    /// `next_refresh`): each boundary closes all rows and extends each
+    /// bank's busy window to at least `boundary + t_rfc`, regardless
+    /// of when the catch-up runs.
+    fn catch_up_refresh(&mut self, now: Cycle) {
+        if self.params.t_refi == 0 {
+            return;
+        }
+        while self.next_refresh <= now {
+            let done = self.next_refresh + self.params.t_rfc as Cycle;
+            for b in &mut self.banks {
+                b.open_row = None;
+                b.busy_until = b.busy_until.max(done);
+            }
+            self.stats.refreshes += 1;
+            self.next_refresh += self.params.t_refi as Cycle;
+        }
+    }
+
+    /// Earliest cycle at which a queued command could issue, for the
+    /// event horizon.  Conservative (never late): read heads are
+    /// reported even when RAW-blocked, and the write head whenever the
+    /// drain policy would consider it — a too-early horizon only costs
+    /// an extra tick, a too-late one would skip work.
+    pub(crate) fn next_issue_at(&self) -> Option<Cycle> {
+        let mut h: Option<Cycle> = None;
+        for (_, q) in &self.reads {
+            if let Some(c) = q.front() {
+                h = EventHorizon::merge(h, Some(c.arrive_at.max(self.banks[c.bank].busy_until)));
+            }
+        }
+        if self.drain_ok() {
+            if let Some(c) = self.writes.front() {
+                h = EventHorizon::merge(h, Some(c.arrive_at.max(self.banks[c.bank].busy_until)));
+            }
+        }
+        h
+    }
+
+    /// Advance to cycle `now`: catch up refresh, then issue at most
+    /// one command (FR-FCFS).  `pipe` is the response-pipe depth the
+    /// backend shares with the request path; responses are handed to
+    /// the shared delivery queues `r_out` / `b_queue`.
+    pub(crate) fn tick(
+        &mut self,
+        now: Cycle,
+        pipe: Cycle,
+        bytes: &mut [u8],
+        r_out: &mut MonotonicQueue<RBeat>,
+        b_queue: &mut MonotonicQueue<BResp>,
+    ) {
+        self.catch_up_refresh(now);
+        if self.drain_ok() {
+            let ready = self
+                .writes
+                .front()
+                .map_or(false, |c| c.arrive_at <= now && self.banks[c.bank].busy_until <= now);
+            if ready {
+                let cmd = self.writes.pop_front().unwrap();
+                self.wq_beats -= cmd.beats.len();
+                let lat = self.access_latency(cmd.bank, cmd.row);
+                self.banks[cmd.bank].open_row = Some(cmd.row);
+                self.banks[cmd.bank].busy_until = now + lat + cmd.beats.len() as Cycle;
+                for w in cmd.beats {
+                    let addr = w.addr as usize;
+                    let n = (w.bytes as usize).min(BYTES_PER_BEAT as usize);
+                    // Errored beats never reach the array (same rule
+                    // as the pipe backend).
+                    if !w.resp.is_err() && addr < bytes.len() {
+                        let end = (addr + n).min(bytes.len());
+                        bytes[addr..end].copy_from_slice(&w.data[..end - addr]);
+                    }
+                    if w.last && !w.withheld {
+                        let at = (now + lat + pipe).max(self.last_b_push + 1);
+                        b_queue.push_at(at, BResp { port: w.port, tag: w.tag, resp: w.burst_resp });
+                        self.last_b_push = at;
+                    }
+                }
+                return;
+            }
+        }
+        let mut best: Option<(bool, Cycle, usize)> = None;
+        for (i, (_, q)) in self.reads.iter().enumerate() {
+            let Some(c) = q.front() else { continue };
+            if c.arrive_at > now
+                || self.banks[c.bank].busy_until > now
+                || self.write_blocks_row(c.row)
+            {
+                continue;
+            }
+            let hit = self.banks[c.bank].open_row == Some(c.row);
+            let better = match best {
+                None => true,
+                Some((bh, ba, _)) => (hit && !bh) || (hit == bh && c.arrive_at < ba),
+            };
+            if better {
+                best = Some((hit, c.arrive_at, i));
+            }
+        }
+        if let Some((_, _, i)) = best {
+            let port = self.reads[i].0;
+            let cmd = self.reads[i].1.pop_front().unwrap();
+            self.pending_read_beats -= cmd.beats.len();
+            let lat = self.access_latency(cmd.bank, cmd.row);
+            self.banks[cmd.bank].open_row = Some(cmd.row);
+            self.banks[cmd.bank].busy_until = now + lat + cmd.beats.len() as Cycle;
+            for (k, b) in cmd.beats.iter().enumerate() {
+                let mut data = [0u8; 8];
+                let n = (b.bytes as usize).min(BYTES_PER_BEAT as usize);
+                if (b.addr as usize) < bytes.len() {
+                    let end = ((b.addr as usize) + n).min(bytes.len());
+                    let m = end - b.addr as usize;
+                    data[..m].copy_from_slice(&bytes[b.addr as usize..end]);
+                }
+                let at = (now + lat + pipe + k as Cycle).max(self.last_r_push + 1);
+                r_out.push_at(
+                    at,
+                    RBeat {
+                        port,
+                        tag: cmd.tag,
+                        beat: b.beat_idx,
+                        last: b.last,
+                        data,
+                        bytes: b.bytes,
+                        resp: b.resp,
+                    },
+                );
+                self.last_r_push = at;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::{ReadReq, WriteBeat};
+    use crate::mem::faults::FaultConfig;
+    use crate::mem::latency::{LatencyProfile, Memory};
+
+    /// 2-bank geometry with distinct, easy-to-pin timings: hit = 2,
+    /// miss = 3+2 = 5, conflict = 4+3+2 = 9.  Refresh off.
+    fn p2() -> DramParams {
+        DramParams {
+            banks: 2,
+            row_bytes: 128,
+            t_cas: 2,
+            t_rcd: 3,
+            t_rp: 4,
+            t_refi: 0,
+            t_rfc: 0,
+            wq_watermark: 4,
+        }
+    }
+
+    /// 64 KiB DRAM-backed memory behind a 1-cycle pipe, with a known
+    /// pattern at 0x100 (row 2, bank 0 under `p2`).
+    fn dmem(p: DramParams) -> Memory {
+        let mut m = Memory::new(65536, LatencyProfile::Custom(1));
+        m.install_backend(MemBackend::Dram(p));
+        let pattern: Vec<u8> = (0..64u32).map(|i| i as u8).collect();
+        m.backdoor_write(0x100, &pattern);
+        m
+    }
+
+    fn drain(m: &mut Memory, until: Cycle) -> (Vec<(Cycle, RBeat)>, Vec<(Cycle, BResp)>) {
+        let (mut beats, mut bs) = (Vec::new(), Vec::new());
+        for now in 0..until {
+            m.tick(now);
+            if let Some(b) = m.pop_read_beat(now) {
+                beats.push((now, b));
+            }
+            if let Some(b) = m.pop_b(now) {
+                bs.push((now, b));
+            }
+        }
+        (beats, bs)
+    }
+
+    fn write_beat(tag: u64, addr: u64, fill: u8) -> WriteBeat {
+        WriteBeat { port: Port::Backend, tag, addr, data: [fill; 8], bytes: 8, last: true }
+    }
+
+    #[test]
+    fn params_are_floored_and_pipe_is_the_default() {
+        assert_eq!(MemBackend::default(), MemBackend::Pipe);
+        let p = DramParams { banks: 0, row_bytes: 8, t_cas: 0, wq_watermark: 0, ..p2() };
+        let c = DramCore::new(p);
+        assert_eq!(c.params.banks, 1);
+        assert_eq!(c.params.row_bytes, 64);
+        assert_eq!(c.params.t_cas, 1);
+        assert_eq!(c.params.wq_watermark, 1);
+        assert_eq!(DramParams::ddr3_like(0).banks, 1);
+    }
+
+    #[test]
+    fn row_hit_miss_conflict_cycle_counts_are_pinned() {
+        let mut m = dmem(p2());
+        // Three single-beat reads on one port: row 0 (miss), row 0
+        // again (hit), row 2 = same bank other row (conflict).
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        m.push_read(0, ReadReq::new(Port::Backend, 1, 0x8, 1));
+        m.push_read(0, ReadReq::new(Port::Backend, 2, 0x100, 1));
+        let (beats, _) = drain(&mut m, 64);
+        // Miss issues at 1 (after the 1-cycle request pipe): delivery
+        // at 1 + (3+2) + 1 = 7.  Hit waits for the bank (busy until
+        // 7): 7 + 2 + 1 = 10.  Conflict: 10 + (4+3+2) + 1 = 20.
+        let times: Vec<(Cycle, u64)> = beats.iter().map(|(t, b)| (*t, b.tag)).collect();
+        assert_eq!(times, vec![(7, 0), (10, 1), (20, 2)]);
+        assert_eq!(beats[2].1.data, [0, 1, 2, 3, 4, 5, 6, 7], "row 2 carries the pattern");
+        let s = m.dram_stats().unwrap();
+        assert_eq!((s.row_hits, s.row_misses, s.row_conflicts), (1, 1, 1));
+        assert!(m.quiescent());
+    }
+
+    #[test]
+    fn different_banks_overlap_where_one_bank_serializes() {
+        // Rows 0 and 1 live on different banks: both misses overlap
+        // and deliver back to back.
+        let mut m = dmem(p2());
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        m.push_read(0, ReadReq::new(Port::Backend, 1, 0x80, 1));
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![7, 8]);
+
+        // Rows 0 and 2 share bank 0: the second read waits for the
+        // bank and then pays a conflict.
+        let mut m = dmem(p2());
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        m.push_read(0, ReadReq::new(Port::Backend, 1, 0x100, 1));
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![7, 17]);
+    }
+
+    #[test]
+    fn burst_crossing_rows_splits_and_streams_contiguously() {
+        // 32 beats from 0x40: 8 beats of row 0 (bank 0), 16 of row 1
+        // (bank 1), 8 of row 2 (bank 0).  Three commands — miss, miss
+        // (overlapped on the other bank), conflict — whose delivery
+        // windows chain into one contiguous 32-cycle stream.
+        let mut m = dmem(p2());
+        let img: Vec<u8> = (0..=255u32).map(|i| i as u8).collect();
+        m.backdoor_write(0x40, &img);
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x40, 32));
+        let (beats, _) = drain(&mut m, 128);
+        assert_eq!(beats.len(), 32);
+        let times: Vec<Cycle> = beats.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, (7..=38).collect::<Vec<_>>(), "one beat per cycle, no gaps");
+        let got: Vec<u8> =
+            beats.iter().flat_map(|(_, b)| b.data.iter().copied()).collect();
+        assert_eq!(got, img);
+        let s = m.dram_stats().unwrap();
+        assert_eq!((s.row_hits, s.row_misses, s.row_conflicts), (0, 2, 1));
+    }
+
+    #[test]
+    fn frfcfs_prefers_row_hits_over_older_requests() {
+        let mut m = dmem(p2());
+        // Port Backend: row 0, then row 2 (older).  Port Frontend:
+        // row 0 (younger, but a hit once row 0 is open).
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        m.push_read(1, ReadReq::new(Port::Backend, 1, 0x100, 1));
+        m.push_read(2, ReadReq::new(Port::Frontend, 2, 0x8, 1));
+        let (beats, _) = drain(&mut m, 64);
+        let order: Vec<u64> = beats.iter().map(|(_, b)| b.tag).collect();
+        assert_eq!(order, vec![0, 2, 1], "the row hit jumps the older conflict");
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![7, 10, 20]);
+    }
+
+    #[test]
+    fn raw_read_after_queued_write_drains_the_write_first() {
+        let mut m = dmem(p2());
+        m.push_write(0, write_beat(7, 0x0, 0xAB));
+        m.push_read(0, ReadReq::new(Port::Backend, 1, 0x0, 1));
+        let (beats, bs) = drain(&mut m, 64);
+        // The read head is RAW-blocked, which turns write draining on:
+        // the write issues at 1 (miss, B at 1+5+1 = 7), the read waits
+        // for the bank (busy until 7) and hits: beat at 7+2+1 = 10.
+        assert_eq!(bs, vec![(7, BResp { port: Port::Backend, tag: 7, resp: Resp::Okay })]);
+        assert_eq!(beats.len(), 1);
+        assert_eq!(beats[0].0, 10);
+        assert_eq!(beats[0].1.data, [0xAB; 8], "the read observes the drained write");
+    }
+
+    #[test]
+    fn writes_below_watermark_wait_for_the_read_side_to_idle() {
+        let mut m = dmem(p2());
+        m.push_write(0, write_beat(3, 0x0, 0xCD));
+        m.push_read(0, ReadReq::new(Port::Backend, 1, 0x100, 1));
+        let (beats, bs) = drain(&mut m, 64);
+        // Unrelated rows: the read wins (miss, beat at 7, opens row
+        // 2); once the read side idles the write drains into the same
+        // bank — a conflict, B at 7 + 9 + 1 = 17.
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![7]);
+        assert_eq!(bs.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![17]);
+        assert_eq!(m.backdoor_read(0x0, 8), &[0xCD; 8]);
+        let s = m.dram_stats().unwrap();
+        assert_eq!(s.row_conflicts, 1);
+    }
+
+    #[test]
+    fn watermark_reached_gives_writes_priority() {
+        let mut m = dmem(DramParams { wq_watermark: 1, ..p2() });
+        m.push_write(0, write_beat(3, 0x0, 0xEE));
+        m.push_read(0, ReadReq::new(Port::Backend, 1, 0x100, 1));
+        let (beats, bs) = drain(&mut m, 64);
+        // One queued beat already meets the watermark: the write
+        // issues first (B at 7), the read pays bank-busy + conflict
+        // (beat at 7 + 9 + 1 = 17).
+        assert_eq!(bs.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![7]);
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![17]);
+    }
+
+    #[test]
+    fn refresh_closes_rows_and_occupies_banks() {
+        let mut m = dmem(DramParams { t_refi: 50, t_rfc: 20, ..p2() });
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        // Second access to the same row arrives after the refresh
+        // boundary at 50: the row is closed again (miss, not hit) and
+        // the bank is busy until 70.
+        m.push_read(59, ReadReq::new(Port::Backend, 1, 0x8, 1));
+        let (beats, _) = drain(&mut m, 128);
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![7, 76]);
+        let s = m.dram_stats().unwrap();
+        assert_eq!(s.row_misses, 2, "refresh turned the would-be hit into a miss");
+        assert_eq!(s.refreshes, 1);
+    }
+
+    #[test]
+    fn bounds_decerr_composes_with_the_dram_backend() {
+        let mut m = Memory::new(4096, LatencyProfile::Custom(1));
+        m.install_backend(MemBackend::Dram(p2()));
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 4096, 1));
+        m.push_write(0, write_beat(1, 4096, 0xFF));
+        let (beats, bs) = drain(&mut m, 64);
+        assert_eq!(beats.len(), 1);
+        assert_eq!(beats[0].1.resp, Resp::DecErr);
+        assert_eq!(beats[0].1.data, [0; 8], "DECERR beats carry zero data");
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].1.resp, Resp::DecErr);
+        assert!(m.quiescent());
+    }
+
+    #[test]
+    fn injected_stall_lands_in_the_issue_horizon() {
+        let mut m = dmem(p2());
+        m.install_faults(FaultConfig::seeded(3).with_stalls(1_000_000, 25));
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        assert_eq!(m.next_event(), Some(26), "stall delays the command arrival");
+        let (beats, _) = drain(&mut m, 64);
+        assert_eq!(beats.iter().map(|(t, _)| *t).collect::<Vec<_>>(), vec![32]);
+        assert_eq!(beats[0].1.resp, Resp::Okay, "stalls perturb timing, not status");
+    }
+
+    #[test]
+    fn withheld_b_applies_data_but_never_acknowledges() {
+        let mut m = dmem(p2());
+        m.install_faults(FaultConfig::seeded(2).with_withheld_b(1_000_000).with_max_faults(1));
+        m.push_write(0, write_beat(4, 0x80, 0xCD));
+        let (_, bs) = drain(&mut m, 64);
+        assert!(bs.is_empty(), "B was withheld");
+        assert_eq!(m.backdoor_read(0x80, 8), &[0xCD; 8], "data still landed");
+        assert!(m.quiescent());
+    }
+
+    #[test]
+    fn installing_the_pipe_backend_is_identical_to_the_default() {
+        let run = |install: bool| {
+            let mut m = Memory::new(65536, LatencyProfile::Custom(5));
+            if install {
+                m.install_backend(MemBackend::Pipe);
+            }
+            m.backdoor_write(0x100, &[0x5A; 32]);
+            m.push_read(0, ReadReq::new(Port::Backend, 0, 0x100, 4));
+            m.push_write(0, write_beat(1, 0x200, 0x77));
+            let out = drain(&mut m, 128);
+            (out, m.backdoor_read(0x200, 8).to_vec())
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn next_event_tracks_arrival_then_delivery() {
+        let mut m = dmem(p2());
+        assert_eq!(m.next_event(), None, "idle DRAM has no events");
+        m.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        assert_eq!(m.next_event(), Some(1), "request-pipe traversal");
+        for now in 0..=1 {
+            m.tick(now);
+        }
+        assert_eq!(m.next_event(), Some(7), "response delivery after the miss");
+        assert!(m.pop_read_beat(6).is_none());
+        assert!(m.pop_read_beat(7).is_some());
+        assert!(m.quiescent());
+        assert_eq!(m.next_event(), None);
+    }
+
+    #[test]
+    fn dram_stats_are_none_on_the_pipe_backend() {
+        let m = Memory::new(4096, LatencyProfile::Ideal);
+        assert_eq!(m.dram_stats(), None);
+        let mut d = dmem(p2());
+        d.push_read(0, ReadReq::new(Port::Backend, 0, 0x0, 1));
+        drain(&mut d, 32);
+        assert_eq!(d.dram_stats().unwrap().row_misses, 1);
+    }
+}

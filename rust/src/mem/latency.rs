@@ -1,6 +1,16 @@
-//! The latency-configurable memory model.
+//! The AXI-facing memory model: a shared accept/deliver surface with a
+//! configurable timing backend behind it.
+//!
+//! [`Memory`] owns the parts every backend shares — bounds-check
+//! DECERR, the fault injector's draw points, backdoor access, and the
+//! one-beat-per-cycle R and B delivery queues.  The *timing* between
+//! accept and delivery comes from the installed [`MemBackend`]: the
+//! fixed-depth pipe implemented in this file (the default), or the
+//! banked row-buffer DRAM model in [`crate::mem::dram`].  See the
+//! `mem` module docs for the backend contract.
 
 use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT};
+use crate::mem::dram::{DramCore, DramReadBeat, DramStats, MemBackend};
 use crate::mem::faults::{FaultConfig, FaultPlan};
 use crate::sim::{Cycle, EventHorizon, MonotonicQueue, Tickable};
 use std::collections::VecDeque;
@@ -19,6 +29,7 @@ pub enum LatencyProfile {
 }
 
 impl LatencyProfile {
+    /// One-way pipe depth in cycles (request path = response path).
     pub fn cycles(self) -> u32 {
         match self {
             LatencyProfile::Ideal => 1,
@@ -28,6 +39,7 @@ impl LatencyProfile {
         }
     }
 
+    /// Human-readable profile name for tables and reports.
     pub fn name(self) -> String {
         match self {
             LatencyProfile::Ideal => "ideal (1 cycle)".into(),
@@ -38,30 +50,36 @@ impl LatencyProfile {
     }
 }
 
-/// A write beat travelling the request pipe; its apply cycle is the
-/// schedule key of the monotonic queue that carries it.
+/// An accepted write beat on its way to the array.  On the pipe
+/// backend its apply cycle is the schedule key of the monotonic queue
+/// that carries it; the DRAM backend instead parks it in the write
+/// queue until its command issues.  Either way the beat's responses
+/// were fully resolved at accept time, in `Memory::push_write`.
 #[derive(Debug, Clone, Copy)]
-struct ScheduledWrite {
-    addr: u64,
-    data: [u8; 8],
-    bytes: u32,
+pub(crate) struct ScheduledWrite {
+    pub(crate) addr: u64,
+    pub(crate) data: [u8; 8],
+    pub(crate) bytes: u32,
     /// Completion (B response) bookkeeping for last beats.
-    port: Port,
-    tag: u64,
-    last: bool,
+    pub(crate) port: Port,
+    pub(crate) tag: u64,
+    pub(crate) last: bool,
     /// This beat's own response; errored beats do not reach the array.
-    resp: Resp,
+    pub(crate) resp: Resp,
     /// Worst response across the burst, folded at the last beat — what
     /// the single AXI B response reports.
-    burst_resp: Resp,
+    pub(crate) burst_resp: Resp,
     /// Fault injection: the write is applied but its B response never
     /// travels back (watchdog-recovery scenario).
-    withheld: bool,
+    pub(crate) withheld: bool,
 }
 
+/// A write response (AXI B) delivered back to the requester.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BResp {
+    /// Manager port the burst came from.
     pub port: Port,
+    /// The burst's AXI ID.
     pub tag: u64,
     /// Burst status (AXI `bresp`): the worst beat response of the burst.
     pub resp: Resp,
@@ -116,11 +134,18 @@ pub struct Memory {
     /// Installed fault-injection plan (None = fault-free memory,
     /// bit-identical to the pre-fault model).
     faults: Option<FaultPlan>,
+    /// Installed DRAM timing backend (None = the pipe backend of this
+    /// file, bit-identical to the pre-backend model).
+    dram: Option<DramCore>,
+    /// AR bursts accepted so far (both backends).
     pub reads_accepted: u64,
+    /// W beats accepted so far (both backends).
     pub writes_accepted: u64,
 }
 
 impl Memory {
+    /// A `size`-byte memory behind `profile`-deep request/response
+    /// pipes, on the default pipe backend.
     pub fn new(size: usize, profile: LatencyProfile) -> Self {
         Self {
             bytes: vec![0; size],
@@ -134,13 +159,33 @@ impl Memory {
             last_w_cycle: None,
             w_burst_resp: Vec::new(),
             faults: None,
+            dram: None,
             reads_accepted: 0,
             writes_accepted: 0,
         }
     }
 
+    /// Addressable size in bytes (accesses past it answer DECERR).
     pub fn size(&self) -> usize {
         self.bytes.len()
+    }
+
+    /// Select the timing backend (DESIGN.md §12).  Like the fault
+    /// plan, the backend is part of the device configuration but runs
+    /// inside the memory: the testbench installs it once, at
+    /// construction.  Installing [`MemBackend::Pipe`] removes any DRAM
+    /// model and restores the fixed-depth pipe, bit for bit.
+    pub fn install_backend(&mut self, backend: MemBackend) {
+        self.dram = match backend {
+            MemBackend::Pipe => None,
+            MemBackend::Dram(p) => Some(DramCore::new(p)),
+        };
+    }
+
+    /// Row-buffer statistics of the installed DRAM backend (None on
+    /// the pipe backend).
+    pub fn dram_stats(&self) -> Option<DramStats> {
+        self.dram.as_ref().map(|d| d.stats())
     }
 
     /// Install (or remove) the fault-injection plan.  A disabled config
@@ -155,6 +200,7 @@ impl Memory {
         self.faults.as_ref().map_or(0, |f| f.injected())
     }
 
+    /// One-way pipe depth in cycles (the `L` of `2L + beats`).
     pub fn latency(&self) -> Cycle {
         self.latency
     }
@@ -172,6 +218,35 @@ impl Memory {
         self.reads_accepted += 1;
         let ready_at = now + self.latency; // request-path traversal
         let size = self.bytes.len() as u64;
+        if self.dram.is_some() {
+            // DRAM backend: resolve bounds/fault responses per beat in
+            // the exact order the pipe would, then hand the burst to
+            // the command queues (split per row touched).
+            let mut beats = Vec::with_capacity(req.beats as usize);
+            for i in 0..req.beats {
+                let addr = req.addr + i as u64 * req.bytes_per_beat as u64;
+                let mut resp = if addr + req.bytes_per_beat as u64 > size {
+                    Resp::DecErr
+                } else {
+                    Resp::Okay
+                };
+                let mut stall = 0;
+                if let Some(f) = self.faults.as_mut() {
+                    resp = resp.max(f.read_beat_resp(addr));
+                    stall = f.read_stall();
+                }
+                beats.push(DramReadBeat {
+                    addr,
+                    beat_idx: i,
+                    last: i + 1 == req.beats,
+                    bytes: req.bytes_per_beat,
+                    resp,
+                    stall,
+                });
+            }
+            self.dram.as_mut().unwrap().push_read_burst(ready_at, req.port, req.tag, &beats);
+            return;
+        }
         let mut faults = self.faults.as_mut();
         let queue = match self.r_pending.iter_mut().find(|(p, _)| *p == req.port) {
             Some((_, q)) => q,
@@ -298,20 +373,21 @@ impl Memory {
             }
             resp
         };
-        self.w_queue.push_at(
-            now + self.latency,
-            ScheduledWrite {
-                addr: w.addr,
-                data: w.data,
-                bytes: w.bytes,
-                port: w.port,
-                tag: w.tag,
-                last: w.last,
-                resp,
-                burst_resp,
-                withheld,
-            },
-        );
+        let sched = ScheduledWrite {
+            addr: w.addr,
+            data: w.data,
+            bytes: w.bytes,
+            port: w.port,
+            tag: w.tag,
+            last: w.last,
+            resp,
+            burst_resp,
+            withheld,
+        };
+        match self.dram.as_mut() {
+            Some(d) => d.push_write_beat(now + self.latency, sched),
+            None => self.w_queue.push_at(now + self.latency, sched),
+        }
     }
 
     /// Pop a write response (B) deliverable this cycle, if any.
@@ -323,6 +399,12 @@ impl Memory {
     /// apply write data that has reached the array and emit B responses
     /// for last beats.
     pub fn tick(&mut self, now: Cycle) {
+        if let Some(d) = &mut self.dram {
+            // DRAM backend: the command scheduler owns timing end to
+            // end and pushes into the shared delivery queues.
+            d.tick(now, self.latency, &mut self.bytes, &mut self.r_out, &mut self.b_queue);
+            return;
+        }
         self.serve_read(now);
         while let Some(w) = self.w_queue.pop_ready(now) {
             let addr = w.addr as usize;
@@ -350,6 +432,7 @@ impl Memory {
             && self.r_out.is_empty()
             && self.w_queue.is_empty()
             && self.b_queue.is_empty()
+            && self.dram.as_ref().map_or(true, |d| d.quiescent())
     }
 
     /// Earliest cycle at which any pipeline stage has scheduled work:
@@ -367,6 +450,9 @@ impl Memory {
                 .filter_map(|(_, q)| q.front().map(|b| b.ready_at))
                 .min();
             h = EventHorizon::merge(h, served);
+        }
+        if let Some(d) = &self.dram {
+            h = EventHorizon::merge(h, d.next_issue_at());
         }
         h
     }
@@ -387,6 +473,10 @@ impl Memory {
                 .all(|(_, q)| q.front().map_or(true, |b| b.ready_at >= to)),
             "read service inside a fast-forward window"
         );
+        debug_assert!(
+            self.dram.as_ref().and_then(|d| d.next_issue_at()).map_or(true, |at| at >= to),
+            "DRAM command issue inside a fast-forward window"
+        );
     }
 }
 
@@ -404,24 +494,28 @@ impl Tickable for Memory {
 // descriptors and payloads and to dump final images (paper Fig. 3:
 // "descriptors are loaded into the memory using backdoor access").
 impl Memory {
+    /// Store `data` at `addr` instantly, bypassing all timing.
     pub fn backdoor_write(&mut self, addr: u64, data: &[u8]) {
         let a = addr as usize;
         assert!(a + data.len() <= self.bytes.len(), "backdoor write OOB");
         self.bytes[a..a + data.len()].copy_from_slice(data);
     }
 
+    /// Read `len` bytes at `addr` instantly, bypassing all timing.
     pub fn backdoor_read(&self, addr: u64, len: usize) -> &[u8] {
         let a = addr as usize;
         assert!(a + len <= self.bytes.len(), "backdoor read OOB");
         &self.bytes[a..a + len]
     }
 
+    /// Backdoor-read one little-endian u64 at `addr`.
     pub fn backdoor_read_u64(&self, addr: u64) -> u64 {
         let mut b = [0u8; 8];
         b.copy_from_slice(self.backdoor_read(addr, 8));
         u64::from_le_bytes(b)
     }
 
+    /// Backdoor-write one little-endian u64 at `addr`.
     pub fn backdoor_write_u64(&mut self, addr: u64, v: u64) {
         self.backdoor_write(addr, &v.to_le_bytes());
     }

@@ -1,17 +1,59 @@
-//! Latency-configurable memory system (paper §III-A, Fig. 3).
+//! The memory system: one AXI-facing surface, two timing backends
+//! (paper §III-A, Fig. 3; DESIGN.md §7 and §12).
 //!
 //! The paper evaluates against three memory profiles: *ideal* (1-cycle
 //! SRAM), *DDR3 main memory* (13 cycles, Genesys-2 conditions) and
-//! *ultra-deep* (100 cycles, large-NoC SoC).  The model applies the
-//! configured latency once on the request path and once on the
-//! response path (`rf-rb = 2L + beats + overhead`, which calibrates
-//! Table IV — see DESIGN.md §7) and serves one read-data beat and one
-//! write beat per cycle, which is the bandwidth wall all utilization
-//! curves are measured against.
+//! *ultra-deep* (100 cycles, large-NoC SoC).  [`latency::Memory`]
+//! models those as fixed-depth request/response pipes (`rf-rb = 2L +
+//! beats + overhead`, which calibrates Table IV — see DESIGN.md §7).
+//! Behind the same surface, [`MemBackend::Dram`] swaps the service
+//! stage for the banked row-buffer model of [`dram`], where the cost
+//! of an access depends on the address pattern — the effect the
+//! paper's irregular-transfer workloads exist to exploit.
+//!
+//! # The backend contract
+//!
+//! A timing backend decides *when* accepted traffic completes; it must
+//! never change *what* completes.  Concretely, any backend (a third
+//! one — ROADMAP item 2's interleaved controllers — included) must
+//! uphold:
+//!
+//! * **Shared accept semantics.**  Bounds-check DECERR, fault-plan
+//!   draws (in beat order, at accept time), the one-W-beat-per-cycle
+//!   assert and the per-burst B folding all run in
+//!   `Memory::push_read`/`push_write`, *before* the backend sees the
+//!   traffic.  A backend only schedules; it never re-decides responses.
+//! * **Per-ID ordering.**  R beats of one port (AXI ID) are delivered
+//!   in request order; every burst gets exactly one B (unless a fault
+//!   withholds it).  Cross-port interleaving is backend policy.
+//! * **Delivery bandwidth.**  At most one R beat and one B per cycle
+//!   reach the requester — both backends schedule into the shared
+//!   monotonic delivery queues at non-decreasing cycles.
+//! * **`next_event` obligations.**  `Memory::next_event` must report a
+//!   cycle no later than the backend's next state change that the
+//!   naive loop would observe.  Conservative (early) horizons are
+//!   always safe — the scheduler just ticks and re-asks; a late
+//!   horizon skips work and is a model bug, caught by the
+//!   naive-vs-fast-forward property tests and by
+//!   `debug_assert_quiet_before` in debug builds.  Purely internal
+//!   catch-up work (e.g. DRAM refresh bookkeeping) may be applied
+//!   lazily iff it is confluent — the same state results whether it
+//!   runs cycle by cycle or in one batch at the next tick.
+//! * **Determinism.**  Integer state only, no wall clock, no ambient
+//!   randomness: identical inputs give bit-identical `RunStats`,
+//!   memory images and stats on both schedulers.
+//!
+//! Backends are selected per `DmacConfig` via [`MemBackend`] and
+//! installed once by the testbench (`System::with_memory`), exactly
+//! like the fault plan.
+
+#![warn(missing_docs)]
 
 pub mod backdoor;
+pub mod dram;
 pub mod faults;
 pub mod latency;
 
+pub use dram::{DramParams, DramStats, MemBackend};
 pub use faults::{FaultConfig, FaultPlan};
 pub use latency::{LatencyProfile, Memory};

@@ -1,0 +1,369 @@
+//! DRAM locality experiments: `BENCH_dram.json`.
+//!
+//! The sweep the banked DRAM backend (DESIGN.md §12) exists for: each
+//! grid point copies the same total payload ([`TOTAL_BYTES`]) through a
+//! memory running [`DramParams::ddr3_like`] timing, varying the access
+//! pattern (streaming, strided, random gather), the transfer size and
+//! the bank count.  Streaming walks rows sequentially and rides the
+//! row buffer; strided sources skip ahead by eight lines per transfer;
+//! the gather sources jump to pseudo-random 64 B lines inside a 4 MiB
+//! window, which is the paper's irregular-transfer shape and the one
+//! that collapses when few banks have to absorb the row churn.
+//!
+//! The point reports end-to-end cycles plus the backend's row-buffer
+//! outcome counters (hits / misses / conflicts / refreshes), so the
+//! table reads directly as "how much locality did this pattern have".
+//!
+//! Everything in the JSON is simulated-time and integer-only — the
+//! gather indices come from a fixed SplitMix64 permutation of the
+//! transfer number — so the file is bit-deterministic and identical
+//! under the event-horizon scheduler and the `--naive` per-cycle loop
+//! (CI diffs the two).
+
+use crate::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig};
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::{DramParams, LatencyProfile, MemBackend};
+use crate::report::parallel::par_map;
+use crate::report::rings::DOORBELL_COST;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::Cycle;
+use crate::tb::System;
+use crate::workload::map;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_dram.json";
+
+/// Total payload bytes copied by every grid point, so cycle counts are
+/// directly comparable across transfer sizes and patterns.
+pub const TOTAL_BYTES: u64 = 32 * 1024;
+
+/// Transfer sizes swept by the grid: single-line gathers (the paper's
+/// irregular shape) and a half-KiB medium transfer.
+pub const PAYLOAD_SIZES: [u32; 2] = [64, 512];
+
+/// Bank counts swept by the grid (each with `ddr3_like` timing).
+pub const BANK_COUNTS: [u32; 4] = [1, 2, 4, 8];
+
+/// Source lines the gather pattern draws from: a 4 MiB window, far
+/// larger than the open-row footprint of any bank configuration.
+const GATHER_WINDOW_LINES: u64 = 65_536;
+
+/// Access pattern of a grid point's source stream (destinations are
+/// always sequential, so the source pattern is the only variable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramWorkload {
+    /// Sequential source lines: maximal row-buffer locality.
+    Streaming,
+    /// Source skips eight lines per transfer: strided locality.
+    Strided,
+    /// Pseudo-random source lines in a 4 MiB window: no locality.
+    Gather,
+}
+
+impl DramWorkload {
+    /// Every pattern, in grid order.
+    pub const ALL: [DramWorkload; 3] =
+        [DramWorkload::Streaming, DramWorkload::Strided, DramWorkload::Gather];
+
+    /// Stable name used in the JSON and the table.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DramWorkload::Streaming => "streaming",
+            DramWorkload::Strided => "strided",
+            DramWorkload::Gather => "gather",
+        }
+    }
+}
+
+/// One grid point: access pattern x transfer size x bank count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DramPoint {
+    pub workload: String,
+    pub size: u32,
+    pub banks: u32,
+    /// Transfers in the chain (`TOTAL_BYTES / size`, clamped).
+    pub transfers: u64,
+    /// Payload bytes actually copied.
+    pub bytes: u64,
+    /// End-to-end cycles of the whole chain.
+    pub cycles: Cycle,
+    /// DRAM commands that hit the open row.
+    pub row_hits: u64,
+    /// DRAM commands that opened a closed row.
+    pub row_misses: u64,
+    /// DRAM commands that had to close another row first.
+    pub row_conflicts: u64,
+    /// Refresh windows the run crossed.
+    pub refreshes: u64,
+}
+
+impl DramPoint {
+    /// Payload throughput in bytes per cycle.
+    pub fn throughput(&self) -> f64 {
+        self.bytes as f64 / self.cycles.max(1) as f64
+    }
+
+    /// Fraction of DRAM commands that hit the open row.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses + self.row_conflicts;
+        self.row_hits as f64 / total.max(1) as f64
+    }
+}
+
+/// Line-aligned payload stride, like `workload::Sweep`.
+fn line(size: u32) -> u64 {
+    (size as u64).next_multiple_of(map::LINE_BYTES)
+}
+
+/// Chain length for a transfer size: constant total payload, bounded
+/// so the descriptor pool and the strided source window always fit.
+fn transfers_for(size: u32) -> u64 {
+    (TOTAL_BYTES / size as u64).clamp(1, 1024)
+}
+
+/// SplitMix64 finalizer: the fixed permutation behind the gather
+/// pattern (integer-only, so the grid stays bit-deterministic).
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Source address of transfer `i` under the point's access pattern.
+fn src_addr(workload: DramWorkload, i: u64, line: u64) -> u64 {
+    match workload {
+        DramWorkload::Streaming => map::SRC_BASE + i * line,
+        DramWorkload::Strided => map::SRC_BASE + i * line * 8,
+        DramWorkload::Gather => {
+            map::SRC_BASE + (mix64(i) % GATHER_WINDOW_LINES) * map::LINE_BYTES
+        }
+    }
+}
+
+/// Run one grid point: a single chain of `transfers_for(size)` copies
+/// through a DRAM-backed memory with `banks` banks.
+pub fn run_dram(workload: DramWorkload, size: u32, banks: u32, naive: bool) -> DramPoint {
+    let cfg = DmacConfig::speculation()
+        .with_mem_backend(MemBackend::Dram(DramParams::ddr3_like(banks)));
+    let mut sys = System::new(LatencyProfile::Ideal, Dmac::new(cfg));
+    fill_pattern(
+        &mut sys.mem,
+        map::SRC_BASE,
+        (GATHER_WINDOW_LINES * map::LINE_BYTES) as usize,
+        0xD7,
+    );
+    let n = transfers_for(size);
+    let line = line(size);
+    let mut cb = ChainBuilder::new();
+    for i in 0..n {
+        let d = Descriptor::new(src_addr(workload, i, line), map::DST_BASE + i * line, size);
+        let d = if i + 1 == n { d.with_irq() } else { d };
+        cb.push_at(map::DESC_BASE + i * 32, d);
+    }
+    let head = cb.write_to(&mut sys.mem);
+    sys.schedule_launch(DOORBELL_COST, head);
+    if naive {
+        sys.run_until_idle_naive().expect("dram point (naive)");
+    } else {
+        sys.run_until_idle().expect("dram point");
+    }
+    let ds = sys.mem.dram_stats().expect("grid points always run the DRAM backend");
+    DramPoint {
+        workload: workload.name().to_string(),
+        size,
+        banks,
+        transfers: n,
+        bytes: n * size as u64,
+        cycles: sys.now(),
+        row_hits: ds.row_hits,
+        row_misses: ds.row_misses,
+        row_conflicts: ds.row_conflicts,
+        refreshes: ds.refreshes,
+    }
+}
+
+/// The full grid: access patterns x transfer sizes x bank counts, in
+/// deterministic order on the parallel executor.
+pub fn dram_grid(naive: bool) -> Vec<DramPoint> {
+    let mut tasks = Vec::new();
+    for &w in &DramWorkload::ALL {
+        for &size in &PAYLOAD_SIZES {
+            for &banks in &BANK_COUNTS {
+                tasks.push((w, size, banks));
+            }
+        }
+    }
+    par_map(tasks, |_, (w, size, banks)| run_dram(w, size, banks, naive))
+}
+
+/// The machine-readable DRAM report (`BENCH_dram.json`, schema
+/// `idmac-dram/v1`).  Integer-only payload: exact-diffed by CI across
+/// scheduler modes and against the checked-in baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DramReport {
+    pub points: Vec<DramPoint>,
+}
+
+impl DramReport {
+    pub fn new(points: Vec<DramPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-dram/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"workload\": {}, \"size\": {}, \"banks\": {}, \
+                 \"transfers\": {}, \"bytes\": {}, \"cycles\": {}, \
+                 \"row_hits\": {}, \"row_misses\": {}, \
+                 \"row_conflicts\": {}, \"refreshes\": {}}}{}\n",
+                json_str(&p.workload),
+                p.size,
+                p.banks,
+                p.transfers,
+                p.bytes,
+                p.cycles,
+                p.row_hits,
+                p.row_misses,
+                p.row_conflicts,
+                p.refreshes,
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable sweep table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "DRAM — row-buffer locality vs access pattern and bank count",
+            &[
+                "workload",
+                "size",
+                "banks",
+                "transfers",
+                "cycles",
+                "B/cyc",
+                "hits",
+                "misses",
+                "conflicts",
+                "refreshes",
+                "hit rate",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.workload.clone(),
+                p.size.to_string(),
+                p.banks.to_string(),
+                p.transfers.to_string(),
+                p.cycles.to_string(),
+                format!("{:.4}", p.throughput()),
+                p.row_hits.to_string(),
+                p.row_misses.to_string(),
+                p.row_conflicts.to_string(),
+                p.refreshes.to_string(),
+                format!("{:.3}", p.hit_rate()),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_costs_strictly_more_than_streaming_at_equal_bytes() {
+        // The acceptance pin: random 64 B gathers move the same total
+        // payload in strictly more cycles than a streaming copy.
+        let stream = run_dram(DramWorkload::Streaming, 64, 2, false);
+        let gather = run_dram(DramWorkload::Gather, 64, 2, false);
+        assert_eq!(stream.bytes, gather.bytes, "equal-total-bytes comparison");
+        assert!(
+            gather.cycles > stream.cycles,
+            "gather {gather:?} should be slower than streaming {stream:?}"
+        );
+        // And the reason is visible in the counters: the gather churns
+        // rows that the streaming copy keeps open.
+        assert!(
+            gather.row_conflicts > stream.row_conflicts,
+            "gather {gather:?} vs streaming {stream:?}"
+        );
+        assert!(gather.hit_rate() < stream.hit_rate());
+    }
+
+    #[test]
+    fn more_banks_absorb_the_gather_row_churn() {
+        let few = run_dram(DramWorkload::Gather, 64, 1, false);
+        let many = run_dram(DramWorkload::Gather, 64, 8, false);
+        assert!(
+            few.cycles > many.cycles,
+            "1-bank gather {few:?} should be slower than 8-bank {many:?}"
+        );
+    }
+
+    #[test]
+    fn strided_sits_between_streaming_and_gather() {
+        let stream = run_dram(DramWorkload::Streaming, 64, 2, false);
+        let strided = run_dram(DramWorkload::Strided, 64, 2, false);
+        let gather = run_dram(DramWorkload::Gather, 64, 2, false);
+        assert!(stream.cycles <= strided.cycles, "{stream:?} vs {strided:?}");
+        assert!(strided.cycles <= gather.cycles, "{strided:?} vs {gather:?}");
+    }
+
+    #[test]
+    fn point_is_identical_across_schedulers() {
+        let fast = run_dram(DramWorkload::Gather, 64, 2, false);
+        let naive = run_dram(DramWorkload::Gather, 64, 2, true);
+        assert_eq!(fast, naive, "dram point diverged across schedulers");
+    }
+
+    #[test]
+    fn refreshes_fire_on_long_runs() {
+        let p = run_dram(DramWorkload::Gather, 64, 1, false);
+        assert!(p.refreshes > 0, "a multi-thousand-cycle run crosses tREFI: {p:?}");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wall_clock_free() {
+        let points = vec![run_dram(DramWorkload::Streaming, 512, 4, false)];
+        let a = DramReport::new(points.clone()).to_json();
+        let b = DramReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-dram/v1\""));
+        assert!(a.contains("\"workload\": \"streaming\""));
+        assert!(a.contains("\"banks\": 4"));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn grid_covers_every_axis() {
+        // Small-grid smoke: every workload appears with every bank
+        // count at one size (the full grid runs in CI).
+        let points: Vec<DramPoint> = DramWorkload::ALL
+            .iter()
+            .flat_map(|&w| BANK_COUNTS.iter().map(move |&b| (w, b)))
+            .map(|(w, b)| run_dram(w, 512, b, false))
+            .collect();
+        assert_eq!(points.len(), DramWorkload::ALL.len() * BANK_COUNTS.len());
+        let table = DramReport::new(points).to_table();
+        let rendered = table.render();
+        assert!(rendered.contains("gather"));
+        assert!(rendered.contains("strided"));
+    }
+}

@@ -4,6 +4,7 @@
 //! as column series — the same rows a plotting script would consume.
 
 pub mod contention;
+pub mod dram;
 pub mod experiments;
 pub mod faults;
 pub mod nd;
@@ -13,6 +14,7 @@ pub mod throughput;
 pub mod translation;
 
 pub use contention::{ContentionPoint, MultiChannelReport};
+pub use dram::{DramPoint, DramReport, DramWorkload};
 pub use faults::{FaultPoint, FaultsReport};
 pub use nd::{NdPoint, NdReport};
 pub use parallel::par_map;

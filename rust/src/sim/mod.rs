@@ -9,7 +9,11 @@
 //! component can act (see EXPERIMENTS.md §Perf).  Results are
 //! bit-identical to the naive per-cycle loop, which is kept as
 //! `tb::System::run_until_idle_naive` and cross-checked by the
-//! `prop_fast_forward_matches_naive_tick_loop` property test.
+//! `prop_fast_forward_matches_naive_tick_loop` property test.  The
+//! identity holds for every memory timing backend — the latency pipe
+//! and the banked DRAM model alike (`mem` module docs spell out the
+//! backend contract; `prop_fast_forward_matches_naive_on_the_dram_backend`
+//! pins the DRAM half).
 
 pub mod queue;
 pub mod stats;

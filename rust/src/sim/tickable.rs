@@ -30,6 +30,20 @@
 //! property test and [`System::run_until_idle_cross_checked`]
 //! (debug-mode cross-check) exist to catch exactly that.
 //!
+//! Components with internal schedulers of their own obey the same
+//! contract.  The banked DRAM backend (`mem::dram`, DESIGN.md §12) is
+//! the canonical example: its horizon is the earliest cycle *any*
+//! queued command could issue, even though the FR-FCFS pick among
+//! eligible commands happens only at tick time, and even though the
+//! write-drain gate may veto the write candidate — a gated or
+//! out-prioritized candidate only makes the horizon early, which the
+//! conservatism rule already covers.  Periodic background processes
+//! (DRAM refresh) may instead be applied as *lazy catch-up* at the
+//! next tick rather than reported as events, provided the catch-up is
+//! confluent: the post-catch-up state must not depend on which
+//! intermediate cycles were actually ticked, because the naive loop
+//! and the fast-forward loop tick different subsets of cycles.
+//!
 //! [`System::run_until_idle_cross_checked`]: crate::tb::System::run_until_idle_cross_checked
 
 use super::Cycle;

@@ -80,10 +80,12 @@ impl<C: Controller> System<C> {
 
     pub fn with_memory(mut mem: Memory, ctrl: C) -> Self {
         let ports = ctrl.ports().to_vec();
-        // The device under test owns the fault plan (it is part of its
-        // configuration), but the plan runs inside the memory model:
-        // install it here, once, when the two meet.
+        // The device under test owns the fault plan and the timing
+        // backend (both are part of its configuration), but they run
+        // inside the memory model: install them here, once, when the
+        // two meet.
         mem.install_faults(ctrl.fault_config());
+        mem.install_backend(ctrl.mem_backend());
         Self {
             mem,
             ctrl,

@@ -9,7 +9,7 @@
 
 use super::SplitMix64;
 use crate::dmac::{ChainBuilder, Descriptor, DmacConfig, IommuParams};
-use crate::mem::LatencyProfile;
+use crate::mem::{DramParams, LatencyProfile, MemBackend};
 use crate::workload::map;
 
 /// Transfer sizes the random chains draw from: byte-granular odd
@@ -62,6 +62,33 @@ pub fn random_config(rng: &mut SplitMix64) -> DmacConfig {
 /// Random one-way memory latency across the paper's whole sweep range.
 pub fn random_profile(rng: &mut SplitMix64) -> LatencyProfile {
     LatencyProfile::Custom(rng.range(1, 120) as u32)
+}
+
+/// Random banked-DRAM timing geometry, spanning tiny test shapes to
+/// DDR3-like parameters (always legal: every field stays above the
+/// floors `DramParams` itself enforces).
+pub fn random_dram_params(rng: &mut SplitMix64) -> DramParams {
+    let t_refi = if rng.chance(0.5) { 0 } else { rng.range(200, 4000) as u32 };
+    DramParams {
+        banks: 1 << rng.below(4),
+        row_bytes: *rng.pick(&[256u32, 1024, 2048]),
+        t_cas: rng.range(1, 8) as u32,
+        t_rcd: rng.range(1, 8) as u32,
+        t_rp: rng.range(1, 8) as u32,
+        t_refi,
+        t_rfc: if t_refi == 0 { 0 } else { rng.range(4, 60) as u32 },
+        wq_watermark: rng.range(1, 24) as u32,
+    }
+}
+
+/// Random memory timing backend: the default pipe half the time, a
+/// random banked-DRAM geometry otherwise.
+pub fn random_mem_backend(rng: &mut SplitMix64) -> MemBackend {
+    if rng.chance(0.5) {
+        MemBackend::Pipe
+    } else {
+        MemBackend::Dram(random_dram_params(rng))
+    }
 }
 
 /// Random enabled SV39 translation stage with a small IOTLB.
@@ -126,6 +153,17 @@ mod tests {
             assert!(io.enabled);
             assert!((1..=16).contains(&io.tlb_sets));
             assert!((1..=4).contains(&io.tlb_ways));
+            let p = random_dram_params(rng);
+            assert!([1, 2, 4, 8].contains(&p.banks));
+            assert!([256, 1024, 2048].contains(&p.row_bytes));
+            assert!((1..=8).contains(&p.t_cas));
+            assert!(p.t_refi == 0 || (200..=4000).contains(&p.t_refi));
+            assert!(p.t_refi > 0 || p.t_rfc == 0, "no refresh, no tRFC");
+            assert!((1..=24).contains(&p.wq_watermark));
+            assert!(matches!(
+                random_mem_backend(rng),
+                MemBackend::Pipe | MemBackend::Dram(_)
+            ));
         });
     }
 }

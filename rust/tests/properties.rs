@@ -237,6 +237,86 @@ fn prop_ring_capable_config_is_cycle_identical_when_unused() {
 }
 
 #[test]
+fn prop_pipe_backend_config_is_cycle_identical_to_the_default() {
+    use idmac::mem::MemBackend;
+    // The DRAM subsystem's acceptance property, pipe half: the pipe is
+    // the default backend, and selecting it explicitly must be
+    // cycle-identical to a config that never mentions a backend — same
+    // RunStats, same final clock, same memory image, under both
+    // schedulers (DESIGN.md §12).
+    forall(CASES, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let piped = cfg.with_mem_backend(MemBackend::Pipe);
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let run = |cfg: DmacConfig, naive: bool| {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = if naive {
+                sys.run_until_idle_naive().unwrap()
+            } else {
+                sys.run_until_idle().unwrap()
+            };
+            assert!(sys.mem.dram_stats().is_none(), "pipe backend has no DRAM counters");
+            (stats, sys.now(), sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec())
+        };
+        let bare = run(cfg, false);
+        let pipe_fast = run(piped, false);
+        let pipe_naive = run(piped, true);
+        assert_eq!(bare, pipe_fast, "explicit pipe changed behavior: cfg={cfg:?} {profile:?}");
+        assert_eq!(bare, pipe_naive, "explicit pipe diverged under the naive loop");
+    });
+}
+
+#[test]
+fn prop_fast_forward_matches_naive_on_the_dram_backend() {
+    use idmac::mem::MemBackend;
+    use idmac::testutil::gen::random_dram_params;
+    // The DRAM subsystem's acceptance property, DRAM half: with a
+    // random banked-DRAM geometry installed, the event-horizon
+    // scheduler must stay bit-identical to the naive per-cycle loop —
+    // same RunStats, clock, row-buffer counters and memory image —
+    // across random chains, configs, pipe depths and refresh settings.
+    forall(15, |rng| {
+        let (cb, _) = random_chain(rng);
+        let params = random_dram_params(rng);
+        let cfg = random_config(rng).with_mem_backend(MemBackend::Dram(params));
+        let seed = rng.next_u64() as u32;
+        for profile in [LatencyProfile::Ideal, LatencyProfile::UltraDeep] {
+            let build = || {
+                let mut sys = System::new(profile, Dmac::new(cfg));
+                fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+                sys.load_and_launch(0, &cb);
+                sys
+            };
+            let mut fast = build();
+            let mut naive = build();
+            let f = fast.run_until_idle().unwrap();
+            let n = naive.run_until_idle_naive().unwrap();
+            assert_eq!(f, n, "stats diverged: {params:?} cfg={cfg:?} profile={profile:?}");
+            assert_eq!(fast.now(), naive.now(), "clock diverged: {params:?}");
+            assert_eq!(
+                fast.mem.dram_stats(),
+                naive.mem.dram_stats(),
+                "row-buffer counters diverged: {params:?}"
+            );
+            assert_eq!(
+                fast.mem.backdoor_read(map::DST_BASE, 64 * 4096),
+                naive.mem.backdoor_read(map::DST_BASE, 64 * 4096),
+                "memory image diverged: {params:?} cfg={cfg:?} profile={profile:?}"
+            );
+            // Deep pipes must still exercise the jump path with the
+            // DRAM backend installed, or the property tests nothing.
+            if profile == LatencyProfile::UltraDeep {
+                assert!(fast.horizon.jumps > 0, "no fast-forward happened: {params:?}");
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_fault_capable_config_is_cycle_identical_when_disabled() {
     use idmac::mem::FaultConfig;
     // The fault subsystem's acceptance property: injection off is the

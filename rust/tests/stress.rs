@@ -3,9 +3,10 @@
 //! Every case samples a random point in the full feature cross product
 //! — {multi-channel × IOMMU translation × ND-affine descriptors ×
 //! submission/completion rings × AXI fault injection × arbitration
-//! policy × memory latency} — builds the identical system twice from
-//! one deterministic plan, runs it under both schedulers, and asserts
-//! on every sampled point:
+//! policy × memory latency × memory timing backend (pipe or banked
+//! DRAM)} — builds the identical system twice from one deterministic
+//! plan, runs it under both schedulers, and asserts on every sampled
+//! point:
 //!
 //! * **byte conservation** — every expected row (including hardware-
 //!   expanded ND rows) landed byte-exact at its destination, and the
@@ -38,9 +39,10 @@ use idmac::dmac::{
 use idmac::driver::{DmaMapper, RingDriver, RingEntry};
 use idmac::iommu::IommuDmac;
 use idmac::mem::backdoor::fill_pattern;
-use idmac::mem::{FaultConfig, LatencyProfile};
+use idmac::mem::{FaultConfig, LatencyProfile, MemBackend};
 use idmac::sim::Cycle;
 use idmac::tb::System;
+use idmac::testutil::gen::random_dram_params;
 use idmac::testutil::{forall, SplitMix64};
 use idmac::workload::map;
 
@@ -143,6 +145,14 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
     } else {
         FaultConfig::disabled()
     };
+    // A third of the cases swap the pipe for a random banked-DRAM
+    // geometry.  Like the fault plan, the timing backend is a
+    // whole-memory property owned by channel 0's config.
+    let backend = if rng.chance(0.35) {
+        MemBackend::Dram(random_dram_params(rng))
+    } else {
+        MemBackend::Pipe
+    };
     let mut plan = Plan {
         cfgs: Vec::new(),
         work: Vec::new(),
@@ -167,6 +177,9 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
             if c == 0 {
                 cfg = cfg.with_faults(faults);
             }
+        }
+        if c == 0 {
+            cfg = cfg.with_mem_backend(backend);
         }
         if rng.chance(0.25) {
             cfg = cfg.without_nd();
