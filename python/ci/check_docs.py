@@ -25,7 +25,16 @@ MARKDOWN_FILES = [
 ]
 
 REQUIRED_SECTIONS = {
-    "README.md": ["Quickstart", "translate", "faults", "dram", "bench-regression gate"],
+    "README.md": [
+        "Quickstart",
+        "translate",
+        "faults",
+        "dram",
+        "latency",
+        "trace",
+        "--stats-json",
+        "bench-regression gate",
+    ],
     "DESIGN.md": [
         "Multi-channel",
         "event horizon",
@@ -34,6 +43,7 @@ REQUIRED_SECTIONS = {
         "Rings",
         "Error model and recovery",
         "DRAM backend",
+        "Trace & telemetry",
     ],
     "EXPERIMENTS.md": [
         "Contention",
@@ -41,12 +51,14 @@ REQUIRED_SECTIONS = {
         "Rings",
         "Faults",
         "DRAM",
+        "Latency",
         "BENCH_multichannel.json",
         "BENCH_sim_throughput.json",
         "BENCH_translation.json",
         "BENCH_rings.json",
         "BENCH_faults.json",
         "BENCH_dram.json",
+        "BENCH_latency.json",
     ],
 }
 

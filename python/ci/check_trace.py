@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""CI well-formedness gate for ``idmac trace`` Chrome-trace exports.
+
+Validates the JSON Array Format that ``chrome://tracing`` / Perfetto
+consume (and that ``sim::trace::chrome_trace_json`` promises to emit):
+
+* the document is one object with a ``traceEvents`` list;
+* every event has a non-empty string ``name``, a one-character phase
+  ``ph``, integer ``pid``/``tid``, and a non-negative integer ``ts``;
+* on every ``(pid, tid)`` track, ``ts`` is monotone non-decreasing —
+  the exporter sorts by cycle, so an out-of-order timestamp means the
+  export (not the simulation) regressed;
+* counter events (``ph == "C"``) carry an ``args`` object of numeric
+  series (the bus-utilization track).
+
+Usage: ``python python/ci/check_trace.py TRACE.json [TRACE2.json ...]``
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trace(path: str) -> None:
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} does not exist")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level must be an object, got {type(doc).__name__}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail(f"{path}: traceEvents missing or not a list")
+    if not events:
+        fail(f"{path}: traceEvents is empty")
+
+    last_ts = {}  # (pid, tid) -> last seen ts
+    tracks = set()
+    counters = 0
+    for i, e in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(e, dict):
+            fail(f"{where} is not an object")
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"{where}: name missing or empty")
+        ph = e.get("ph")
+        if not isinstance(ph, str) or len(ph) != 1:
+            fail(f"{where} ({name}): ph missing or not a single character")
+        for key in ("ts", "pid", "tid"):
+            v = e.get(key)
+            # bool is an int subclass in Python; reject it explicitly.
+            if not isinstance(v, int) or isinstance(v, bool):
+                fail(f"{where} ({name}): {key} missing or not an integer")
+        if e["ts"] < 0:
+            fail(f"{where} ({name}): negative ts {e['ts']}")
+        track = (e["pid"], e["tid"])
+        tracks.add(track)
+        if e["ts"] < last_ts.get(track, 0):
+            fail(
+                f"{where} ({name}): ts {e['ts']} goes backwards on track "
+                f"pid={track[0]} tid={track[1]} (last {last_ts[track]})"
+            )
+        last_ts[track] = e["ts"]
+        if ph == "C":
+            counters += 1
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                fail(f"{where} ({name}): counter event without args series")
+            for k, v in args.items():
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    fail(f"{where} ({name}): counter series {k} is not numeric")
+
+    print(
+        f"OK: {path}: {len(events)} event(s) on {len(tracks)} track(s), "
+        f"{counters} counter sample(s), timestamps monotone per track"
+    )
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        fail("usage: check_trace.py TRACE.json [TRACE2.json ...]")
+    for path in sys.argv[1:]:
+        check_trace(path)
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,13 @@ fields are ignored by design, so runner speed cannot flake the build:
     locality grid on the banked DRAM timing backend) with the same
     protocol against the ``idmac-dram/v1`` schema.
 
+``latency``
+    Validates ``BENCH_latency.json``-shaped files (the per-phase
+    latency-percentile grid, CSR burst vs ring doorbell) with the same
+    protocol against the ``idmac-latency/v1`` schema.  Percentiles are
+    integer cycle counts over log2 buckets, so the grid is exact-diffed
+    like every other point grid.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -203,6 +210,10 @@ def check_dram(fast_path: str, naive_path: str, baseline_path: str) -> None:
     check_point_grid(fast_path, naive_path, baseline_path, "idmac-dram/v1", "dram")
 
 
+def check_latency(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(fast_path, naive_path, baseline_path, "idmac-latency/v1", "latency")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -242,6 +253,11 @@ def main() -> None:
     dr.add_argument("--naive", required=True)
     dr.add_argument("--baseline", required=True)
 
+    la = sub.add_parser("latency")
+    la.add_argument("--fast", required=True)
+    la.add_argument("--naive", required=True)
+    la.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
@@ -255,8 +271,10 @@ def main() -> None:
         check_rings(args.fast, args.naive, args.baseline)
     elif args.mode == "faults":
         check_faults(args.fast, args.naive, args.baseline)
-    else:
+    elif args.mode == "dram":
         check_dram(args.fast, args.naive, args.baseline)
+    else:
+        check_latency(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

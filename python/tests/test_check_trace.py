@@ -1,0 +1,158 @@
+"""Gate logic of ``python/ci/check_trace.py``: the Chrome-trace
+well-formedness check must actually gate — malformed documents,
+missing/typed-wrong fields, backwards timestamps and empty counter
+events fail; a well-formed multi-track export passes.  Timestamps only
+need to be monotone *per (pid, tid) track*, not globally."""
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "ci", "check_trace.py")
+
+
+def run(paths):
+    return subprocess.run(
+        [sys.executable, SCRIPT] + paths, capture_output=True, text=True
+    )
+
+
+def write(path, doc):
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def instant(name, ts, tid, args=None):
+    return {
+        "name": name,
+        "ph": "i",
+        "ts": ts,
+        "pid": 0,
+        "tid": tid,
+        "s": "t",
+        "args": args or {},
+    }
+
+
+def counter(ts, read_beats, write_beats):
+    return {
+        "name": "bus_utilization",
+        "ph": "C",
+        "ts": ts,
+        "pid": 0,
+        "tid": 10,
+        "args": {"read_beats": read_beats, "write_beats": write_beats},
+    }
+
+
+def doc(events):
+    return {"traceEvents": events, "displayTimeUnit": "ns", "idmacWindowCycles": 64}
+
+
+GOOD = [
+    instant("csr_launch", 0, 0),
+    instant("desc_fetch_start", 3, 1),
+    instant("backend_active", 10, 3),
+    counter(0, 4, 0),
+    counter(64, 9, 9),
+    instant("transfer_done", 90, 3),
+]
+
+
+def test_well_formed_trace_passes(tmp_path):
+    p = write(tmp_path / "t.json", doc(GOOD))
+    r = run([p])
+    assert r.returncode == 0, r.stderr
+    assert "monotone per track" in r.stdout
+
+
+def test_interleaved_tracks_only_need_per_track_monotonicity(tmp_path):
+    # Track 1 runs ahead of track 0; a global-order check would
+    # wrongly reject this.
+    events = [
+        instant("desc_fetch_start", 50, 1),
+        instant("csr_launch", 10, 0),
+        instant("desc_fetch_done", 60, 1),
+        instant("csr_launch", 20, 0),
+    ]
+    p = write(tmp_path / "t.json", doc(events))
+    r = run([p])
+    assert r.returncode == 0, r.stderr
+
+
+def test_backwards_ts_on_one_track_fails(tmp_path):
+    events = [instant("a", 10, 2), instant("b", 9, 2)]
+    p = write(tmp_path / "t.json", doc(events))
+    r = run([p])
+    assert r.returncode == 1
+    assert "goes backwards" in r.stderr
+
+
+def test_missing_ts_fails(tmp_path):
+    bad = instant("a", 1, 0)
+    del bad["ts"]
+    p = write(tmp_path / "t.json", doc([bad]))
+    r = run([p])
+    assert r.returncode == 1
+    assert "ts missing" in r.stderr
+
+
+def test_float_ts_fails(tmp_path):
+    p = write(tmp_path / "t.json", doc([instant("a", 1.5, 0)]))
+    r = run([p])
+    assert r.returncode == 1
+    assert "not an integer" in r.stderr
+
+
+def test_empty_name_fails(tmp_path):
+    p = write(tmp_path / "t.json", doc([instant("", 1, 0)]))
+    r = run([p])
+    assert r.returncode == 1
+    assert "name missing or empty" in r.stderr
+
+
+def test_counter_without_series_fails(tmp_path):
+    bad = counter(0, 1, 1)
+    bad["args"] = {}
+    p = write(tmp_path / "t.json", doc([bad]))
+    r = run([p])
+    assert r.returncode == 1
+    assert "without args series" in r.stderr
+
+
+def test_empty_trace_fails(tmp_path):
+    p = write(tmp_path / "t.json", doc([]))
+    r = run([p])
+    assert r.returncode == 1
+    assert "traceEvents is empty" in r.stderr
+
+
+def test_top_level_list_fails(tmp_path):
+    # The legacy bare-array format is not what the exporter emits.
+    p = write(tmp_path / "t.json", GOOD)
+    r = run([p])
+    assert r.returncode == 1
+    assert "top level must be an object" in r.stderr
+
+
+def test_invalid_json_fails(tmp_path):
+    p = tmp_path / "t.json"
+    p.write_text("{not json")
+    r = run([str(p)])
+    assert r.returncode == 1
+    assert "not valid JSON" in r.stderr
+
+
+def test_missing_file_fails(tmp_path):
+    r = run([str(tmp_path / "nope.json")])
+    assert r.returncode == 1
+    assert "does not exist" in r.stderr
+
+
+def test_multiple_files_all_checked(tmp_path):
+    good = write(tmp_path / "good.json", doc(GOOD))
+    bad = write(tmp_path / "bad.json", doc([instant("a", 5, 0), instant("b", 4, 0)]))
+    r = run([good, bad])
+    assert r.returncode == 1
+    assert "goes backwards" in r.stderr

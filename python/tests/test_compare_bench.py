@@ -277,6 +277,79 @@ def test_dram_rejects_faults_schema(tmp_path):
     assert "unexpected schema" in r.stderr
 
 
+def quantiles(p50, p99):
+    return {"p50": p50, "p99": p99, "p999": p99, "max": p99}
+
+
+def arm(base):
+    return {
+        "launch": quantiles(base, base * 2),
+        "fetch": quantiles(base + 4, base * 2 + 4),
+        "data": quantiles(base + 32, base * 2 + 32),
+        "writeback": quantiles(0, 8),
+        "end_to_end": quantiles(base + 64, base * 2 + 64),
+    }
+
+
+LATENCY_POINT = {
+    "batch": 8,
+    "size": 64,
+    "mem": "ddr3",
+    "transfers": 48,
+    "csr": arm(128),
+    "ring": arm(64),
+}
+
+
+def test_latency_identical_grids_pass_with_bootstrap_baseline(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-latency/v1", []))
+    r = run(["latency", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "bootstrap mode" in r.stdout
+
+
+def test_latency_scheduler_divergence_fails(tmp_path):
+    # A percentile differing between schedulers means the breakdown
+    # stamps (not just end cycles) diverged — any field gates.
+    diverged = dict(LATENCY_POINT, ring=arm(65))
+    fast = write(tmp_path / "fast.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-latency/v1", [diverged]))
+    base = write(tmp_path / "base.json", point_doc("idmac-latency/v1", []))
+    r = run(["latency", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "not deterministic" in r.stderr
+
+
+def test_latency_baseline_drift_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    drifted = dict(LATENCY_POINT, csr=arm(129))
+    base = write(tmp_path / "base.json", point_doc("idmac-latency/v1", [drifted]))
+    r = run(["latency", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "drifted" in r.stderr
+
+
+def test_latency_armed_baseline_passes_on_exact_match(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-latency/v1", [LATENCY_POINT]))
+    r = run(["latency", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "matches the checked-in baseline" in r.stdout
+
+
+def test_latency_rejects_rings_schema(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-rings/v1", [LATENCY_POINT]))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-rings/v1", [LATENCY_POINT]))
+    base = write(tmp_path / "base.json", point_doc("idmac-latency/v1", []))
+    r = run(["latency", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "unexpected schema" in r.stderr
+
+
 def test_throughput_mode_gates_cycle_identity(tmp_path):
     entry = {
         "label": "fig4-grid/DDR3 (13 cycles)",
@@ -318,6 +391,7 @@ def test_repo_baselines_parse_and_use_known_schemas():
         "BENCH_rings.json": "idmac-rings/v1",
         "BENCH_faults.json": "idmac-faults/v1",
         "BENCH_dram.json": "idmac-dram/v1",
+        "BENCH_latency.json": "idmac-latency/v1",
     }
     for name, schema in expected.items():
         path = os.path.join(repo, name)

@@ -17,7 +17,7 @@ pub mod monitor;
 pub mod types;
 
 pub use arbiter::{ArbPolicy, Arbiter};
-pub use monitor::BusMonitor;
+pub use monitor::{BusMonitor, UtilWindow};
 pub use types::{
     Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, CHANNEL_TRIPLES,
     ERR_DECERR, ERR_SLVERR, ERR_TIMEOUT, MAX_CHANNELS,

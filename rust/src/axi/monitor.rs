@@ -19,10 +19,28 @@ pub struct PortCounters {
     pub write_bytes: u64,
 }
 
+/// One closed bus-utilization sampling window: total beats that
+/// crossed the memory port in `[start, start + window)` cycles.
+/// Feeds the Chrome-trace counter track (`sim::trace`, DESIGN.md §13).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UtilWindow {
+    pub start: Cycle,
+    pub read_beats: u64,
+    pub write_beats: u64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct BusMonitor {
     counters: [PortCounters; Port::COUNT],
     pub cycles: u64,
+    /// Windowed-utilization sampling period (None = disabled; the
+    /// monitor then does exactly what the pre-window monitor did).
+    window: Option<Cycle>,
+    /// Beats accumulated in the in-progress window.
+    cur_read: u64,
+    cur_write: u64,
+    /// Closed windows, in time order.
+    windows: Vec<UtilWindow>,
 }
 
 impl BusMonitor {
@@ -30,14 +48,70 @@ impl BusMonitor {
         Self::default()
     }
 
+    /// Enable windowed utilization sampling with the given period.
+    /// Observer-only: windows are closed by the same `tick`/`advance`
+    /// calls both schedulers already make, so enabling sampling never
+    /// changes timing, and a fast-forwarded window closes with the
+    /// same contents as a naively-ticked one (beats only occur at
+    /// ticked cycles; skipped windows close as zeros either way).
+    pub fn set_window(&mut self, window: Cycle) {
+        assert!(window > 0, "sampling window must be >= 1 cycle");
+        self.window = Some(window);
+    }
+
+    /// Close every window boundary crossed when the clock moves from
+    /// `self.cycles` to `self.cycles + n`.  Only the window the clock
+    /// currently sits in can have accumulated beats (beats are counted
+    /// at the pre-tick cycle); boundaries crossed beyond it were dead
+    /// cycles and close as zeros — identical under both schedulers.
+    fn close_windows(&mut self, n: u64) {
+        if let Some(w) = self.window {
+            let old = self.cycles / w;
+            let new = (self.cycles + n) / w;
+            for idx in old..new {
+                let (r, wr) = if idx == old {
+                    (std::mem::take(&mut self.cur_read), std::mem::take(&mut self.cur_write))
+                } else {
+                    (0, 0)
+                };
+                self.windows.push(UtilWindow { start: idx * w, read_beats: r, write_beats: wr });
+            }
+        }
+    }
+
+    /// Closed windows plus the in-progress one (if the clock has
+    /// entered it), so the exported timeline always covers the whole
+    /// run.
+    pub fn util_windows(&self) -> Vec<UtilWindow> {
+        let mut v = self.windows.clone();
+        if let Some(w) = self.window {
+            if self.cycles % w != 0 || self.cur_read + self.cur_write > 0 {
+                v.push(UtilWindow {
+                    start: (self.cycles / w) * w,
+                    read_beats: self.cur_read,
+                    write_beats: self.cur_write,
+                });
+            }
+        }
+        v
+    }
+
+    /// The configured sampling period (None = sampling disabled).
+    pub fn window(&self) -> Option<Cycle> {
+        self.window
+    }
+
     pub fn tick(&mut self) {
+        self.close_windows(1);
         self.cycles += 1;
     }
 
     /// Account `cycles` clock cycles at once — used by the event-
     /// horizon scheduler when it fast-forwards across dead cycles, so
-    /// occupancy denominators stay identical to the naive tick loop.
+    /// occupancy denominators (and window boundaries) stay identical
+    /// to the naive tick loop.
     pub fn advance(&mut self, cycles: u64) {
+        self.close_windows(cycles);
         self.cycles += cycles;
     }
 
@@ -45,12 +119,14 @@ impl BusMonitor {
         let c = &mut self.counters[port.index()];
         c.read_beats += 1;
         c.read_bytes += bytes as u64;
+        self.cur_read += 1;
     }
 
     pub fn count_write_beat(&mut self, port: Port, bytes: u32) {
         let c = &mut self.counters[port.index()];
         c.write_beats += 1;
         c.write_bytes += bytes as u64;
+        self.cur_write += 1;
     }
 
     pub fn port(&self, port: Port) -> PortCounters {
@@ -73,7 +149,17 @@ impl BusMonitor {
 }
 
 impl Tickable for BusMonitor {
-    fn tick(&mut self, _now: Cycle) {
+    /// Catch up to `now` before accounting this cycle, so a monitor
+    /// driven through the trait stays correct under event-horizon
+    /// fast-forward even if the driver skipped `advance` across a
+    /// jump: after `tick(now)` the clock reads `now + 1` either way,
+    /// and any skipped window boundaries close (as zeros — skipped
+    /// cycles are dead by construction).
+    fn tick(&mut self, now: Cycle) {
+        if now > self.cycles {
+            let gap = now - self.cycles;
+            self.advance(gap);
+        }
         BusMonitor::tick(self);
     }
 
@@ -118,5 +204,62 @@ mod tests {
     fn zero_cycles_zero_occupancy() {
         let m = BusMonitor::new();
         assert_eq!(m.read_occupancy(Port::Backend), 0.0);
+    }
+
+    #[test]
+    fn windows_close_on_tick_and_advance_identically() {
+        // Naive path: tick every cycle.
+        let mut naive = BusMonitor::new();
+        naive.set_window(4);
+        // Fast path: same beats, but the dead cycles 2..10 are skipped
+        // with one advance() jump, crossing two window boundaries.
+        let mut fast = BusMonitor::new();
+        fast.set_window(4);
+        for m in [&mut naive, &mut fast] {
+            m.count_read_beat(Port::Backend, 8); // cycle 0
+            m.tick();
+            m.count_write_beat(Port::Backend, 8); // cycle 1
+            m.tick();
+        }
+        for _ in 2..10 {
+            naive.tick();
+        }
+        fast.advance(8);
+        for m in [&mut naive, &mut fast] {
+            m.count_read_beat(Port::Backend, 8); // cycle 10
+            m.tick();
+        }
+        assert_eq!(naive.cycles, fast.cycles);
+        let (nw, fw) = (naive.util_windows(), fast.util_windows());
+        assert_eq!(nw, fw, "window timeline must not depend on the scheduler");
+        assert_eq!(
+            nw,
+            vec![
+                UtilWindow { start: 0, read_beats: 1, write_beats: 1 },
+                UtilWindow { start: 4, read_beats: 0, write_beats: 0 },
+                UtilWindow { start: 8, read_beats: 1, write_beats: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn tickable_tick_catches_up_under_fast_forward() {
+        let mut m = BusMonitor::new();
+        m.set_window(4);
+        Tickable::tick(&mut m, 0);
+        // Jump straight to cycle 9 through the trait: the monitor
+        // must account the skipped cycles itself.
+        Tickable::tick(&mut m, 9);
+        assert_eq!(m.cycles, 10);
+        assert_eq!(m.util_windows().len(), 3, "windows 0/4/8 all entered");
+    }
+
+    #[test]
+    fn windowing_disabled_collects_nothing() {
+        let mut m = BusMonitor::new();
+        m.count_read_beat(Port::Backend, 8);
+        m.tick();
+        assert!(m.util_windows().is_empty());
+        assert_eq!(m.window(), None);
     }
 }

@@ -11,6 +11,7 @@
 use super::frontend::ParsedTransfer;
 use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT};
 use crate::mem::latency::BResp;
+use crate::sim::trace::{TraceEvent, Tracer};
 use crate::sim::{Cycle, EventHorizon, MonotonicQueue, RunStats, Tickable};
 use std::collections::VecDeque;
 
@@ -38,6 +39,9 @@ struct Active {
     /// Eligible to start issuing reads at this cycle (engine start
     /// overhead; 0 for our backend, >0 for the LogiCORE model).
     eligible_at: Cycle,
+    /// Cycle the engine accepted the transfer from the handoff queue —
+    /// the fetch/data phase boundary of the latency breakdown.
+    accepted_at: Cycle,
 }
 
 impl Active {
@@ -97,6 +101,13 @@ pub struct TransferDone {
     /// (SLVERR/DECERR/TIMEOUT) — the feedback logic poisons the stamp
     /// or CQ record with it.
     pub status: u16,
+    /// Phase boundaries for the latency breakdown (DESIGN.md §13):
+    /// the launching MMIO write, the first descriptor beat, and the
+    /// handoff acceptance.  `launched_at <= first_beat_at <=
+    /// accepted_at <= cycle` by construction.
+    pub launched_at: Cycle,
+    pub first_beat_at: Cycle,
+    pub accepted_at: Cycle,
 }
 
 #[derive(Debug, Clone)]
@@ -126,6 +137,10 @@ pub struct Backend {
     /// reset: a late B for an unknown tag is tolerated while this is
     /// nonzero (it may also never arrive, if withheld).
     flushed_b: usize,
+    /// Event-trace handle (DESIGN.md §13).  Observer-only: the engine
+    /// appends burst/beat/B events but never branches on it.  `Tracer`'s
+    /// `Clone` detaches, so cloned systems never double-log.
+    tracer: Option<Tracer>,
 }
 
 impl Backend {
@@ -153,11 +168,23 @@ impl Backend {
             reads_pending: 0,
             draining: Vec::new(),
             flushed_b: 0,
+            tracer: None,
         }
     }
 
     pub fn port(&self) -> Port {
         self.port
+    }
+
+    /// Install a handle to the system trace buffer (observer-only).
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = Some(tracer.handle());
+    }
+
+    fn trace(&self, now: Cycle, ev: TraceEvent) {
+        if let Some(t) = &self.tracer {
+            t.emit(now, ev);
+        }
     }
 
     /// A transfer occupies a queue slot from acceptance until its last
@@ -187,6 +214,9 @@ impl Backend {
                 irq: t.irq,
                 ring: t.ring,
                 status: 0,
+                launched_at: t.launched_at,
+                first_beat_at: t.first_beat_at,
+                accepted_at: now,
             });
             return;
         }
@@ -199,6 +229,7 @@ impl Backend {
             beats_done: 0,
             error: 0,
             eligible_at: now + self.start_overhead as Cycle,
+            accepted_at: now,
         });
         self.reads_pending += 1;
     }
@@ -250,6 +281,7 @@ impl Backend {
             self.reads_pending -= 1;
         }
         let _ = stats;
+        self.trace(now, TraceEvent::BurstIssue { port: self.port, addr, beats });
         Some(req)
     }
 
@@ -304,6 +336,9 @@ impl Backend {
                     irq: done.t.irq,
                     ring: done.t.ring,
                     status: done.error,
+                    launched_at: done.t.launched_at,
+                    first_beat_at: done.t.first_beat_at,
+                    accepted_at: done.accepted_at,
                 });
             }
             return;
@@ -330,6 +365,7 @@ impl Backend {
     pub fn pop_w(&mut self, now: Cycle, stats: &mut RunStats) -> Option<WriteBeat> {
         let w = self.write_pipe.pop_ready(now)?;
         stats.payload_write_beats += 1;
+        self.trace(now, TraceEvent::DataBeat { port: w.port, addr: w.addr, last: w.last });
         Some(w)
     }
 
@@ -354,6 +390,7 @@ impl Backend {
         if status != 0 {
             stats.aborted_transfers += 1;
         }
+        self.trace(now, TraceEvent::WriteB { port: self.port, err: b.resp.is_err() });
         self.completions.push(TransferDone {
             cycle: now,
             bytes: if status == 0 { a.total_len() } else { 0 },
@@ -361,6 +398,9 @@ impl Backend {
             irq: a.t.irq,
             ring: a.t.ring,
             status,
+            launched_at: a.t.launched_at,
+            first_beat_at: a.t.first_beat_at,
+            accepted_at: a.accepted_at,
         });
     }
 
@@ -399,6 +439,9 @@ impl Backend {
                 irq: a.t.irq,
                 ring: a.t.ring,
                 status: if a.error != 0 { a.error } else { code },
+                launched_at: a.t.launched_at,
+                first_beat_at: a.t.first_beat_at,
+                accepted_at: a.accepted_at,
             });
         }
         for (_, a) in std::mem::take(&mut self.awaiting_b) {
@@ -413,6 +456,9 @@ impl Backend {
                 irq: a.t.irq,
                 ring: a.t.ring,
                 status: code,
+                launched_at: a.t.launched_at,
+                first_beat_at: a.t.first_beat_at,
+                accepted_at: a.accepted_at,
             });
         }
         self.write_pipe = MonotonicQueue::new();
@@ -492,6 +538,8 @@ mod tests {
             desc_addr: 0,
             nd: None,
             ring: false,
+            launched_at: 0,
+            first_beat_at: 0,
         }
     }
 

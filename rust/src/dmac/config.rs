@@ -168,6 +168,14 @@ pub struct DmacConfig {
     /// default [`MemBackend::Pipe`] stays cycle-identical to the
     /// pre-DRAM model (property-tested).
     pub mem: MemBackend,
+    /// Cycle-accurate event tracing ([`crate::sim::trace`], DESIGN.md
+    /// §13).  The flag only declares trace *capability*: the testbench
+    /// creates the [`crate::sim::trace::Tracer`] and installs handles
+    /// once, like the fault plan and memory backend.  Off (the
+    /// default), no handle exists anywhere and the model is
+    /// cycle-identical to the pre-trace DMAC; on, tracing is
+    /// observer-only (both property-tested in `tests/trace.rs`).
+    pub trace: bool,
 }
 
 impl DmacConfig {
@@ -186,6 +194,7 @@ impl DmacConfig {
             faults: FaultConfig::disabled(),
             watchdog: 0,
             mem: MemBackend::Pipe,
+            trace: false,
         }
     }
 
@@ -255,6 +264,14 @@ impl DmacConfig {
     /// plan).
     pub fn with_mem_backend(mut self, mem: MemBackend) -> Self {
         self.mem = mem;
+        self
+    }
+
+    /// Enable event tracing: the testbench will create a
+    /// [`crate::sim::trace::Tracer`] and install handles across the
+    /// system at construction.
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
         self
     }
 
@@ -364,6 +381,16 @@ mod tests {
         let c = DmacConfig::base().with_mem_backend(MemBackend::Dram(DramParams::ddr3_like(8)));
         assert!(matches!(c.mem, MemBackend::Dram(p) if p.banks == 8));
         assert_eq!(c.name(), "base", "the backend does not affect the preset name");
+    }
+
+    #[test]
+    fn trace_defaults_off_and_is_settable() {
+        for c in DmacConfig::paper_configs() {
+            assert!(!c.trace, "tracing must default off (observer-only opt-in)");
+        }
+        let c = DmacConfig::speculation().with_trace();
+        assert!(c.trace);
+        assert_eq!(c.name(), "speculation", "tracing does not affect the preset name");
     }
 
     #[test]

@@ -141,6 +141,21 @@ pub trait Controller: Tickable {
         MemBackend::Pipe
     }
 
+    /// Was this controller configured for event tracing (DESIGN.md
+    /// §13)?  Read once by the testbench at construction: when true, it
+    /// creates the [`Tracer`](crate::sim::trace::Tracer) and installs
+    /// handles via [`install_tracer`](Self::install_tracer), like the
+    /// fault plan and memory backend.
+    fn trace_enabled(&self) -> bool {
+        false
+    }
+
+    /// Install a handle to the system trace buffer into this
+    /// controller's units.  Observer-only by contract: implementations
+    /// may append events but must never branch on tracer state.  The
+    /// default (no trace support) ignores the handle.
+    fn install_tracer(&mut self, _tracer: &crate::sim::trace::Tracer) {}
+
     /// Channel-reset CSR write: clear channel `ch`'s sticky fault and
     /// drop its queued work so software can resubmit.  Controllers
     /// without an error model treat it as a no-op.

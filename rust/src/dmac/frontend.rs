@@ -26,6 +26,7 @@ use super::descriptor::{
 use super::ring::RingState;
 use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, ERR_TIMEOUT};
 use crate::mem::latency::BResp;
+use crate::sim::trace::{TraceEvent, Tracer};
 use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
 use std::collections::VecDeque;
 
@@ -76,6 +77,13 @@ struct FetchSlot {
     /// channel faults when the last beat drains.
     error: u16,
     data: [u8; DESC_BYTES as usize],
+    /// MMIO cycle of the CSR write / ring doorbell that made this
+    /// descriptor reachable — the launch-phase origin of the latency
+    /// breakdown (DESIGN.md §13).
+    launched_at: Cycle,
+    /// Cycle the fetch's first beat arrived (the launch/fetch phase
+    /// boundary); 0 until then.
+    first_beat_at: Cycle,
 }
 
 /// A fully parsed transfer on its way to the backend.
@@ -91,6 +99,11 @@ pub struct ParsedTransfer {
     /// Consumed from the submission ring: completion goes to the
     /// completion ring (coalesced IRQ) instead of the in-place stamp.
     pub ring: bool,
+    /// MMIO cycle of the launching CSR write / doorbell, and the cycle
+    /// the head word's first beat arrived — carried through to the
+    /// completion's [`crate::sim::LatencyBreakdown`].
+    pub launched_at: Cycle,
+    pub first_beat_at: Cycle,
 }
 
 /// A fully received ND head word waiting for its extension word's
@@ -103,6 +116,10 @@ struct PendingNd {
     /// wrap-aware successor slot on ring consumption).
     ext_addr: u64,
     ring: bool,
+    /// Launch/fetch timestamps of the *head* word (the transfer's
+    /// breakdown is anchored at the head, not the extension).
+    launched_at: Cycle,
+    first_beat_at: Cycle,
 }
 
 /// Feedback-logic write in flight: the in-place completion stamp of a
@@ -119,6 +136,11 @@ struct Writeback {
     /// This write is a poisoned chain stamp (`error_stamp`): its B
     /// raises the banked error IRQ instead of the completion IRQ.
     error: bool,
+    /// `(completion index in RunStats, data-phase end cycle)`: when the
+    /// B for this write lands, the recorded completion's writeback
+    /// phase is patched to `B cycle - data_done` (None for writebacks
+    /// driven outside the completion path, e.g. unit tests).
+    completion: Option<(usize, Cycle)>,
 }
 
 #[derive(Debug, Clone)]
@@ -127,8 +149,9 @@ pub struct Frontend {
     /// Manager port descriptor traffic is issued on (channel-banked in
     /// multi-channel systems; `Port::Frontend` for channel 0).
     port: Port,
-    /// CSR launch queue: (eligible_cycle, chain head address).
-    csr_queue: VecDeque<(Cycle, u64)>,
+    /// CSR launch queue: (eligible_cycle, chain head address, MMIO
+    /// cycle of the launching write — the breakdown's launch origin).
+    csr_queue: VecDeque<(Cycle, u64, Cycle)>,
     /// Outstanding fetches in AR-issue order (memory serves FIFO, so
     /// beats arrive in this order as well).
     fetches: VecDeque<FetchSlot>,
@@ -189,6 +212,13 @@ pub struct Frontend {
     /// while their B was outstanding: late Bs for unknown tags are
     /// tolerated while this is nonzero.
     flushed_wb: usize,
+    /// MMIO cycle of the CSR write that launched the chain currently
+    /// being walked: every fetch the walk enqueues (head, speculation,
+    /// chase, extension) inherits it as its breakdown launch origin.
+    chain_mmio: Cycle,
+    /// Event-trace handle (DESIGN.md §13).  Observer-only: the request
+    /// and feedback logic append events but never branch on it.
+    tracer: Option<Tracer>,
 }
 
 impl Frontend {
@@ -223,6 +253,8 @@ impl Frontend {
             error_irq_edges: 0,
             descs_parsed: 0,
             flushed_wb: 0,
+            chain_mmio: 0,
+            tracer: None,
         }
     }
 
@@ -234,11 +266,22 @@ impl Frontend {
         self.port
     }
 
+    /// Install a handle to the system trace buffer (observer-only).
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = Some(tracer.handle());
+    }
+
+    fn trace(&self, now: Cycle, ev: TraceEvent) {
+        if let Some(t) = &self.tracer {
+            t.emit(now, ev);
+        }
+    }
+
     /// Memory-mapped CSR write (paper §II-A).  The address becomes
     /// eligible for the request logic after the launch pipeline
     /// (`launch_latency` covers Table IV's `i-rf`).
     pub fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
-        self.csr_queue.push_back((now + self.cfg.launch_latency as Cycle, desc_addr));
+        self.csr_queue.push_back((now + self.cfg.launch_latency as Cycle, desc_addr, now));
     }
 
     /// Submission-ring doorbell CSR write: publish every ring entry up
@@ -248,7 +291,7 @@ impl Frontend {
     pub fn ring_doorbell(&mut self, now: Cycle, tail: u64) {
         let latency = self.cfg.launch_latency as Cycle;
         let ring = self.ring.as_mut().expect("ring doorbell on a ring-disabled DMAC");
-        ring.push_doorbell(now + latency, tail);
+        ring.push_doorbell(now + latency, tail, now);
     }
 
     /// Completion-ring consumer-index doorbell: software has consumed
@@ -289,10 +332,10 @@ impl Frontend {
     }
 
     fn enqueue_fetch(&mut self, addr: u64, speculative: bool) {
-        self.enqueue_slot(addr, SlotKind::Head, speculative);
+        self.enqueue_slot(addr, SlotKind::Head, speculative, self.chain_mmio);
     }
 
-    fn enqueue_slot(&mut self, addr: u64, kind: SlotKind, speculative: bool) {
+    fn enqueue_slot(&mut self, addr: u64, kind: SlotKind, speculative: bool, launched_at: Cycle) {
         debug_assert!(
             kind == SlotKind::Head || !speculative,
             "only chain walk heads may be speculative"
@@ -310,6 +353,8 @@ impl Frontend {
             beats_seen: 0,
             error: 0,
             data: [0; DESC_BYTES as usize],
+            launched_at,
+            first_beat_at: 0,
         });
     }
 
@@ -367,7 +412,7 @@ impl Frontend {
             self.spec_count -= 1;
             stats.nd_ext_reuses += 1;
         } else if self.can_fetch() {
-            self.enqueue_slot(ext_addr, SlotKind::Ext, false);
+            self.enqueue_slot(ext_addr, SlotKind::Ext, false, self.chain_mmio);
         } else {
             debug_assert!(self.pending_ext.is_none());
             self.pending_ext = Some(ext_addr);
@@ -431,13 +476,14 @@ impl Frontend {
 
     /// React to the `next` field of the descriptor at the head of the
     /// chain walk (paper §II-C): commit / flush+chase / end chain.
-    fn on_next_field(&mut self, next: u64, stats: &mut RunStats) {
+    fn on_next_field(&mut self, now: Cycle, next: u64, stats: &mut RunStats) {
         if next == END_OF_CHAIN {
             // End-of-chain flushes like a miss but is not counted as a
             // misprediction (Fig. 5 hit rates are a chain-layout
             // property; the mandatory flush at the end is not).
             if self.spec_outstanding() > 0 {
                 stats.eoc_flushes += 1;
+                self.trace(now, TraceEvent::SpecFlush { port: self.port, addr: END_OF_CHAIN });
             }
             self.flush_speculation();
             self.chain_active = false;
@@ -456,10 +502,20 @@ impl Frontend {
                 self.fetches[i].speculative = false;
                 self.spec_count -= 1;
                 stats.spec_hits += 1;
+                self.trace(now, TraceEvent::SpecHit { port: self.port, addr: next });
             }
-            Some(_) => {
+            Some(i) => {
                 stats.spec_misses += 1;
+                self.trace(
+                    now,
+                    TraceEvent::SpecMiss {
+                        port: self.port,
+                        predicted: self.fetches[i].addr,
+                        actual: next,
+                    },
+                );
                 self.flush_speculation();
+                self.trace(now, TraceEvent::SpecFlush { port: self.port, addr: next });
                 // Same-cycle corrective fetch: enqueued now, granted by
                 // the AR arbiter later this same cycle.
                 self.chase(next);
@@ -500,6 +556,9 @@ impl Frontend {
             .expect("R beat with no outstanding descriptor fetch");
         debug_assert!(slot.granted, "R beat for ungranted fetch");
         debug_assert_eq!(slot.beats_seen, beat.beat, "descriptor beats out of order");
+        if beat.beat == 0 {
+            slot.first_beat_at = now;
+        }
         let off = beat.beat as usize * 8;
         slot.data[off..off + 8].copy_from_slice(&beat.data);
         slot.beats_seen += 1;
@@ -513,6 +572,11 @@ impl Frontend {
         let addr = slot.addr;
         let kind = slot.kind;
         let slot_error = slot.error;
+        self.trace(
+            now,
+            TraceEvent::DescBeat { port: self.port, addr, beat: beat.beat, last: beat.last },
+        );
+        let slot = self.fetches.front_mut().unwrap();
         let config = u32::from_le_bytes(slot.data[4..8].try_into().unwrap());
         let next = u64::from_le_bytes(slot.data[8..16].try_into().unwrap());
         debug_assert!(
@@ -539,7 +603,7 @@ impl Frontend {
             // descriptors leave `next` reserved — consumption order is
             // the ring order, no pointer chase.
             if beat.beat == 1 && kind == SlotKind::Head {
-                self.on_next_field(next, stats);
+                self.on_next_field(now, next, stats);
             }
         }
         if beat.last {
@@ -554,7 +618,7 @@ impl Frontend {
                 // channel — `fault` discards every other live fetch and
                 // recomputes the occupancy counters.
                 self.live_count -= 1;
-                self.fault(slot_error, addr, stats);
+                self.fault(now, slot_error, addr, stats);
                 return;
             }
             if !discard {
@@ -586,9 +650,18 @@ impl Frontend {
                                 head_addr: addr,
                                 ext_addr: ext_addr.unwrap(),
                                 ring,
+                                launched_at: slot.launched_at,
+                                first_beat_at: slot.first_beat_at,
                             });
                         } else {
-                            self.push_handoff(now, d, addr, ring);
+                            self.push_handoff(
+                                now,
+                                d,
+                                addr,
+                                ring,
+                                slot.launched_at,
+                                slot.first_beat_at,
+                            );
                         }
                     }
                     SlotKind::Ext => {
@@ -603,7 +676,14 @@ impl Frontend {
                         let ext = NdExt::from_bytes(&slot.data);
                         stats.nd_descriptors += 1;
                         stats.nd_rows += ext.total_rows();
-                        self.push_handoff(now, pnd.d.with_ext(ext), pnd.head_addr, pnd.ring);
+                        self.push_handoff(
+                            now,
+                            pnd.d.with_ext(ext),
+                            pnd.head_addr,
+                            pnd.ring,
+                            pnd.launched_at,
+                            pnd.first_beat_at,
+                        );
                     }
                 }
             }
@@ -612,7 +692,15 @@ impl Frontend {
 
     /// Parse register + handoff queue + backend issue stage: calibrates
     /// Table IV rf-rb to exactly 2L + 6.
-    fn push_handoff(&mut self, now: Cycle, d: Descriptor, desc_addr: u64, ring: bool) {
+    fn push_handoff(
+        &mut self,
+        now: Cycle,
+        d: Descriptor,
+        desc_addr: u64,
+        ring: bool,
+        launched_at: Cycle,
+        first_beat_at: Cycle,
+    ) {
         self.descs_parsed += 1;
         self.handoff.push_back((
             now + 3,
@@ -624,6 +712,8 @@ impl Frontend {
                 desc_addr,
                 nd: d.nd,
                 ring,
+                launched_at,
+                first_beat_at,
             },
         ));
     }
@@ -645,6 +735,7 @@ impl Frontend {
         irq: bool,
         ring: bool,
         status: u16,
+        completion: Option<(usize, Cycle)>,
         stats: &mut RunStats,
     ) {
         if ring {
@@ -656,18 +747,26 @@ impl Frontend {
                     if status != 0 {
                         stats.cq_error_records += 1;
                     }
+                    self.trace(now, TraceEvent::CqWrite { port: self.port, addr });
                     self.wb_queue.push_back(Writeback {
                         addr,
                         data,
                         irq: false,
                         cq: true,
                         error: false,
+                        completion,
                     });
                 }
                 None => {
                     stats.cq_overflows += 1;
-                    if state.coalesce(now) {
+                    let fire = self
+                        .ring
+                        .as_mut()
+                        .expect("ring completion without ring state")
+                        .coalesce(now);
+                    if fire {
                         self.ring_irq_edges += 1;
+                        self.trace(now, TraceEvent::IrqRaise { port: self.port, error: false });
                     }
                 }
             }
@@ -678,6 +777,7 @@ impl Frontend {
                 irq: false,
                 cq: false,
                 error: true,
+                completion,
             });
         } else {
             self.wb_queue.push_back(Writeback {
@@ -686,6 +786,7 @@ impl Frontend {
                 irq,
                 cq: false,
                 error: false,
+                completion,
             });
         }
     }
@@ -713,20 +814,32 @@ impl Frontend {
             }
         };
         let (_, wb) = self.wb_outstanding.swap_remove(idx);
+        // Close the completion's writeback phase: the feedback write's
+        // B landing is the moment the completion is durably visible to
+        // software (patched even for an errored B — the response did
+        // arrive, it just carries an error).
+        if let Some((idx, data_done)) = wb.completion {
+            if let Some(c) = stats.completions.get_mut(idx) {
+                c.breakdown.writeback = now.saturating_sub(data_done);
+            }
+        }
         if b.resp.is_err() {
-            self.fault(b.resp.error_code(), wb.addr, stats);
+            self.fault(now, b.resp.error_code(), wb.addr, stats);
             return;
         }
         if wb.error {
             self.error_irq_edges += 1;
             stats.error_irqs += 1;
+            self.trace(now, TraceEvent::IrqRaise { port: self.port, error: true });
         } else if wb.cq {
             let state = self.ring.as_mut().expect("CQ record B without ring state");
             if state.coalesce(now) {
                 self.ring_irq_edges += 1;
+                self.trace(now, TraceEvent::IrqRaise { port: self.port, error: false });
             }
         } else if wb.irq {
             self.irq_edges += 1;
+            self.trace(now, TraceEvent::IrqRaise { port: self.port, error: false });
         }
     }
 
@@ -737,12 +850,14 @@ impl Frontend {
     /// are cancelled for free, and parked/parsed work is dropped.
     /// Queued CSR launches and published ring entries freeze in place
     /// until the channel-reset CSR clears the fault.
-    fn fault(&mut self, code: u16, addr: u64, stats: &mut RunStats) {
+    fn fault(&mut self, now: Cycle, code: u16, addr: u64, stats: &mut RunStats) {
         if self.error.is_none() {
             self.error = Some(ChannelError { code, addr, desc_index: self.descs_parsed });
             stats.fault_halts += 1;
             self.error_irq_edges += 1;
             stats.error_irqs += 1;
+            self.trace(now, TraceEvent::ChannelHalt { port: self.port, code: code as u32 });
+            self.trace(now, TraceEvent::IrqRaise { port: self.port, error: true });
         }
         self.halt_fetches();
     }
@@ -751,9 +866,9 @@ impl Frontend {
     /// oldest outstanding fetch if any) and additionally flush feedback
     /// writes whose B never came back — those are exactly the writes a
     /// wedged bus is sitting on.
-    pub fn on_watchdog(&mut self, stats: &mut RunStats) {
+    pub fn on_watchdog(&mut self, now: Cycle, stats: &mut RunStats) {
         let addr = self.fetches.front().map_or(0, |f| f.addr);
-        self.fault(ERR_TIMEOUT, addr, stats);
+        self.fault(now, ERR_TIMEOUT, addr, stats);
         self.flushed_wb += self.wb_outstanding.len();
         self.wb_outstanding.clear();
     }
@@ -793,7 +908,8 @@ impl Frontend {
     /// to zero, CQ phase restarts); a final coalesced-IRQ edge fires
     /// first if completions were pending, so software never misses
     /// records that landed before the reset.
-    pub fn channel_reset(&mut self) {
+    pub fn channel_reset(&mut self, now: Cycle) {
+        self.trace(now, TraceEvent::ChannelReset { port: self.port });
         self.halt_fetches();
         self.error = None;
         self.csr_queue.clear();
@@ -851,7 +967,7 @@ impl Frontend {
         if let Some(ext_addr) = self.pending_ext {
             if self.can_fetch() {
                 self.pending_ext = None;
-                self.enqueue_slot(ext_addr, SlotKind::Ext, false);
+                self.enqueue_slot(ext_addr, SlotKind::Ext, false, self.chain_mmio);
             }
         }
         // Parked chase gets priority over fresh speculation.
@@ -873,11 +989,12 @@ impl Frontend {
             && self.pending_ext.is_none()
             && self.ring_allows_launch()
         {
-            if let Some(&(eligible, addr)) = self.csr_queue.front() {
+            if let Some(&(eligible, addr, mmio)) = self.csr_queue.front() {
                 if eligible <= now && self.can_fetch() {
                     self.csr_queue.pop_front();
                     self.chain_active = true;
                     self.spec_tail = addr;
+                    self.chain_mmio = mmio;
                     self.enqueue_fetch(addr, false);
                 }
             }
@@ -893,6 +1010,7 @@ impl Frontend {
         ring.drain_doorbells(now);
         if ring.check_timeout(now) {
             self.ring_irq_edges += 1;
+            self.trace(now, TraceEvent::IrqRaise { port: self.port, error: false });
         }
         let chain_busy = self.chain_active
             || self.pending_chase.is_some()
@@ -903,11 +1021,12 @@ impl Frontend {
             // back-to-back entries stream with zero wasted fetches.
             while ring.fetchable() && self.can_fetch() {
                 let addr = ring.slot_addr(ring.sq_head);
+                let mmio = ring.publish_cycle_of(ring.sq_head);
                 if ring.next_is_ext {
                     ring.next_is_ext = false;
-                    self.enqueue_slot(addr, SlotKind::Ext, false);
+                    self.enqueue_slot(addr, SlotKind::Ext, false, mmio);
                 } else {
-                    self.enqueue_slot(addr, SlotKind::RingHead, false);
+                    self.enqueue_slot(addr, SlotKind::RingHead, false, mmio);
                 }
                 self.ring_fetch_live += 1;
                 ring.sq_head += 1;
@@ -939,7 +1058,7 @@ impl Frontend {
         self.granted_count < self.fetches.len()
     }
 
-    pub fn pop_ar(&mut self, _now: Cycle, stats: &mut RunStats) -> Option<ReadReq> {
+    pub fn pop_ar(&mut self, now: Cycle, stats: &mut RunStats) -> Option<ReadReq> {
         let idx = self.granted_count;
         let slot = self.fetches.get_mut(idx)?;
         debug_assert!(!slot.granted);
@@ -950,7 +1069,9 @@ impl Frontend {
             SlotKind::Ext => NdExt::fetch_beats(),
         };
         stats.desc_beats += beats as u64;
-        Some(ReadReq::new(self.port, slot.addr, slot.addr, beats))
+        let (addr, speculative) = (slot.addr, slot.speculative);
+        self.trace(now, TraceEvent::DescFetchIssue { port: self.port, addr, beats, speculative });
+        Some(ReadReq::new(self.port, addr, addr, beats))
     }
 
     pub fn wants_w(&self) -> bool {
@@ -1043,7 +1164,7 @@ impl Frontend {
             return Some(0);
         }
         let mut h = EventHorizon::merge(
-            self.csr_queue.front().map(|&(at, _)| at),
+            self.csr_queue.front().map(|&(at, _, _)| at),
             self.handoff.front().map(|&(at, _)| at),
         );
         if let Some(r) = &self.ring {
@@ -1236,7 +1357,7 @@ mod tests {
     fn writeback_stamps_and_raises_irq_after_b() {
         let mut f = fe(0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(50, 0x1000, true, false, 0, &mut s);
+        f.on_transfer_complete(50, 0x1000, true, false, 0, None, &mut s);
         assert!(f.wants_w());
         let w = f.pop_w(51, &mut s).unwrap();
         assert_eq!(w.addr, 0x1000);
@@ -1464,7 +1585,7 @@ mod tests {
             crate::dmac::RingParams::enabled(0x1000, 8, 0x8000, 8).with_coalescing(2, 1000),
         ));
         let mut s = RunStats::default();
-        f.on_transfer_complete(50, 0x1020, false, true, 0, &mut s);
+        f.on_transfer_complete(50, 0x1020, false, true, 0, None, &mut s);
         assert_eq!(s.cq_records, 1);
         let w = f.pop_w(51, &mut s).unwrap();
         assert_eq!(w.addr, 0x8000, "first CQ slot");
@@ -1475,7 +1596,7 @@ mod tests {
         assert_eq!(f.take_ring_irq(), 0, "below the coalescing threshold");
         assert_eq!(f.take_irq(), 0, "ring completions never use the chain IRQ line");
         // Second completion reaches the threshold once its record lands.
-        f.on_transfer_complete(70, 0x1040, false, true, 0, &mut s);
+        f.on_transfer_complete(70, 0x1040, false, true, 0, None, &mut s);
         let w2 = f.pop_w(71, &mut s).unwrap();
         assert_eq!(w2.addr, 0x8008);
         f.on_writeback_b(80, BResp { port: Port::Frontend, tag: w2.tag, resp: Resp::Okay }, &mut s);
@@ -1489,7 +1610,7 @@ mod tests {
         ));
         let mut b = Backend::new(8, false, 0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(10, 0x1000, false, true, 0, &mut s);
+        f.on_transfer_complete(10, 0x1000, false, true, 0, None, &mut s);
         let w = f.pop_w(11, &mut s).unwrap();
         f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
         assert!(!f.idle(), "a pending coalesced completion keeps the frontend busy");
@@ -1505,12 +1626,12 @@ mod tests {
     fn cq_overflow_drops_records_but_still_coalesces() {
         let mut f = Frontend::new(ring_cfg(4, 8, 1));
         let mut s = RunStats::default();
-        f.on_transfer_complete(10, 0x1000, false, true, 0, &mut s);
+        f.on_transfer_complete(10, 0x1000, false, true, 0, None, &mut s);
         let w = f.pop_w(11, &mut s).unwrap();
         f.on_writeback_b(20, BResp { port: Port::Frontend, tag: w.tag, resp: Resp::Okay }, &mut s);
         assert_eq!(f.take_ring_irq(), 1);
         // Consumer never advances: the 1-slot CQ is full.
-        f.on_transfer_complete(30, 0x1020, false, true, 0, &mut s);
+        f.on_transfer_complete(30, 0x1020, false, true, 0, None, &mut s);
         assert!(!f.wants_w(), "dropped record issues no write");
         assert_eq!(s.cq_overflows, 1);
         assert!(f.ring_state().unwrap().3, "sticky overflow flag latched");
@@ -1619,7 +1740,7 @@ mod tests {
         let d = Descriptor::new(0x8000, 0x9000, 64);
         deliver_word_with_err(&mut f, 10, &d.to_bytes(), 3, Resp::DecErr, &mut s);
         assert!(f.error_csr().is_some());
-        f.channel_reset();
+        f.channel_reset(50);
         assert_eq!(f.error_csr(), None);
         // The channel launches fresh chains again.
         f.csr_write(100, 0x3000);
@@ -1634,7 +1755,7 @@ mod tests {
     fn poisoned_completion_writes_the_error_stamp_and_raises_the_error_irq() {
         let mut f = fe(0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(50, 0x1000, true, false, crate::axi::ERR_DECERR, &mut s);
+        f.on_transfer_complete(50, 0x1000, true, false, crate::axi::ERR_DECERR, None, &mut s);
         let w = f.pop_w(51, &mut s).unwrap();
         assert_eq!(w.addr, 0x1000);
         assert_eq!(w.data, error_stamp(crate::axi::ERR_DECERR).to_le_bytes());
@@ -1649,10 +1770,10 @@ mod tests {
     fn watchdog_fault_flushes_outstanding_feedback_writes() {
         let mut f = fe(0);
         let mut s = RunStats::default();
-        f.on_transfer_complete(10, 0x1000, true, false, 0, &mut s);
+        f.on_transfer_complete(10, 0x1000, true, false, 0, None, &mut s);
         let w = f.pop_w(11, &mut s).unwrap();
         assert!(f.awaiting_response(), "stamp B outstanding arms the watchdog");
-        f.on_watchdog(&mut s);
+        f.on_watchdog(12, &mut s);
         assert_eq!(f.error_csr().unwrap().code, ERR_TIMEOUT);
         assert!(f.idle(), "flushed write-back no longer blocks quiescence");
         // The withheld B finally arrives: tolerated, raises nothing.

@@ -29,7 +29,8 @@ use crate::axi::{Port, RBeat, ReadReq, WriteBeat, CHANNEL_PAIRS, ERR_TIMEOUT};
 use crate::mem::dram::MemBackend;
 use crate::mem::faults::FaultConfig;
 use crate::mem::latency::BResp;
-use crate::sim::{Cycle, EventHorizon, RunStats, Tickable};
+use crate::sim::trace::Tracer;
+use crate::sim::{Completion, Cycle, EventHorizon, LatencyBreakdown, RunStats, Tickable};
 
 /// Our DMAC: frontend + backend glued through the handoff and
 /// completion queues (Fig. 1).  `channel` banks the manager ports (and
@@ -170,7 +171,7 @@ impl Controller for Dmac {
         let wd = self.config().watchdog;
         if wd > 0 && now >= self.last_progress + wd as Cycle && self.awaiting_response() {
             self.stats.watchdog_trips += 1;
-            self.frontend.on_watchdog(&mut self.stats);
+            self.frontend.on_watchdog(now, &mut self.stats);
             self.backend.abort_all(now, ERR_TIMEOUT, &mut self.stats);
             // Restart the window: the aborted state may still owe drain
             // beats, and a repeat-trip loop at every following cycle
@@ -181,13 +182,30 @@ impl Controller for Dmac {
         // frontend's feedback logic in the same cycle.
         self.backend.step(now, &mut self.stats);
         for done in self.backend.drain_completions() {
-            self.stats.record_completion(done.cycle, done.bytes);
+            // Assemble the latency breakdown from the phase boundaries
+            // the transfer carried through the pipeline; the writeback
+            // phase is patched in by the frontend when the feedback
+            // write's B lands (`on_writeback_b`).
+            let breakdown = LatencyBreakdown {
+                launch: done.first_beat_at.saturating_sub(done.launched_at),
+                fetch: done.accepted_at.saturating_sub(done.first_beat_at),
+                data: done.cycle.saturating_sub(done.accepted_at),
+                writeback: 0,
+            };
+            let idx = self.stats.record_completion_full(Completion {
+                cycle: done.cycle,
+                bytes: done.bytes,
+                channel: self.channel as u8,
+                launched_at: done.launched_at,
+                breakdown,
+            });
             self.frontend.on_transfer_complete(
                 now,
                 done.desc_addr,
                 done.irq,
                 done.ring,
                 done.status,
+                Some((idx, done.cycle)),
                 &mut self.stats,
             );
         }
@@ -274,10 +292,19 @@ impl Controller for Dmac {
         self.config().mem
     }
 
+    fn trace_enabled(&self) -> bool {
+        self.config().trace
+    }
+
+    fn install_tracer(&mut self, tracer: &Tracer) {
+        self.frontend.set_tracer(tracer);
+        self.backend.set_tracer(tracer);
+    }
+
     fn channel_reset(&mut self, now: Cycle, ch: usize) {
         debug_assert_eq!(ch, 0, "single-channel controller has no channel {ch}");
         self.stats.channel_resets += 1;
-        self.frontend.channel_reset();
+        self.frontend.channel_reset(now);
         self.backend.reset();
         self.progress(now);
     }

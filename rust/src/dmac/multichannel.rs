@@ -231,6 +231,19 @@ impl Controller for MultiChannel {
         self.channels[0].mem_backend()
     }
 
+    /// Tracing is armed if any channel's config requests it; the shared
+    /// tracer is installed into every channel so the merged event
+    /// stream covers the whole bank.
+    fn trace_enabled(&self) -> bool {
+        self.channels.iter().any(|c| c.trace_enabled())
+    }
+
+    fn install_tracer(&mut self, tracer: &crate::sim::trace::Tracer) {
+        for c in &mut self.channels {
+            c.install_tracer(tracer);
+        }
+    }
+
     fn channel_reset(&mut self, now: Cycle, ch: usize) {
         self.per_channel.clear();
         self.channels[ch].channel_reset(now, 0);
@@ -321,7 +334,7 @@ mod tests {
         let mut mc = MultiChannel::uniform(DmacConfig::base(), 2);
         // Inject IRQ edges directly through the feedback path.
         let mut inject = RunStats::default();
-        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true, false, 0, &mut inject);
+        mc.channels[1].frontend.on_transfer_complete(0, 0x100, true, false, 0, None, &mut inject);
         let mut s = RunStats::default();
         let w = mc.channels[1].frontend.pop_w(0, &mut s).unwrap();
         mc.channels[1].frontend.on_writeback_b(

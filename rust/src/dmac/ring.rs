@@ -91,8 +91,16 @@ pub struct RingState {
     /// Free-running producer index published by the doorbell.
     pub sq_tail: u64,
     /// Doorbell writes traversing the CSR launch pipeline:
-    /// `(eligible_cycle, new_tail)`.
-    db_queue: VecDeque<(Cycle, u64)>,
+    /// `(eligible_cycle, new_tail, mmio_cycle)`.  The MMIO cycle is the
+    /// software-visible submission instant — the launch-phase origin of
+    /// the latency breakdown (DESIGN.md §13).
+    db_queue: VecDeque<(Cycle, u64, Cycle)>,
+    /// Publish ranges for the latency breakdown: `(exclusive tail
+    /// limit, mmio_cycle)` — entries with free-running index below the
+    /// limit (and at or above the previous limit) were published by the
+    /// doorbell written at `mmio_cycle`.  Consumed monotonically by
+    /// [`publish_cycle_of`](Self::publish_cycle_of).
+    published: VecDeque<(u64, Cycle)>,
     /// The next SQ slot holds the ND extension word of the head that
     /// was just consumed (set when the head's ND flag is seen before
     /// the extension slot's fetch was issued).
@@ -119,6 +127,7 @@ impl RingState {
             sq_head: 0,
             sq_tail: 0,
             db_queue: VecDeque::new(),
+            published: VecDeque::new(),
             next_is_ext: false,
             cq_prod: 0,
             cq_head: 0,
@@ -152,9 +161,10 @@ impl RingState {
     }
 
     /// Accept a doorbell write (already through the launch pipeline of
-    /// the CSR block: `eligible` is the cycle it becomes visible).
-    pub fn push_doorbell(&mut self, eligible: Cycle, tail: u64) {
-        self.db_queue.push_back((eligible, tail));
+    /// the CSR block: `eligible` is the cycle it becomes visible;
+    /// `mmio` is the cycle software wrote the doorbell CSR).
+    pub fn push_doorbell(&mut self, eligible: Cycle, tail: u64, mmio: Cycle) {
+        self.db_queue.push_back((eligible, tail, mmio));
     }
 
     /// Accept a CQ consumer-index doorbell write.
@@ -166,12 +176,15 @@ impl RingState {
     /// move forward: a stale (smaller) doorbell is a no-op, and a
     /// doorbell equal to the current tail publishes zero entries.
     pub fn drain_doorbells(&mut self, now: Cycle) {
-        while let Some(&(at, tail)) = self.db_queue.front() {
+        while let Some(&(at, tail, mmio)) = self.db_queue.front() {
             if at > now {
                 break;
             }
             self.db_queue.pop_front();
-            self.sq_tail = self.sq_tail.max(tail);
+            if tail > self.sq_tail {
+                self.published.push_back((tail, mmio));
+                self.sq_tail = tail;
+            }
         }
         while let Some(&(at, head)) = self.cq_db_queue.front() {
             if at > now {
@@ -185,6 +198,22 @@ impl RingState {
     /// Published entries not yet fetched.
     pub fn fetchable(&self) -> bool {
         self.sq_head < self.sq_tail
+    }
+
+    /// MMIO cycle of the doorbell that published free-running SQ index
+    /// `index`.  Indices are consumed in ascending order, so exhausted
+    /// publish ranges are popped as the walk passes them (each range's
+    /// limit is exclusive).  Returns 0 for an index with no recorded
+    /// range (unreachable in normal operation: fetches only target
+    /// published entries).
+    pub fn publish_cycle_of(&mut self, index: u64) -> Cycle {
+        while self.published.front().map_or(false, |&(limit, _)| limit <= index) {
+            self.published.pop_front();
+        }
+        match self.published.front() {
+            Some(&(_, mmio)) => mmio,
+            None => 0,
+        }
     }
 
     /// A submission doorbell is still traversing the launch pipeline.
@@ -318,23 +347,40 @@ mod tests {
     #[test]
     fn doorbells_publish_monotonically_and_zero_entry_doorbells_are_noops() {
         let mut r = RingState::new(params(8, 8));
-        r.push_doorbell(3, 2);
+        r.push_doorbell(3, 2, 0);
         r.drain_doorbells(2);
         assert!(!r.fetchable(), "doorbell still in the launch pipeline");
         r.drain_doorbells(3);
         assert_eq!(r.sq_tail, 2);
         assert!(r.fetchable());
         // Zero-entry doorbell: same tail republished — nothing changes.
-        r.push_doorbell(4, 2);
+        r.push_doorbell(4, 2, 1);
         r.drain_doorbells(4);
         assert_eq!(r.sq_tail, 2);
         // Stale doorbell: smaller tail never rewinds the ring.
-        r.push_doorbell(5, 1);
+        r.push_doorbell(5, 1, 2);
         r.drain_doorbells(5);
         assert_eq!(r.sq_tail, 2);
         r.sq_head = 2;
         assert!(!r.fetchable());
         assert!(r.quiescent());
+    }
+
+    #[test]
+    fn publish_cycles_attribute_entries_to_their_doorbell() {
+        let mut r = RingState::new(params(8, 8));
+        // Doorbell at MMIO cycle 10 publishes entries 0..3; a second at
+        // cycle 50 publishes 3..5.  Stale/zero-entry doorbells add no
+        // range.
+        r.push_doorbell(13, 3, 10);
+        r.push_doorbell(14, 3, 20); // zero-entry: no range
+        r.push_doorbell(53, 5, 50);
+        r.drain_doorbells(60);
+        assert_eq!(r.sq_tail, 5);
+        assert_eq!(r.publish_cycle_of(0), 10);
+        assert_eq!(r.publish_cycle_of(2), 10);
+        assert_eq!(r.publish_cycle_of(3), 50, "first entry of the second doorbell");
+        assert_eq!(r.publish_cycle_of(4), 50);
     }
 
     #[test]
@@ -408,7 +454,7 @@ mod tests {
     fn next_event_reports_doorbells_deadline_and_issueable_work() {
         let mut r = RingState::new(params(8, 8).with_coalescing(4, 64));
         assert_eq!(r.next_event(true), None, "idle ring");
-        r.push_doorbell(7, 1);
+        r.push_doorbell(7, 1, 4);
         assert_eq!(r.next_event(true), Some(7));
         r.drain_doorbells(7);
         assert_eq!(r.next_event(true), Some(0), "fetchable entry is immediate work");

@@ -272,6 +272,17 @@ impl Controller for IommuDmac {
         self.inner.mem_backend()
     }
 
+    fn trace_enabled(&self) -> bool {
+        self.inner.trace_enabled()
+    }
+
+    fn install_tracer(&mut self, tracer: &crate::sim::trace::Tracer) {
+        self.inner.install_tracer(tracer);
+        for m in &mut self.mmus {
+            m.set_tracer(tracer);
+        }
+    }
+
     fn channel_reset(&mut self, now: Cycle, ch: usize) {
         self.inner.channel_reset(now, ch);
     }

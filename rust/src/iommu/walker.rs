@@ -31,6 +31,7 @@ use super::pagetable::{
 use super::tlb::IoTlb;
 use crate::axi::{Port, RBeat, ReadReq, WriteBeat};
 use crate::dmac::{Controller, IommuParams};
+use crate::sim::trace::{TraceEvent, Tracer};
 use crate::sim::Cycle;
 use std::collections::VecDeque;
 
@@ -151,6 +152,8 @@ pub struct Mmu {
     prefetch_walks: u64,
     prefetch_aborts: u64,
     faults: u64,
+    /// Observer-only trace handle (None = tracing off).
+    tracer: Option<Tracer>,
 }
 
 impl Mmu {
@@ -177,6 +180,19 @@ impl Mmu {
             prefetch_walks: 0,
             prefetch_aborts: 0,
             faults: 0,
+            tracer: None,
+        }
+    }
+
+    /// Install the observer-only trace handle (testbench wiring, like
+    /// the fault plan and the memory backend).
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = Some(tracer.handle());
+    }
+
+    fn trace(&self, now: Cycle, ev: TraceEvent) {
+        if let Some(t) = self.tracer.as_ref() {
+            t.emit(now, ev);
         }
     }
 
@@ -305,7 +321,7 @@ impl Mmu {
                 self.be_w = Some(Self::hold_w(w));
             }
         }
-        self.resolve_all();
+        self.resolve_all(now);
         self.start_next_walk();
     }
 
@@ -352,30 +368,45 @@ impl Mmu {
         segs
     }
 
-    fn resolve_all(&mut self) {
+    fn resolve_all(&mut self, now: Cycle) {
         let mut slot = self.fe_ar.take();
         if let Some(h) = slot.as_mut() {
-            self.resolve_ar(h, 0);
+            self.resolve_ar(now, h, 0);
         }
         self.fe_ar = slot;
         let mut slot = self.be_ar.take();
         if let Some(h) = slot.as_mut() {
-            self.resolve_ar(h, 1);
+            self.resolve_ar(now, h, 1);
         }
         self.be_ar = slot;
         let mut slot = self.fe_w.take();
         if let Some(h) = slot.as_mut() {
-            self.resolve_w(h, 2);
+            self.resolve_w(now, h, 2);
         }
         self.fe_w = slot;
         let mut slot = self.be_w.take();
         if let Some(h) = slot.as_mut() {
-            self.resolve_w(h, 3);
+            self.resolve_w(now, h, 3);
         }
         self.be_w = slot;
     }
 
-    fn resolve_ar(&mut self, h: &mut HeldAr, stream: usize) {
+    /// First-touch TLB lookup for `vpn` (counted + traced); re-probes
+    /// of an already-counted page go through [`IoTlb::probe`] directly.
+    fn counted_lookup(&mut self, now: Cycle, vpn: u64) -> Option<u64> {
+        let found = self.tlb.lookup(vpn);
+        self.trace(
+            now,
+            if found.is_some() {
+                TraceEvent::TlbHit { vpn }
+            } else {
+                TraceEvent::TlbMiss { vpn }
+            },
+        );
+        found
+    }
+
+    fn resolve_ar(&mut self, now: Cycle, h: &mut HeldAr, stream: usize) {
         for seg in h.segs.iter_mut() {
             if seg.pa.is_some() {
                 continue;
@@ -385,7 +416,7 @@ impl Mmu {
             } else {
                 seg.counted = true;
                 self.maybe_prefetch(stream, seg.vpn);
-                self.tlb.lookup(seg.vpn)
+                self.counted_lookup(now, seg.vpn)
             };
             match found {
                 Some(ppn) => seg.pa = Some((ppn << PAGE_SHIFT) | page_offset(seg.va)),
@@ -394,7 +425,7 @@ impl Mmu {
         }
     }
 
-    fn resolve_w(&mut self, h: &mut HeldW, stream: usize) {
+    fn resolve_w(&mut self, now: Cycle, h: &mut HeldW, stream: usize) {
         if h.pa.is_some() {
             return;
         }
@@ -407,7 +438,7 @@ impl Mmu {
         } else {
             h.counted = true;
             self.maybe_prefetch(stream, h.vpn);
-            self.tlb.lookup(h.vpn)
+            self.counted_lookup(now, h.vpn)
         };
         match found {
             Some(ppn) => h.pa = Some((ppn << PAGE_SHIFT) | page_offset(h.w.addr)),
@@ -513,7 +544,7 @@ impl Mmu {
         self.fault.is_none() && matches!(self.cur, Some(w) if w.pending_issue)
     }
 
-    pub fn pop_ptw_ar(&mut self, _now: Cycle) -> Option<ReadReq> {
+    pub fn pop_ptw_ar(&mut self, now: Cycle) -> Option<ReadReq> {
         if self.fault.is_some() {
             return None;
         }
@@ -522,9 +553,18 @@ impl Mmu {
             return None;
         }
         w.pending_issue = false;
+        let (vpn, level, kind) = (w.vpn, w.level, w.kind);
+        let addr = w.pt + vpn_index(vpn, level) * PTE_BYTES;
         self.walk_beats += 1;
-        let addr = w.pt + vpn_index(w.vpn, w.level) * PTE_BYTES;
-        Some(ReadReq::new(Port::ptw_of(self.channel), w.vpn, addr, 1))
+        // The root-level read is the walk's first bus access: one
+        // PteWalk event per walk, stamped at the AR grant.
+        if level == PT_LEVELS - 1 {
+            self.trace(
+                now,
+                TraceEvent::PteWalk { vpn, prefetch: kind == WalkKind::Prefetch },
+            );
+        }
+        Some(ReadReq::new(Port::ptw_of(self.channel), vpn, addr, 1))
     }
 
     /// Consume the PTE returned for the active walk level.

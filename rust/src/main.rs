@@ -26,7 +26,13 @@
 //! idmac dram [--naive] [--out FILE]     # access-pattern x size x bank grid
 //!             [--workload streaming|strided|gather] [--size N] [--banks N]
 //!                                       # writes BENCH_dram.json
-//! idmac regen-baselines [--dir D]       # rewrite all seven BENCH_*.json
+//! idmac latency [--naive] [--out FILE]  # CSR-burst vs ring-doorbell latency
+//!             [--batch N] [--size N] [--mem ideal|ddr3|ultradeep|dram4]
+//!                                       # percentile grid; writes BENCH_latency.json
+//! idmac trace [--out FILE] [--transfers N] [--size N] [--latency …]
+//!             [--window N] [--naive]    # run a traced sweep and export
+//!                                       # Chrome trace-event JSON
+//! idmac regen-baselines [--dir D]       # rewrite all eight BENCH_*.json
 //!                                       # baselines (arms the CI gate)
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
@@ -35,7 +41,10 @@
 //!
 //! Global flags: `--threads N` caps the parallel sweep executor,
 //! `--naive` selects the per-cycle reference loop over the
-//! event-horizon scheduler where applicable.
+//! event-horizon scheduler where applicable, and `--stats-json PATH`
+//! (on `sweep`, `trace` and `soc-demo`) dumps the run's full
+//! `RunStats` — every counter plus per-channel latency percentiles and
+//! the completion log — as machine-readable JSON.
 
 use idmac::cli::Args;
 use idmac::dmac::DmacConfig;
@@ -83,6 +92,8 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("rings") => rings(args)?,
         Some("faults") => faults(args)?,
         Some("dram") => dram(args)?,
+        Some("latency") => latency(args)?,
+        Some("trace") => trace(args)?,
         Some("regen-baselines") => regen_baselines(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
         Some("oracle-check") => oracle_check(args)?,
@@ -108,8 +119,9 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     translate|nd|rings|faults|dram|regen-baselines|bench-throughput|\
-                     oracle-check|soc-demo|all> [--threads N] [--naive] [flags]";
+                     translate|nd|rings|faults|dram|latency|trace|regen-baselines|\
+                     bench-throughput|oracle-check|soc-demo|all> \
+                     [--threads N] [--naive] [--stats-json PATH] [flags]";
 
 /// Regenerate every checked-in bench baseline in one pass (arming the
 /// CI bench-regression gate after a bootstrap).  Writes the default
@@ -146,6 +158,11 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     idmac::report::DramReport::new(idmac::report::dram::dram_grid(naive)).write(&out)?;
     println!("wrote {out}");
 
+    let out = path(idmac::report::latency::BENCH_FILE);
+    idmac::report::LatencyReport::new(idmac::report::latency::latency_grid(naive))
+        .write(&out)?;
+    println!("wrote {out}");
+
     let out = path(idmac::report::throughput::BENCH_FILE);
     let mut report = idmac::report::ThroughputReport::new();
     for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
@@ -154,7 +171,104 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     }
     report.write(&out)?;
     println!("wrote {out}");
-    println!("commit the seven BENCH_*.json files to arm the CI gate");
+    println!("commit the eight BENCH_*.json files to arm the CI gate");
+    Ok(())
+}
+
+/// `--stats-json PATH`: dump the run's full `RunStats` — every
+/// counter, the per-channel latency percentiles and the completion
+/// log — as machine-readable JSON (`idmac-runstats/v1`).
+fn maybe_stats_json(args: &Args, stats: &idmac::sim::RunStats) -> idmac::Result<()> {
+    if let Some(path) = args.get("stats-json") {
+        std::fs::write(path, stats.to_json(true))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Per-transfer latency grid (batch sizes × payload sizes × memory
+/// configurations), CSR-burst vs ring-doorbell, per-phase percentiles;
+/// emits the deterministic `BENCH_latency.json`.  With an explicit
+/// `--batch`/`--size`/`--mem` the grid collapses to that single point.
+fn latency(args: &Args) -> idmac::Result<()> {
+    use idmac::report::latency as lt;
+
+    let naive = args.naive();
+    let out = args.get_or("out", lt::BENCH_FILE);
+    let single =
+        args.get("batch").is_some() || args.get("size").is_some() || args.get("mem").is_some();
+    let points = if single {
+        let batch = args.get_usize("batch", 8)?;
+        if batch == 0 || batch > 512 {
+            return Err(idmac::Error::Cli("--batch must be in 1..=512 (ring capacity)".into()));
+        }
+        let size = args.get_usize("size", 64)? as u32;
+        if size == 0 || size > 1024 {
+            return Err(idmac::Error::Cli("--size must be in 1..=1024 (payload arena)".into()));
+        }
+        let mem = match args.get_or("mem", "ddr3").as_str() {
+            "ideal" => lt::MemProfile::Ideal,
+            "ddr3" => lt::MemProfile::Ddr3,
+            "ultradeep" | "deep" => lt::MemProfile::UltraDeep,
+            "dram4" | "dram" => lt::MemProfile::Dram4,
+            other => {
+                return Err(idmac::Error::Cli(format!(
+                    "unknown --mem `{other}` (ideal|ddr3|ultradeep|dram4)"
+                )));
+            }
+        };
+        vec![lt::run_latency(batch, size, mem, naive)]
+    } else {
+        lt::latency_grid(naive)
+    };
+    let report = idmac::report::LatencyReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Run one traced sweep and export the event buffer plus the bus
+/// monitor's windowed utilization timeline as Chrome trace-event JSON
+/// (open in `chrome://tracing` or Perfetto).
+fn trace(args: &Args) -> idmac::Result<()> {
+    use idmac::mem::backdoor::fill_pattern;
+    use idmac::sim::chrome_trace_json;
+    use idmac::tb::System;
+    use idmac::workload::map;
+
+    let cfg = args.dmac_config()?.with_trace();
+    let profile = args.latency()?;
+    let size = args.get_usize("size", 64)? as u32;
+    if size == 0 || size > 4096 {
+        return Err(idmac::Error::Cli("--size must be in 1..=4096 (payload arena)".into()));
+    }
+    let transfers = args.get_usize("transfers", 32)?;
+    if transfers == 0 || transfers > 1024 {
+        return Err(idmac::Error::Cli("--transfers must be in 1..=1024".into()));
+    }
+    let window = args.get_usize("window", 256)? as u64;
+    if window == 0 {
+        return Err(idmac::Error::Cli("--window must be >= 1 cycle".into()));
+    }
+    let out = args.get_or("out", "idmac_trace.json");
+    let mut sys = System::new(profile, idmac::dmac::Dmac::new(cfg));
+    sys.monitor.set_window(window);
+    let stride = (size as u64).next_multiple_of(map::LINE_BYTES);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, (transfers as u64 * stride) as usize, 0x7A);
+    sys.load_and_launch(0, &Sweep::new(transfers, size).chain());
+    let stats =
+        if args.naive() { sys.run_until_idle_naive()? } else { sys.run_until_idle()? };
+    let records = sys.take_trace();
+    let windows = sys.monitor.util_windows();
+    std::fs::write(&out, chrome_trace_json(&records, &windows, window))?;
+    println!(
+        "wrote {out} ({} events, {} utilization windows, {} cycles)",
+        records.len(),
+        windows.len(),
+        stats.end_cycle
+    );
+    maybe_stats_json(args, &stats)?;
     Ok(())
 }
 
@@ -325,6 +439,7 @@ fn sweep(args: &Args) -> idmac::Result<()> {
         timed.ff_jumps,
         timed.ff_skipped_cycles,
     );
+    maybe_stats_json(args, stats)?;
     Ok(())
 }
 
@@ -523,5 +638,6 @@ fn soc_demo(args: &Args) -> idmac::Result<()> {
         stats.irqs,
         stats.steady_utilization()
     );
+    maybe_stats_json(args, &stats)?;
     Ok(())
 }

@@ -29,6 +29,7 @@
 
 use crate::axi::{Port, RBeat, Resp, BYTES_PER_BEAT};
 use crate::mem::latency::{BResp, ScheduledWrite};
+use crate::sim::trace::{TraceEvent, Tracer};
 use crate::sim::{Cycle, EventHorizon, MonotonicQueue};
 use std::collections::VecDeque;
 
@@ -207,6 +208,11 @@ pub(crate) struct DramCore {
     last_r_push: Cycle,
     last_b_push: Cycle,
     stats: DramStats,
+    /// Observer-only trace handle (None = tracing off).  Row events
+    /// are stamped with the command's issue cycle; refresh events with
+    /// the refresh *boundary* (the lazy catch-up runs at whatever cycle
+    /// the scheduler ticks — see the `sim::trace` determinism caveats).
+    tracer: Option<Tracer>,
 }
 
 impl DramCore {
@@ -223,11 +229,16 @@ impl DramCore {
             last_r_push: 0,
             last_b_push: 0,
             stats: DramStats::default(),
+            tracer: None,
         }
     }
 
     pub(crate) fn stats(&self) -> DramStats {
         self.stats
+    }
+
+    pub(crate) fn install_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = Some(tracer.handle());
     }
 
     pub(crate) fn quiescent(&self) -> bool {
@@ -300,20 +311,31 @@ impl DramCore {
     }
 
     /// Row hit / miss / conflict classification for a command issuing
-    /// on `bank` for `row`, counting it in the stats.
-    fn access_latency(&mut self, bank: usize, row: u64) -> Cycle {
+    /// on `bank` for `row` at cycle `now`, counting it in the stats
+    /// (and tracing it when a tracer is installed).
+    fn access_latency(&mut self, now: Cycle, bank: usize, row: u64) -> Cycle {
         let p = self.params;
+        let b = bank as u8;
         match self.banks[bank].open_row {
             Some(open) if open == row => {
                 self.stats.row_hits += 1;
+                if let Some(t) = self.tracer.as_ref() {
+                    t.emit(now, TraceEvent::DramRowHit { bank: b });
+                }
                 p.t_cas as Cycle
             }
             Some(_) => {
                 self.stats.row_conflicts += 1;
+                if let Some(t) = self.tracer.as_ref() {
+                    t.emit(now, TraceEvent::DramRowConflict { bank: b });
+                }
                 (p.t_rp + p.t_rcd + p.t_cas) as Cycle
             }
             None => {
                 self.stats.row_misses += 1;
+                if let Some(t) = self.tracer.as_ref() {
+                    t.emit(now, TraceEvent::DramRowMiss { bank: b });
+                }
                 (p.t_rcd + p.t_cas) as Cycle
             }
         }
@@ -348,12 +370,16 @@ impl DramCore {
             return;
         }
         while self.next_refresh <= now {
-            let done = self.next_refresh + self.params.t_rfc as Cycle;
+            let boundary = self.next_refresh;
+            let done = boundary + self.params.t_rfc as Cycle;
             for b in &mut self.banks {
                 b.open_row = None;
                 b.busy_until = b.busy_until.max(done);
             }
             self.stats.refreshes += 1;
+            if let Some(t) = self.tracer.as_ref() {
+                t.emit(boundary, TraceEvent::DramRefresh { boundary });
+            }
             self.next_refresh += self.params.t_refi as Cycle;
         }
     }
@@ -399,7 +425,7 @@ impl DramCore {
             if ready {
                 let cmd = self.writes.pop_front().unwrap();
                 self.wq_beats -= cmd.beats.len();
-                let lat = self.access_latency(cmd.bank, cmd.row);
+                let lat = self.access_latency(now, cmd.bank, cmd.row);
                 self.banks[cmd.bank].open_row = Some(cmd.row);
                 self.banks[cmd.bank].busy_until = now + lat + cmd.beats.len() as Cycle;
                 for w in cmd.beats {
@@ -442,7 +468,7 @@ impl DramCore {
             let port = self.reads[i].0;
             let cmd = self.reads[i].1.pop_front().unwrap();
             self.pending_read_beats -= cmd.beats.len();
-            let lat = self.access_latency(cmd.bank, cmd.row);
+            let lat = self.access_latency(now, cmd.bank, cmd.row);
             self.banks[cmd.bank].open_row = Some(cmd.row);
             self.banks[cmd.bank].busy_until = now + lat + cmd.beats.len() as Cycle;
             for (k, b) in cmd.beats.iter().enumerate() {

@@ -12,6 +12,7 @@
 use crate::axi::{Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT};
 use crate::mem::dram::{DramCore, DramReadBeat, DramStats, MemBackend};
 use crate::mem::faults::{FaultConfig, FaultPlan};
+use crate::sim::trace::{FaultKind, TraceEvent, Tracer};
 use crate::sim::{Cycle, EventHorizon, MonotonicQueue, Tickable};
 use std::collections::VecDeque;
 
@@ -137,6 +138,10 @@ pub struct Memory {
     /// Installed DRAM timing backend (None = the pipe backend of this
     /// file, bit-identical to the pre-backend model).
     dram: Option<DramCore>,
+    /// Observer-only trace handle (None = tracing off; see
+    /// `sim::trace`).  Only the fault-injection draw points emit from
+    /// here — DRAM row events come from the installed `DramCore`.
+    tracer: Option<Tracer>,
     /// AR bursts accepted so far (both backends).
     pub reads_accepted: u64,
     /// W beats accepted so far (both backends).
@@ -160,6 +165,7 @@ impl Memory {
             w_burst_resp: Vec::new(),
             faults: None,
             dram: None,
+            tracer: None,
             reads_accepted: 0,
             writes_accepted: 0,
         }
@@ -200,6 +206,16 @@ impl Memory {
         self.faults.as_ref().map_or(0, |f| f.injected())
     }
 
+    /// Install the observer-only trace handle (after the backend: a
+    /// backend swap builds a fresh `DramCore`).  Like the fault plan
+    /// and the backend, installed once by the testbench.
+    pub fn install_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = Some(tracer.handle());
+        if let Some(d) = self.dram.as_mut() {
+            d.install_tracer(tracer);
+        }
+    }
+
     /// One-way pipe depth in cycles (the `L` of `2L + beats`).
     pub fn latency(&self) -> Cycle {
         self.latency
@@ -232,8 +248,20 @@ impl Memory {
                 };
                 let mut stall = 0;
                 if let Some(f) = self.faults.as_mut() {
-                    resp = resp.max(f.read_beat_resp(addr));
+                    let injected = f.read_beat_resp(addr);
+                    resp = resp.max(injected);
                     stall = f.read_stall();
+                    if let Some(t) = self.tracer.as_ref() {
+                        if injected.is_err() {
+                            t.emit(now, TraceEvent::FaultInjected { kind: FaultKind::ReadErr, addr });
+                        }
+                        if stall > 0 {
+                            t.emit(
+                                now,
+                                TraceEvent::FaultInjected { kind: FaultKind::ReadStall, addr },
+                            );
+                        }
+                    }
                 }
                 beats.push(DramReadBeat {
                     addr,
@@ -264,8 +292,17 @@ impl Memory {
             };
             let mut stall = 0;
             if let Some(f) = faults.as_deref_mut() {
-                resp = resp.max(f.read_beat_resp(addr));
+                let injected = f.read_beat_resp(addr);
+                resp = resp.max(injected);
                 stall = f.read_stall();
+                if let Some(t) = self.tracer.as_ref() {
+                    if injected.is_err() {
+                        t.emit(now, TraceEvent::FaultInjected { kind: FaultKind::ReadErr, addr });
+                    }
+                    if stall > 0 {
+                        t.emit(now, TraceEvent::FaultInjected { kind: FaultKind::ReadStall, addr });
+                    }
+                }
             }
             queue.push_back(PendingBeat {
                 ready_at: ready_at + stall,
@@ -351,9 +388,24 @@ impl Memory {
         let mut resp = if w.addr + w.bytes as u64 > size { Resp::DecErr } else { Resp::Okay };
         let mut withheld = false;
         if let Some(f) = self.faults.as_mut() {
-            resp = resp.max(f.write_beat_resp(w.addr));
+            let injected = f.write_beat_resp(w.addr);
+            resp = resp.max(injected);
             if w.last {
                 withheld = f.withhold_b();
+            }
+            if let Some(t) = self.tracer.as_ref() {
+                if injected.is_err() {
+                    t.emit(
+                        now,
+                        TraceEvent::FaultInjected { kind: FaultKind::WriteErr, addr: w.addr },
+                    );
+                }
+                if withheld {
+                    t.emit(
+                        now,
+                        TraceEvent::FaultInjected { kind: FaultKind::BWithhold, addr: w.addr },
+                    );
+                }
             }
         }
         let burst_resp = if w.last {

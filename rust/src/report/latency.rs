@@ -1,0 +1,469 @@
+//! Per-transfer latency experiments: `BENCH_latency.json`.
+//!
+//! The telemetry sweep the latency breakdown (DESIGN.md §13) exists
+//! for: each grid point runs the same batch-submission workload twice —
+//!
+//! * **CSR-launch**: every transfer is its own single-descriptor
+//!   chain, and *all* of a round's CSR writes land at the same cycle
+//!   (a burst of submissions from software).  The launch unit has one
+//!   `DESC_ADDR` register, so chains serialize: transfer `k`'s launch
+//!   phase (MMIO write → first descriptor beat) grows with its queue
+//!   position, and
+//! * **ring-doorbell**: the same batch is written into the submission
+//!   ring and published with one doorbell.  Descriptor fetches stream
+//!   from consecutive ring slots and pipeline in the fetch window, so
+//!   the queue-position penalty is a few beats instead of a whole
+//!   serialized chain walk —
+//!
+//! across batch sizes 1/8/64, payload sizes 64 B/1 KiB and four memory
+//! configurations (the three paper latency profiles plus the banked
+//! DRAM backend).  Each point reports nearest-rank p50/p99/p99.9 (and
+//! max) of every [`LatencyBreakdown`] phase per arm, from the
+//! deterministic log2-bucket [`Histogram`]s — so the headline
+//! acceptance row reads directly: at batch >= 8 the ring arm's p50
+//! launch phase is strictly lower than the CSR arm's (pinned below).
+//!
+//! Everything in the JSON is simulated-time and integer-only, so the
+//! file is bit-deterministic and identical under the event-horizon
+//! scheduler and the `--naive` per-cycle loop (CI diffs the two).
+//!
+//! [`LatencyBreakdown`]: crate::sim::LatencyBreakdown
+//! [`Histogram`]: crate::sim::Histogram
+
+use crate::dmac::{ChainBuilder, Descriptor, Dmac, DmacConfig, RingParams};
+use crate::driver::{RingDriver, RingEntry};
+use crate::mem::backdoor::fill_pattern;
+use crate::mem::{DramParams, LatencyProfile, MemBackend};
+use crate::report::parallel::par_map;
+use crate::report::rings::DOORBELL_COST;
+use crate::report::throughput::json_str;
+use crate::report::Table;
+use crate::sim::{Histogram, RunStats};
+use crate::tb::System;
+use crate::workload::map;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Default report file name, written into the working directory.
+pub const BENCH_FILE: &str = "BENCH_latency.json";
+
+/// Submission batch sizes swept by the grid.
+pub const BATCH_SIZES: [usize; 3] = [1, 8, 64];
+
+/// Payload sizes swept by the grid.
+pub const PAYLOAD_SIZES: [u32; 2] = [64, 1024];
+
+/// Minimum transfers per grid point: every point runs
+/// `ceil(TARGET_TRANSFERS / batch)` rounds, so small batches still
+/// populate the histograms.
+pub const TARGET_TRANSFERS: usize = 48;
+
+/// Submission/completion ring geometry shared by every grid point.
+const SQ_BASE: u64 = map::DESC_BASE;
+const SQ_ENTRIES: u32 = 512;
+const CQ_BASE: u64 = map::DESC_BASE + 0x20_0000;
+const CQ_ENTRIES: u32 = 512;
+
+/// Memory configuration axis: the three paper latency profiles plus
+/// the banked DRAM timing backend (DESIGN.md §12) on 4 banks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemProfile {
+    Ideal,
+    Ddr3,
+    UltraDeep,
+    /// `DramParams::ddr3_like(4)` banked timing behind an ideal pipe.
+    Dram4,
+}
+
+impl MemProfile {
+    /// Every memory configuration, in grid order.
+    pub const ALL: [MemProfile; 4] =
+        [MemProfile::Ideal, MemProfile::Ddr3, MemProfile::UltraDeep, MemProfile::Dram4];
+
+    /// Stable name used in the JSON and the table.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemProfile::Ideal => "ideal",
+            MemProfile::Ddr3 => "ddr3",
+            MemProfile::UltraDeep => "ultradeep",
+            MemProfile::Dram4 => "dram4",
+        }
+    }
+
+    fn latency(&self) -> LatencyProfile {
+        match self {
+            MemProfile::Ddr3 => LatencyProfile::Ddr3,
+            MemProfile::UltraDeep => LatencyProfile::UltraDeep,
+            MemProfile::Ideal | MemProfile::Dram4 => LatencyProfile::Ideal,
+        }
+    }
+
+    fn backend(&self) -> MemBackend {
+        match self {
+            MemProfile::Dram4 => MemBackend::Dram(DramParams::ddr3_like(4)),
+            _ => MemBackend::Pipe,
+        }
+    }
+}
+
+/// Nearest-rank percentile summary of one breakdown phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseQuantiles {
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+}
+
+impl PhaseQuantiles {
+    fn of(h: &Histogram) -> Self {
+        Self { p50: h.p50(), p99: h.p99(), p999: h.p999(), max: h.max() }
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"p50\": {}, \"p99\": {}, \"p999\": {}, \"max\": {}}}",
+            self.p50, self.p99, self.p999, self.max
+        )
+    }
+}
+
+/// Percentiles of every breakdown phase for one launch arm.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArmSummary {
+    pub launch: PhaseQuantiles,
+    pub fetch: PhaseQuantiles,
+    pub data: PhaseQuantiles,
+    pub writeback: PhaseQuantiles,
+    pub end_to_end: PhaseQuantiles,
+}
+
+impl ArmSummary {
+    /// Summarize a run's completion log (single-channel runs only).
+    pub fn from_stats(s: &RunStats) -> Self {
+        Self {
+            launch: PhaseQuantiles::of(&s.histogram_of(|c| c.breakdown.launch)),
+            fetch: PhaseQuantiles::of(&s.histogram_of(|c| c.breakdown.fetch)),
+            data: PhaseQuantiles::of(&s.histogram_of(|c| c.breakdown.data)),
+            writeback: PhaseQuantiles::of(&s.histogram_of(|c| c.breakdown.writeback)),
+            end_to_end: PhaseQuantiles::of(&s.histogram_of(|c| c.breakdown.end_to_end())),
+        }
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"launch\": {}, \"fetch\": {}, \"data\": {}, \"writeback\": {}, \
+             \"end_to_end\": {}}}",
+            self.launch.json(),
+            self.fetch.json(),
+            self.data.json(),
+            self.writeback.json(),
+            self.end_to_end.json()
+        )
+    }
+}
+
+/// One grid point: batch size x payload size x memory configuration,
+/// both launch arms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyPoint {
+    pub batch: usize,
+    pub size: u32,
+    pub mem: String,
+    /// Transfers executed by each arm (`batch * ceil(TARGET/batch)`).
+    pub transfers: u64,
+    pub csr: ArmSummary,
+    pub ring: ArmSummary,
+}
+
+/// Payload stride: line-aligned like `workload::Sweep`.
+fn stride(size: u32) -> u64 {
+    (size as u64).next_multiple_of(map::LINE_BYTES)
+}
+
+fn rounds_for(batch: usize) -> usize {
+    TARGET_TRANSFERS.div_ceil(batch)
+}
+
+fn run_round<C: crate::dmac::Controller>(
+    sys: &mut System<C>,
+    naive: bool,
+    total: &mut RunStats,
+) {
+    let s = if naive {
+        sys.run_until_idle_naive().expect("latency round (naive)")
+    } else {
+        sys.run_until_idle().expect("latency round")
+    };
+    total.absorb(s);
+}
+
+/// Every completion's phases must sum from its MMIO stamp to its
+/// payload-B cycle (DESIGN.md §13 invariant; also property-tested
+/// across the stress suite).
+fn assert_breakdown_invariant(s: &RunStats) {
+    for c in &s.completions {
+        debug_assert_eq!(
+            c.launched_at + c.breakdown.launch + c.breakdown.fetch + c.breakdown.data,
+            c.cycle,
+            "breakdown phases do not partition the transfer lifetime"
+        );
+    }
+}
+
+/// CSR-launch arm: every transfer is its own single-descriptor chain
+/// and all of a round's launches land at the *same* cycle, so the
+/// serialized launch unit turns queue position into launch latency.
+pub fn run_csr_arm(batch: usize, size: u32, mem: MemProfile, naive: bool) -> RunStats {
+    let cfg = DmacConfig::speculation().with_mem_backend(mem.backend());
+    let mut sys = System::new(mem.latency(), Dmac::new(cfg));
+    let st = stride(size);
+    let rounds = rounds_for(batch);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, ((batch * rounds) as u64 * st) as usize, 0xA7);
+    let mut total = RunStats::default();
+    for round in 0..rounds {
+        // One burst: every CSR write of the round at the same cycle.
+        let t0 = sys.now() + DOORBELL_COST;
+        for k in 0..batch as u64 {
+            let idx = round as u64 * batch as u64 + k;
+            let mut cb = ChainBuilder::new();
+            cb.push_at(
+                map::DESC_BASE + k * 32,
+                Descriptor::new(map::SRC_BASE + idx * st, map::DST_BASE + idx * st, size)
+                    .with_irq(),
+            );
+            let head = cb.write_to(&mut sys.mem);
+            sys.schedule_launch(t0, head);
+        }
+        run_round(&mut sys, naive, &mut total);
+    }
+    total.irqs = sys.irqs_seen;
+    assert_breakdown_invariant(&total);
+    total
+}
+
+/// Ring-doorbell arm: the round's batch is published with one doorbell
+/// and descriptor fetches stream from consecutive submission-ring
+/// slots.
+pub fn run_ring_arm(batch: usize, size: u32, mem: MemProfile, naive: bool) -> RunStats {
+    let params = RingParams::enabled(SQ_BASE, SQ_ENTRIES, CQ_BASE, CQ_ENTRIES)
+        .with_coalescing(batch as u32, 1 << 20);
+    let cfg = DmacConfig::speculation().with_ring(params).with_mem_backend(mem.backend());
+    let mut sys = System::new(mem.latency(), Dmac::new(cfg));
+    let mut drv = RingDriver::new(0, params);
+    let st = stride(size);
+    let rounds = rounds_for(batch);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, ((batch * rounds) as u64 * st) as usize, 0xA7);
+    let mut total = RunStats::default();
+    let mut sq_at = DOORBELL_COST;
+    for round in 0..rounds {
+        let entries: Vec<RingEntry> = (0..batch as u64)
+            .map(|k| {
+                let idx = round as u64 * batch as u64 + k;
+                RingEntry::Memcpy {
+                    dst: map::DST_BASE + idx * st,
+                    src: map::SRC_BASE + idx * st,
+                    len: size,
+                }
+            })
+            .collect();
+        drv.submit_batch(&mut sys, sq_at, &entries).expect("ring sized for the batch");
+        run_round(&mut sys, naive, &mut total);
+        let cq_at = sys.now() + DOORBELL_COST;
+        let done = drv.poll_completions(&mut sys, cq_at);
+        assert_eq!(done.len(), batch, "every batch entry completed");
+        sq_at = cq_at + DOORBELL_COST;
+    }
+    // Drain the final CQ doorbell so the launch queue empties.
+    run_round(&mut sys, naive, &mut total);
+    total.irqs = sys.irqs_seen;
+    assert_breakdown_invariant(&total);
+    total
+}
+
+/// Run one grid point: both launch arms over identical payloads.
+pub fn run_latency(batch: usize, size: u32, mem: MemProfile, naive: bool) -> LatencyPoint {
+    let transfers = (batch * rounds_for(batch)) as u64;
+    assert!(transfers * stride(size) <= map::DST_BASE - map::SRC_BASE, "payload overruns arena");
+    assert!(batch as u32 <= SQ_ENTRIES, "batch exceeds the submission ring");
+    let csr = run_csr_arm(batch, size, mem, naive);
+    let ring = run_ring_arm(batch, size, mem, naive);
+    debug_assert_eq!(csr.total_bytes(), ring.total_bytes(), "arms moved different bytes");
+    debug_assert_eq!(csr.completions.len() as u64, transfers);
+    debug_assert_eq!(ring.completions.len() as u64, transfers);
+    LatencyPoint {
+        batch,
+        size,
+        mem: mem.name().to_string(),
+        transfers,
+        csr: ArmSummary::from_stats(&csr),
+        ring: ArmSummary::from_stats(&ring),
+    }
+}
+
+/// The full grid: batch sizes x payload sizes x memory configurations,
+/// in deterministic order on the parallel sweep executor.
+pub fn latency_grid(naive: bool) -> Vec<LatencyPoint> {
+    let mut tasks = Vec::new();
+    for &batch in &BATCH_SIZES {
+        for &size in &PAYLOAD_SIZES {
+            for &mem in &MemProfile::ALL {
+                tasks.push((batch, size, mem));
+            }
+        }
+    }
+    par_map(tasks, |_, (batch, size, mem)| run_latency(batch, size, mem, naive))
+}
+
+/// The machine-readable latency report (`BENCH_latency.json`, schema
+/// `idmac-latency/v1`).  Integer-only payload: exact-diffed by CI
+/// across scheduler modes and against the checked-in baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyReport {
+    pub points: Vec<LatencyPoint>,
+}
+
+impl LatencyReport {
+    pub fn new(points: Vec<LatencyPoint>) -> Self {
+        Self { points }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"schema\": \"idmac-latency/v1\",\n");
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"batch\": {}, \"size\": {}, \"mem\": {}, \"transfers\": {},\n     \
+                 \"csr\": {},\n     \"ring\": {}}}{}\n",
+                p.batch,
+                p.size,
+                json_str(&p.mem),
+                p.transfers,
+                p.csr.json(),
+                p.ring.json(),
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Human-readable sweep table for the CLI.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Latency — per-phase percentiles, CSR burst vs ring doorbell",
+            &[
+                "batch",
+                "size",
+                "memory",
+                "xfers",
+                "csr launch p50/p99",
+                "ring launch p50/p99",
+                "csr e2e p50/p99",
+                "ring e2e p50/p99",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                p.batch.to_string(),
+                p.size.to_string(),
+                p.mem.clone(),
+                p.transfers.to_string(),
+                format!("{}/{}", p.csr.launch.p50, p.csr.launch.p99),
+                format!("{}/{}", p.ring.launch.p50, p.ring.launch.p99),
+                format!("{}/{}", p.csr.end_to_end.p50, p.csr.end_to_end.p99),
+                format!("{}/{}", p.ring.end_to_end.p50, p.ring.end_to_end.p99),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_is_identical_across_schedulers() {
+        let fast = run_latency(8, 64, MemProfile::Ddr3, false);
+        let naive = run_latency(8, 64, MemProfile::Ddr3, true);
+        assert_eq!(fast, naive, "latency point diverged across schedulers");
+    }
+
+    #[test]
+    fn ring_doorbell_launch_p50_strictly_beats_csr_burst_at_batch_8_and_up() {
+        // The acceptance criterion: the CSR launch unit serializes a
+        // burst of same-cycle submissions chain by chain, while ring
+        // fetches pipeline from consecutive slots — so the ring arm's
+        // median launch phase is strictly lower once a batch queues.
+        for batch in [8usize, 64] {
+            let p = run_latency(batch, 64, MemProfile::Ddr3, false);
+            assert!(
+                p.ring.launch.p50 < p.csr.launch.p50,
+                "batch {batch}: ring launch p50 {} !< csr launch p50 {}",
+                p.ring.launch.p50,
+                p.csr.launch.p50
+            );
+        }
+    }
+
+    #[test]
+    fn csr_burst_launch_latency_grows_with_batch() {
+        // Queue position is launch latency in the CSR arm: the p99
+        // (back of the burst) must grow when the burst does.
+        let p1 = run_latency(1, 64, MemProfile::Ideal, false);
+        let p8 = run_latency(8, 64, MemProfile::Ideal, false);
+        assert!(
+            p8.csr.launch.p99 > p1.csr.launch.p99,
+            "batch 8 csr launch p99 {} !> batch 1 {}",
+            p8.csr.launch.p99,
+            p1.csr.launch.p99
+        );
+    }
+
+    #[test]
+    fn phases_are_populated_and_writeback_is_observed() {
+        // Both arms issue completion write-backs; the ring arm's CQ
+        // record B-response patches a nonzero writeback phase.
+        let ring = run_ring_arm(8, 64, MemProfile::Ddr3, false);
+        assert_eq!(ring.completions.len(), 48);
+        assert!(ring.completions.iter().any(|c| c.breakdown.writeback > 0));
+        assert!(ring.completions.iter().all(|c| c.breakdown.data > 0));
+        let csr = run_csr_arm(8, 64, MemProfile::Ddr3, false);
+        assert_eq!(csr.completions.len(), 48);
+        assert!(csr.completions.iter().all(|c| c.breakdown.launch > 0));
+    }
+
+    #[test]
+    fn dram_profile_runs_the_banked_backend() {
+        let p = run_latency(1, 64, MemProfile::Dram4, false);
+        assert_eq!(p.mem, "dram4");
+        assert_eq!(p.transfers, 48);
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wall_clock_free() {
+        let points = vec![run_latency(1, 64, MemProfile::Ideal, false)];
+        let a = LatencyReport::new(points.clone()).to_json();
+        let b = LatencyReport::new(points).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"idmac-latency/v1\""));
+        assert!(a.contains("\"csr\": {\"launch\": {\"p50\":"));
+        assert!(!a.contains("wall"), "no wall-clock fields allowed");
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+        assert_eq!(a.matches('[').count(), a.matches(']').count());
+    }
+
+    #[test]
+    fn mem_profile_names_are_distinct() {
+        let mut names: Vec<&str> = MemProfile::ALL.iter().map(|m| m.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), MemProfile::ALL.len());
+    }
+}

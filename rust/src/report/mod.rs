@@ -7,6 +7,7 @@ pub mod contention;
 pub mod dram;
 pub mod experiments;
 pub mod faults;
+pub mod latency;
 pub mod nd;
 pub mod parallel;
 pub mod rings;
@@ -16,6 +17,7 @@ pub mod translation;
 pub use contention::{ContentionPoint, MultiChannelReport};
 pub use dram::{DramPoint, DramReport, DramWorkload};
 pub use faults::{FaultPoint, FaultsReport};
+pub use latency::{ArmSummary, LatencyPoint, LatencyReport, MemProfile, PhaseQuantiles};
 pub use nd::{NdPoint, NdReport};
 pub use parallel::par_map;
 pub use rings::{RingPoint, RingsReport};

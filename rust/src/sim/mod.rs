@@ -18,10 +18,12 @@
 pub mod queue;
 pub mod stats;
 pub mod tickable;
+pub mod trace;
 
 pub use queue::MonotonicQueue;
-pub use stats::{RunStats, SteadyWindow};
+pub use stats::{Completion, Histogram, LatencyBreakdown, RunStats, SteadyWindow};
 pub use tickable::{EventHorizon, Tickable};
+pub use trace::{chrome_trace_json, TraceEvent, TraceRecord, Tracer};
 
 /// Simulation time in clock cycles.
 pub type Cycle = u64;

@@ -9,6 +9,36 @@
 
 use super::Cycle;
 
+/// Where a transfer's cycles went, phase by phase (DESIGN.md §13).
+///
+/// The four phases partition the transfer's lifetime: `launch` runs
+/// from the MMIO write that made the descriptor visible (CSR launch or
+/// ring doorbell) to the first descriptor beat arriving at the
+/// frontend; `fetch` to the backend accepting the parsed transfer;
+/// `data` to the payload burst's B response (which is exactly
+/// [`Completion::cycle`]); `writeback` to the completion write-back's
+/// own B response (0 for transfers without one, e.g. dropped CQ
+/// records).  `launched_at + launch + fetch + data == cycle` holds for
+/// every completion and is asserted across the stress suite.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyBreakdown {
+    /// MMIO launch → first descriptor beat at the frontend.
+    pub launch: u64,
+    /// First descriptor beat → backend accepts the parsed transfer.
+    pub fetch: u64,
+    /// Backend accept → payload B response (data movement).
+    pub data: u64,
+    /// Payload B → completion write-back B (0 if none was issued).
+    pub writeback: u64,
+}
+
+impl LatencyBreakdown {
+    /// Sum of all phases: launch-to-writeback end-to-end latency.
+    pub fn end_to_end(&self) -> u64 {
+        self.launch + self.fetch + self.data + self.writeback
+    }
+}
+
 /// Completion record of a single linear transfer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Completion {
@@ -16,6 +46,131 @@ pub struct Completion {
     pub cycle: Cycle,
     /// Payload bytes moved by this transfer.
     pub bytes: u64,
+    /// DMAC channel that executed the transfer (0 on single-channel
+    /// systems).
+    pub channel: u8,
+    /// Cycle of the MMIO write that launched the transfer.
+    pub launched_at: Cycle,
+    /// Per-phase latency split (zeroed for legacy records).
+    pub breakdown: LatencyBreakdown,
+}
+
+/// Deterministic log2-bucket latency histogram.
+///
+/// Bucket 0 holds the value 0; bucket `b >= 1` holds `[2^(b-1), 2^b)`
+/// (i.e. all values whose bit length is `b`).  Integer-only, so two
+/// runs that record the same values produce bit-identical histograms
+/// on every platform.  Percentiles use the nearest-rank definition
+/// (`rank = ceil(q * N)`) and report the bucket's upper bound clamped
+/// to the observed `[min, max]` range — exact for tight distributions,
+/// never more than 2x off for wide ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; 65],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; 65], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index of `v`: 0 for 0, else `v`'s bit length (1..=64).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `b`.
+    fn bucket_upper(b: usize) -> u64 {
+        match b {
+            0 => 0,
+            64.. => u64::MAX,
+            _ => (1u64 << b) - 1,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded value (0 for an empty histogram).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile `num/den` (e.g. `(99, 100)` for p99).
+    /// Returns 0 for an empty histogram.
+    pub fn percentile(&self, num: u64, den: u64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        debug_assert!(num <= den && den > 0);
+        let rank = ((self.count * num) + den - 1) / den;
+        let rank = rank.max(1);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_upper(b).clamp(self.min(), self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(1, 2)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99, 100)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(999, 1000)
+    }
 }
 
 /// Steady-state measurement window over a completion log.
@@ -125,8 +280,55 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    /// Legacy recorder: no breakdown (`launched_at = cycle`, zeroed
+    /// phases — the sum invariant holds trivially), channel 0.
     pub fn record_completion(&mut self, cycle: Cycle, bytes: u64) {
-        self.completions.push(Completion { cycle, bytes });
+        self.completions.push(Completion {
+            cycle,
+            bytes,
+            channel: 0,
+            launched_at: cycle,
+            breakdown: LatencyBreakdown::default(),
+        });
+    }
+
+    /// Record a completion with its full latency breakdown; returns
+    /// the record's index so the writeback phase can be patched in
+    /// when the completion write-back's B response lands (the only
+    /// phase that ends after [`Completion::cycle`]).
+    pub fn record_completion_full(&mut self, c: Completion) -> usize {
+        self.completions.push(c);
+        self.completions.len() - 1
+    }
+
+    /// Histogram of `metric` over the whole completion log.
+    pub fn histogram_of(&self, metric: impl Fn(&Completion) -> u64) -> Histogram {
+        let mut h = Histogram::new();
+        for c in &self.completions {
+            h.record(metric(c));
+        }
+        h
+    }
+
+    /// Histogram of `metric` over one channel's completions.
+    pub fn channel_histogram_of(
+        &self,
+        channel: u8,
+        metric: impl Fn(&Completion) -> u64,
+    ) -> Histogram {
+        let mut h = Histogram::new();
+        for c in self.completions.iter().filter(|c| c.channel == channel) {
+            h.record(metric(c));
+        }
+        h
+    }
+
+    /// Sorted distinct channels present in the completion log.
+    pub fn channels(&self) -> Vec<u8> {
+        let mut chs: Vec<u8> = self.completions.iter().map(|c| c.channel).collect();
+        chs.sort_unstable();
+        chs.dedup();
+        chs
     }
 
     /// Count one AXI error response by kind (no-op for OKAY).
@@ -227,6 +429,99 @@ impl RunStats {
             Some(self.spec_hits as f64 / total as f64)
         }
     }
+
+    /// Machine-readable dump (`idmac-runstats/v1`): every counter, a
+    /// per-channel percentile summary, and (optionally) the raw
+    /// completion log.  Hand-rolled — all fields are integers, so no
+    /// escaping is needed and the output is byte-deterministic.
+    pub fn to_json(&self, with_completions: bool) -> String {
+        let mut out = String::from("{\"schema\":\"idmac-runstats/v1\"");
+        let mut num = |k: &str, v: u64| out.push_str(&format!(",\"{k}\":{v}"));
+        num("transfers", self.completions.len() as u64);
+        num("total_bytes", self.total_bytes());
+        num("desc_beats", self.desc_beats);
+        num("wasted_desc_beats", self.wasted_desc_beats);
+        num("payload_read_beats", self.payload_read_beats);
+        num("payload_write_beats", self.payload_write_beats);
+        num("writeback_beats", self.writeback_beats);
+        num("spec_hits", self.spec_hits);
+        num("spec_misses", self.spec_misses);
+        num("eoc_flushes", self.eoc_flushes);
+        num("nd_descriptors", self.nd_descriptors);
+        num("nd_rows", self.nd_rows);
+        num("nd_ext_reuses", self.nd_ext_reuses);
+        num("irqs", self.irqs);
+        num("tlb_hits", self.tlb_hits);
+        num("tlb_misses", self.tlb_misses);
+        num("tlb_evictions", self.tlb_evictions);
+        num("ptw_walks", self.ptw_walks);
+        num("ptw_beats", self.ptw_beats);
+        num("ptw_prefetch_walks", self.ptw_prefetch_walks);
+        num("ptw_prefetch_aborts", self.ptw_prefetch_aborts);
+        num("iommu_faults", self.iommu_faults);
+        num("ring_doorbells", self.ring_doorbells);
+        num("ring_entries", self.ring_entries);
+        num("cq_records", self.cq_records);
+        num("cq_overflows", self.cq_overflows);
+        num("axi_slverrs", self.axi_slverrs);
+        num("axi_decerrs", self.axi_decerrs);
+        num("fault_halts", self.fault_halts);
+        num("aborted_transfers", self.aborted_transfers);
+        num("watchdog_trips", self.watchdog_trips);
+        num("channel_resets", self.channel_resets);
+        num("error_irqs", self.error_irqs);
+        num("cq_error_records", self.cq_error_records);
+        num("end_cycle", self.end_cycle);
+        out.push_str(",\"channels\":[");
+        for (i, ch) in self.channels().into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let phase = |name: &str, f: &dyn Fn(&Completion) -> u64| {
+                let h = self.channel_histogram_of(ch, f);
+                format!(
+                    "\"{name}\":{{\"p50\":{},\"p99\":{},\"p999\":{},\"max\":{}}}",
+                    h.p50(),
+                    h.p99(),
+                    h.p999(),
+                    h.max()
+                )
+            };
+            let n = self.completions.iter().filter(|c| c.channel == ch).count();
+            out.push_str(&format!(
+                "{{\"channel\":{ch},\"transfers\":{n},{},{},{},{},{}}}",
+                phase("launch", &|c| c.breakdown.launch),
+                phase("fetch", &|c| c.breakdown.fetch),
+                phase("data", &|c| c.breakdown.data),
+                phase("writeback", &|c| c.breakdown.writeback),
+                phase("end_to_end", &|c| c.breakdown.end_to_end()),
+            ));
+        }
+        out.push(']');
+        if with_completions {
+            out.push_str(",\"completions\":[");
+            for (i, c) in self.completions.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"cycle\":{},\"bytes\":{},\"channel\":{},\"launched_at\":{},\
+                     \"launch\":{},\"fetch\":{},\"data\":{},\"writeback\":{}}}",
+                    c.cycle,
+                    c.bytes,
+                    c.channel,
+                    c.launched_at,
+                    c.breakdown.launch,
+                    c.breakdown.fetch,
+                    c.breakdown.data,
+                    c.breakdown.writeback
+                ));
+            }
+            out.push(']');
+        }
+        out.push('}');
+        out
+    }
 }
 
 #[cfg(test)]
@@ -312,5 +607,127 @@ mod tests {
         let w = s.steady_window().unwrap();
         assert!((w.utilization(8) - 1.0).abs() < 1e-9);
         assert!((w.utilization(16) - 0.5).abs() < 1e-9);
+    }
+
+    // ---- histogram semantics (ISSUE 8 satellite: boundary pins) ----
+
+    #[test]
+    fn histogram_bucket_boundaries_are_exact() {
+        // Bucket index == bit length: 0 is its own bucket, 2^k opens
+        // bucket k+1, 2^k - 1 closes bucket k.
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        for k in 1..=63u32 {
+            assert_eq!(Histogram::bucket_of(1u64 << k), k as usize + 1, "2^{k}");
+            assert_eq!(Histogram::bucket_of((1u64 << k) - 1), k as usize, "2^{k}-1");
+        }
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+    }
+
+    #[test]
+    fn histogram_percentiles_on_a_tight_distribution_are_exact() {
+        // All values equal => every percentile is that value exactly
+        // (the bucket upper bound clamps to the observed max).
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(10);
+        }
+        assert_eq!(h.p50(), 10);
+        assert_eq!(h.p99(), 10);
+        assert_eq!(h.p999(), 10);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 1000);
+        assert_eq!((h.min(), h.max()), (10, 10));
+    }
+
+    #[test]
+    fn histogram_percentiles_separate_a_bimodal_distribution() {
+        // 99 fast (1 cycle) + 1 slow (1000 cycles): the median and p99
+        // stay at 1, p99.9 surfaces the outlier.
+        let mut h = Histogram::new();
+        for _ in 0..99 {
+            h.record(1);
+        }
+        h.record(1000);
+        assert_eq!(h.p50(), 1);
+        assert_eq!(h.p99(), 1);
+        assert_eq!(h.p999(), 1000);
+    }
+
+    #[test]
+    fn histogram_of_zeroes_and_empty() {
+        let mut h = Histogram::new();
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.min(), 0);
+        h.record(0);
+        assert_eq!((h.p50(), h.p999()), (0, 0));
+    }
+
+    #[test]
+    fn histogram_merge_matches_recording_the_union() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for v in [1u64, 2, 3, 100, 7, 8, 0, 4096] {
+            if v % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn breakdown_sums_to_end_to_end() {
+        let b = LatencyBreakdown { launch: 3, fetch: 10, data: 40, writeback: 7 };
+        assert_eq!(b.end_to_end(), 60);
+        assert_eq!(LatencyBreakdown::default().end_to_end(), 0);
+    }
+
+    #[test]
+    fn channel_histograms_split_by_channel() {
+        let mut s = RunStats::default();
+        for (ch, e2e) in [(0u8, 10u64), (0, 12), (1, 100)] {
+            s.record_completion_full(Completion {
+                cycle: 1000,
+                bytes: 64,
+                channel: ch,
+                launched_at: 1000 - e2e,
+                breakdown: LatencyBreakdown { launch: 1, fetch: 1, data: e2e - 2, writeback: 0 },
+            });
+        }
+        assert_eq!(s.channels(), vec![0, 1]);
+        let h0 = s.channel_histogram_of(0, |c| c.breakdown.end_to_end());
+        let h1 = s.channel_histogram_of(1, |c| c.breakdown.end_to_end());
+        assert_eq!(h0.count(), 2);
+        assert_eq!(h1.count(), 1);
+        assert_eq!(h1.p50(), 100);
+        assert_eq!(s.histogram_of(|c| c.breakdown.end_to_end()).count(), 3);
+    }
+
+    #[test]
+    fn stats_json_is_wellformed_and_deterministic() {
+        let mut s = stats_with(4, 10, 64);
+        s.spec_hits = 3;
+        let a = s.to_json(true);
+        let b = s.to_json(true);
+        assert_eq!(a, b);
+        assert!(a.starts_with("{\"schema\":\"idmac-runstats/v1\""));
+        assert!(a.ends_with('}'));
+        assert!(a.contains("\"spec_hits\":3"));
+        assert!(a.contains("\"completions\":["));
+        assert!(a.contains("\"channels\":[{\"channel\":0"));
+        let no_log = s.to_json(false);
+        assert!(!no_log.contains("\"completions\""));
+        // Legacy records keep the sum invariant trivially.
+        for c in &s.completions {
+            assert_eq!(
+                c.launched_at + c.breakdown.launch + c.breakdown.fetch + c.breakdown.data,
+                c.cycle
+            );
+        }
     }
 }

@@ -1,0 +1,484 @@
+//! Cycle-stamped event tracing (DESIGN.md §13).
+//!
+//! [`Tracer`] is an *observer-only* recording handle: models that hold
+//! one append typed [`TraceEvent`]s to a shared buffer but never read
+//! it back, so tracing cannot influence timing, arbitration or data.
+//! The handle is installed once by the testbench (like the fault plan
+//! and the memory backend — see `dmac::Controller::install_tracer`),
+//! and only when `DmacConfig::trace` is set; a trace-capable build with
+//! the flag off carries `None` everywhere and is cycle-identical to the
+//! pre-trace model.  Both directions are property-tested in
+//! `tests/trace.rs` under both schedulers.
+//!
+//! Two determinism caveats are part of the contract:
+//!
+//! * Event *payloads and stamps* are deterministic, but the buffer
+//!   *order* of same-cycle events may differ between the naive and
+//!   fast-forward schedulers (lazy DRAM refresh catch-up runs at
+//!   whatever cycle the scheduler actually ticks; the refresh event is
+//!   therefore stamped with the refresh *boundary*, not the catch-up
+//!   cycle).  Cross-scheduler identity is promised for `RunStats`, the
+//!   clock and the memory image — not for trace byte order.
+//! * [`chrome_trace_json`] stably sorts records by timestamp before
+//!   emitting, so the exported file always has monotone non-decreasing
+//!   `ts` per track regardless of buffer order.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+
+use super::Cycle;
+use crate::axi::monitor::UtilWindow;
+use crate::axi::types::Port;
+
+/// What kind of fault the installed [`FaultPlan`] injected.
+///
+/// [`FaultPlan`]: crate::mem::faults::FaultPlan
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A read beat's response was upgraded to an error.
+    ReadErr,
+    /// A read beat was stalled on the request pipe.
+    ReadStall,
+    /// A write beat's response was upgraded to an error.
+    WriteErr,
+    /// A burst's B response was withheld (watchdog territory).
+    BWithhold,
+}
+
+/// One typed, cycle-stamped occurrence somewhere in the stack.
+///
+/// Variants carry the emitting [`Port`] where the source is a per-
+/// channel DMAC unit; memory/IOMMU/SoC events are system-wide and
+/// identify their subject directly (address, VPN, bank, IRQ source).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    // ---- launch unit / MMIO (emitted by `tb::System`) ----
+    /// CSR chain launch: `DESC_ADDR` write + `CTRL.START`.
+    CsrLaunch { addr: u64 },
+    /// Submission-queue tail doorbell on channel `ch`.
+    SqDoorbell { ch: u8, tail: u64 },
+    /// Completion-queue head doorbell (credit return) on channel `ch`.
+    CqDoorbell { ch: u8, head: u64 },
+    /// MMIO channel reset strobe.
+    MmioReset { ch: u8 },
+
+    // ---- descriptor path (frontend) ----
+    /// Descriptor fetch granted on the AR channel.
+    DescFetchIssue { port: Port, addr: u64, beats: u32, speculative: bool },
+    /// Descriptor beat returned on the R channel.
+    DescBeat { port: Port, addr: u64, beat: u32, last: bool },
+    /// Speculative next-descriptor fetch confirmed by the NEXT field.
+    SpecHit { port: Port, addr: u64 },
+    /// Speculative fetch contradicted: predicted vs actual NEXT.
+    SpecMiss { port: Port, predicted: u64, actual: u64 },
+    /// Mispredicted fetch discarded (`wasted` beats already fetched).
+    SpecFlush { port: Port, addr: u64 },
+
+    // ---- data path (backend) ----
+    /// Payload read burst granted on the AR channel.
+    BurstIssue { port: Port, addr: u64, beats: u32 },
+    /// Payload write beat accepted on the W channel.
+    DataBeat { port: Port, addr: u64, last: bool },
+    /// B response consumed for a payload burst.
+    WriteB { port: Port, err: bool },
+
+    // ---- completion path (frontend) ----
+    /// Completion-queue record write queued.
+    CqWrite { port: Port, addr: u64 },
+    /// Interrupt edge raised toward the SoC (`error` distinguishes the
+    /// error/watchdog line from the completion line).
+    IrqRaise { port: Port, error: bool },
+    /// Channel halted with a fault `code` (CSR `FAULT` field).
+    ChannelHalt { port: Port, code: u32 },
+    /// Channel reset (MMIO-initiated recovery).
+    ChannelReset { port: Port },
+
+    // ---- memory & faults ----
+    /// The installed fault plan injected a fault at `addr`.
+    FaultInjected { kind: FaultKind, addr: u64 },
+    /// DRAM access hit the open row.
+    DramRowHit { bank: u8 },
+    /// DRAM access to an idle bank (row activate, no precharge).
+    DramRowMiss { bank: u8 },
+    /// DRAM access conflicted with an open row (precharge + activate).
+    DramRowConflict { bank: u8 },
+    /// DRAM refresh window; stamped with the refresh *boundary* cycle
+    /// so the stamp is identical under both schedulers (the catch-up
+    /// runs lazily at the next ticked cycle).
+    DramRefresh { boundary: Cycle },
+
+    // ---- IOMMU ----
+    /// IOTLB hit for `vpn`.
+    TlbHit { vpn: u64 },
+    /// IOTLB miss for `vpn` (a walk will be scheduled).
+    TlbMiss { vpn: u64 },
+    /// Page-table walk issued for `vpn` (demand or prefetch).
+    PteWalk { vpn: u64, prefetch: bool },
+
+    // ---- SoC ----
+    /// PLIC interrupt source raised.
+    PlicRaise { source: u32 },
+}
+
+impl TraceEvent {
+    /// Stable event name for the Chrome trace export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::CsrLaunch { .. } => "csr_launch",
+            TraceEvent::SqDoorbell { .. } => "sq_doorbell",
+            TraceEvent::CqDoorbell { .. } => "cq_doorbell",
+            TraceEvent::MmioReset { .. } => "mmio_reset",
+            TraceEvent::DescFetchIssue { .. } => "desc_fetch_issue",
+            TraceEvent::DescBeat { .. } => "desc_beat",
+            TraceEvent::SpecHit { .. } => "spec_hit",
+            TraceEvent::SpecMiss { .. } => "spec_miss",
+            TraceEvent::SpecFlush { .. } => "spec_flush",
+            TraceEvent::BurstIssue { .. } => "burst_issue",
+            TraceEvent::DataBeat { .. } => "data_beat",
+            TraceEvent::WriteB { .. } => "write_b",
+            TraceEvent::CqWrite { .. } => "cq_write",
+            TraceEvent::IrqRaise { .. } => "irq_raise",
+            TraceEvent::ChannelHalt { .. } => "channel_halt",
+            TraceEvent::ChannelReset { .. } => "channel_reset",
+            TraceEvent::FaultInjected { .. } => "fault_injected",
+            TraceEvent::DramRowHit { .. } => "dram_row_hit",
+            TraceEvent::DramRowMiss { .. } => "dram_row_miss",
+            TraceEvent::DramRowConflict { .. } => "dram_row_conflict",
+            TraceEvent::DramRefresh { .. } => "dram_refresh",
+            TraceEvent::TlbHit { .. } => "tlb_hit",
+            TraceEvent::TlbMiss { .. } => "tlb_miss",
+            TraceEvent::PteWalk { .. } => "pte_walk",
+            TraceEvent::PlicRaise { .. } => "plic_raise",
+        }
+    }
+
+    /// Chrome `tid` — one track per pipeline stage, so a timeline view
+    /// reads top-to-bottom as launch → fetch → data → completion.
+    pub fn track(&self) -> u32 {
+        match self {
+            TraceEvent::CsrLaunch { .. }
+            | TraceEvent::SqDoorbell { .. }
+            | TraceEvent::CqDoorbell { .. }
+            | TraceEvent::MmioReset { .. } => 0,
+            TraceEvent::DescFetchIssue { .. } | TraceEvent::DescBeat { .. } => 1,
+            TraceEvent::SpecHit { .. }
+            | TraceEvent::SpecMiss { .. }
+            | TraceEvent::SpecFlush { .. } => 2,
+            TraceEvent::BurstIssue { .. }
+            | TraceEvent::DataBeat { .. }
+            | TraceEvent::WriteB { .. } => 3,
+            TraceEvent::CqWrite { .. } | TraceEvent::IrqRaise { .. } => 4,
+            TraceEvent::ChannelHalt { .. } | TraceEvent::ChannelReset { .. } => 5,
+            TraceEvent::FaultInjected { .. } => 6,
+            TraceEvent::TlbHit { .. } | TraceEvent::TlbMiss { .. } | TraceEvent::PteWalk { .. } => {
+                7
+            }
+            TraceEvent::DramRowHit { .. }
+            | TraceEvent::DramRowMiss { .. }
+            | TraceEvent::DramRowConflict { .. }
+            | TraceEvent::DramRefresh { .. } => 8,
+            TraceEvent::PlicRaise { .. } => 9,
+        }
+    }
+
+    /// JSON `args` object for the Chrome trace export.  Every payload
+    /// is an integer or bool, so no string escaping is ever needed.
+    pub fn args_json(&self) -> String {
+        let port = |p: &Port| p.index();
+        match self {
+            TraceEvent::CsrLaunch { addr } => format!("{{\"addr\":{addr}}}"),
+            TraceEvent::SqDoorbell { ch, tail } => format!("{{\"ch\":{ch},\"tail\":{tail}}}"),
+            TraceEvent::CqDoorbell { ch, head } => format!("{{\"ch\":{ch},\"head\":{head}}}"),
+            TraceEvent::MmioReset { ch } => format!("{{\"ch\":{ch}}}"),
+            TraceEvent::DescFetchIssue { port: p, addr, beats, speculative } => format!(
+                "{{\"port\":{},\"addr\":{addr},\"beats\":{beats},\"speculative\":{speculative}}}",
+                port(p)
+            ),
+            TraceEvent::DescBeat { port: p, addr, beat, last } => format!(
+                "{{\"port\":{},\"addr\":{addr},\"beat\":{beat},\"last\":{last}}}",
+                port(p)
+            ),
+            TraceEvent::SpecHit { port: p, addr } => {
+                format!("{{\"port\":{},\"addr\":{addr}}}", port(p))
+            }
+            TraceEvent::SpecMiss { port: p, predicted, actual } => format!(
+                "{{\"port\":{},\"predicted\":{predicted},\"actual\":{actual}}}",
+                port(p)
+            ),
+            TraceEvent::SpecFlush { port: p, addr } => {
+                format!("{{\"port\":{},\"addr\":{addr}}}", port(p))
+            }
+            TraceEvent::BurstIssue { port: p, addr, beats } => {
+                format!("{{\"port\":{},\"addr\":{addr},\"beats\":{beats}}}", port(p))
+            }
+            TraceEvent::DataBeat { port: p, addr, last } => {
+                format!("{{\"port\":{},\"addr\":{addr},\"last\":{last}}}", port(p))
+            }
+            TraceEvent::WriteB { port: p, err } => {
+                format!("{{\"port\":{},\"err\":{err}}}", port(p))
+            }
+            TraceEvent::CqWrite { port: p, addr } => {
+                format!("{{\"port\":{},\"addr\":{addr}}}", port(p))
+            }
+            TraceEvent::IrqRaise { port: p, error } => {
+                format!("{{\"port\":{},\"error\":{error}}}", port(p))
+            }
+            TraceEvent::ChannelHalt { port: p, code } => {
+                format!("{{\"port\":{},\"code\":{code}}}", port(p))
+            }
+            TraceEvent::ChannelReset { port: p } => format!("{{\"port\":{}}}", port(p)),
+            TraceEvent::FaultInjected { kind, addr } => {
+                let k = match kind {
+                    FaultKind::ReadErr => 0,
+                    FaultKind::ReadStall => 1,
+                    FaultKind::WriteErr => 2,
+                    FaultKind::BWithhold => 3,
+                };
+                format!("{{\"kind\":{k},\"addr\":{addr}}}")
+            }
+            TraceEvent::DramRowHit { bank }
+            | TraceEvent::DramRowMiss { bank }
+            | TraceEvent::DramRowConflict { bank } => format!("{{\"bank\":{bank}}}"),
+            TraceEvent::DramRefresh { boundary } => format!("{{\"boundary\":{boundary}}}"),
+            TraceEvent::TlbHit { vpn } | TraceEvent::TlbMiss { vpn } => {
+                format!("{{\"vpn\":{vpn}}}")
+            }
+            TraceEvent::PteWalk { vpn, prefetch } => {
+                format!("{{\"vpn\":{vpn},\"prefetch\":{prefetch}}}")
+            }
+            TraceEvent::PlicRaise { source } => format!("{{\"source\":{source}}}"),
+        }
+    }
+}
+
+/// A [`TraceEvent`] plus the cycle it was observed at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub cycle: Cycle,
+    pub event: TraceEvent,
+}
+
+/// Shared, append-only event buffer.
+///
+/// Handles created with [`Tracer::handle`] append to the *same* buffer
+/// (that is how the testbench, controller and memory all feed one
+/// trace).  `Clone`, by contrast, is deliberately *detaching*: it
+/// returns a handle to a fresh empty buffer.  `tb::System` derives
+/// `Clone` for the debug cross-check (`run_until_idle_cross_checked`
+/// clones the whole system and replays it on the other scheduler), and
+/// a cloned system double-logging into the original buffer would make
+/// tracing observable.  A detached clone records into the void, which
+/// is exactly right for a shadow replay.
+pub struct Tracer {
+    buf: Rc<RefCell<Vec<TraceRecord>>>,
+}
+
+impl Tracer {
+    /// Fresh tracer with an empty buffer.
+    pub fn new() -> Self {
+        Tracer { buf: Rc::new(RefCell::new(Vec::new())) }
+    }
+
+    /// A handle appending to the *same* buffer (explicit sharing —
+    /// `Clone` detaches instead, see the type docs).
+    pub fn handle(&self) -> Tracer {
+        Tracer { buf: Rc::clone(&self.buf) }
+    }
+
+    /// Append one event stamped `cycle`.
+    pub fn emit(&self, cycle: Cycle, event: TraceEvent) {
+        self.buf.borrow_mut().push(TraceRecord { cycle, event });
+    }
+
+    /// Number of records buffered so far.
+    pub fn len(&self) -> usize {
+        self.buf.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain the buffer, leaving it empty.
+    pub fn take(&self) -> Vec<TraceRecord> {
+        std::mem::take(&mut *self.buf.borrow_mut())
+    }
+
+    /// Copy of the buffer without draining it.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        self.buf.borrow().clone()
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+/// Detaching clone — see the type docs.
+impl Clone for Tracer {
+    fn clone(&self) -> Self {
+        Tracer::new()
+    }
+}
+
+impl fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Tracer").field("records", &self.len()).finish()
+    }
+}
+
+/// Render records (plus an optional windowed bus-utilization timeline
+/// from the [`BusMonitor`]) as Chrome/Perfetto trace-event JSON
+/// (`chrome://tracing` "JSON Array Format").
+///
+/// Records are stably sorted by timestamp first, so `ts` is monotone
+/// non-decreasing on every `(pid, tid)` track no matter what order the
+/// two schedulers appended same-cycle events in.  Utilization windows
+/// become `"ph":"C"` counter events on their own track.
+///
+/// [`BusMonitor`]: crate::axi::monitor::BusMonitor
+pub fn chrome_trace_json(records: &[TraceRecord], windows: &[UtilWindow], window: Cycle) -> String {
+    let mut sorted: Vec<&TraceRecord> = records.iter().collect();
+    sorted.sort_by_key(|r| r.cycle);
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for r in &sorted {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"ph\":\"i\",\"ts\":{},\"pid\":0,\"tid\":{},\"s\":\"t\",\"args\":{}}}",
+            r.event.name(),
+            r.cycle,
+            r.event.track(),
+            r.event.args_json()
+        ));
+    }
+    for w in windows {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"bus_utilization\",\"ph\":\"C\",\"ts\":{},\"pid\":0,\"tid\":10,\
+             \"args\":{{\"read_beats\":{},\"write_beats\":{}}}}}",
+            w.start, w.read_beats, w.write_beats
+        ));
+    }
+    out.push_str(&format!("],\"displayTimeUnit\":\"ns\",\"idmacWindowCycles\":{window}}}"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_appends_to_the_same_buffer() {
+        let t = Tracer::new();
+        let h = t.handle();
+        t.emit(1, TraceEvent::CsrLaunch { addr: 0x40 });
+        h.emit(2, TraceEvent::PlicRaise { source: 5 });
+        assert_eq!(t.len(), 2);
+        assert_eq!(h.len(), 2);
+        let recs = t.snapshot();
+        assert_eq!(recs[0], TraceRecord { cycle: 1, event: TraceEvent::CsrLaunch { addr: 0x40 } });
+        assert_eq!(recs[1].cycle, 2);
+    }
+
+    #[test]
+    fn clone_detaches_from_the_buffer() {
+        let t = Tracer::new();
+        t.emit(1, TraceEvent::MmioReset { ch: 0 });
+        #[allow(clippy::redundant_clone)]
+        let c = t.clone();
+        assert!(c.is_empty(), "a cloned tracer must start empty");
+        c.emit(2, TraceEvent::MmioReset { ch: 1 });
+        assert_eq!(t.len(), 1, "the original must not see the clone's events");
+    }
+
+    #[test]
+    fn take_drains_the_buffer() {
+        let t = Tracer::new();
+        t.emit(3, TraceEvent::TlbHit { vpn: 7 });
+        assert_eq!(t.take().len(), 1);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn every_variant_has_wellformed_args() {
+        use TraceEvent::*;
+        let p = Port::Frontend;
+        let all = [
+            CsrLaunch { addr: 1 },
+            SqDoorbell { ch: 0, tail: 4 },
+            CqDoorbell { ch: 0, head: 2 },
+            MmioReset { ch: 1 },
+            DescFetchIssue { port: p, addr: 0x40, beats: 4, speculative: true },
+            DescBeat { port: p, addr: 0x40, beat: 0, last: false },
+            SpecHit { port: p, addr: 0x80 },
+            SpecMiss { port: p, predicted: 0x80, actual: 0xc0 },
+            SpecFlush { port: p, addr: 0x80 },
+            BurstIssue { port: p, addr: 0x1000, beats: 8 },
+            DataBeat { port: p, addr: 0x2000, last: true },
+            WriteB { port: p, err: false },
+            CqWrite { port: p, addr: 0x3000 },
+            IrqRaise { port: p, error: false },
+            ChannelHalt { port: p, code: 2 },
+            ChannelReset { port: p },
+            FaultInjected { kind: FaultKind::ReadErr, addr: 0x5000 },
+            DramRowHit { bank: 1 },
+            DramRowMiss { bank: 2 },
+            DramRowConflict { bank: 3 },
+            DramRefresh { boundary: 7800 },
+            TlbHit { vpn: 0x10 },
+            TlbMiss { vpn: 0x11 },
+            PteWalk { vpn: 0x11, prefetch: false },
+            PlicRaise { source: 5 },
+        ];
+        for ev in all {
+            let a = ev.args_json();
+            assert!(a.starts_with('{') && a.ends_with('}'), "{a}");
+            assert!(!ev.name().is_empty());
+            assert!(ev.track() <= 9);
+        }
+    }
+
+    #[test]
+    fn chrome_export_sorts_by_timestamp() {
+        let t = Tracer::new();
+        // Deliberately out of order (same-cycle reordering across
+        // schedulers is allowed by the contract).
+        t.emit(50, TraceEvent::PlicRaise { source: 5 });
+        t.emit(10, TraceEvent::CsrLaunch { addr: 0x40 });
+        t.emit(30, TraceEvent::TlbMiss { vpn: 2 });
+        let json = chrome_trace_json(
+            &t.snapshot(),
+            &[UtilWindow { start: 0, read_beats: 3, write_beats: 4 }],
+            64,
+        );
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with('}'));
+        let ts: Vec<u64> = json
+            .match_indices("\"ts\":")
+            .map(|(i, _)| {
+                json[i + 5..].chars().take_while(|c| c.is_ascii_digit()).collect::<String>()
+            })
+            .map(|s| s.parse().unwrap())
+            .collect();
+        // Instant events come first, sorted; the counter track follows.
+        assert_eq!(ts, vec![10, 30, 50, 0]);
+        assert!(json.contains("\"ph\":\"C\""));
+        assert!(json.contains("\"read_beats\":3"));
+    }
+
+    #[test]
+    fn chrome_export_of_an_empty_trace_is_valid() {
+        let json = chrome_trace_json(&[], &[], 0);
+        assert!(json.starts_with("{\"traceEvents\":[]"));
+    }
+}

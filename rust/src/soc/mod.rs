@@ -11,6 +11,7 @@ pub use plic::Plic;
 
 use crate::dmac::Controller;
 use crate::mem::LatencyProfile;
+use crate::sim::trace::TraceEvent;
 use crate::sim::{Cycle, CycleBudget, EventHorizon, RunStats, Tickable};
 use crate::tb::System;
 
@@ -94,6 +95,14 @@ impl<C: Controller> Soc<C> {
         self.sys.now()
     }
 
+    /// Raise a PLIC source, tracing the edge when tracing is on.
+    fn raise(&mut self, source: u32) {
+        if let Some(t) = self.sys.tracer() {
+            t.emit(self.sys.now(), TraceEvent::PlicRaise { source });
+        }
+        self.plic.raise(source);
+    }
+
     /// One SoC clock: testbench tick + IRQ routing to the PLIC (one
     /// banked source per channel).
     pub fn tick(&mut self) {
@@ -104,7 +113,7 @@ impl<C: Controller> Soc<C> {
         for ch in 0..self.sys.irq_edges.len() {
             let edges = self.sys.irq_edges[ch] - self.irqs_routed[ch];
             for _ in 0..edges {
-                self.plic.raise(dmac_irq_source(ch));
+                self.raise(dmac_irq_source(ch));
             }
             self.irqs_routed[ch] = self.sys.irq_edges[ch];
         }
@@ -114,7 +123,7 @@ impl<C: Controller> Soc<C> {
         for ch in 0..self.sys.fault_edges.len() {
             let edges = self.sys.fault_edges[ch] - self.faults_routed[ch];
             for _ in 0..edges {
-                self.plic.raise(iommu_fault_source(ch));
+                self.raise(iommu_fault_source(ch));
             }
             self.faults_routed[ch] = self.sys.fault_edges[ch];
         }
@@ -124,7 +133,7 @@ impl<C: Controller> Soc<C> {
         for ch in 0..self.sys.ring_irq_edges.len() {
             let edges = self.sys.ring_irq_edges[ch] - self.ring_irqs_routed[ch];
             for _ in 0..edges {
-                self.plic.raise(ring_irq_source(ch));
+                self.raise(ring_irq_source(ch));
             }
             self.ring_irqs_routed[ch] = self.sys.ring_irq_edges[ch];
         }
@@ -134,7 +143,7 @@ impl<C: Controller> Soc<C> {
         for ch in 0..self.sys.error_irq_edges.len() {
             let edges = self.sys.error_irq_edges[ch] - self.error_irqs_routed[ch];
             for _ in 0..edges {
-                self.plic.raise(error_irq_source(ch));
+                self.raise(error_irq_source(ch));
             }
             self.error_irqs_routed[ch] = self.sys.error_irq_edges[ch];
         }

@@ -10,6 +10,7 @@
 use crate::axi::{ArbPolicy, Arbiter, BusMonitor, Port};
 use crate::dmac::{ChainBuilder, Controller};
 use crate::mem::{LatencyProfile, Memory};
+use crate::sim::trace::{TraceEvent, TraceRecord, Tracer};
 use crate::sim::{Cycle, CycleBudget, EventHorizon, RunStats};
 use std::collections::VecDeque;
 
@@ -71,6 +72,11 @@ pub struct System<C: Controller> {
     pub first_payload_r: Option<Cycle>,
     /// First payload W-beat issue cycle (Table IV `r-w`).
     pub first_payload_w: Option<Cycle>,
+    /// Shared trace buffer, created and installed (controller + memory)
+    /// when the controller's config enables tracing.  `Clone` detaches
+    /// on purpose: the cross-check's shadow replay records into the
+    /// void instead of double-logging (see `sim::trace`).
+    tracer: Option<Tracer>,
 }
 
 impl<C: Controller> System<C> {
@@ -78,7 +84,7 @@ impl<C: Controller> System<C> {
         Self::with_memory(Memory::new(DEFAULT_MEM_BYTES, profile), ctrl)
     }
 
-    pub fn with_memory(mut mem: Memory, ctrl: C) -> Self {
+    pub fn with_memory(mut mem: Memory, mut ctrl: C) -> Self {
         let ports = ctrl.ports().to_vec();
         // The device under test owns the fault plan and the timing
         // backend (both are part of its configuration), but they run
@@ -86,6 +92,18 @@ impl<C: Controller> System<C> {
         // two meet.
         mem.install_faults(ctrl.fault_config());
         mem.install_backend(ctrl.mem_backend());
+        // The trace handle follows the same pattern, after the backend
+        // (a backend swap builds a fresh DRAM core).  When tracing is
+        // off, nothing is installed and every component carries `None`
+        // — cycle-identical to the pre-trace model by construction.
+        let tracer = if ctrl.trace_enabled() {
+            let t = Tracer::new();
+            ctrl.install_tracer(&t);
+            mem.install_tracer(&t);
+            Some(t)
+        } else {
+            None
+        };
         Self {
             mem,
             ctrl,
@@ -104,6 +122,24 @@ impl<C: Controller> System<C> {
             first_ar: Vec::new(),
             first_payload_r: None,
             first_payload_w: None,
+            tracer,
+        }
+    }
+
+    /// The installed trace buffer (Some only when the controller's
+    /// config enables tracing).
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Drain the collected trace (empty when tracing is off).
+    pub fn take_trace(&mut self) -> Vec<TraceRecord> {
+        self.tracer.as_ref().map(Tracer::take).unwrap_or_default()
+    }
+
+    fn trace(&self, ev: TraceEvent) {
+        if let Some(t) = self.tracer.as_ref() {
+            t.emit(self.now, ev);
         }
     }
 
@@ -197,10 +233,22 @@ impl<C: Controller> System<C> {
             }
             let _ = self.launches.remove(i);
             match op {
-                LaunchOp::Csr(addr) => self.ctrl.csr_write_ch(now, ch, addr),
-                LaunchOp::Doorbell(tail) => self.ctrl.ring_doorbell(now, ch, tail),
-                LaunchOp::CqDoorbell(head) => self.ctrl.ring_cq_doorbell(now, ch, head),
-                LaunchOp::Reset => self.ctrl.channel_reset(now, ch),
+                LaunchOp::Csr(addr) => {
+                    self.trace(TraceEvent::CsrLaunch { addr });
+                    self.ctrl.csr_write_ch(now, ch, addr);
+                }
+                LaunchOp::Doorbell(tail) => {
+                    self.trace(TraceEvent::SqDoorbell { ch: ch as u8, tail });
+                    self.ctrl.ring_doorbell(now, ch, tail);
+                }
+                LaunchOp::CqDoorbell(head) => {
+                    self.trace(TraceEvent::CqDoorbell { ch: ch as u8, head });
+                    self.ctrl.ring_cq_doorbell(now, ch, head);
+                }
+                LaunchOp::Reset => {
+                    self.trace(TraceEvent::MmioReset { ch: ch as u8 });
+                    self.ctrl.channel_reset(now, ch);
+                }
             }
         }
         // Memory pipelines advance, then response channels deliver.

@@ -17,7 +17,12 @@
 //!   per-descriptor IRQ (the last descriptor signals), ring channels
 //!   raise between `ceil(n/threshold)` and `n` coalesced edges, and
 //!   completion-ring records account for every ring entry with zero
-//!   overflows.
+//!   overflows;
+//! * **observer-only tracing** — a random quarter of the cases re-run
+//!   the identical plan with event tracing enabled (DESIGN.md §13) and
+//!   must reproduce the untraced run bit-exactly (`RunStats`, clock,
+//!   memory image) while every completion's latency phases partition
+//!   its lifetime (`launched_at + launch + fetch + data == cycle`).
 //!
 //! Half the cases enable deterministic fault injection (SLVERR rates,
 //! stalls, withheld B responses under an armed watchdog).  When a
@@ -311,6 +316,14 @@ fn build(plan: &Plan) -> System<IommuDmac> {
     sys
 }
 
+/// Like [`build`], but with trace capability flagged on channel 0, so
+/// the testbench creates a tracer and installs handles system-wide.
+fn build_traced(plan: &Plan) -> System<IommuDmac> {
+    let mut traced = plan.clone();
+    traced.cfgs[0] = traced.cfgs[0].with_trace();
+    build(&traced)
+}
+
 #[test]
 fn stress_cross_feature_differential() {
     let dst_extent = (3 * SLOTS_PER_CHANNEL * 4096) as usize;
@@ -329,6 +342,33 @@ fn stress_cross_feature_differential() {
             naive.mem.backdoor_read(map::DST_BASE, dst_extent),
             "memory image diverged"
         );
+
+        // (1b) Observer-only tracing: a quarter of the cases re-run
+        // the identical plan with tracing enabled; the traced run must
+        // reproduce the untraced one bit-exactly, and every
+        // completion's phases must partition its lifetime.
+        if rng.chance(0.25) {
+            let mut traced = build_traced(&plan);
+            let t = traced.run_until_idle().unwrap();
+            assert_eq!(t, f, "tracing changed RunStats");
+            assert_eq!(traced.now(), fast.now(), "tracing changed the clock");
+            assert_eq!(
+                traced.mem.backdoor_read(map::DST_BASE, dst_extent),
+                fast.mem.backdoor_read(map::DST_BASE, dst_extent),
+                "tracing changed the memory image"
+            );
+            assert!(
+                traced.tracer().is_some_and(|tr| !tr.is_empty()),
+                "traced run recorded no events"
+            );
+            for c in &t.completions {
+                assert_eq!(
+                    c.launched_at + c.breakdown.launch + c.breakdown.fetch + c.breakdown.data,
+                    c.cycle,
+                    "breakdown phases do not partition the transfer lifetime"
+                );
+            }
+        }
 
         // Did the injector actually corrupt anything?  Most faulted
         // plans fire nothing (low rates) and stall-only perturbation

@@ -1,0 +1,211 @@
+//! Trace & telemetry acceptance properties (DESIGN.md §13): event
+//! tracing is provably observer-only, per-transfer latency breakdowns
+//! partition each transfer's lifetime, windowed bus-utilization
+//! sampling is scheduler-independent, and the Chrome trace export is
+//! well-formed with per-track monotone timestamps.
+
+use idmac::dmac::{Dmac, DmacConfig};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::sim::chrome_trace_json;
+use idmac::tb::System;
+use idmac::testutil::forall;
+use idmac::testutil::gen::{random_chain, random_config, random_profile};
+use idmac::workload::{map, Sweep};
+
+const CASES: u64 = 30;
+
+#[test]
+fn prop_tracing_is_observer_only_under_both_schedulers() {
+    // The tentpole acceptance property, both directions: a DMAC with
+    // tracing *enabled* must be bit-identical (RunStats, final clock,
+    // memory image) to the same DMAC with tracing *disabled* — the
+    // default, which is itself the pre-trace controller — under both
+    // the event-horizon and naive schedulers.  The traced runs must
+    // also actually record something, or the property is vacuous.
+    forall(CASES, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let traced_cfg = cfg.with_trace();
+        let profile = random_profile(rng);
+        let seed = rng.next_u64() as u32;
+        let run = |cfg: DmacConfig, naive: bool| {
+            let mut sys = System::new(profile, Dmac::new(cfg));
+            fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+            sys.load_and_launch(0, &cb);
+            let stats = if naive {
+                sys.run_until_idle_naive().unwrap()
+            } else {
+                sys.run_until_idle().unwrap()
+            };
+            let events = sys.tracer().map_or(0, |t| t.len());
+            let image = sys.mem.backdoor_read(map::DST_BASE, 64 * 4096).to_vec();
+            ((stats, sys.now(), image), events)
+        };
+        let (bare, bare_events) = run(cfg, false);
+        assert_eq!(bare_events, 0, "untraced run must have no tracer");
+        let (traced_fast, fast_events) = run(traced_cfg, false);
+        let (traced_naive, naive_events) = run(traced_cfg, true);
+        assert_eq!(bare, traced_fast, "tracing changed behavior: cfg={cfg:?} {profile:?}");
+        assert_eq!(bare, traced_naive, "tracing diverged under the naive loop");
+        assert!(fast_events > 0, "traced run recorded no events: cfg={cfg:?}");
+        assert!(naive_events > 0, "naive traced run recorded no events");
+    });
+}
+
+#[test]
+fn prop_breakdown_phases_partition_the_transfer_lifetime() {
+    // Every completion's phase split must tile the interval from its
+    // launching MMIO write to its payload B response exactly:
+    // launched_at + launch + fetch + data == cycle.  The writeback
+    // phase extends past the completion stamp (it measures the
+    // feedback write), so end_to_end() is that interval plus writeback.
+    forall(CASES, |rng| {
+        let (cb, meta) = random_chain(rng);
+        let cfg = random_config(rng);
+        let mut sys = System::new(random_profile(rng), Dmac::new(cfg));
+        fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, 9);
+        sys.load_and_launch(0, &cb);
+        let stats = sys.run_until_idle().unwrap();
+        assert_eq!(stats.completions.len(), meta.len());
+        for c in &stats.completions {
+            assert_eq!(
+                c.launched_at + c.breakdown.launch + c.breakdown.fetch + c.breakdown.data,
+                c.cycle,
+                "phases do not partition the lifetime: {c:?} cfg={cfg:?}"
+            );
+            assert_eq!(
+                c.breakdown.end_to_end(),
+                (c.cycle - c.launched_at) + c.breakdown.writeback,
+                "end_to_end disagrees with the partition: {c:?}"
+            );
+            assert!(c.breakdown.data > 0, "payload movement takes at least one cycle");
+        }
+        // The derived histograms see exactly one sample per transfer
+        // and report ordered percentiles.
+        let h = stats.histogram_of(|c| c.breakdown.data);
+        assert_eq!(h.count(), meta.len() as u64);
+        assert!(h.p50() <= h.p99());
+        assert!(h.p99() <= h.p999());
+        assert!(h.p999() <= h.max());
+    });
+}
+
+#[test]
+fn prop_windowed_bus_monitor_identical_under_both_schedulers() {
+    // Satellite acceptance: with utilization sampling armed, the
+    // window timeline (and the monitor's cycle counter, which must
+    // keep up across fast-forward jumps) is bit-identical between the
+    // event-horizon and naive schedulers on every paper profile.
+    forall(15, |rng| {
+        let (cb, _) = random_chain(rng);
+        let cfg = random_config(rng);
+        let window = rng.range(1, 512);
+        let seed = rng.next_u64() as u32;
+        for profile in
+            [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep]
+        {
+            let build = || {
+                let mut sys = System::new(profile, Dmac::new(cfg));
+                sys.monitor.set_window(window);
+                fill_pattern(&mut sys.mem, map::SRC_BASE, 32 * 4096, seed);
+                sys.load_and_launch(0, &cb);
+                sys
+            };
+            let mut fast = build();
+            let mut naive = build();
+            fast.run_until_idle().unwrap();
+            naive.run_until_idle_naive().unwrap();
+            assert_eq!(fast.monitor.cycles, naive.monitor.cycles, "monitor clock diverged");
+            assert_eq!(
+                fast.monitor.cycles,
+                fast.now(),
+                "monitor fell behind the system clock under fast-forward"
+            );
+            let (fw, nw) = (fast.monitor.util_windows(), naive.monitor.util_windows());
+            assert_eq!(fw, nw, "window timeline diverged: w={window} {profile:?}");
+            assert!(!fw.is_empty(), "armed sampling produced no windows");
+            // Timeline covers the whole run, in order, one window per
+            // period, and accounts every beat exactly once.
+            assert!(fw.windows(2).all(|p| p[1].start == p[0].start + window));
+            assert!(fw.last().unwrap().start <= fast.now());
+            let beats: u64 = fw.iter().map(|w| w.read_beats + w.write_beats).sum();
+            assert_eq!(beats, fast.monitor.total_beats(), "beats lost or duplicated");
+            if profile == LatencyProfile::UltraDeep {
+                assert!(fast.horizon.jumps > 0, "no fast-forward happened at L=100");
+            }
+        }
+    });
+}
+
+/// Value of the first integer field `key` after position 0 of `s`.
+fn int_field(obj: &str, key: &str) -> u64 {
+    let i = obj.find(key).unwrap_or_else(|| panic!("missing {key} in {obj}")) + key.len();
+    obj[i..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn chrome_trace_export_is_well_formed_and_monotone() {
+    // Export a real traced run and check the JSON shape the Chrome
+    // trace viewer requires: one traceEvents array, every event with a
+    // numeric ts, and per-(pid, tid) track timestamps monotone
+    // non-decreasing — regardless of the order same-cycle events were
+    // appended in.
+    let window = 64;
+    let cfg = DmacConfig::speculation().with_trace();
+    let mut sys = System::new(LatencyProfile::Ddr3, Dmac::new(cfg));
+    sys.monitor.set_window(window);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 16 * 4096, 0x51);
+    sys.load_and_launch(0, &Sweep::new(16, 256).chain());
+    sys.run_until_idle().unwrap();
+    let records = sys.take_trace();
+    assert!(!records.is_empty());
+    let windows = sys.monitor.util_windows();
+    assert!(!windows.is_empty());
+    let json = chrome_trace_json(&records, &windows, window);
+
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.ends_with(&format!("\"idmacWindowCycles\":{window}}}")));
+    assert_eq!(
+        json.matches('{').count(),
+        json.matches('}').count(),
+        "unbalanced braces"
+    );
+    assert!(json.contains("\"name\":\"bus_utilization\""), "counter track missing");
+
+    // Each serialized event starts with its name field; split on that
+    // prefix and read the ts/tid fields back out.
+    let mut last_ts = [0u64; 16];
+    let mut events = 0;
+    for obj in json.split("{\"name\":").skip(1) {
+        let ts = int_field(obj, "\"ts\":");
+        let tid = int_field(obj, "\"tid\":") as usize;
+        assert!(tid < last_ts.len(), "unknown track id {tid}");
+        assert!(
+            ts >= last_ts[tid],
+            "ts went backwards on track {tid}: {ts} after {}",
+            last_ts[tid]
+        );
+        last_ts[tid] = ts;
+        events += 1;
+    }
+    assert_eq!(events, records.len() + windows.len());
+}
+
+#[test]
+fn untraced_system_exposes_no_tracer() {
+    // Default-off: without the config flag the testbench creates no
+    // tracer at all, and take_trace() yields nothing.
+    let mut sys = System::new(LatencyProfile::Ideal, Dmac::new(DmacConfig::base()));
+    assert!(sys.tracer().is_none());
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 4096, 1);
+    sys.load_and_launch(0, &Sweep::new(2, 64).chain());
+    sys.run_until_idle().unwrap();
+    assert!(sys.tracer().is_none());
+    assert!(sys.take_trace().is_empty());
+}
