@@ -1,0 +1,32 @@
+"""Determinism lint engine over the repo's Rust sources.
+
+The simulator's headline claims rest on cycle determinism: naive-loop
+vs event-horizon bit-identity, integer-only ``BENCH_*.json`` grids,
+seeded fault plans.  This package enforces the structural side of that
+contract statically, because the CI container that hosts most
+verification is Python-only (no cargo).
+
+Modules
+-------
+``rust_tokens``
+    A lightweight Rust scrubber/tokenizer: comments, string literals
+    and char literals are blanked (never regexed raw), line numbers are
+    preserved, and comments are collected separately so inline
+    ``// lint:allow(rule-id, reason)`` suppressions can be parsed.
+``rules``
+    The repo-specific rule set (see DESIGN.md §14 for the table).
+``engine``
+    Finding model, suppression application, baseline matching, file
+    discovery and the ``run_analysis`` entrypoint used by
+    ``python/ci/lint_rust.py``.
+"""
+
+from .engine import (  # noqa: F401
+    AnalysisResult,
+    BaselineEntry,
+    Finding,
+    apply_baseline,
+    load_baseline,
+    run_analysis,
+)
+from .rules import ALL_RULES  # noqa: F401

@@ -1,0 +1,271 @@
+"""Rule runner: findings, suppressions, baseline, file discovery.
+
+Flow (mirrored by ``python/ci/lint_rust.py``):
+
+1. discover ``*.rs`` under the scan roots (``rust/src``, ``rust/tests``,
+   ``rust/benches``, ``examples``),
+2. scrub + tokenize each file (:mod:`analysis.rust_tokens`),
+3. run every registered rule; file rules see one file, repo rules see
+   the whole tree (rule 5 cross-checks constants across three files,
+   rule 6 reads DESIGN.md),
+4. drop findings covered by an inline
+   ``// lint:allow(rule-id, reason)`` — a missing reason voids the
+   suppression and is itself a finding,
+5. split the remainder against the checked-in baseline
+   (``python/analysis/baseline.json``): matched findings are
+   *baselined* (grandfathered), unmatched are *active* (CI-fatal), and
+   baseline entries matching nothing are *stale* (also CI-fatal, so
+   the baseline can only shrink).
+
+Baseline entries match on ``(rule, path, message)`` — deliberately not
+on line numbers, so unrelated edits to a grandfathered file do not
+churn the baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+from .rust_tokens import ScrubbedSource, scrub
+
+#: Directories (relative to the repo root) scanned for Rust sources.
+SCAN_ROOTS = ("rust/src", "rust/tests", "rust/benches", "examples")
+
+BASELINE_SCHEMA = "idmac-lint-baseline/v1"
+REPORT_SCHEMA = "idmac-lint/v1"
+
+# lint:allow(rule-id, reason) inside a comment.  The reason runs to the
+# closing paren and must be non-empty after stripping.
+_ALLOW = re.compile(r"lint:allow\(\s*([A-Za-z0-9_-]+)\s*(?:,\s*([^)]*))?\)")
+
+# How far below an own-line suppression comment the suppressed code may
+# sit (doc comments and attributes between are skipped because they
+# scrub to blank / are crossed over line by line).
+_OWN_LINE_REACH = 3
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str  # repo-relative, forward slashes
+    line: int  # 1-based
+    message: str
+
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class BaselineEntry:
+    rule: str
+    path: str
+    message: str
+    why: str = ""
+
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> dict:
+        d = {"rule": self.rule, "path": self.path, "message": self.message}
+        if self.why:
+            d["why"] = self.why
+        return d
+
+
+@dataclass
+class AnalysisResult:
+    findings: list[Finding]  # post-suppression, pre-baseline
+    suppressed: list[Finding]
+    files_scanned: int
+    rules_run: int
+
+
+class Rule:
+    """Base class; subclasses set ``rule_id`` and override one hook.
+
+    ``check_file`` runs once per scanned file; ``check_repo`` runs once
+    with every scrubbed file plus the repo root (for non-Rust inputs
+    like DESIGN.md).  A rule may implement either or both.
+    """
+
+    rule_id: str = ""
+    summary: str = ""
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        return []
+
+    def check_repo(self, root: str, files: dict[str, ScrubbedSource]) -> list[Finding]:
+        return []
+
+
+def discover_files(root: str) -> list[str]:
+    """Repo-relative paths of every ``*.rs`` under the scan roots."""
+    found = []
+    for sub in SCAN_ROOTS:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for name in sorted(filenames):
+                if name.endswith(".rs"):
+                    full = os.path.join(dirpath, name)
+                    rel = os.path.relpath(full, root).replace(os.sep, "/")
+                    found.append(rel)
+    return sorted(found)
+
+
+def _suppressions(sf: ScrubbedSource) -> tuple[dict[int, set[str]], list[Finding]]:
+    """Map ``line -> {rule ids allowed on that line}`` plus defects.
+
+    A trailing comment covers its own line; an own-line comment covers
+    the next line that carries code (within ``_OWN_LINE_REACH`` lines,
+    skipping blank/comment-only lines).  ``lint:allow`` without a
+    reason emits a ``suppression-needs-reason`` finding and suppresses
+    nothing.
+    """
+    allowed: dict[int, set[str]] = {}
+    defects: list[Finding] = []
+    lines = sf.code_lines()
+    for cm in sf.comments:
+        for m in _ALLOW.finditer(cm.text):
+            rule_id = m.group(1)
+            reason = (m.group(2) or "").strip()
+            if not reason:
+                defects.append(
+                    Finding(
+                        rule="suppression-needs-reason",
+                        path=sf.path,
+                        line=cm.line,
+                        message=(
+                            f"lint:allow({rule_id}) carries no reason — suppressions "
+                            "must say why (DESIGN.md §14); this one is ignored"
+                        ),
+                    )
+                )
+                continue
+            target = cm.line
+            if cm.own_line:
+                # Walk down to the next line with code.
+                for cand in range(cm.line + 1, min(cm.line + 1 + _OWN_LINE_REACH, len(lines) + 1)):
+                    if cand - 1 < len(lines) and lines[cand - 1].strip():
+                        target = cand
+                        break
+            allowed.setdefault(target, set()).add(rule_id)
+    return allowed, defects
+
+
+def run_analysis(root: str, rules=None, files=None) -> AnalysisResult:
+    """Run ``rules`` over the tree at ``root``.
+
+    ``files`` (repo-relative paths) narrows the scan; repo rules always
+    see every discovered file so cross-file checks stay sound.
+    """
+    from .rules import ALL_RULES
+
+    active_rules = list(rules) if rules is not None else list(ALL_RULES)
+    all_paths = discover_files(root)
+    scan_paths = [p for p in all_paths if files is None or p in set(files)]
+
+    scrubbed: dict[str, ScrubbedSource] = {}
+    for rel in all_paths:
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as f:
+            scrubbed[rel] = scrub(rel, f.read())
+
+    raw: list[Finding] = []
+    for rule in active_rules:
+        for rel in scan_paths:
+            raw.extend(rule.check_file(scrubbed[rel]))
+        raw.extend(rule.check_repo(root, scrubbed))
+
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    for rel in all_paths:
+        allowed, defects = _suppressions(scrubbed[rel])
+        raw.extend(f for f in defects if rel in scan_paths or files is None)
+        for f in [f for f in raw if f.path == rel]:
+            if f.rule in allowed.get(f.line, set()):
+                suppressed.append(f)
+        # pathless repo findings handled below
+    covered = {id(f) for f in suppressed}
+    findings = [f for f in raw if id(f) not in covered]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return AnalysisResult(
+        findings=findings,
+        suppressed=suppressed,
+        files_scanned=len(scan_paths),
+        rules_run=len(active_rules),
+    )
+
+
+def load_baseline(path: str) -> list[BaselineEntry]:
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"{path}: expected schema {BASELINE_SCHEMA!r}, got {data.get('schema')!r}")
+    return [
+        BaselineEntry(
+            rule=e["rule"], path=e["path"], message=e["message"], why=e.get("why", "")
+        )
+        for e in data.get("entries", [])
+    ]
+
+
+def save_baseline(path: str, entries: list[BaselineEntry]) -> None:
+    data = {
+        "schema": BASELINE_SCHEMA,
+        "entries": [e.to_json() for e in sorted(entries, key=lambda e: e.key())],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+def apply_baseline(
+    findings: list[Finding], entries: list[BaselineEntry]
+) -> tuple[list[Finding], list[Finding], list[BaselineEntry]]:
+    """Split findings into (active, baselined) and report stale entries.
+
+    One entry silences *every* finding with the same (rule, path,
+    message) — e.g. two ``Instant`` uses in one grandfathered file.  An
+    entry matching nothing is stale and must be deleted, so the
+    baseline ratchets monotonically toward empty.
+    """
+    by_key: dict[tuple[str, str, str], BaselineEntry] = {e.key(): e for e in entries}
+    hit: set[tuple[str, str, str]] = set()
+    active, baselined = [], []
+    for f in findings:
+        if f.key() in by_key:
+            baselined.append(f)
+            hit.add(f.key())
+        else:
+            active.append(f)
+    stale = [e for e in entries if e.key() not in hit]
+    return active, baselined, stale
+
+
+def entries_from_findings(findings: list[Finding]) -> list[BaselineEntry]:
+    """Unique baseline entries covering ``findings`` (for --write-baseline)."""
+    seen: dict[tuple[str, str, str], BaselineEntry] = {}
+    for f in findings:
+        seen.setdefault(
+            f.key(),
+            BaselineEntry(rule=f.rule, path=f.path, message=f.message, why="TODO: justify or fix"),
+        )
+    return list(seen.values())

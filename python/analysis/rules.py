@@ -1,0 +1,580 @@
+"""The repo-specific determinism rules (DESIGN.md §14 has the table).
+
+Every rule is structural and conservative: it matches token patterns in
+scrubbed source (never comments/strings), and where it must reason
+about values (rule 5) it evaluates the same const expressions the
+compiler sees.  Sanctioned exceptions are narrow path allowlists
+(benches may read the wall clock; ``report::timer`` *is* the injected
+wall-clock boundary; ``sim/trace.rs`` implements the tracer itself).
+"""
+
+from __future__ import annotations
+
+import re
+
+from .engine import Finding, Rule
+from .rust_tokens import ScrubbedSource, Token, match_brace
+
+_SECTION = "DESIGN.md §14"
+
+
+def _adjacent(tokens: list[Token], i: int, *texts: str) -> bool:
+    if i + len(texts) > len(tokens):
+        return False
+    return all(tokens[i + k].text == t for k, t in enumerate(texts))
+
+
+def _next_brace(tokens: list[Token], i: int) -> int:
+    """Index of the next ``{`` at or after ``i`` (or -1)."""
+    for j in range(i, len(tokens)):
+        if tokens[j].text == "{":
+            return j
+    return -1
+
+
+class NoWallClock(Rule):
+    """Rule 1 — wall-clock types only in benches/ and report::timer."""
+
+    rule_id = "no-wall-clock"
+    summary = "no std::time::{Instant,SystemTime} outside benches/ and report::timer"
+
+    ALLOWED = ("rust/benches/",)
+    ALLOWED_FILES = ("rust/src/report/timer.rs",)
+    NAMES = ("Instant", "SystemTime")
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        if sf.path.startswith(self.ALLOWED) or sf.path in self.ALLOWED_FILES:
+            return []
+        out = []
+        for t in sf.tokens:
+            if t.kind == "ident" and t.text in self.NAMES:
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=sf.path,
+                        line=t.line,
+                        message=(
+                            f"wall-clock type `{t.text}` outside benches/ — simulated "
+                            "results must not depend on wall time; observe it only "
+                            f"through report::timer::Clock ({_SECTION})"
+                        ),
+                    )
+                )
+        return out
+
+
+class NoHashCollections(Rule):
+    """Rule 2 — HashMap/HashSet iteration order is ambient nondeterminism."""
+
+    rule_id = "no-hash-collections"
+    summary = "no HashMap/HashSet anywhere; use BTreeMap/BTreeSet or dense vecs"
+
+    NAMES = ("HashMap", "HashSet")
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        out = []
+        for t in sf.tokens:
+            if t.kind == "ident" and t.text in self.NAMES:
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=sf.path,
+                        line=t.line,
+                        message=(
+                            f"`{t.text}` has randomized iteration order — any walk over "
+                            "it can reorder RunStats/trace/bench output; use "
+                            f"BTree{t.text[4:]} or a dense Vec ({_SECTION})"
+                        ),
+                    )
+                )
+        return out
+
+
+class NoFloatInBenchJson(Rule):
+    """Rule 3 — no f32/f64 on paths that land in BENCH_*.json values.
+
+    Structural approximation: inside the report modules (and
+    ``sim/stats.rs``), flag float types/literals lexically inside
+    (a) any ``fn`` whose name contains ``json`` and (b) the field block
+    of any struct named ``*Point|*Entry|*Outcome|*Record|*Row`` — the
+    serialized grid carriers.  Diagnostic helper methods returning f64
+    (``hit_rate()`` etc.) stay legal: they never reach the JSON.
+    """
+
+    rule_id = "no-float-in-bench-json"
+    summary = "BENCH_*.json grids are integer-only; floats stay in diagnostics"
+
+    SCOPE_PREFIX = "rust/src/report/"
+    SCOPE_FILES = ("rust/src/sim/stats.rs",)
+    STRUCT_SUFFIXES = ("Point", "Entry", "Outcome", "Record", "Row")
+
+    def _spans(self, tokens: list[Token]):
+        """Yield (context, start, end) index spans to police."""
+        for i, t in enumerate(tokens):
+            if t.kind != "ident":
+                continue
+            if t.text == "fn" and i + 1 < len(tokens) and "json" in tokens[i + 1].text:
+                b = _next_brace(tokens, i + 2)
+                if b != -1:
+                    yield f"fn {tokens[i + 1].text}", b, match_brace(tokens, b)
+            if t.text == "struct" and i + 1 < len(tokens):
+                name = tokens[i + 1].text
+                if name.endswith(self.STRUCT_SUFFIXES):
+                    b = _next_brace(tokens, i + 2)
+                    # Tuple/unit structs have no brace block; skip if the
+                    # next `{` belongs to something far away (a `;` or `(`
+                    # before it means this wasn't a field block).
+                    if b != -1 and not any(
+                        tok.text in (";", "(") for tok in tokens[i + 2 : b]
+                    ):
+                        yield f"struct {name}", b, match_brace(tokens, b)
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        if not sf.path.startswith(self.SCOPE_PREFIX) and sf.path not in self.SCOPE_FILES:
+            return []
+        out = []
+        for context, start, end in self._spans(sf.tokens):
+            for t in sf.tokens[start : end + 1]:
+                is_float = t.kind == "float" or (t.kind == "ident" and t.text in ("f32", "f64"))
+                if is_float:
+                    out.append(
+                        Finding(
+                            rule=self.rule_id,
+                            path=sf.path,
+                            line=t.line,
+                            message=(
+                                f"float `{t.text}` in {context} — BENCH_*.json values "
+                                "are integer cycle counts; keep floats in diagnostic "
+                                f"helpers or suppress with a reason ({_SECTION})"
+                            ),
+                        )
+                    )
+        return out
+
+
+class TickableNextEvent(Rule):
+    """Rule 4 — every impl Tickable must override next_event."""
+
+    rule_id = "tickable-next-event"
+    summary = "impl Tickable must override next_event (fast-forward correctness)"
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        out = []
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if not (t.kind == "ident" and t.text == "Tickable" and _adjacent(toks, i + 1, "for")):
+                continue
+            ty = next((x.text for x in toks[i + 2 : i + 8] if x.kind == "ident"), "?")
+            b = _next_brace(toks, i + 2)
+            if b == -1:
+                continue
+            end = match_brace(toks, b)
+            has = any(
+                toks[j].text == "fn" and _adjacent(toks, j + 1, "next_event")
+                for j in range(b, end)
+            )
+            if not has:
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=sf.path,
+                        line=t.line,
+                        message=(
+                            f"impl Tickable for `{ty}` does not override next_event — "
+                            "the default `None` silently removes the component from "
+                            f"event-horizon fast-forward ({_SECTION})"
+                        ),
+                    )
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 5: a tiny const-expression evaluator over the IRQ map constants.
+
+_CONST = re.compile(r"pub\s+const\s+(\w+)\s*:\s*\w+\s*=\s*([^;]+);")
+_GUARD = re.compile(r"const\s+_\s*:\s*\(\)\s*=")
+
+
+def _eval_const(expr: str, env: dict[str, int]) -> int:
+    """Evaluate ``expr`` (idents, ints, + - *, parens, `as` casts, paths)."""
+    raw = re.findall(r"[A-Za-z_]\w*|0x[0-9a-fA-F_]+|\d[\d_]*|::|[()+\-*]", expr)
+    toks: list[str] = []
+    i = 0
+    while i < len(raw):
+        tok = raw[i]
+        if tok == "::":  # path separator: the previous segment was a prefix
+            if toks:
+                toks.pop()
+            i += 1
+            continue
+        if tok == "as":  # drop the cast and its target type
+            i += 2
+            continue
+        toks.append(tok)
+        i += 1
+
+    def atom(i: int) -> tuple[int, int]:
+        t = toks[i]
+        if t == "(":
+            v, i = add(i + 1)
+            if i >= len(toks) or toks[i] != ")":
+                raise ValueError("unbalanced parens")
+            return v, i + 1
+        if re.match(r"^(0x[0-9a-fA-F_]+|\d)", t):
+            return int(t.replace("_", ""), 0), i + 1
+        if t in env:
+            return env[t], i + 1
+        raise KeyError(t)
+
+    def mul(i: int) -> tuple[int, int]:
+        v, i = atom(i)
+        while i < len(toks) and toks[i] == "*":
+            r, i = atom(i + 1)
+            v *= r
+        return v, i
+
+    def add(i: int) -> tuple[int, int]:
+        v, i = mul(i)
+        while i < len(toks) and toks[i] in "+-":
+            op = toks[i]
+            r, i = mul(i + 1)
+            v = v + r if op == "+" else v - r
+        return v, i
+
+    v, i = add(0)
+    if i != len(toks):
+        raise ValueError(f"trailing tokens in {expr!r}")
+    return v
+
+
+def _resolve_consts(sources: list[str]) -> dict[str, int]:
+    """Fixed-point resolve every `pub const NAME: T = expr;` in sources."""
+    pending: dict[str, str] = {}
+    for code in sources:
+        for name, expr in _CONST.findall(code):
+            pending.setdefault(name, expr)
+    env: dict[str, int] = {}
+    for _ in range(len(pending) + 1):
+        progressed = False
+        for name, expr in list(pending.items()):
+            if name in env:
+                continue
+            try:
+                env[name] = _eval_const(expr, env)
+                progressed = True
+            except (KeyError, ValueError):
+                continue
+        if not progressed:
+            break
+    return env
+
+
+class IrqMapDisjoint(Rule):
+    """Rule 5 — IRQ source banks disjoint and within PLIC capacity.
+
+    Cross-checks the ``soc::mod.rs`` source-map constants as a function
+    of ``MAX_CHANNELS`` (from ``axi/types.rs``) against
+    ``Plic::MAX_SOURCES`` (``soc/plic.rs``), and requires the
+    compile-time ``const _: () = ...`` guard blocks to exist in both
+    ``soc/mod.rs`` and ``axi/types.rs`` so the same invariants also
+    fail at cargo time.  Silent when the anchor files are absent (small
+    fixture trees).
+    """
+
+    rule_id = "irq-map-disjoint"
+    summary = "PLIC/IRQ source banks pairwise disjoint and below Plic::MAX_SOURCES"
+
+    SOC = "rust/src/soc/mod.rs"
+    TYPES = "rust/src/axi/types.rs"
+    PLIC = "rust/src/soc/plic.rs"
+    BANKS = ("DMAC_IRQ_SOURCE", "IOMMU_FAULT_SOURCE", "RING_IRQ_SOURCE", "ERROR_IRQ_SOURCE")
+
+    def check_repo(self, root: str, files: dict[str, ScrubbedSource]) -> list[Finding]:
+        soc = files.get(self.SOC)
+        types = files.get(self.TYPES)
+        if soc is None or types is None:
+            return []
+        out: list[Finding] = []
+        plic = files.get(self.PLIC)
+
+        # Plic::MAX_SOURCES lives in an impl block, so _CONST's `pub
+        # const` shape still matches it.
+        env = _resolve_consts(
+            [types.code, soc.code] + ([plic.code] if plic is not None else [])
+        )
+
+        def fail(line: int, msg: str) -> None:
+            out.append(Finding(rule=self.rule_id, path=self.SOC, line=line, message=msg))
+
+        if "MAX_CHANNELS" not in env:
+            fail(1, "could not resolve MAX_CHANNELS from axi/types.rs — rule anchor moved; update analysis/rules.py")
+            return out
+        missing = [b for b in self.BANKS if b not in env]
+        if missing:
+            fail(1, f"could not resolve IRQ bank constants {missing} from soc/mod.rs — rule anchor moved; update analysis/rules.py")
+            return out
+
+        width = env["MAX_CHANNELS"]
+        banks = sorted(((env[b], b) for b in self.BANKS))
+        for (base_a, name_a), (base_b, name_b) in zip(banks, banks[1:]):
+            if base_a + width > base_b:
+                fail(
+                    1,
+                    f"IRQ banks overlap: {name_a} [{base_a}, {base_a + width}) and "
+                    f"{name_b} [{base_b}, {base_b + width}) collide for "
+                    f"MAX_CHANNELS={width}",
+                )
+        if banks[0][0] < 1:
+            fail(1, f"IRQ bank {banks[0][1]}={banks[0][0]} uses PLIC source 0, which is reserved")
+        if "MAX_SOURCES" not in env:
+            fail(1, "could not resolve Plic::MAX_SOURCES from soc/plic.rs — add the capacity constant the IRQ map is checked against")
+        else:
+            top = banks[-1][0] + width
+            if top > env["MAX_SOURCES"]:
+                fail(
+                    1,
+                    f"IRQ map tops out at source {top - 1} but Plic::MAX_SOURCES is "
+                    f"{env['MAX_SOURCES']} — growing MAX_CHANNELS (ROADMAP item 2) "
+                    "requires growing the PLIC first",
+                )
+        for path, sf in ((self.SOC, soc), (self.TYPES, types)):
+            if not _GUARD.search(sf.code):
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=path,
+                        line=1,
+                        message=(
+                            "missing `const _: () = { assert!(..) }` guard block — the "
+                            f"IRQ-map/port-packing invariants must also fail at compile time ({_SECTION})"
+                        ),
+                    )
+                )
+        return out
+
+
+class StatsCountersDocumented(Rule):
+    """Rule 6 — every pub RunStats counter in to_json and DESIGN.md."""
+
+    rule_id = "stats-counters-documented"
+    summary = "pub RunStats counters must be serialized in to_json and documented in DESIGN.md"
+
+    STATS = "rust/src/sim/stats.rs"
+    SCALARS = ("u32", "u64", "usize", "Cycle")
+
+    def _fields(self, sf: ScrubbedSource) -> list[tuple[str, int]]:
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if t.text == "struct" and _adjacent(toks, i + 1, "RunStats"):
+                b = _next_brace(toks, i + 2)
+                if b == -1:
+                    return []
+                end = match_brace(toks, b)
+                fields = []
+                j = b + 1
+                depth = 0
+                while j < end:
+                    tok = toks[j]
+                    if tok.text in "({<[":
+                        depth += 1
+                    elif tok.text in ")}>]":
+                        depth -= 1
+                    elif (
+                        depth == 0
+                        and tok.text == "pub"
+                        and j + 3 < end
+                        and toks[j + 1].kind == "ident"
+                        and toks[j + 2].text == ":"
+                        and toks[j + 3].kind == "ident"
+                        and toks[j + 3].text in self.SCALARS
+                        and j + 4 < end
+                        and toks[j + 4].text == ","
+                    ):
+                        fields.append((toks[j + 1].text, toks[j + 1].line))
+                        j += 4
+                    j += 1
+                return fields
+        return []
+
+    def check_repo(self, root: str, files: dict[str, ScrubbedSource]) -> list[Finding]:
+        import os
+
+        sf = files.get(self.STATS)
+        if sf is None:
+            return []
+        fields = self._fields(sf)
+        if not fields:
+            return [
+                Finding(
+                    rule=self.rule_id,
+                    path=self.STATS,
+                    line=1,
+                    message="could not locate `struct RunStats` fields — rule anchor moved; update analysis/rules.py",
+                )
+            ]
+        # idents referenced inside fn to_json
+        json_idents: set[str] = set()
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if t.text == "fn" and _adjacent(toks, i + 1, "to_json"):
+                b = _next_brace(toks, i + 2)
+                if b != -1:
+                    end = match_brace(toks, b)
+                    json_idents = {x.text for x in toks[b : end + 1] if x.kind == "ident"}
+                break
+        design_path = os.path.join(root, "DESIGN.md")
+        design = None
+        if os.path.exists(design_path):
+            with open(design_path, "r", encoding="utf-8") as f:
+                design = f.read()
+        out = []
+        for name, line in fields:
+            if name not in json_idents:
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=self.STATS,
+                        line=line,
+                        message=(
+                            f"pub RunStats counter `{name}` is not serialized by to_json — "
+                            f"every counter must reach --stats-json output ({_SECTION})"
+                        ),
+                    )
+                )
+            if design is not None and not re.search(rf"\b{re.escape(name)}\b", design):
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=self.STATS,
+                        line=line,
+                        message=(
+                            f"pub RunStats counter `{name}` is not mentioned in DESIGN.md — "
+                            f"add it to the counter glossary ({_SECTION})"
+                        ),
+                    )
+                )
+        return out
+
+
+class NoAmbientRng(Rule):
+    """Rule 7 — seeded SplitMix64 only; no ambient RNG."""
+
+    rule_id = "no-ambient-rng"
+    summary = "no thread_rng/rand::random/from_entropy; seeded SplitMix64 only"
+
+    NAMES = ("thread_rng", "ThreadRng", "from_entropy")
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        out = []
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if t.kind != "ident":
+                continue
+            hit = t.text in self.NAMES
+            if (
+                not hit
+                and t.text == "random"
+                and i >= 3
+                and toks[i - 1].text == ":"
+                and toks[i - 2].text == ":"
+                and toks[i - 3].text == "rand"
+            ):
+                hit = True
+            if hit:
+                out.append(
+                    Finding(
+                        rule=self.rule_id,
+                        path=sf.path,
+                        line=t.line,
+                        message=(
+                            f"ambient RNG `{t.text}` — all randomness must flow from a "
+                            f"replayable SplitMix64 seed (testutil::forall) ({_SECTION})"
+                        ),
+                    )
+                )
+        return out
+
+
+class TraceObserverOnly(Rule):
+    """Rule 8 — trace emission only through the `if let Some(t)` handle.
+
+    Structural approximation of "tracer calls are observer-only": every
+    ``.emit(..)`` receiver must be a binding introduced by
+    ``if let Some(name) = <expr mentioning tracer>`` that is still in
+    scope.  ``sim/trace.rs`` (the tracer's own impl and tests) is
+    exempt.
+    """
+
+    rule_id = "trace-observer-only"
+    summary = "Tracer::emit only via the `if let Some(t) = <tracer handle>` pattern"
+
+    EXEMPT = ("rust/src/sim/trace.rs",)
+
+    def check_file(self, sf: ScrubbedSource) -> list[Finding]:
+        if sf.path in self.EXEMPT:
+            return []
+        out = []
+        toks = sf.tokens
+        depth = 0
+        active: list[tuple[int, str]] = []  # (brace depth of the binding's block, name)
+        pending: list[str] = []
+        i = 0
+        while i < len(toks):
+            t = toks[i]
+            if t.text == "{":
+                depth += 1
+                for name in pending:
+                    active.append((depth, name))
+                pending = []
+            elif t.text == "}":
+                active = [(d, n) for (d, n) in active if d <= depth - 1]
+                depth -= 1
+            elif (
+                t.text == "if"
+                and _adjacent(toks, i + 1, "let", "Some", "(")
+                and i + 4 < len(toks)
+                and toks[i + 4].kind == "ident"
+                and _adjacent(toks, i + 5, ")")
+            ):
+                name = toks[i + 4].text
+                j = i + 6
+                rhs_idents = []
+                while j < len(toks) and toks[j].text != "{":
+                    if toks[j].kind == "ident":
+                        rhs_idents.append(toks[j].text)
+                    j += 1
+                if any("tracer" in x.lower() for x in rhs_idents):
+                    pending.append(name)
+                i = j
+                continue
+            elif t.text == "." and _adjacent(toks, i + 1, "emit", "("):
+                recv = toks[i - 1].text if i > 0 else ""
+                if not any(n == recv for (_d, n) in active):
+                    out.append(
+                        Finding(
+                            rule=self.rule_id,
+                            path=sf.path,
+                            line=t.line,
+                            message=(
+                                f"`.emit(..)` on `{recv}` outside the `if let Some(t) = "
+                                "<tracer handle>` observer pattern — trace emission must "
+                                f"stay observer-only ({_SECTION})"
+                            ),
+                        )
+                    )
+            i += 1
+        return out
+
+
+#: Registration order == rule number in the DESIGN.md §14 table.
+ALL_RULES: list[Rule] = [
+    NoWallClock(),
+    NoHashCollections(),
+    NoFloatInBenchJson(),
+    TickableNextEvent(),
+    IrqMapDisjoint(),
+    StatsCountersDocumented(),
+    NoAmbientRng(),
+    TraceObserverOnly(),
+]

@@ -1,0 +1,236 @@
+"""Lightweight Rust scrubber and tokenizer for the lint engine.
+
+The rules must never match inside comments or string literals (a doc
+comment mentioning ``Instant`` is not a wall-clock call), so instead of
+regexing raw text we run a small character-level state machine that:
+
+* strips line comments and *nested* block comments,
+* strips the interiors of string / byte-string / raw-string / char
+  literals (quotes are kept so the token stream stays aligned),
+* distinguishes char literals from lifetimes (``'a'`` vs ``&'a mut``),
+* replaces everything stripped with spaces, preserving newlines, so
+  byte offsets and line numbers in the scrubbed text match the source,
+* collects the comments separately (with their line numbers) so the
+  suppression syntax ``// lint:allow(rule-id, reason)`` can be parsed
+  from them.
+
+Attributes (``#[cfg(test)]``, ``#[derive(..)]``) are *kept* in the
+token stream — rules may want them — but any string literals inside
+them are scrubbed like everywhere else, so ``#[doc = "// x"]`` does not
+fake a comment.
+
+The tokenizer is deliberately coarse: identifiers, numeric literals
+(with a dedicated ``float`` kind for ``1.5`` / ``2.0e3`` forms), and
+single-character punctuation.  That is enough for every rule in
+``rules.py``; none of them need full Rust parsing.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# Opening of a raw (byte) string: r"..."  r#"..."#  br##"..."##
+_RAW_OPEN = re.compile(r'(?:b?r|rb)(#*)"')
+
+# One token of scrubbed code.  Floats before plain numbers so `1.5`
+# lexes as one float token, not `1` `.` `5`; `1.` alone (rare in Rust,
+# and absent from this repo) lexes as num + punct, which is fine.
+_TOKEN = re.compile(
+    r"(?P<ident>[A-Za-z_]\w*)"
+    r"|(?P<float>\d[\d_]*\.\d[\d_]*(?:[eE][+-]?\d+)?|\d[\d_]*(?:[eE][+-]?\d+)|\d[\d_]*(?:f32|f64))"
+    r"|(?P<num>\d[\w]*)"
+    r"|(?P<punct>\S)"
+)
+
+# A char literal starting at a `'`: escape, unicode escape, or any
+# single non-quote char, then the closing quote.  Anything else after
+# `'` is a lifetime.
+_CHAR_LIT = re.compile(r"'(?:\\(?:u\{[0-9a-fA-F_]+\}|.)|[^'\\\n])'")
+
+
+@dataclass
+class Comment:
+    """One comment, with enough context to anchor suppressions."""
+
+    line: int  # 1-based line of the comment's first character
+    text: str  # full text including // or /* */ delimiters
+    own_line: bool  # no code precedes it on its starting line
+
+
+@dataclass
+class Token:
+    kind: str  # "ident" | "float" | "num" | "punct"
+    text: str
+    line: int  # 1-based
+
+
+@dataclass
+class ScrubbedSource:
+    """A Rust file after comment/string scrubbing."""
+
+    path: str
+    raw: str
+    code: str  # same shape as raw; stripped spans blanked with spaces
+    comments: list[Comment] = field(default_factory=list)
+    tokens: list[Token] = field(default_factory=list)
+
+    def code_lines(self) -> list[str]:
+        return self.code.split("\n")
+
+
+def scrub(path: str, src: str) -> ScrubbedSource:
+    """Strip comments and literal interiors from ``src``.
+
+    Returns a :class:`ScrubbedSource` whose ``code`` is positionally
+    identical to ``src`` (every stripped character becomes a space;
+    newlines survive) and whose ``tokens`` are lexed from ``code``.
+    """
+    out: list[str] = []
+    comments: list[Comment] = []
+    i, n = 0, len(src)
+    line = 1
+
+    def blank(text: str) -> None:
+        # Keep newlines so line numbers stay true.
+        out.append("".join("\n" if ch == "\n" else " " for ch in text))
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+
+        # Line comment (also covers /// and //!).
+        if c == "/" and nxt == "/":
+            start, start_line = i, line
+            while i < n and src[i] != "\n":
+                i += 1
+            comments.append(Comment(start_line, src[start:i], own_line=False))
+            blank(src[start:i])
+            continue
+
+        # Block comment — Rust block comments nest.
+        if c == "/" and nxt == "*":
+            start, start_line = i, line
+            depth = 0
+            while i < n:
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                    if depth == 0:
+                        break
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            text = src[start:i]
+            comments.append(Comment(start_line, text, own_line=False))
+            blank(text)
+            continue
+
+        # Raw / byte-raw string.  The prefix must not be the tail of a
+        # longer identifier (`for r in ...` followed by `"x"` cannot
+        # happen token-wise, but `br` as a variable could precede a
+        # string only via whitespace, which breaks the regex anyway).
+        if c in "rb":
+            prev = src[i - 1] if i > 0 else ""
+            if not (prev.isalnum() or prev == "_"):
+                m = _RAW_OPEN.match(src, i)
+                if m:
+                    hashes = m.group(1)
+                    close = src.find('"' + hashes, m.end())
+                    if close == -1:
+                        close = n - len(hashes) - 1  # unterminated: eat rest
+                    end = close + 1 + len(hashes)
+                    text = src[i:end]
+                    out.append(src[i : m.end()])
+                    interior = src[m.end() : close]
+                    blank(interior)
+                    out.append(src[close:end])
+                    line += text.count("\n")
+                    i = end
+                    continue
+
+        # Plain string / byte string interior.
+        if c == '"' or (c == "b" and nxt == '"' and not (i > 0 and (src[i - 1].isalnum() or src[i - 1] == "_"))):
+            if c == "b":
+                out.append("b")
+                i += 1
+            out.append('"')
+            i += 1
+            start = i
+            while i < n:
+                if src[i] == "\\" and i + 1 < n:
+                    # `\<newline>` line continuations still end a line.
+                    if src[i + 1] == "\n":
+                        line += 1
+                    i += 2
+                    continue
+                if src[i] == '"':
+                    break
+                if src[i] == "\n":
+                    line += 1
+                i += 1
+            blank(src[start:i])
+            if i < n:
+                out.append('"')
+                i += 1
+            continue
+
+        # Char literal vs lifetime.
+        if c == "'":
+            m = _CHAR_LIT.match(src, i)
+            if m:
+                out.append("'")
+                blank(m.group(0)[1:-1])
+                out.append("'")
+                i = m.end()
+                continue
+            # Lifetime: keep the quote; the following ident lexes on its own.
+            out.append("'")
+            i += 1
+            continue
+
+        if c == "\n":
+            line += 1
+        out.append(c)
+        i += 1
+
+    code = "".join(out)
+    sf = ScrubbedSource(path=path, raw=src, code=code, comments=comments)
+
+    # own_line: the scrubbed code before the comment on its start line
+    # is blank (comments themselves were blanked, so a trailing comment
+    # leaves the statement text in place).
+    lines = sf.code_lines()
+    for cm in sf.comments:
+        if cm.line - 1 < len(lines):
+            cm.own_line = lines[cm.line - 1].strip() == ""
+
+    # Tokenize per line so every token carries its line number.
+    for lineno, text in enumerate(lines, start=1):
+        for m in _TOKEN.finditer(text):
+            kind = m.lastgroup or "punct"
+            sf.tokens.append(Token(kind=kind, text=m.group(0), line=lineno))
+    return sf
+
+
+def match_brace(tokens: list[Token], open_index: int) -> int:
+    """Index of the ``}`` matching ``tokens[open_index]`` (a ``{``).
+
+    Returns ``len(tokens) - 1`` if unbalanced (never raises: rules must
+    degrade gracefully on weird fixtures).
+    """
+    assert tokens[open_index].text == "{"
+    depth = 0
+    for j in range(open_index, len(tokens)):
+        t = tokens[j].text
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(tokens) - 1

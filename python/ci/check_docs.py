@@ -34,6 +34,7 @@ REQUIRED_SECTIONS = {
         "trace",
         "--stats-json",
         "bench-regression gate",
+        "lint_rust.py",
     ],
     "DESIGN.md": [
         "Multi-channel",
@@ -44,6 +45,7 @@ REQUIRED_SECTIONS = {
         "Error model and recovery",
         "DRAM backend",
         "Trace & telemetry",
+        "Static analysis & determinism lints",
     ],
     "EXPERIMENTS.md": [
         "Contention",

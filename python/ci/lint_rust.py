@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Determinism lint gate over the Rust sources (DESIGN.md §14).
+
+Runs the ``python/analysis`` rule engine and fails on
+
+* any finding that is neither inline-suppressed
+  (``// lint:allow(rule-id, reason)``) nor grandfathered in
+  ``python/analysis/baseline.json``, and
+* any baseline entry that no longer matches a finding (stale entries
+  must be deleted, so the baseline only ever shrinks).
+
+Usage::
+
+    python python/ci/lint_rust.py                 # gate the whole repo
+    python python/ci/lint_rust.py rust/src/axi/arbiter.rs   # one file
+    python python/ci/lint_rust.py --json -        # machine-readable report
+    python python/ci/lint_rust.py --write-baseline  # grandfather current findings
+    python python/ci/lint_rust.py --list-rules    # show the rule table
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(REPO, "python"))
+
+from analysis import (  # noqa: E402
+    ALL_RULES,
+    apply_baseline,
+    load_baseline,
+    run_analysis,
+)
+from analysis.engine import entries_from_findings, save_baseline  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join("python", "analysis", "baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="repo-relative .rs files to scan (default: all)")
+    ap.add_argument("--root", default=REPO, help="repo root to scan (default: this repo)")
+    ap.add_argument("--baseline", default=None, help=f"baseline path (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--json", metavar="PATH", help="write idmac-lint/v1 JSON report (- for stdout)")
+    ap.add_argument("--write-baseline", action="store_true", help="grandfather all current findings and exit 0")
+    ap.add_argument("--list-rules", action="store_true", help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for n, rule in enumerate(ALL_RULES, start=1):
+            print(f"{n}. {rule.rule_id}: {rule.summary}")
+        return 0
+
+    root = os.path.abspath(args.root)
+    baseline_path = args.baseline or os.path.join(root, DEFAULT_BASELINE)
+    files = [f.replace(os.sep, "/") for f in args.files] or None
+
+    result = run_analysis(root, files=files)
+    if args.write_baseline:
+        save_baseline(baseline_path, entries_from_findings(result.findings))
+        print(f"wrote {len(entries_from_findings(result.findings))} baseline entries to {baseline_path}")
+        print("fill in each entry's `why` — unexplained grandfathering defeats the gate")
+        return 0
+
+    entries = load_baseline(baseline_path)
+    # Scanning a subset must not flag whole-repo baseline entries as
+    # stale: restrict staleness to the scanned paths.
+    if files is not None:
+        entries_in_scope = [e for e in entries if e.path in files]
+    else:
+        entries_in_scope = entries
+    active, baselined, stale = apply_baseline(result.findings, entries_in_scope)
+
+    report = {
+        "schema": "idmac-lint/v1",
+        "files_scanned": result.files_scanned,
+        "rules_run": result.rules_run,
+        "active": [f.to_json() for f in active],
+        "baselined": [f.to_json() for f in baselined],
+        "suppressed": [f.to_json() for f in result.suppressed],
+        "stale_baseline_entries": [e.to_json() for e in stale],
+    }
+    if args.json:
+        text = json.dumps(report, indent=2)
+        if args.json == "-":
+            print(text)
+        else:
+            with open(args.json, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+
+    for f in active:
+        print(f"FAIL: {f.render()}", file=sys.stderr)
+    for e in stale:
+        print(
+            f"STALE: baseline entry [{e.rule}] {e.path} no longer matches any finding — delete it",
+            file=sys.stderr,
+        )
+    verdict = (
+        f"{result.files_scanned} files, {result.rules_run} rules: "
+        f"{len(active)} active finding(s), {len(baselined)} baselined, "
+        f"{len(result.suppressed)} suppressed, {len(stale)} stale baseline entr(y/ies)"
+    )
+    if active or stale:
+        print(f"FAIL: {verdict}", file=sys.stderr)
+        return 1
+    # Keep stdout pure JSON when the report is streamed there.
+    print(f"OK: {verdict}", file=sys.stderr if args.json == "-" else sys.stdout)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

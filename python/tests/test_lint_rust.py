@@ -1,0 +1,113 @@
+"""CLI-level tests for python/ci/lint_rust.py: the blocking CI gate.
+
+Includes the acceptance check that the gate runs clean on this very
+tree — the same invocation CI's `lint` job performs."""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+SCRIPT = os.path.join(REPO, "python", "ci", "lint_rust.py")
+
+
+def run(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, SCRIPT, *args], capture_output=True, text=True, cwd=cwd
+    )
+
+
+def make_tree(tmp_path, files):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return str(tmp_path)
+
+
+def test_real_tree_is_clean():
+    # The acceptance criterion itself: zero non-baselined findings,
+    # zero stale baseline entries on the current repo.
+    r = run()
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK:" in r.stdout
+    assert "0 active finding(s)" in r.stdout
+    assert "0 stale baseline entr" in r.stdout
+
+
+def test_real_tree_json_report_is_parseable():
+    r = run("--json", "-")
+    assert r.returncode == 0, r.stderr
+    report = json.loads(r.stdout)
+    assert report["schema"] == "idmac-lint/v1"
+    assert report["rules_run"] == 8
+    assert report["active"] == []
+    assert report["stale_baseline_entries"] == []
+    # The sanctioned exceptions are visible, not silently dropped.
+    assert any(e["path"] == "examples/perf_probe.rs" for e in report["baselined"])
+    assert any(
+        e["path"] == "rust/src/report/throughput.rs" for e in report["suppressed"]
+    )
+
+
+def test_list_rules_names_all_eight():
+    r = run("--list-rules")
+    assert r.returncode == 0
+    for rule_id in [
+        "no-wall-clock",
+        "no-hash-collections",
+        "no-float-in-bench-json",
+        "tickable-next-event",
+        "irq-map-disjoint",
+        "stats-counters-documented",
+        "no-ambient-rng",
+        "trace-observer-only",
+    ]:
+        assert rule_id in r.stdout
+
+
+def test_violation_fails_with_finding_line(tmp_path):
+    root = make_tree(tmp_path, {"rust/src/a.rs": "use std::time::Instant;\n"})
+    baseline = tmp_path / "baseline.json"
+    r = run("--root", root, "--baseline", str(baseline))
+    assert r.returncode == 1
+    assert "FAIL: rust/src/a.rs:1: [no-wall-clock]" in r.stderr
+
+
+def test_write_baseline_then_clean_then_stale(tmp_path):
+    root = make_tree(tmp_path, {"rust/src/a.rs": "use std::time::Instant;\n"})
+    baseline = tmp_path / "baseline.json"
+
+    # Grandfather the finding.
+    r = run("--root", root, "--baseline", str(baseline), "--write-baseline")
+    assert r.returncode == 0, r.stderr
+    data = json.loads(baseline.read_text())
+    assert data["schema"] == "idmac-lint-baseline/v1"
+    assert len(data["entries"]) == 1
+
+    # Gate is now green: the finding is baselined.
+    r = run("--root", root, "--baseline", str(baseline))
+    assert r.returncode == 0, r.stderr
+    assert "1 baselined" in r.stdout
+
+    # Fix the violation but keep the entry: stale entry fails the gate.
+    (tmp_path / "rust/src/a.rs").write_text("fn clean() {}\n")
+    r = run("--root", root, "--baseline", str(baseline))
+    assert r.returncode == 1
+    assert "STALE" in r.stderr
+
+
+def test_scanning_single_file_restricts_findings(tmp_path):
+    root = make_tree(
+        tmp_path,
+        {
+            "rust/src/bad.rs": "use std::time::Instant;\n",
+            "rust/src/also_bad.rs": "use std::collections::HashMap;\n",
+        },
+    )
+    baseline = tmp_path / "baseline.json"
+    r = run("--root", root, "--baseline", str(baseline), "rust/src/also_bad.rs")
+    assert r.returncode == 1
+    assert "also_bad.rs" in r.stderr
+    assert "bad.rs:1" not in r.stderr.replace("also_bad.rs:1", "")

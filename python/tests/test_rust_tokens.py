@@ -1,0 +1,99 @@
+"""Tokenizer tests: the scrubber must never let comment/string text
+masquerade as code, and must keep line numbers exact (suppressions and
+findings are line-anchored)."""
+
+from analysis.rust_tokens import match_brace, scrub
+
+
+def idents(sf):
+    return [t.text for t in sf.tokens if t.kind == "ident"]
+
+
+def test_line_comments_are_stripped_but_collected():
+    sf = scrub("f.rs", "let x = 1; // Instant HashMap\nlet y = 2;\n")
+    assert "Instant" not in idents(sf)
+    assert "HashMap" not in idents(sf)
+    assert len(sf.comments) == 1
+    assert sf.comments[0].line == 1
+    assert not sf.comments[0].own_line  # trailing, code precedes it
+
+
+def test_nested_block_comments():
+    src = "let a = 1;\n/* outer /* Instant inner */ still comment */\nlet b = 2;\n"
+    sf = scrub("f.rs", src)
+    assert "Instant" not in idents(sf)
+    assert "a" in idents(sf) and "b" in idents(sf)
+    # The `b` binding is still reported on line 3.
+    assert [t.line for t in sf.tokens if t.text == "b"] == [3]
+
+
+def test_raw_strings_hide_fake_comments_and_quotes():
+    src = 'let s = r#"// not a comment " Instant "#;\nlet t = 1;\n'
+    sf = scrub("f.rs", src)
+    assert "Instant" not in idents(sf)
+    assert sf.comments == []
+    assert [t.line for t in sf.tokens if t.text == "t"] == [2]
+
+
+def test_byte_and_plain_strings_scrubbed_with_escapes():
+    src = 'let a = b"// x";\nlet b = "quote \\" Instant";\n'
+    sf = scrub("f.rs", src)
+    assert "Instant" not in idents(sf)
+    assert sf.comments == []
+
+
+def test_backslash_newline_string_continuation_keeps_line_numbers():
+    src = 'let s = "first \\\n  second";\nlet marker = 1;\n'
+    sf = scrub("f.rs", src)
+    assert [t.line for t in sf.tokens if t.text == "marker"] == [3]
+
+
+def test_char_literal_vs_lifetime():
+    src = "let c = '\"'; fn f<'a>(x: &'a str) {}\nlet q = 'x';\n"
+    sf = scrub("f.rs", src)
+    # The quote char literal must not open a string that eats the rest.
+    assert "f" in idents(sf) and "q" in idents(sf)
+    # Lifetime ident survives as a token.
+    assert "a" in idents(sf)
+    # Char-literal interiors are scrubbed: no `x` ident on line 2.
+    assert [t.text for t in sf.tokens if t.line == 2 and t.kind == "ident"] == ["let", "q"]
+
+
+def test_attribute_strings_do_not_fake_comments():
+    src = '#[doc = "// lint:allow(no-wall-clock, fake)"]\nfn f() {}\n'
+    sf = scrub("f.rs", src)
+    assert sf.comments == []
+    # The attribute's punctuation stays in the token stream.
+    assert sf.tokens[0].text == "#"
+    assert "doc" in idents(sf)
+
+
+def test_own_line_comment_detection():
+    src = "// own line\nlet x = 1; // trailing\n"
+    sf = scrub("f.rs", src)
+    own = [c for c in sf.comments if c.own_line]
+    trailing = [c for c in sf.comments if not c.own_line]
+    assert len(own) == 1 and own[0].line == 1
+    assert len(trailing) == 1 and trailing[0].line == 2
+
+
+def test_float_token_kind():
+    sf = scrub("f.rs", "let a = 1.5; let b = 2.0e3; let c = 100; let d = 3f64;\n")
+    floats = [t.text for t in sf.tokens if t.kind == "float"]
+    assert "1.5" in floats and "2.0e3" in floats and "3f64" in floats
+    assert "100" in [t.text for t in sf.tokens if t.kind == "num"]
+
+
+def test_scrubbed_code_keeps_shape():
+    src = "let a = 1; /* x */ let b = 2;\n"
+    sf = scrub("f.rs", src)
+    assert len(sf.code) == len(src)
+    assert sf.code.count("\n") == src.count("\n")
+
+
+def test_match_brace():
+    sf = scrub("f.rs", "fn f() { if x { y(); } z(); }\n")
+    opens = [i for i, t in enumerate(sf.tokens) if t.text == "{"]
+    outer_close = match_brace(sf.tokens, opens[0])
+    assert sf.tokens[outer_close].text == "}"
+    assert outer_close == len(sf.tokens) - 1

@@ -2,6 +2,11 @@
 //! is a `harness = false` binary that prints the regenerated table or
 //! figure, the paper-vs-measured comparison, and wall-clock timing).
 
+// benches/ is the sanctioned wall-clock zone (DESIGN.md §14, lint rule
+// `no-wall-clock`); clippy's disallowed-types config covers bench
+// targets too, so the exemption is spelled out here.
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 pub struct BenchTimer {

@@ -240,7 +240,7 @@ mod tests {
     #[test]
     fn fairness_over_three_ports() {
         let mut a = Arbiter::new(vec![Port::Frontend, Port::Backend, Port::Cpu]);
-        let mut counts = std::collections::HashMap::new();
+        let mut counts = std::collections::BTreeMap::new();
         for _ in 0..300 {
             let p = a.grant(|_| true).unwrap();
             *counts.entry(p).or_insert(0u32) += 1;

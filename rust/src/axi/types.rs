@@ -92,6 +92,22 @@ pub static CHANNEL_TRIPLES: [Port; 3 * MAX_CHANNELS] = [
     Port::Ptw(7),
 ];
 
+// Compile-time pins for the dense port packing (lint rule
+// `irq-map-disjoint` re-derives the same arithmetic from the source
+// text; this block makes it fail at cargo time too).  ROADMAP item 2's
+// 64-channel crossbar will grow MAX_CHANNELS: the packing below and
+// the u8 channel payload must be revisited consciously, not silently.
+const _: () = {
+    // Five fixed ports, then {frontend, backend} pairs, then the
+    // walker bank: Port::index() is dense and collision-free.
+    assert!(Port::COUNT == 5 + 3 * MAX_CHANNELS);
+    // Last interleaved pair index (6 + 2*(MAX-1)) stays below the
+    // walker bank base (5 + 2*MAX).
+    assert!(6 + 2 * (MAX_CHANNELS - 1) < 5 + 2 * MAX_CHANNELS);
+    // Channel numbers travel in a u8 payload.
+    assert!(MAX_CHANNELS <= 256);
+};
+
 impl Port {
     /// Dense index for counter arrays (§Perf: the bus monitor counts
     /// every beat; a BTreeMap lookup per beat was a profile hotspot).
@@ -308,7 +324,7 @@ mod tests {
 
     #[test]
     fn port_indices_are_dense_and_unique() {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for ch in 0..MAX_CHANNELS {
             for p in [Port::frontend_of(ch), Port::backend_of(ch), Port::ptw_of(ch)] {
                 assert!(p.index() < Port::COUNT);

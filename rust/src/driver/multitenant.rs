@@ -248,7 +248,7 @@ impl MultiTenantDriver {
         }
         if !newly.is_empty() {
             // One sweep over the outstanding set, not one per cookie.
-            let done: std::collections::HashSet<Cookie> = newly.iter().copied().collect();
+            let done: std::collections::BTreeSet<Cookie> = newly.iter().copied().collect();
             self.outstanding.retain(|&(c, _, _)| !done.contains(&c));
             self.completed.extend(newly);
         }
@@ -260,7 +260,7 @@ impl MultiTenantDriver {
             // Failed work will never complete: stop counting it as
             // load, charge the owning vchan, and quarantine repeat
             // offenders.
-            let dead: std::collections::HashSet<Cookie> = newly_failed.iter().copied().collect();
+            let dead: std::collections::BTreeSet<Cookie> = newly_failed.iter().copied().collect();
             self.outstanding.retain(|&(c, _, _)| !dead.contains(&c));
             for &cookie in &newly_failed {
                 if let Some(v) = self.vchans.iter_mut().find(|v| v.cookies.contains(&cookie)) {

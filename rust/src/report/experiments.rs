@@ -10,11 +10,11 @@ use crate::mem::backdoor::fill_pattern;
 use crate::mem::LatencyProfile;
 use crate::model::{AreaModel, FpgaModel, UtilizationModel};
 use crate::report::parallel::par_map;
+use crate::report::timer::{Clock, WallClock};
 use crate::report::{Series, Table};
 use crate::sim::RunStats;
 use crate::tb::System;
 use crate::workload::{HitRateLayout, Sweep};
-use std::time::Instant;
 
 /// Transfer sizes swept in Fig. 4/5 (bytes).
 pub const FIG_SIZES: [u32; 10] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
@@ -95,8 +95,12 @@ pub struct TimedRun {
     pub ff_skipped_cycles: u64,
 }
 
-fn timed<C: crate::dmac::Controller>(mut sys: System<C>, naive: bool) -> TimedRun {
-    let t0 = Instant::now();
+fn timed<C: crate::dmac::Controller>(
+    mut sys: System<C>,
+    naive: bool,
+    clock: &dyn Clock,
+) -> TimedRun {
+    let sw = clock.start();
     let stats = if naive {
         sys.run_until_idle_naive().expect("timed run (naive)")
     } else {
@@ -104,24 +108,38 @@ fn timed<C: crate::dmac::Controller>(mut sys: System<C>, naive: bool) -> TimedRu
     };
     TimedRun {
         stats,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds: sw.elapsed_seconds(),
         ff_jumps: sys.horizon.jumps,
         ff_skipped_cycles: sys.horizon.skipped_cycles,
     }
 }
 
 /// Timed uniform sweep on our DMAC; `naive` selects the per-cycle
-/// reference loop instead of the event-horizon scheduler.
+/// reference loop instead of the event-horizon scheduler.  Times by
+/// the real wall clock — inject a `NullClock` via
+/// [`run_ours_timed_with`] for a wall-clock-free run.
 pub fn run_ours_timed(
     cfg: DmacConfig,
     profile: LatencyProfile,
     sweep: Sweep,
     naive: bool,
 ) -> TimedRun {
+    run_ours_timed_with(cfg, profile, sweep, naive, &WallClock)
+}
+
+/// [`run_ours_timed`] with an injected clock (the wall-clock boundary
+/// lives in [`crate::report::timer`]; see DESIGN.md §14).
+pub fn run_ours_timed_with(
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    sweep: Sweep,
+    naive: bool,
+    clock: &dyn Clock,
+) -> TimedRun {
     let mut sys = System::new(profile, Dmac::new(cfg));
     prepare_payload(&mut sys.mem, sweep);
     sys.load_and_launch(0, &sweep.chain());
-    timed(sys, naive)
+    timed(sys, naive, clock)
 }
 
 /// Timed hit-rate-controlled sweep on our DMAC (chain generation is
@@ -134,20 +152,44 @@ pub fn run_ours_hitrate_timed(
     seed: u64,
     naive: bool,
 ) -> TimedRun {
+    run_ours_hitrate_timed_with(cfg, profile, sweep, hit_rate, seed, naive, &WallClock)
+}
+
+/// [`run_ours_hitrate_timed`] with an injected clock.
+#[allow(clippy::too_many_arguments)]
+pub fn run_ours_hitrate_timed_with(
+    cfg: DmacConfig,
+    profile: LatencyProfile,
+    sweep: Sweep,
+    hit_rate: f64,
+    seed: u64,
+    naive: bool,
+    clock: &dyn Clock,
+) -> TimedRun {
     let mut sys = System::new(profile, Dmac::new(cfg));
     prepare_payload(&mut sys.mem, sweep);
     let (chain, _) = HitRateLayout::new(sweep, hit_rate, seed).chain();
     sys.load_and_launch(0, &chain);
-    timed(sys, naive)
+    timed(sys, naive, clock)
 }
 
 /// Timed sweep on the LogiCORE baseline.
 pub fn run_logicore_timed(profile: LatencyProfile, sweep: Sweep, naive: bool) -> TimedRun {
+    run_logicore_timed_with(profile, sweep, naive, &WallClock)
+}
+
+/// [`run_logicore_timed`] with an injected clock.
+pub fn run_logicore_timed_with(
+    profile: LatencyProfile,
+    sweep: Sweep,
+    naive: bool,
+    clock: &dyn Clock,
+) -> TimedRun {
     let mut sys = System::new(profile, LogiCore::new(LcConfig::default()));
     prepare_payload(&mut sys.mem, sweep);
     let head = sweep.lc_chain().write_to(&mut sys.mem);
     sys.schedule_launch(0, head);
-    timed(sys, naive)
+    timed(sys, naive, clock)
 }
 
 /// Run the full Fig. 4 grid (all sizes, LogiCORE + the three Table I
@@ -156,15 +198,24 @@ pub fn run_logicore_timed(profile: LatencyProfile, sweep: Sweep, naive: bool) ->
 /// before/after measurement of the fast-forward scheduler itself, so
 /// the parallel executor must not pollute it.
 pub fn grid_cycles_and_wall(profile: LatencyProfile, naive: bool) -> (u64, f64) {
+    grid_cycles_and_wall_with(profile, naive, &WallClock)
+}
+
+/// [`grid_cycles_and_wall`] with an injected clock.
+pub fn grid_cycles_and_wall_with(
+    profile: LatencyProfile,
+    naive: bool,
+    clock: &dyn Clock,
+) -> (u64, f64) {
     let mut cycles = 0u64;
     let mut wall = 0.0f64;
     for &size in FIG_SIZES.iter() {
         let sweep = Sweep::new(CHAIN_LEN, size);
-        let lc = run_logicore_timed(profile, sweep, naive);
+        let lc = run_logicore_timed_with(profile, sweep, naive, clock);
         cycles += lc.stats.end_cycle;
         wall += lc.wall_seconds;
         for cfg in DmacConfig::paper_configs() {
-            let r = run_ours_timed(cfg, profile, sweep, naive);
+            let r = run_ours_timed_with(cfg, profile, sweep, naive, clock);
             cycles += r.stats.end_cycle;
             wall += r.wall_seconds;
         }
@@ -559,5 +610,31 @@ mod tests {
         assert!(fast.ff_jumps > 0, "deep memory must fast-forward");
         assert_eq!(naive.ff_jumps, 0, "naive loop never jumps");
         assert!(fast.wall_seconds >= 0.0 && naive.wall_seconds >= 0.0);
+    }
+
+    #[test]
+    fn null_clock_makes_timed_runs_wall_clock_free() {
+        use crate::report::timer::NullClock;
+        let sweep = Sweep::new(16, 64);
+        let a = run_ours_timed_with(
+            DmacConfig::base(),
+            LatencyProfile::UltraDeep,
+            sweep,
+            false,
+            &NullClock,
+        );
+        let b = run_ours_timed_with(
+            DmacConfig::base(),
+            LatencyProfile::UltraDeep,
+            sweep,
+            false,
+            &NullClock,
+        );
+        // With the null clock injected the whole TimedRun is
+        // deterministic, wall bookkeeping included.
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.wall_seconds, 0.0);
+        assert_eq!(b.wall_seconds, 0.0);
+        assert_eq!(a.ff_jumps, b.ff_jumps);
     }
 }

@@ -12,6 +12,7 @@ pub mod nd;
 pub mod parallel;
 pub mod rings;
 pub mod throughput;
+pub mod timer;
 pub mod translation;
 
 pub use contention::{ContentionPoint, MultiChannelReport};
@@ -22,6 +23,7 @@ pub use nd::{NdPoint, NdReport};
 pub use parallel::par_map;
 pub use rings::{RingPoint, RingsReport};
 pub use throughput::{ThroughputEntry, ThroughputReport};
+pub use timer::{Clock, NullClock, WallClock};
 pub use translation::{AccessPattern, TranslationPoint, TranslationReport};
 
 /// A paper-style table.

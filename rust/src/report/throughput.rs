@@ -28,6 +28,7 @@ pub struct ThroughputEntry {
     /// "naive" or "fast_forward".
     pub mode: &'static str,
     pub simulated_cycles: u64,
+    // lint:allow(no-float-in-bench-json, wall-clock throughput fields are advisory — the CI gate diffs simulated_cycles only and explicitly ignores wall keys)
     pub wall_seconds: f64,
     /// Fast-forward jumps taken (0 in naive mode).
     pub ff_jumps: u64,
@@ -163,10 +164,12 @@ mod tests {
 
     #[test]
     fn json_shape_and_escaping() {
+        // lint:allow(no-float-in-bench-json, fixture wall-seconds driving the advisory fields of the shape test)
+        let (slow, fast) = (0.5, 0.1);
         let mut r = ThroughputReport::new();
-        r.push(entry("naive", 1_000_000, 0.5));
-        r.push(entry("fast_forward", 1_000_000, 0.1));
-        r.push_speedup("fig4c", 0.5, 0.1);
+        r.push(entry("naive", 1_000_000, slow));
+        r.push(entry("fast_forward", 1_000_000, fast));
+        r.push_speedup("fig4c", slow, fast);
         let j = r.to_json();
         assert!(j.contains("\"schema\": \"idmac-sim-throughput/v1\""));
         assert!(j.contains("\"mode\": \"naive\""));

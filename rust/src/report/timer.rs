@@ -1,0 +1,82 @@
+//! The crate's single sanctioned wall-clock boundary.
+//!
+//! Determinism contract (DESIGN.md §14, lint rule `no-wall-clock`):
+//! nothing the simulator *computes* — cycle counts, `RunStats`, any
+//! value the CI bench gate diffs — may depend on wall time.  Wall time
+//! is still *observed* for the advisory Mcycles/s throughput figures
+//! (EXPERIMENTS.md §Perf), and all such observation flows through the
+//! [`Clock`] trait so callers decide whether a run is timed by the
+//! real clock ([`WallClock`]) or not timed at all ([`NullClock`]).
+//! `std::time` is banned everywhere else outside `benches/`, by both
+//! the Python analyzer and clippy's `disallowed-types` config.
+
+/// A started stopwatch, reporting seconds since [`Clock::start`].
+pub trait Stopwatch {
+    fn elapsed_seconds(&self) -> f64;
+}
+
+/// A source of stopwatches, injected into the timed experiment
+/// drivers ([`super::experiments::run_ours_timed_with`] and friends).
+pub trait Clock {
+    fn start(&self) -> Box<dyn Stopwatch>;
+}
+
+// The one place in `src/` allowed to touch `std::time`: keep the
+// exemption surface as small as the module that defines the boundary.
+#[allow(clippy::disallowed_types, clippy::disallowed_methods)]
+mod wall {
+    struct WallStopwatch(std::time::Instant);
+
+    impl super::Stopwatch for WallStopwatch {
+        fn elapsed_seconds(&self) -> f64 {
+            self.0.elapsed().as_secs_f64()
+        }
+    }
+
+    /// The real wall clock, used by the CLI and the bench targets.
+    #[derive(Debug, Clone, Copy, Default)]
+    pub struct WallClock;
+
+    impl super::Clock for WallClock {
+        fn start(&self) -> Box<dyn super::Stopwatch> {
+            Box::new(WallStopwatch(std::time::Instant::now()))
+        }
+    }
+}
+
+pub use wall::WallClock;
+
+/// A clock that never advances: timed entry points become wall-clock
+/// free (deterministic output, `wall_seconds == 0.0`) — what tests and
+/// any future cycle-only caller should inject.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullClock;
+
+impl Stopwatch for NullClock {
+    fn elapsed_seconds(&self) -> f64 {
+        0.0
+    }
+}
+
+impl Clock for NullClock {
+    fn start(&self) -> Box<dyn Stopwatch> {
+        Box::new(NullClock)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_clock_never_advances() {
+        let sw = NullClock.start();
+        assert_eq!(sw.elapsed_seconds(), 0.0);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_nonnegative() {
+        let sw = WallClock.start();
+        assert!(sw.elapsed_seconds() >= 0.0);
+    }
+}

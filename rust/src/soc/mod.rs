@@ -63,6 +63,23 @@ pub fn error_irq_source(ch: usize) -> u32 {
     ERROR_IRQ_SOURCE + ch as u32
 }
 
+// Compile-time pins of the IRQ source map (lint rule
+// `irq-map-disjoint` re-derives the same facts from the source text).
+// Each bank is MAX_CHANNELS wide; banks must be pairwise disjoint,
+// stay clear of source 0 (reserved by the PLIC spec) and of the CPU
+// peripheral sources below DMAC_IRQ_SOURCE, and the top bank must fit
+// under Plic::MAX_SOURCES.  ROADMAP item 2 plans MAX_CHANNELS = 64:
+// 5 + 4*64 = 261 > 256 will trip the capacity assert, forcing the
+// PLIC to grow *with* the map instead of overflowing silently.
+const _: () = {
+    const W: u32 = crate::axi::MAX_CHANNELS as u32;
+    assert!(DMAC_IRQ_SOURCE >= 1);
+    assert!(DMAC_IRQ_SOURCE + W <= IOMMU_FAULT_SOURCE);
+    assert!(IOMMU_FAULT_SOURCE + W <= RING_IRQ_SOURCE);
+    assert!(RING_IRQ_SOURCE + W <= ERROR_IRQ_SOURCE);
+    assert!(ERROR_IRQ_SOURCE + W <= Plic::MAX_SOURCES);
+};
+
 /// The in-system integration: the OOC testbench plus CPU + PLIC.
 pub struct Soc<C: Controller> {
     pub sys: System<C>,

@@ -13,6 +13,14 @@ pub struct Plic {
 }
 
 impl Plic {
+    /// Gateway-table capacity of the modeled PLIC (sources
+    /// `1..MAX_SOURCES`; source 0 is reserved by the spec).  The SoC
+    /// IRQ map (`soc::mod.rs`) const-asserts that its highest bank
+    /// fits below this, so growing `MAX_CHANNELS` (ROADMAP item 2)
+    /// forces a conscious PLIC-capacity decision instead of a silent
+    /// overflow.
+    pub const MAX_SOURCES: u32 = 256;
+
     pub fn new() -> Self {
         Self::default()
     }
@@ -21,6 +29,11 @@ impl Plic {
     /// of an already-pending source are merged (level semantics at the
     /// gateway), matching the PLIC spec.
     pub fn raise(&mut self, source: u32) {
+        debug_assert!(
+            source >= 1 && source < Self::MAX_SOURCES,
+            "PLIC source {source} outside 1..{}",
+            Self::MAX_SOURCES
+        );
         self.raises += 1;
         if !self.pending.contains(&source) && !self.claimed.contains(&source) {
             self.pending.push(source);
