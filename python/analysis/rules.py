@@ -197,7 +197,9 @@ _GUARD = re.compile(r"const\s+_\s*:\s*\(\)\s*=")
 
 
 def _eval_const(expr: str, env: dict[str, int]) -> int:
-    """Evaluate ``expr`` (idents, ints, + - *, parens, `as` casts, paths)."""
+    """Evaluate ``expr`` (idents, ints, + - *, parens, `as` casts, paths,
+    and the `.next_power_of_two()` const method the derived
+    ``Plic::MAX_SOURCES`` uses)."""
     raw = re.findall(r"[A-Za-z_]\w*|0x[0-9a-fA-F_]+|\d[\d_]*|::|[()+\-*]", expr)
     toks: list[str] = []
     i = 0
@@ -214,7 +216,7 @@ def _eval_const(expr: str, env: dict[str, int]) -> int:
         toks.append(tok)
         i += 1
 
-    def atom(i: int) -> tuple[int, int]:
+    def primary(i: int) -> tuple[int, int]:
         t = toks[i]
         if t == "(":
             v, i = add(i + 1)
@@ -226,6 +228,15 @@ def _eval_const(expr: str, env: dict[str, int]) -> int:
         if t in env:
             return env[t], i + 1
         raise KeyError(t)
+
+    def atom(i: int) -> tuple[int, int]:
+        v, i = primary(i)
+        # Postfix const methods.  The tokenizer drops `.`, so
+        # `(expr).next_power_of_two()` scans as `expr next_power_of_two ( )`.
+        while toks[i : i + 3] == ["next_power_of_two", "(", ")"]:
+            v = 1 if v <= 1 else 1 << (v - 1).bit_length()
+            i += 3
+        return v, i
 
     def mul(i: int) -> tuple[int, int]:
         v, i = atom(i)

@@ -32,6 +32,7 @@ REQUIRED_SECTIONS = {
         "dram",
         "latency",
         "trace",
+        "xbar",
         "--stats-json",
         "bench-regression gate",
         "lint_rust.py",
@@ -46,6 +47,7 @@ REQUIRED_SECTIONS = {
         "DRAM backend",
         "Trace & telemetry",
         "Static analysis & determinism lints",
+        "Crossbar",
     ],
     "EXPERIMENTS.md": [
         "Contention",
@@ -54,6 +56,7 @@ REQUIRED_SECTIONS = {
         "Faults",
         "DRAM",
         "Latency",
+        "Crossbar",
         "BENCH_multichannel.json",
         "BENCH_sim_throughput.json",
         "BENCH_translation.json",
@@ -61,6 +64,7 @@ REQUIRED_SECTIONS = {
         "BENCH_faults.json",
         "BENCH_dram.json",
         "BENCH_latency.json",
+        "BENCH_xbar.json",
     ],
 }
 

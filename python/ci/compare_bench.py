@@ -50,6 +50,16 @@ fields are ignored by design, so runner speed cannot flake the build:
     integer cycle counts over log2 buckets, so the grid is exact-diffed
     like every other point grid.
 
+``xbar``
+    Validates ``BENCH_xbar.json``-shaped files (the crossbar
+    interconnect scaling grid) with the point-grid protocol against
+    the ``idmac-xbar/v1`` schema, plus the *scaling invariant*: for
+    every (channels, policy, granule) at maximum channel count, the
+    multi-controller rows must carry the same offered load
+    (``total_bytes``/``total_beats``) as the single-controller row and
+    report strictly higher ``agg_util_ppm`` — adding interleaved
+    memory controllers must actually raise aggregate bus utilization.
+
 A baseline file with no entries/points is *bootstrap mode*: the gate
 warns and passes, and the measured file (uploaded as a CI artifact) is
 what should be committed as the new baseline.
@@ -214,6 +224,54 @@ def check_latency(fast_path: str, naive_path: str, baseline_path: str) -> None:
     check_point_grid(fast_path, naive_path, baseline_path, "idmac-latency/v1", "latency")
 
 
+def check_xbar_scaling(points: list) -> None:
+    """The crossbar acceptance invariant, checked on the measured grid
+    (independent of the baseline, so it also gates bootstrap runs):
+    at the maximum swept channel count, every multi-controller row must
+    move the same offered load as its single-controller sibling and
+    report strictly higher aggregate utilization."""
+    max_ch = max(p["channels"] for p in points)
+    singles = {
+        (p["policy"], p["granule_log2"]): p
+        for p in points
+        if p["channels"] == max_ch and p["controllers"] == 1
+    }
+    if not singles:
+        fail(f"no single-controller rows at {max_ch} channels to compare against")
+    checked = 0
+    for p in points:
+        if p["channels"] != max_ch or p["controllers"] == 1:
+            continue
+        base = singles.get((p["policy"], p["granule_log2"]))
+        if base is None:
+            fail(
+                f"no 1-controller sibling for {max_ch}ch/"
+                f"{p['policy']}/g{p['granule_log2']}"
+            )
+        key = f"{max_ch}ch/{p['controllers']}ctrl/{p['policy']}/g{p['granule_log2']}"
+        if p["total_bytes"] != base["total_bytes"]:
+            fail(f"offered load differs from the 1-controller row at {key}")
+        if p["total_beats"] != base["total_beats"]:
+            fail(f"beat count not conserved vs the 1-controller row at {key}")
+        if p["agg_util_ppm"] <= base["agg_util_ppm"]:
+            fail(
+                f"aggregate utilization did not scale at {key}: "
+                f"{p['agg_util_ppm']} ppm <= {base['agg_util_ppm']} ppm"
+            )
+        checked += 1
+    if checked == 0:
+        fail(f"no multi-controller rows at {max_ch} channels")
+    print(
+        f"OK: {checked} multi-controller row(s) at {max_ch} channels beat the "
+        f"single-controller utilization at equal offered load"
+    )
+
+
+def check_xbar(fast_path: str, naive_path: str, baseline_path: str) -> None:
+    check_point_grid(fast_path, naive_path, baseline_path, "idmac-xbar/v1", "xbar")
+    check_xbar_scaling(load(fast_path)["points"])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="mode", required=True)
@@ -258,6 +316,11 @@ def main() -> None:
     la.add_argument("--naive", required=True)
     la.add_argument("--baseline", required=True)
 
+    xb = sub.add_parser("xbar")
+    xb.add_argument("--fast", required=True)
+    xb.add_argument("--naive", required=True)
+    xb.add_argument("--baseline", required=True)
+
     args = ap.parse_args()
     if args.mode == "throughput":
         check_throughput(args.measured, args.baseline, args.tolerance)
@@ -273,8 +336,10 @@ def main() -> None:
         check_faults(args.fast, args.naive, args.baseline)
     elif args.mode == "dram":
         check_dram(args.fast, args.naive, args.baseline)
-    else:
+    elif args.mode == "latency":
         check_latency(args.fast, args.naive, args.baseline)
+    else:
+        check_xbar(args.fast, args.naive, args.baseline)
 
 
 if __name__ == "__main__":

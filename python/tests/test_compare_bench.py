@@ -350,6 +350,115 @@ def test_latency_rejects_rings_schema(tmp_path):
     assert "unexpected schema" in r.stderr
 
 
+def xbar_point(channels, controllers, cycles, policy="rr", granule=6):
+    beats = channels * 100
+    return {
+        "channels": channels,
+        "controllers": controllers,
+        "granule_log2": granule,
+        "policy": policy,
+        "profile": "DDR3 (13 cycles)",
+        "size": 256,
+        "transfers_per_channel": 8,
+        "total_cycles": cycles,
+        "total_bytes": channels * 8 * 256,
+        "completions": channels * 8,
+        "total_beats": beats,
+        "agg_util_ppm": beats * 1_000_000 // cycles,
+        "per_ctrl_beats": [
+            {"read_beats": beats // (2 * controllers), "write_beats": beats // (2 * controllers)}
+        ]
+        * controllers,
+    }
+
+
+# The acceptance pair: 64 channels at equal offered load, four
+# controllers finishing in fewer cycles than one.
+XBAR_POINTS = [
+    xbar_point(64, 1, 40000),
+    xbar_point(64, 4, 15000),
+    xbar_point(4, 1, 9000),
+    xbar_point(4, 4, 5000),
+]
+
+
+def test_xbar_identical_grids_pass_and_check_scaling(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-xbar/v1", XBAR_POINTS))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-xbar/v1", XBAR_POINTS))
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", []))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 0, r.stderr
+    assert "bootstrap mode" in r.stdout
+    assert "beat the" in r.stdout
+
+
+def test_xbar_scheduler_divergence_fails(tmp_path):
+    diverged = [dict(XBAR_POINTS[0], total_cycles=40001)] + XBAR_POINTS[1:]
+    fast = write(tmp_path / "fast.json", point_doc("idmac-xbar/v1", XBAR_POINTS))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-xbar/v1", diverged))
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", []))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "not deterministic" in r.stderr
+
+
+def test_xbar_baseline_drift_fails(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-xbar/v1", XBAR_POINTS))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-xbar/v1", XBAR_POINTS))
+    drifted = [dict(XBAR_POINTS[0], total_cycles=39999)] + XBAR_POINTS[1:]
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", drifted))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "drifted" in r.stderr
+
+
+def test_xbar_utilization_that_fails_to_scale_gates(tmp_path):
+    # Four controllers no faster than one at the max channel count:
+    # the scaling invariant must fail even though the grids agree.
+    flat = [
+        xbar_point(64, 1, 40000),
+        xbar_point(64, 4, 40000),
+    ]
+    fast = write(tmp_path / "fast.json", point_doc("idmac-xbar/v1", flat))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-xbar/v1", flat))
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", []))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "did not scale" in r.stderr
+
+
+def test_xbar_unequal_offered_load_gates(tmp_path):
+    unequal = [
+        xbar_point(64, 1, 40000),
+        dict(xbar_point(64, 4, 15000), total_bytes=1),
+    ]
+    fast = write(tmp_path / "fast.json", point_doc("idmac-xbar/v1", unequal))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-xbar/v1", unequal))
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", []))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "offered load differs" in r.stderr
+
+
+def test_xbar_missing_single_controller_sibling_gates(tmp_path):
+    only_multi = [xbar_point(64, 4, 15000), xbar_point(4, 1, 9000)]
+    fast = write(tmp_path / "fast.json", point_doc("idmac-xbar/v1", only_multi))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-xbar/v1", only_multi))
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", []))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "no single-controller rows" in r.stderr
+
+
+def test_xbar_rejects_multichannel_schema(tmp_path):
+    fast = write(tmp_path / "fast.json", point_doc("idmac-multichannel/v1", XBAR_POINTS))
+    naive = write(tmp_path / "naive.json", point_doc("idmac-multichannel/v1", XBAR_POINTS))
+    base = write(tmp_path / "base.json", point_doc("idmac-xbar/v1", []))
+    r = run(["xbar", "--fast", fast, "--naive", naive, "--baseline", base])
+    assert r.returncode == 1
+    assert "unexpected schema" in r.stderr
+
+
 def test_throughput_mode_gates_cycle_identity(tmp_path):
     entry = {
         "label": "fig4-grid/DDR3 (13 cycles)",
@@ -392,6 +501,7 @@ def test_repo_baselines_parse_and_use_known_schemas():
         "BENCH_faults.json": "idmac-faults/v1",
         "BENCH_dram.json": "idmac-dram/v1",
         "BENCH_latency.json": "idmac-latency/v1",
+        "BENCH_xbar.json": "idmac-xbar/v1",
     }
     for name, schema in expected.items():
         path = os.path.join(repo, name)

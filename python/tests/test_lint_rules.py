@@ -188,6 +188,38 @@ def test_rule5_silent_without_anchor_files(tmp_path):
     assert "irq-map-disjoint" not in fired
 
 
+def test_derived_max_sources_resolves_at_64_channels(tmp_path):
+    # The real soc/plic.rs shape after the crossbar PR: MAX_SOURCES is
+    # *derived* from the top of the IRQ map via next_power_of_two(), so
+    # the map is clean at MAX_CHANNELS = 64 (top = 5 + 4*64 = 261 ≤ 512).
+    plic = (
+        "impl Plic { pub const MAX_SOURCES: u32 = (crate::soc::ERROR_IRQ_SOURCE"
+        " + crate::axi::MAX_CHANNELS as u32).next_power_of_two(); }\n"
+    )
+    fired, _ = rules_fired(
+        tmp_path,
+        {
+            "rust/src/soc/mod.rs": soc_consts() + GUARD,
+            "rust/src/axi/types.rs": "pub const MAX_CHANNELS: usize = 64;\n" + GUARD,
+            "rust/src/soc/plic.rs": plic,
+        },
+    )
+    assert "irq-map-disjoint" not in fired
+
+
+def test_eval_const_next_power_of_two():
+    from analysis.rules import _eval_const
+
+    env = {"A": 5, "W": 64}
+    assert _eval_const("(A + 4 * W).next_power_of_two()", env) == 512
+    assert _eval_const("(1).next_power_of_two()", env) == 1
+    assert _eval_const("(0).next_power_of_two()", env) == 1
+    assert _eval_const("(W).next_power_of_two()", env) == 64
+    assert _eval_const("(W + 1).next_power_of_two()", env) == 128
+    # Chained postfix calls evaluate left to right.
+    assert _eval_const("(3).next_power_of_two().next_power_of_two()", env) == 4
+
+
 # --- rule 6: stats-counters-documented ------------------------------------
 
 STATS_TMPL = """

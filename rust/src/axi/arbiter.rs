@@ -41,7 +41,7 @@ impl ArbPolicy {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Arbiter {
     ports: Vec<Port>,
     policy: ArbPolicy,
@@ -324,6 +324,54 @@ mod tests {
             assert_eq!(a.grant(|p| p == Port::Backend), Some(Port::Backend));
         }
         assert_eq!(a.grants_to(Port::Backend), 20);
+    }
+
+    #[test]
+    fn wrr_all_decline_at_refill_boundary_leaves_state_untouched() {
+        // Regression pin for the credit-refill hazard: when every
+        // requesting port has spent its credits, the work-conserving
+        // pass-2 refill must happen only *at a grant*.  A cycle where
+        // every port declines (peek-optimistic, pop-declines) must
+        // leave credits, rotation and counters untouched — otherwise
+        // the event-horizon scheduler, which skips such dead cycles,
+        // would observe a different credit stream than the naive loop.
+        let mut a = Arbiter::with_policy(
+            vec![Port::Frontend, Port::Backend],
+            ArbPolicy::WeightedRoundRobin,
+            vec![2, 1],
+        );
+        // Three grants spend every credit: FE(2), BE(1).
+        for _ in 0..3 {
+            a.grant(|_| true).unwrap();
+        }
+        let before = a.clone();
+        let got: Option<Port> = a.grant_with(|_| None);
+        assert_eq!(got, None);
+        assert_eq!(a, before, "decline-only cycle mutated WRR state at the refill boundary");
+        // The next taker still opens a fresh round (refill at grant).
+        assert_eq!(a.grant(|_| true), Some(Port::Backend));
+    }
+
+    #[test]
+    fn decline_only_cycles_never_mutate_state_under_any_policy() {
+        for policy in [
+            ArbPolicy::RoundRobin,
+            ArbPolicy::StrictPriority,
+            ArbPolicy::WeightedRoundRobin,
+        ] {
+            let mut a = Arbiter::with_policy(
+                vec![Port::Frontend, Port::Backend, Port::Cpu],
+                policy,
+                vec![3, 2, 1],
+            );
+            a.grant(|_| true).unwrap();
+            let before = a.clone();
+            for _ in 0..4 {
+                let got: Option<Port> = a.grant_with(|_| None);
+                assert_eq!(got, None);
+            }
+            assert_eq!(a, before, "{policy:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,815 @@
+//! N×M crossbar: requester ports to address-interleaved memory
+//! controllers.
+//!
+//! The shared-bus testbench (paper Fig. 3) funnels every manager port
+//! through one arbiter into one memory.  At 64 channels that single
+//! output port is the bottleneck; this module generalizes the
+//! interconnect to `M` memory controllers, each owning a full
+//! [`Memory`] instance, with the low address bits (above the interleave
+//! granule) selecting the owning controller:
+//!
+//! ```text
+//! route(addr) = (addr >> granule_log2) % M
+//! ```
+//!
+//! Structure (DESIGN.md §15):
+//!
+//! * **Per-output arbitration** — every controller has its own AR and W
+//!   [`Arbiter`] over the same port list, with the same QoS policy and
+//!   weights the shared bus used.  Up to `M` AR grants and `M` W beats
+//!   move per cycle (one per output port), but a requester port still
+//!   issues at most one AR and one W per cycle across all outputs.
+//! * **Burst segmentation** — an AR burst whose beats span a granule
+//!   boundary is split into per-controller segments at the boundary.
+//!   Segments issue strictly in order through the port's request queue;
+//!   response beats are merged back into original burst order by the
+//!   port's response plan, renumbered, and delivered at most one beat
+//!   per port per cycle.
+//! * **Per-link backpressure (credit reservation)** — each
+//!   (port, controller) response link holds at most `link_depth` beats.
+//!   A segment only issues when the link has credit for *all* its
+//!   beats, so a served beat always has link space: the memory's
+//!   delivery queue never blocks and the interconnect is deadlock-free
+//!   by construction.  Credits return as beats are delivered.
+//! * **Write scatter** — with `M > 1` each granted W beat is routed by
+//!   its own address and forwarded as a single-beat burst; the
+//!   crossbar tracks the outstanding component B responses per
+//!   (port, tag) and synthesizes the original burst's single B (worst
+//!   response folded) when all components have answered.  A withheld
+//!   component B leaves the tracker pending forever — exactly the
+//!   wedge the per-channel watchdog exists to break.
+//! * **Mirrored byte images** — every clean W beat is broadcast into
+//!   the other controllers' byte arrays through the backdoor (errored
+//!   beats never reach any array).  Reads of a byte therefore return
+//!   the same data whichever controller serves them; the mirror applies
+//!   up to one memory-latency early on non-owner images, an accepted
+//!   `M > 1` approximation (DESIGN.md §15).  Timing, responses and
+//!   arbitration remain exact.
+//!
+//! A **1×1 crossbar is verbatim forwarding**: no segmentation, no
+//! credits, no write scatter — cycle-identical to the shared-bus
+//! arbiter path (property-tested in `tests/xbar.rs`), so every
+//! existing BENCH baseline survives unchanged.
+//!
+//! Event-horizon safety: crossbar state only changes inside `tick`
+//! phases, and [`Crossbar::next_event`] reports `Some(0)` whenever a
+//! queued segment or a buffered response beat can act, so the
+//! fast-forward scheduler never skips a cycle in which the interconnect
+//! would have moved (the naive loop polls those cycles; both see the
+//! same sequence of grants).
+
+use super::arbiter::{ArbPolicy, Arbiter};
+use super::monitor::BusMonitor;
+use super::types::{Port, RBeat, ReadReq, Resp, WriteBeat};
+use crate::mem::latency::BResp;
+use crate::mem::Memory;
+use crate::sim::Cycle;
+use std::collections::VecDeque;
+
+/// Smallest supported interleave granule (64 B): a descriptor (32 B)
+/// and a cache line never straddle an ownership boundary.
+pub const MIN_GRANULE_LOG2: u32 = 6;
+
+/// Crossbar shape (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XbarConfig {
+    /// Number of memory controllers `M` (1 = degenerate shared bus).
+    pub controllers: usize,
+    /// log2 of the interleave granule in bytes (>= 6).
+    pub granule_log2: u32,
+    /// Response-link capacity in beats per (port, controller) link.
+    /// Raised internally to the largest possible segment so credit
+    /// reservation can always make progress.
+    pub link_depth: usize,
+}
+
+impl Default for XbarConfig {
+    fn default() -> Self {
+        Self { controllers: 1, granule_log2: MIN_GRANULE_LOG2, link_depth: 32 }
+    }
+}
+
+impl XbarConfig {
+    pub fn new(controllers: usize, granule_log2: u32) -> Self {
+        Self { controllers, granule_log2, ..Self::default() }
+    }
+}
+
+/// One per-controller slice of a (possibly split) read burst.
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    ctrl: usize,
+    req: ReadReq,
+    /// Beat offset of this segment within the original burst.
+    beat_base: u32,
+    last_of_burst: bool,
+}
+
+/// Response-merge plan entry: the port's next expected segment.
+#[derive(Debug, Clone, Copy)]
+struct RespSeg {
+    ctrl: usize,
+    beat_base: u32,
+    last_of_burst: bool,
+}
+
+/// Outstanding scattered write burst: component Bs still owed.
+#[derive(Debug, Clone, Copy)]
+struct WTracker {
+    port: Port,
+    tag: u64,
+    forwarded: u32,
+    received: u32,
+    saw_last: bool,
+    worst: Resp,
+}
+
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    ports: Vec<Port>,
+    policy: ArbPolicy,
+    weights: Vec<u32>,
+    controllers: usize,
+    granule_log2: u32,
+    /// Effective per-link capacity (config value raised to the largest
+    /// possible segment, so reservation can always succeed).
+    link_depth: usize,
+    /// `Port::index()` -> position in `ports` (usize::MAX = foreign).
+    port_lut: Vec<usize>,
+    /// Per-output-port arbiters (same ports/policy/weights each).
+    ar_arbs: Vec<Arbiter>,
+    w_arbs: Vec<Arbiter>,
+    /// Per-controller beat accounting (per-link `UtilWindow`s).
+    monitors: Vec<BusMonitor>,
+    /// Per-port response-merge plan (original burst order).
+    plans: Vec<VecDeque<RespSeg>>,
+    /// Per-port request queue: segments accepted but not yet issued.
+    reqq: Vec<VecDeque<Seg>>,
+    /// Per-(port, controller) response link queue, index `p * M + m`.
+    links: Vec<VecDeque<RBeat>>,
+    /// Free link slots per (port, controller) — reserved at AR issue,
+    /// returned at delivery.  Unused (bypassed) when `M == 1`.
+    credits: Vec<usize>,
+    /// Outstanding scattered write bursts, creation order.
+    trackers: Vec<WTracker>,
+    /// Cycle stamp of each port's last AR / W grant (one per cycle
+    /// across all outputs).
+    ar_issued_at: Vec<Cycle>,
+    w_issued_at: Vec<Cycle>,
+}
+
+/// Index helper over the split (controller 0, extras) memory storage
+/// the testbench keeps for API compatibility (`System::mem` stays the
+/// controller-0 memory every existing test backdoors into).
+fn mem_at<'a>(m: usize, mem0: &'a mut Memory, extras: &'a mut [Memory]) -> &'a mut Memory {
+    if m == 0 {
+        mem0
+    } else {
+        &mut extras[m - 1]
+    }
+}
+
+/// [`Crossbar::route`] as a free function (borrow-friendly inside the
+/// grant closures).
+fn route_with(granule_log2: u32, controllers: usize, addr: u64) -> usize {
+    ((addr >> granule_log2) % controllers as u64) as usize
+}
+
+impl Crossbar {
+    /// Build an `N x M` crossbar over `ports`.  Policy and weights are
+    /// applied to every output's AR and W arbiters, exactly as the
+    /// shared bus applied them to its single pair.
+    pub fn new(ports: Vec<Port>, policy: ArbPolicy, weights: Vec<u32>, cfg: XbarConfig) -> Self {
+        assert!(cfg.controllers >= 1, "crossbar needs at least one controller");
+        assert!(
+            cfg.granule_log2 >= MIN_GRANULE_LOG2,
+            "interleave granule below {} bytes would split descriptors",
+            1u64 << MIN_GRANULE_LOG2
+        );
+        assert!(cfg.granule_log2 < 32, "granule larger than any supported memory");
+        let n = ports.len();
+        let m = cfg.controllers;
+        // Largest segment = every beat start inside one granule at the
+        // narrowest beat (4 B): reservation must be able to cover it.
+        let max_seg_beats = ((1usize << cfg.granule_log2) / 4).min(4096);
+        let link_depth = cfg.link_depth.max(max_seg_beats).max(1);
+        let mut port_lut = vec![usize::MAX; Port::COUNT];
+        for (i, p) in ports.iter().enumerate() {
+            port_lut[p.index()] = i;
+        }
+        let build = || {
+            (0..m)
+                .map(|_| Arbiter::with_policy(ports.clone(), policy, weights.clone()))
+                .collect::<Vec<_>>()
+        };
+        Self {
+            ar_arbs: build(),
+            w_arbs: build(),
+            monitors: vec![BusMonitor::new(); m],
+            plans: vec![VecDeque::new(); n],
+            reqq: vec![VecDeque::new(); n],
+            links: vec![VecDeque::new(); n * m],
+            credits: vec![link_depth; n * m],
+            trackers: Vec::new(),
+            ar_issued_at: vec![Cycle::MAX; n],
+            w_issued_at: vec![Cycle::MAX; n],
+            port_lut,
+            ports,
+            policy,
+            weights,
+            controllers: m,
+            granule_log2: cfg.granule_log2,
+            link_depth,
+        }
+    }
+
+    pub fn controllers(&self) -> usize {
+        self.controllers
+    }
+
+    pub fn granule_log2(&self) -> u32 {
+        self.granule_log2
+    }
+
+    pub fn policy(&self) -> ArbPolicy {
+        self.policy
+    }
+
+    pub fn ports(&self) -> &[Port] {
+        &self.ports
+    }
+
+    /// The controller that owns `addr` (see module docs).
+    pub fn route(&self, addr: u64) -> usize {
+        route_with(self.granule_log2, self.controllers, addr)
+    }
+
+    /// Replace the QoS policy/weights on every output's arbiters
+    /// (rebuilds them — rotation and credit state reset, exactly like
+    /// constructing the shared-bus arbiters afresh).
+    pub fn set_policy(&mut self, policy: ArbPolicy, weights: Vec<u32>) {
+        self.policy = policy;
+        self.weights = weights;
+        let rebuild = |n: usize, ports: &[Port], w: &[u32]| {
+            (0..n)
+                .map(|_| Arbiter::with_policy(ports.to_vec(), policy, w.to_vec()))
+                .collect::<Vec<_>>()
+        };
+        self.ar_arbs = rebuild(self.controllers, &self.ports, &self.weights);
+        self.w_arbs = rebuild(self.controllers, &self.ports, &self.weights);
+    }
+
+    /// Per-controller beat monitors (per-link utilization windows).
+    pub fn monitors(&self) -> &[BusMonitor] {
+        &self.monitors
+    }
+
+    pub fn monitors_mut(&mut self) -> &mut [BusMonitor] {
+        &mut self.monitors
+    }
+
+    /// AR grants made so far at output `m` (fairness diagnostics).
+    pub fn ar_grants(&self, m: usize) -> u64 {
+        self.ar_arbs[m].grants()
+    }
+
+    /// (AR, W) grants to `port` summed across every output arbiter —
+    /// the crossbar equivalent of the shared bus's per-port counters.
+    pub fn grants_to(&self, port: Port) -> (u64, u64) {
+        let ar = self.ar_arbs.iter().map(|a| a.grants_to(port)).sum();
+        let w = self.w_arbs.iter().map(|a| a.grants_to(port)).sum();
+        (ar, w)
+    }
+
+    /// Split `req` into per-controller segments at beat granularity: a
+    /// segment is a maximal run of beats whose start addresses route to
+    /// one controller (a beat that *straddles* a granule boundary is
+    /// owned by the controller of its start address).  `M == 1` always
+    /// yields the whole burst, untouched.
+    fn split(g: u32, nctrl: usize, req: ReadReq) -> Vec<Seg> {
+        if nctrl == 1 {
+            return vec![Seg { ctrl: 0, req, beat_base: 0, last_of_burst: true }];
+        }
+        let bpb = req.bytes_per_beat as u64;
+        let mut segs = Vec::new();
+        let mut start = 0u32;
+        let mut cur = route_with(g, nctrl, req.addr);
+        for b in 1..req.beats {
+            let ctrl = route_with(g, nctrl, req.addr + b as u64 * bpb);
+            if ctrl != cur {
+                segs.push(Seg {
+                    ctrl: cur,
+                    req: ReadReq {
+                        addr: req.addr + start as u64 * bpb,
+                        beats: b - start,
+                        ..req
+                    },
+                    beat_base: start,
+                    last_of_burst: false,
+                });
+                start = b;
+                cur = ctrl;
+            }
+        }
+        segs.push(Seg {
+            ctrl: cur,
+            req: ReadReq { addr: req.addr + start as u64 * bpb, beats: req.beats - start, ..req },
+            beat_base: start,
+            last_of_burst: true,
+        });
+        segs
+    }
+
+    /// AR phase: one grant per output controller, each through its own
+    /// arbiter.  `try_pop(port, routes_here)` must peek the port's next
+    /// AR address (the
+    /// [`Controller::ar_addr`](crate::dmac::Controller::ar_addr)
+    /// contract), return `None` without popping when the port has no
+    /// request or `routes_here(addr)` is false, and otherwise pop and
+    /// return the burst.  The single-closure shape lets the caller hold
+    /// one `&mut` over its controller for both the peek and the pop.
+    pub fn grant_ar(
+        &mut self,
+        now: Cycle,
+        mem0: &mut Memory,
+        extras: &mut [Memory],
+        mut try_pop: impl FnMut(Port, &dyn Fn(u64) -> bool) -> Option<ReadReq>,
+    ) {
+        let nctrl = self.controllers;
+        let g = self.granule_log2;
+        for m in 0..nctrl {
+            let mem = mem_at(m, &mut *mem0, &mut *extras);
+            let Crossbar {
+                ref mut ar_arbs,
+                ref mut reqq,
+                ref mut plans,
+                ref mut credits,
+                ref mut ar_issued_at,
+                ref port_lut,
+                ..
+            } = *self;
+            let _ = ar_arbs[m].grant_with(|p| {
+                let pi = port_lut[p.index()];
+                if pi == usize::MAX || ar_issued_at[pi] == now {
+                    return None;
+                }
+                // Queued segments go out strictly in order, before any
+                // new burst is accepted from the port.
+                if let Some(front) = reqq[pi].front() {
+                    if front.ctrl != m {
+                        return None;
+                    }
+                    if nctrl > 1 && credits[pi * nctrl + m] < front.req.beats as usize {
+                        return None; // link full: wait for deliveries
+                    }
+                    let seg = reqq[pi].pop_front().unwrap();
+                    if nctrl > 1 {
+                        credits[pi * nctrl + m] -= seg.req.beats as usize;
+                    }
+                    mem.push_read(now, seg.req);
+                    ar_issued_at[pi] = now;
+                    return Some(());
+                }
+                let req = try_pop(p, &|addr| route_with(g, nctrl, addr) == m)?;
+                debug_assert_eq!(
+                    route_with(g, nctrl, req.addr),
+                    m,
+                    "popped a burst that routes elsewhere"
+                );
+                ar_issued_at[pi] = now;
+                let segs = Crossbar::split(g, nctrl, req);
+                for s in &segs {
+                    plans[pi].push_back(RespSeg {
+                        ctrl: s.ctrl,
+                        beat_base: s.beat_base,
+                        last_of_burst: s.last_of_burst,
+                    });
+                }
+                let mut it = segs.into_iter();
+                let first = it.next().unwrap();
+                // Issue the head segment this very cycle when its link
+                // has credit (always, for M == 1 — verbatim path).
+                if nctrl == 1 || credits[pi * nctrl + m] >= first.req.beats as usize {
+                    if nctrl > 1 {
+                        credits[pi * nctrl + m] -= first.req.beats as usize;
+                    }
+                    mem.push_read(now, first.req);
+                } else {
+                    reqq[pi].push_back(first);
+                }
+                reqq[pi].extend(it);
+                Some(())
+            });
+        }
+    }
+
+    /// W phase: one beat per output controller.  `try_pop` follows the
+    /// same peek-test-pop contract as [`grant_ar`](Self::grant_ar),
+    /// over [`Controller::w_addr`](crate::dmac::Controller::w_addr).
+    /// With `M > 1` the beat is forwarded as a single-beat burst and
+    /// its clean data is mirrored into every other controller's byte
+    /// image (module docs).
+    pub fn grant_w(
+        &mut self,
+        now: Cycle,
+        mem0: &mut Memory,
+        extras: &mut [Memory],
+        mut try_pop: impl FnMut(Port, &dyn Fn(u64) -> bool) -> Option<WriteBeat>,
+    ) {
+        let nctrl = self.controllers;
+        let g = self.granule_log2;
+        let mut mirror: Vec<WriteBeat> = Vec::new();
+        for m in 0..nctrl {
+            let mem = mem_at(m, &mut *mem0, &mut *extras);
+            let Crossbar {
+                ref mut w_arbs,
+                ref mut w_issued_at,
+                ref mut trackers,
+                ref mut monitors,
+                ref port_lut,
+                ..
+            } = *self;
+            let mirror = &mut mirror;
+            let _ = w_arbs[m].grant_with(|p| {
+                let pi = port_lut[p.index()];
+                if pi == usize::MAX || w_issued_at[pi] == now {
+                    return None;
+                }
+                let w = try_pop(p, &|addr| route_with(g, nctrl, addr) == m)?;
+                debug_assert_eq!(
+                    route_with(g, nctrl, w.addr),
+                    m,
+                    "popped a beat that routes elsewhere"
+                );
+                w_issued_at[pi] = now;
+                monitors[m].count_write_beat(w.port, w.bytes);
+                if nctrl == 1 {
+                    mem.push_write(now, w);
+                    return Some(());
+                }
+                // Scatter: component burst of one beat; track the B.
+                match trackers
+                    .iter_mut()
+                    .find(|t| t.port == w.port && t.tag == w.tag && !t.saw_last)
+                {
+                    Some(t) => {
+                        t.forwarded += 1;
+                        t.saw_last = w.last;
+                    }
+                    None => trackers.push(WTracker {
+                        port: w.port,
+                        tag: w.tag,
+                        forwarded: 1,
+                        received: 0,
+                        saw_last: w.last,
+                        worst: Resp::Okay,
+                    }),
+                }
+                let resp = mem.push_write(now, WriteBeat { last: true, ..w });
+                if resp == Resp::Okay {
+                    mirror.push(w);
+                }
+                Some(())
+            });
+        }
+        // Mirror clean beats into the non-owner images (skip anything
+        // out of range — the owner already answered DECERR for it and
+        // dropped the data).
+        for w in mirror {
+            let owner = self.route(w.addr);
+            let n = (w.bytes as usize).min(8);
+            for k in 0..nctrl {
+                if k == owner {
+                    continue;
+                }
+                let mk = mem_at(k, &mut *mem0, &mut *extras);
+                if (w.addr as usize) + n <= mk.size() {
+                    mk.backdoor_write(w.addr, &w.data[..n]);
+                }
+            }
+        }
+    }
+
+    /// Response-drain phase: move up to one served R beat per memory
+    /// into its (port, controller) link queue.  Credit reservation
+    /// guarantees the space, so the memory never blocks.
+    pub fn drain_r(&mut self, now: Cycle, mem0: &mut Memory, extras: &mut [Memory]) {
+        let nctrl = self.controllers;
+        let depth = self.link_depth;
+        for m in 0..nctrl {
+            let mem = mem_at(m, &mut *mem0, &mut *extras);
+            if let Some(beat) = mem.pop_read_beat(now) {
+                let pi = self.port_lut[beat.port.index()];
+                debug_assert!(pi != usize::MAX, "R beat for a foreign port: {:?}", beat.port);
+                self.monitors[m].count_read_beat(beat.port, beat.bytes);
+                let link = &mut self.links[pi * nctrl + m];
+                debug_assert!(
+                    nctrl == 1 || link.len() < depth,
+                    "response link overflow despite credit reservation"
+                );
+                link.push_back(beat);
+            }
+        }
+    }
+
+    /// Deliver the next in-order response beat for the port at position
+    /// `port_idx` in the crossbar's port list, if one is buffered.
+    /// Beats are renumbered into original-burst coordinates; `last` is
+    /// asserted only on the true final beat of the original burst.
+    /// Call at most once per port per cycle.
+    pub fn pop_r_for(&mut self, port_idx: usize) -> Option<RBeat> {
+        let seg = *self.plans[port_idx].front()?;
+        let link = &mut self.links[port_idx * self.controllers + seg.ctrl];
+        let b = link.pop_front()?;
+        if self.controllers > 1 {
+            self.credits[port_idx * self.controllers + seg.ctrl] += 1;
+        }
+        let out = RBeat {
+            beat: seg.beat_base + b.beat,
+            last: seg.last_of_burst && b.last,
+            ..b
+        };
+        if b.last {
+            self.plans[port_idx].pop_front();
+        }
+        Some(out)
+    }
+
+    /// Route a B response popped from a controller's memory.  `M == 1`
+    /// forwards verbatim; otherwise the component B lands in its burst
+    /// tracker, and the synthesized original B (worst response folded
+    /// over the components) is returned once the set completes.
+    pub fn route_b(&mut self, b: BResp) -> Option<BResp> {
+        if self.controllers == 1 {
+            return Some(b);
+        }
+        let idx = self
+            .trackers
+            .iter()
+            .position(|t| t.port == b.port && t.tag == b.tag && t.received < t.forwarded)
+            .expect("B response with no tracked write burst");
+        let t = &mut self.trackers[idx];
+        t.received += 1;
+        t.worst = t.worst.max(b.resp);
+        if t.saw_last && t.received == t.forwarded {
+            let done = self.trackers.remove(idx);
+            return Some(BResp { port: done.port, tag: done.tag, resp: done.worst });
+        }
+        None
+    }
+
+    /// Advance the per-controller monitors one cycle.
+    pub fn tick_monitors(&mut self) {
+        for mon in &mut self.monitors {
+            mon.tick();
+        }
+    }
+
+    /// Fast-forward the per-controller monitors across dead cycles.
+    pub fn advance_monitors(&mut self, cycles: u64) {
+        for mon in &mut self.monitors {
+            mon.advance(cycles);
+        }
+    }
+
+    /// `Some(0)` whenever the interconnect itself can act without new
+    /// input: a queued segment retries issue every cycle, and a
+    /// buffered response beat delivers every cycle.  Trackers awaiting
+    /// B responses are input-driven (the memory's `next_event` owns
+    /// those), and a plan waiting on unserved beats likewise.
+    pub fn next_event(&self) -> Option<Cycle> {
+        let busy = self.reqq.iter().any(|q| !q.is_empty())
+            || self.links.iter().any(|q| !q.is_empty());
+        busy.then_some(0)
+    }
+
+    /// All queues drained (trackers excluded: a tracker wedged by a
+    /// withheld component B must not keep the system "busy" — the
+    /// watchdog path handles it, exactly as on the shared bus).
+    pub fn quiescent(&self) -> bool {
+        self.reqq.iter().all(VecDeque::is_empty)
+            && self.links.iter().all(VecDeque::is_empty)
+            && self.plans.iter().all(VecDeque::is_empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::LatencyProfile;
+    use std::cell::Cell;
+
+    fn ports2() -> Vec<Port> {
+        vec![Port::Frontend, Port::Backend]
+    }
+
+    fn xbar(m: usize, g: u32) -> Crossbar {
+        Crossbar::new(ports2(), ArbPolicy::RoundRobin, Vec::new(), XbarConfig::new(m, g))
+    }
+
+    #[test]
+    fn route_interleaves_by_granule() {
+        let x = xbar(4, 6);
+        assert_eq!(x.route(0x00), 0);
+        assert_eq!(x.route(0x3F), 0);
+        assert_eq!(x.route(0x40), 1);
+        assert_eq!(x.route(0x80), 2);
+        assert_eq!(x.route(0xC0), 3);
+        assert_eq!(x.route(0x100), 0);
+    }
+
+    #[test]
+    fn single_controller_routes_everything_to_zero() {
+        let x = xbar(1, 6);
+        for addr in [0u64, 0x40, 0x1234_5678, u64::MAX >> 8] {
+            assert_eq!(x.route(addr), 0);
+        }
+    }
+
+    #[test]
+    fn split_cuts_at_granule_boundaries() {
+        // 24 beats x 8 B from 0x20 over 2 controllers, 64 B granule:
+        // the owning controller alternates per 64 B granule.
+        let req = ReadReq::new(Port::Backend, 7, 0x20, 24);
+        let segs = Crossbar::split(6, 2, req);
+        let shape: Vec<(usize, u64, u32, u32, bool)> = segs
+            .iter()
+            .map(|s| (s.ctrl, s.req.addr, s.req.beats, s.beat_base, s.last_of_burst))
+            .collect();
+        assert_eq!(
+            shape,
+            vec![
+                (0, 0x20, 4, 0, false),
+                (1, 0x40, 8, 4, false),
+                (0, 0x80, 8, 12, false),
+                (1, 0xC0, 4, 20, true),
+            ]
+        );
+        // Segments reassemble the original burst exactly.
+        assert_eq!(segs.iter().map(|s| s.req.beats).sum::<u32>(), req.beats);
+    }
+
+    #[test]
+    fn split_is_identity_for_one_controller() {
+        let req = ReadReq::new(Port::Backend, 3, 0x20, 200);
+        let segs = Crossbar::split(6, 1, req);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].req, req);
+        assert!(segs[0].last_of_burst);
+        assert_eq!(segs[0].beat_base, 0);
+    }
+
+    #[test]
+    fn split_keeps_unaligned_straddling_beats_with_their_start() {
+        // Beat at 0x3C straddles 0x40: owned by route(0x3C) = ctrl 0.
+        let req = ReadReq::new(Port::Backend, 9, 0x3C, 2);
+        let segs = Crossbar::split(6, 2, req);
+        assert_eq!(segs.len(), 2);
+        assert_eq!((segs[0].ctrl, segs[0].req.beats), (0, 1));
+        assert_eq!((segs[1].ctrl, segs[1].req.addr), (1, 0x44));
+    }
+
+    #[test]
+    fn split_narrow_beats_fill_a_granule() {
+        // 4 B beats: 16 of them per 64 B granule.
+        let req = ReadReq::narrow(Port::LcFrontend, 1, 0x0, 32, 4);
+        let segs = Crossbar::split(6, 2, req);
+        assert_eq!(segs.len(), 2);
+        assert_eq!((segs[0].ctrl, segs[0].req.beats), (0, 16));
+        assert_eq!((segs[1].ctrl, segs[1].req.beats, segs[1].beat_base), (1, 16, 16));
+    }
+
+    #[test]
+    fn route_b_passthrough_on_single_controller() {
+        let mut x = xbar(1, 6);
+        let b = BResp { port: Port::Backend, tag: 5, resp: Resp::SlvErr };
+        assert_eq!(x.route_b(b), Some(b));
+        assert!(x.quiescent());
+    }
+
+    #[test]
+    fn write_scatter_folds_component_bs_into_one() {
+        let mut x = xbar(2, 6);
+        let mut mem0 = Memory::new(1 << 16, LatencyProfile::Ideal);
+        let mut extras = vec![Memory::new(1 << 16, LatencyProfile::Ideal)];
+        // Two-beat burst straddling the granule boundary at 0x40.
+        let beats = [
+            WriteBeat {
+                port: Port::Backend,
+                tag: 1,
+                addr: 0x38,
+                data: [1; 8],
+                bytes: 8,
+                last: false,
+            },
+            WriteBeat {
+                port: Port::Backend,
+                tag: 1,
+                addr: 0x40,
+                data: [2; 8],
+                bytes: 8,
+                last: true,
+            },
+        ];
+        let idx = Cell::new(0usize);
+        for now in 0..2u64 {
+            x.grant_w(now, &mut mem0, &mut extras, |p, routes_here| {
+                let w = *beats.get(idx.get())?;
+                if w.port != p || !routes_here(w.addr) {
+                    return None;
+                }
+                idx.set(idx.get() + 1);
+                Some(w)
+            });
+        }
+        assert_eq!(idx.get(), 2, "both beats granted");
+        // Drain the two component Bs out of the memories; exactly one
+        // synthesized B (the original burst's) must emerge.
+        let mut out = Vec::new();
+        for now in 0..64u64 {
+            mem0.tick(now);
+            extras[0].tick(now);
+            for mem in std::iter::once(&mut mem0).chain(extras.iter_mut()) {
+                if let Some(b) = mem.pop_b(now) {
+                    if let Some(done) = x.route_b(b) {
+                        out.push(done);
+                    }
+                }
+            }
+        }
+        assert_eq!(out, vec![BResp { port: Port::Backend, tag: 1, resp: Resp::Okay }]);
+        // Mirrors: both images hold both beats' bytes.
+        assert_eq!(mem0.backdoor_read(0x38, 8), &[1; 8]);
+        assert_eq!(mem0.backdoor_read(0x40, 8), &[2; 8]);
+        assert_eq!(extras[0].backdoor_read(0x38, 8), &[1; 8]);
+        assert_eq!(extras[0].backdoor_read(0x40, 8), &[2; 8]);
+    }
+
+    #[test]
+    fn read_across_controllers_merges_in_order() {
+        let mut x = xbar(2, 6);
+        let mut mem0 = Memory::new(1 << 16, LatencyProfile::Ideal);
+        let mut extras = vec![Memory::new(1 << 16, LatencyProfile::Ideal)];
+        for i in 0..32u64 {
+            mem0.backdoor_write_u64(0x20 + i * 8, 0x1000 + i);
+            extras[0].backdoor_write_u64(0x20 + i * 8, 0x1000 + i);
+        }
+        // 16-beat burst from 0x20 spans three granules (ctrls 0,1,0).
+        let req = ReadReq::new(Port::Backend, 4, 0x20, 16);
+        let issued = Cell::new(false);
+        let mut got = Vec::new();
+        for now in 0..256u64 {
+            mem0.tick(now);
+            extras[0].tick(now);
+            x.drain_r(now, &mut mem0, &mut extras);
+            if let Some(b) = x.pop_r_for(1) {
+                got.push(b);
+            }
+            x.grant_ar(now, &mut mem0, &mut extras, |p, routes_here| {
+                if issued.get() || p != Port::Backend || !routes_here(req.addr) {
+                    return None;
+                }
+                issued.set(true);
+                Some(req)
+            });
+        }
+        assert!(issued.get());
+        assert_eq!(got.len(), 16, "all beats delivered");
+        for (i, b) in got.iter().enumerate() {
+            assert_eq!(b.beat, i as u32, "beats renumbered into burst order");
+            assert_eq!(b.last, i == 15, "last only on the true final beat");
+            assert_eq!(
+                u64::from_le_bytes(b.data),
+                0x1000 + i as u64,
+                "data follows the original address sequence"
+            );
+        }
+        assert!(x.quiescent());
+        assert_eq!(x.next_event(), None);
+    }
+
+    #[test]
+    fn link_depth_is_raised_to_cover_a_full_segment() {
+        let x = Crossbar::new(
+            ports2(),
+            ArbPolicy::RoundRobin,
+            Vec::new(),
+            XbarConfig { controllers: 4, granule_log2: 8, link_depth: 1 },
+        );
+        // 256 B granule / 4 B narrow beats = 64-beat worst segment.
+        assert!(x.link_depth >= 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sub_line_granule_rejected() {
+        xbar(2, 5);
+    }
+
+    #[test]
+    fn next_event_idles_when_empty() {
+        let x = xbar(4, 6);
+        assert_eq!(x.next_event(), None);
+        assert!(x.quiescent());
+    }
+}

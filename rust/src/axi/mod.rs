@@ -13,10 +13,12 @@
 //! arbiter.
 
 pub mod arbiter;
+pub mod crossbar;
 pub mod monitor;
 pub mod types;
 
 pub use arbiter::{ArbPolicy, Arbiter};
+pub use crossbar::{Crossbar, XbarConfig, MIN_GRANULE_LOG2};
 pub use monitor::{BusMonitor, UtilWindow};
 pub use types::{
     Port, RBeat, ReadReq, Resp, WriteBeat, BYTES_PER_BEAT, CHANNEL_PAIRS, CHANNEL_TRIPLES,

@@ -4,8 +4,13 @@
 pub const BYTES_PER_BEAT: u64 = 8;
 
 /// Maximum DMAC channels one system can instantiate.  Bounds the dense
-/// port-index space ([`Port::COUNT`]) and the PLIC source range.
-pub const MAX_CHANNELS: usize = 8;
+/// port-index space ([`Port::COUNT`]) and the PLIC source range (which
+/// is derived from this constant — see [`crate::soc::Plic`]).  Raised
+/// from 8 to 64 together with the [`crate::axi::crossbar`] interconnect
+/// (ROADMAP item 2): the port tables below and the IRQ map scale by
+/// construction, and the `const _` guard blocks here and in
+/// `soc/mod.rs` re-check the packing at compile time.
+pub const MAX_CHANNELS: usize = 64;
 
 /// Identifies which manager interface a transaction belongs to.  The
 /// paper's DMAC exposes two manager ports (frontend descriptor port and
@@ -41,62 +46,49 @@ pub enum Port {
 /// Interleaved `(frontend, backend)` port pairs for every channel, in
 /// arbitration order.  `ports()` implementations slice this static so
 /// they can return `&'static [Port]` for any channel count.
-pub static CHANNEL_PAIRS: [Port; 2 * MAX_CHANNELS] = [
-    Port::Frontend,
-    Port::Backend,
-    Port::ChFrontend(1),
-    Port::ChBackend(1),
-    Port::ChFrontend(2),
-    Port::ChBackend(2),
-    Port::ChFrontend(3),
-    Port::ChBackend(3),
-    Port::ChFrontend(4),
-    Port::ChBackend(4),
-    Port::ChFrontend(5),
-    Port::ChBackend(5),
-    Port::ChFrontend(6),
-    Port::ChBackend(6),
-    Port::ChFrontend(7),
-    Port::ChBackend(7),
-];
+///
+/// Built by a `const fn` so the table is correct for any
+/// `MAX_CHANNELS` by construction — the 8-channel hand-written literal
+/// it replaced was a silent-misorder hazard on every capacity bump.
+/// The layout-identity tests below pin the ordering.
+pub static CHANNEL_PAIRS: [Port; 2 * MAX_CHANNELS] = build_channel_pairs();
+
+const fn build_channel_pairs() -> [Port; 2 * MAX_CHANNELS] {
+    let mut table = [Port::Frontend; 2 * MAX_CHANNELS];
+    let mut ch = 0;
+    while ch < MAX_CHANNELS {
+        table[2 * ch] = Port::frontend_of(ch);
+        table[2 * ch + 1] = Port::backend_of(ch);
+        ch += 1;
+    }
+    table
+}
 
 /// Interleaved `(frontend, backend, ptw)` port triples for every
 /// channel of an IOMMU-fronted DMAC, in arbitration order.  The walker
 /// port of a channel whose IOMMU is disabled simply never requests a
 /// grant, which is transparent to all arbitration policies (rotation,
-/// credits and priority state only ever change on grants).
-pub static CHANNEL_TRIPLES: [Port; 3 * MAX_CHANNELS] = [
-    Port::Frontend,
-    Port::Backend,
-    Port::Ptw(0),
-    Port::ChFrontend(1),
-    Port::ChBackend(1),
-    Port::Ptw(1),
-    Port::ChFrontend(2),
-    Port::ChBackend(2),
-    Port::Ptw(2),
-    Port::ChFrontend(3),
-    Port::ChBackend(3),
-    Port::Ptw(3),
-    Port::ChFrontend(4),
-    Port::ChBackend(4),
-    Port::Ptw(4),
-    Port::ChFrontend(5),
-    Port::ChBackend(5),
-    Port::Ptw(5),
-    Port::ChFrontend(6),
-    Port::ChBackend(6),
-    Port::Ptw(6),
-    Port::ChFrontend(7),
-    Port::ChBackend(7),
-    Port::Ptw(7),
-];
+/// credits and priority state only ever change on grants).  Like
+/// [`CHANNEL_PAIRS`], built by a `const fn`.
+pub static CHANNEL_TRIPLES: [Port; 3 * MAX_CHANNELS] = build_channel_triples();
+
+const fn build_channel_triples() -> [Port; 3 * MAX_CHANNELS] {
+    let mut table = [Port::Frontend; 3 * MAX_CHANNELS];
+    let mut ch = 0;
+    while ch < MAX_CHANNELS {
+        table[3 * ch] = Port::frontend_of(ch);
+        table[3 * ch + 1] = Port::backend_of(ch);
+        table[3 * ch + 2] = Port::ptw_of(ch);
+        ch += 1;
+    }
+    table
+}
 
 // Compile-time pins for the dense port packing (lint rule
 // `irq-map-disjoint` re-derives the same arithmetic from the source
-// text; this block makes it fail at cargo time too).  ROADMAP item 2's
-// 64-channel crossbar will grow MAX_CHANNELS: the packing below and
-// the u8 channel payload must be revisited consciously, not silently.
+// text; this block makes it fail at cargo time too).  The packing and
+// the u8 channel payload were revisited for the 64-channel crossbar;
+// any further growth must keep these invariants.
 const _: () = {
     // Five fixed ports, then {frontend, backend} pairs, then the
     // walker bank: Port::index() is dense and collision-free.
@@ -105,7 +97,7 @@ const _: () = {
     // walker bank base (5 + 2*MAX).
     assert!(6 + 2 * (MAX_CHANNELS - 1) < 5 + 2 * MAX_CHANNELS);
     // Channel numbers travel in a u8 payload.
-    assert!(MAX_CHANNELS <= 256);
+    assert!(MAX_CHANNELS >= 1 && MAX_CHANNELS <= 256);
 };
 
 impl Port {
@@ -138,9 +130,10 @@ impl Port {
         }
     }
 
-    /// The descriptor-fetch port of DMAC channel `ch`.
-    pub fn frontend_of(ch: usize) -> Port {
-        assert!(ch < MAX_CHANNELS, "channel {ch} exceeds MAX_CHANNELS");
+    /// The descriptor-fetch port of DMAC channel `ch`.  `const` so the
+    /// port tables above can be built at compile time.
+    pub const fn frontend_of(ch: usize) -> Port {
+        assert!(ch < MAX_CHANNELS, "channel exceeds MAX_CHANNELS");
         if ch == 0 {
             Port::Frontend
         } else {
@@ -149,8 +142,8 @@ impl Port {
     }
 
     /// The payload port of DMAC channel `ch`.
-    pub fn backend_of(ch: usize) -> Port {
-        assert!(ch < MAX_CHANNELS, "channel {ch} exceeds MAX_CHANNELS");
+    pub const fn backend_of(ch: usize) -> Port {
+        assert!(ch < MAX_CHANNELS, "channel exceeds MAX_CHANNELS");
         if ch == 0 {
             Port::Backend
         } else {
@@ -159,8 +152,8 @@ impl Port {
     }
 
     /// The page-table-walker port of the IOMMU fronting channel `ch`.
-    pub fn ptw_of(ch: usize) -> Port {
-        assert!(ch < MAX_CHANNELS, "channel {ch} exceeds MAX_CHANNELS");
+    pub const fn ptw_of(ch: usize) -> Port {
+        assert!(ch < MAX_CHANNELS, "channel exceeds MAX_CHANNELS");
         Port::Ptw(ch as u8)
     }
 

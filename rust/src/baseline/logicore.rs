@@ -150,6 +150,11 @@ struct FetchInFlight {
     addr: u64,
     words_seen: u32,
     data: [u8; LC_DESC_BYTES as usize],
+    /// MMIO cycle of the chain's launching CSR write, carried to the
+    /// completion's latency breakdown (chased descriptors inherit it).
+    launched_at: Cycle,
+    /// Cycle the first descriptor word arrived (0 until then).
+    first_beat_at: Cycle,
 }
 
 /// The baseline controller (implements the same [`Controller`]
@@ -157,7 +162,11 @@ struct FetchInFlight {
 #[derive(Debug, Clone)]
 pub struct LogiCore {
     cfg: LcConfig,
-    csr_queue: VecDeque<(Cycle, u64)>,
+    /// (eligible cycle, head address, MMIO cycle of the CSR write).
+    csr_queue: VecDeque<(Cycle, u64, Cycle)>,
+    /// MMIO cycle of the currently walking chain's launch (the chase
+    /// is serialized, so one latch covers every fetch of the chain).
+    chain_launched_at: Cycle,
     /// Serialized descriptor chase: at most one fetch in flight.
     fetch: Option<FetchInFlight>,
     /// Next fetch (addr) eligible at cycle.
@@ -180,6 +189,7 @@ impl LogiCore {
             backend: Backend::with_port(cfg.in_flight, false, cfg.engine_overhead, Port::LcBackend),
             cfg,
             csr_queue: VecDeque::new(),
+            chain_launched_at: 0,
             fetch: None,
             pending_fetch: None,
             ar_ready: None,
@@ -217,7 +227,7 @@ impl Tickable for LogiCore {
         if self.ar_ready.is_some() || !self.wb_queue.is_empty() {
             return Some(0);
         }
-        let mut h = self.csr_queue.front().map(|&(at, _)| at);
+        let mut h = self.csr_queue.front().map(|&(at, _, _)| at);
         h = EventHorizon::merge(h, self.pending_fetch.map(|(at, _)| at));
         h = EventHorizon::merge(h, self.handoff.front().map(|&(at, _)| at));
         EventHorizon::merge(h, self.backend.next_event())
@@ -226,13 +236,16 @@ impl Tickable for LogiCore {
 
 impl Controller for LogiCore {
     fn csr_write(&mut self, now: Cycle, desc_addr: u64) {
-        self.csr_queue.push_back((now + self.cfg.launch_latency as Cycle, desc_addr));
+        self.csr_queue.push_back((now + self.cfg.launch_latency as Cycle, desc_addr, now));
     }
 
     fn on_r_beat(&mut self, now: Cycle, beat: RBeat) {
         match beat.port {
             Port::LcFrontend => {
                 let f = self.fetch.as_mut().expect("descriptor beat with no fetch");
+                if f.words_seen == 0 {
+                    f.first_beat_at = now;
+                }
                 let off = beat.beat as usize * 4;
                 f.data[off..off + 4].copy_from_slice(&beat.data[..4]);
                 f.words_seen += 1;
@@ -249,6 +262,8 @@ impl Controller for LogiCore {
                             desc_addr: f.addr,
                             nd: None,
                             ring: false,
+                            launched_at: f.launched_at,
+                            first_beat_at: f.first_beat_at,
                         },
                     ));
                     // Serialized chase: the next descriptor fetch only
@@ -290,9 +305,10 @@ impl Controller for LogiCore {
         }
         // Launch a queued chain only when the current one is finished.
         if !self.busy_with_chain() {
-            if let Some(&(eligible, addr)) = self.csr_queue.front() {
+            if let Some(&(eligible, addr, mmio)) = self.csr_queue.front() {
                 if eligible <= now {
                     self.csr_queue.pop_front();
+                    self.chain_launched_at = mmio;
                     self.ar_ready = Some(addr);
                 }
             }
@@ -336,12 +352,22 @@ impl Controller for LogiCore {
                     addr,
                     words_seen: 0,
                     data: [0; LC_DESC_BYTES as usize],
+                    launched_at: self.chain_launched_at,
+                    first_beat_at: 0,
                 });
                 self.stats.desc_beats += LC_DESC_WORDS as u64;
                 // 32-bit descriptor port: 13 narrow beats.
                 Some(ReadReq::narrow(Port::LcFrontend, addr, addr, LC_DESC_WORDS, 4))
             }
             Port::LcBackend => self.backend.pop_ar(now, &mut self.stats),
+            _ => None,
+        }
+    }
+
+    fn ar_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        match port {
+            Port::LcFrontend => self.ar_ready,
+            Port::LcBackend => self.backend.peek_ar_addr(now),
             _ => None,
         }
     }
@@ -373,6 +399,14 @@ impl Controller for LogiCore {
                 })
             }
             Port::LcBackend => self.backend.pop_w(now, &mut self.stats),
+            _ => None,
+        }
+    }
+
+    fn w_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        match port {
+            Port::LcFrontend => self.wb_queue.front().map(|&(desc_addr, _)| desc_addr + 28),
+            Port::LcBackend => self.backend.peek_w_addr(now),
             _ => None,
         }
     }

@@ -265,6 +265,16 @@ impl Backend {
         self.reads_pending > 0
     }
 
+    /// Address of the burst [`pop_ar`](Self::pop_ar) would issue at
+    /// `now`, or `None` when it would decline.  Crossbar routing peek:
+    /// must return `Some` exactly when the pop would succeed, and must
+    /// not mutate engine state (see `axi::crossbar`).
+    pub fn peek_ar_addr(&self, now: Cycle) -> Option<u64> {
+        let idx = self.next_read(now)?;
+        let a = &self.active[idx];
+        Some(a.src_at(a.read_issued).0)
+    }
+
     pub fn pop_ar(&mut self, now: Cycle, stats: &mut RunStats) -> Option<ReadReq> {
         let idx = self.next_read(now)?;
         let a = &mut self.active[idx];
@@ -360,6 +370,13 @@ impl Backend {
 
     pub fn wants_w(&self) -> bool {
         !self.write_pipe.is_empty()
+    }
+
+    /// Address of the write beat [`pop_w`](Self::pop_w) would issue at
+    /// `now` (crossbar routing peek, like
+    /// [`peek_ar_addr`](Self::peek_ar_addr)).
+    pub fn peek_w_addr(&self, now: Cycle) -> Option<u64> {
+        self.write_pipe.peek_ready(now).map(|w| w.addr)
     }
 
     pub fn pop_w(&mut self, now: Cycle, stats: &mut RunStats) -> Option<WriteBeat> {

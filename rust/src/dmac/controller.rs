@@ -66,11 +66,27 @@ pub trait Controller: Tickable {
     /// Pop the granted read request (called at most once per grant).
     fn pop_ar(&mut self, now: Cycle, port: Port) -> Option<ReadReq>;
 
+    /// Address of the read request [`pop_ar`](Self::pop_ar) would
+    /// return for `port` at `now`, without mutating any state.
+    ///
+    /// The crossbar (`axi::crossbar`) routes a request to a memory
+    /// controller *before* popping it, so this peek is load-bearing:
+    /// it must return `Some` exactly when the pop would succeed.
+    /// `None` while the pop would succeed deadlocks the port;
+    /// `Some` while the pop would decline merely wastes a grant offer.
+    fn ar_addr(&self, now: Cycle, port: Port) -> Option<u64>;
+
     /// Does `port` want to issue a write beat this cycle?
     fn wants_w(&self, port: Port) -> bool;
 
     /// Pop the granted write beat.
     fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat>;
+
+    /// Address of the write beat [`pop_w`](Self::pop_w) would return
+    /// for `port` at `now` — the write-side twin of
+    /// [`ar_addr`](Self::ar_addr), with the same Some-iff-pop-succeeds
+    /// contract.
+    fn w_addr(&self, now: Cycle, port: Port) -> Option<u64>;
 
     /// Manager ports of this controller, in arbitration order.
     fn ports(&self) -> &'static [Port];

@@ -1058,6 +1058,15 @@ impl Frontend {
         self.granted_count < self.fetches.len()
     }
 
+    /// Address of the AR that [`pop_ar`](Self::pop_ar) would issue, or
+    /// `None` when it would decline.  The crossbar routes requests to a
+    /// memory controller *at* the grant, so it must see the address
+    /// before popping; the peek must return `Some` exactly when the pop
+    /// would succeed (see `axi::crossbar`).
+    pub fn peek_ar_addr(&self) -> Option<u64> {
+        self.fetches.get(self.granted_count).map(|s| s.addr)
+    }
+
     pub fn pop_ar(&mut self, now: Cycle, stats: &mut RunStats) -> Option<ReadReq> {
         let idx = self.granted_count;
         let slot = self.fetches.get_mut(idx)?;
@@ -1076,6 +1085,12 @@ impl Frontend {
 
     pub fn wants_w(&self) -> bool {
         !self.wb_queue.is_empty()
+    }
+
+    /// Address of the write beat [`pop_w`](Self::pop_w) would issue
+    /// (crossbar routing peek, like [`peek_ar_addr`](Self::peek_ar_addr)).
+    pub fn peek_w_addr(&self) -> Option<u64> {
+        self.wb_queue.front().map(|wb| wb.addr)
     }
 
     pub fn pop_w(&mut self, _now: Cycle, stats: &mut RunStats) -> Option<WriteBeat> {

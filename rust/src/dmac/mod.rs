@@ -236,6 +236,16 @@ impl Controller for Dmac {
         req
     }
 
+    fn ar_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        if port == self.frontend.port() {
+            self.frontend.peek_ar_addr()
+        } else if port == self.backend.port() {
+            self.backend.peek_ar_addr(now)
+        } else {
+            None
+        }
+    }
+
     fn wants_w(&self, port: Port) -> bool {
         if port == self.frontend.port() {
             self.frontend.wants_w()
@@ -258,6 +268,16 @@ impl Controller for Dmac {
             self.progress(now);
         }
         w
+    }
+
+    fn w_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        if port == self.frontend.port() {
+            self.frontend.peek_w_addr()
+        } else if port == self.backend.port() {
+            self.backend.peek_w_addr(now)
+        } else {
+            None
+        }
     }
 
     fn ports(&self) -> &'static [Port] {

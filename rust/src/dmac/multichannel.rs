@@ -145,6 +145,11 @@ impl Controller for MultiChannel {
         self.channels[ch].pop_ar(now, port)
     }
 
+    fn ar_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        let ch = self.route(port)?;
+        self.channels[ch].ar_addr(now, port)
+    }
+
     fn wants_w(&self, port: Port) -> bool {
         self.route(port).is_some_and(|ch| self.channels[ch].wants_w(port))
     }
@@ -152,6 +157,11 @@ impl Controller for MultiChannel {
     fn pop_w(&mut self, now: Cycle, port: Port) -> Option<WriteBeat> {
         let ch = self.route(port)?;
         self.channels[ch].pop_w(now, port)
+    }
+
+    fn w_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        let ch = self.route(port)?;
+        self.channels[ch].w_addr(now, port)
     }
 
     fn ports(&self) -> &'static [Port] {

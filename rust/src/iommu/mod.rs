@@ -184,6 +184,18 @@ impl Controller for IommuDmac {
         }
     }
 
+    fn ar_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        if let Some(ch) = port.ptw_channel() {
+            return (ch < self.mmus.len())
+                .then(|| self.mmus[ch].peek_ptw_ar_addr())
+                .flatten();
+        }
+        match self.mmu_of(port) {
+            Some((ch, is_fe)) => self.mmus[ch].peek_inner_ar_addr(is_fe),
+            None => self.inner.ar_addr(now, port),
+        }
+    }
+
     fn wants_w(&self, port: Port) -> bool {
         if port.ptw_channel().is_some() {
             return false;
@@ -198,6 +210,16 @@ impl Controller for IommuDmac {
         match self.mmu_of(port) {
             Some((ch, is_fe)) => self.mmus[ch].pop_inner_w(is_fe),
             None => self.inner.pop_w(now, port),
+        }
+    }
+
+    fn w_addr(&self, now: Cycle, port: Port) -> Option<u64> {
+        if port.ptw_channel().is_some() {
+            return None;
+        }
+        match self.mmu_of(port) {
+            Some((ch, is_fe)) => self.mmus[ch].peek_inner_w_addr(is_fe),
+            None => self.inner.w_addr(now, port),
         }
     }
 

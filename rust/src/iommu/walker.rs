@@ -567,6 +567,20 @@ impl Mmu {
         Some(ReadReq::new(Port::ptw_of(self.channel), vpn, addr, 1))
     }
 
+    /// Address [`pop_ptw_ar`](Self::pop_ptw_ar) would issue, or `None`
+    /// when it would decline (crossbar routing peek: `Some` exactly
+    /// when the pop would succeed, see `axi::crossbar`).
+    pub fn peek_ptw_ar_addr(&self) -> Option<u64> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let w = self.cur.as_ref()?;
+        if !w.pending_issue {
+            return None;
+        }
+        Some(w.pt + vpn_index(w.vpn, w.level) * PTE_BYTES)
+    }
+
     /// Consume the PTE returned for the active walk level.
     pub fn on_pte_beat(&mut self, beat: RBeat) {
         let w = self.cur.as_mut().expect("PTE beat with no active walk");
@@ -635,6 +649,16 @@ impl Mmu {
         Some(req)
     }
 
+    /// Translated address [`pop_inner_ar`](Self::pop_inner_ar) would
+    /// issue for the named side (crossbar routing peek).
+    pub fn peek_inner_ar_addr(&self, is_fe: bool) -> Option<u64> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let h = if is_fe { self.fe_ar.as_ref() } else { self.be_ar.as_ref() }?;
+        h.segs[h.issued].pa
+    }
+
     pub fn wants_inner_w(&self, is_fe: bool) -> bool {
         if self.fault.is_some() {
             return false;
@@ -651,6 +675,16 @@ impl Mmu {
         let pa = slot.as_ref()?.pa?;
         let h = slot.take().unwrap();
         Some(WriteBeat { addr: pa, ..h.w })
+    }
+
+    /// Translated address [`pop_inner_w`](Self::pop_inner_w) would
+    /// issue for the named side (crossbar routing peek).
+    pub fn peek_inner_w_addr(&self, is_fe: bool) -> Option<u64> {
+        if self.fault.is_some() {
+            return None;
+        }
+        let slot = if is_fe { &self.fe_w } else { &self.be_w };
+        slot.as_ref()?.pa
     }
 
     /// Renumber a returned sub-burst beat back into the coordinates of

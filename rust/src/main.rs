@@ -9,7 +9,7 @@
 //!             [--transfers N] [--hit-rate F] [--naive]
 //! idmac bench-throughput [--out FILE] [--profile ideal|ddr3|ultradeep]
 //!                                       # writes BENCH_sim_throughput.json
-//! idmac contention [--channels N] [--policy rr|wrr|strict] [--weights 4,2,1,1]
+//! idmac contention [--channels N (<=8)] [--policy rr|wrr|strict] [--weights 4,2,1,1]
 //!                  [--latency …] [--size N] [--transfers N] [--naive] [--out FILE]
 //!                                       # writes BENCH_multichannel.json
 //! idmac translate [--transfers N] [--size N] [--naive] [--out FILE]
@@ -29,10 +29,15 @@
 //! idmac latency [--naive] [--out FILE]  # CSR-burst vs ring-doorbell latency
 //!             [--batch N] [--size N] [--mem ideal|ddr3|ultradeep|dram4]
 //!                                       # percentile grid; writes BENCH_latency.json
+//! idmac xbar [--naive] [--out FILE]     # crossbar scaling grid: channels x
+//!            [--channels N] [--controllers M] [--granule-log2 G]
+//!            [--policy rr|wrr|strict] [--transfers N] [--size N]
+//!                                       # controllers x granule x policy;
+//!                                       # writes BENCH_xbar.json
 //! idmac trace [--out FILE] [--transfers N] [--size N] [--latency …]
 //!             [--window N] [--naive]    # run a traced sweep and export
 //!                                       # Chrome trace-event JSON
-//! idmac regen-baselines [--dir D]       # rewrite all eight BENCH_*.json
+//! idmac regen-baselines [--dir D]       # rewrite all nine BENCH_*.json
 //!                                       # baselines (arms the CI gate)
 //! idmac oracle-check [--artifacts DIR] [--chains N]
 //! idmac soc-demo [--latency …]
@@ -93,6 +98,7 @@ fn run(args: &Args) -> idmac::Result<()> {
         Some("faults") => faults(args)?,
         Some("dram") => dram(args)?,
         Some("latency") => latency(args)?,
+        Some("xbar") => xbar(args)?,
         Some("trace") => trace(args)?,
         Some("regen-baselines") => regen_baselines(args)?,
         Some("bench-throughput") => bench_throughput(args)?,
@@ -119,7 +125,7 @@ fn run(args: &Args) -> idmac::Result<()> {
 }
 
 const USAGE: &str = "usage: idmac <fig4|fig5|table1|table2|table3|table4|sweep|contention|\
-                     translate|nd|rings|faults|dram|latency|trace|regen-baselines|\
+                     translate|nd|rings|faults|dram|latency|xbar|trace|regen-baselines|\
                      bench-throughput|oracle-check|soc-demo|all> \
                      [--threads N] [--naive] [--stats-json PATH] [flags]";
 
@@ -163,6 +169,11 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
         .write(&out)?;
     println!("wrote {out}");
 
+    let out = path(idmac::report::xbar::BENCH_FILE);
+    idmac::report::XbarReport::new(idmac::report::xbar::xbar_grid(8, 256, naive))
+        .write(&out)?;
+    println!("wrote {out}");
+
     let out = path(idmac::report::throughput::BENCH_FILE);
     let mut report = idmac::report::ThroughputReport::new();
     for profile in [LatencyProfile::Ideal, LatencyProfile::Ddr3, LatencyProfile::UltraDeep] {
@@ -171,7 +182,75 @@ fn regen_baselines(args: &Args) -> idmac::Result<()> {
     }
     report.write(&out)?;
     println!("wrote {out}");
-    println!("commit the eight BENCH_*.json files to arm the CI gate");
+    println!("commit the nine BENCH_*.json files to arm the CI gate");
+    Ok(())
+}
+
+/// Crossbar scaling grid (channels × controllers × interleave granule
+/// × policy) through the N×M crossbar into interleaved memory
+/// controllers; emits the deterministic `BENCH_xbar.json`.  With an
+/// explicit `--channels`/`--controllers`/`--granule-log2`/`--policy`
+/// the grid collapses to that single point.
+fn xbar(args: &Args) -> idmac::Result<()> {
+    use idmac::report::xbar as xb;
+
+    let naive = args.naive();
+    let out = args.get_or("out", xb::BENCH_FILE);
+    let transfers = args.get_usize("transfers", 8)?;
+    let size = args.get_usize("size", 256)? as u32;
+    if transfers == 0 || size == 0 || (size as u64) * transfers as u64 > xb::XBAR_ARENA_STRIDE {
+        return Err(idmac::Error::Cli(
+            "--transfers x --size must fit the 64 KiB per-channel xbar arena".into(),
+        ));
+    }
+    let single = args.get("channels").is_some()
+        || args.get("controllers").is_some()
+        || args.get("granule-log2").is_some()
+        || args.get("policy").is_some();
+    let points = if single {
+        let channels = args.get_usize("channels", 8)?;
+        if channels == 0 || channels > idmac::axi::MAX_CHANNELS {
+            return Err(idmac::Error::Cli(format!(
+                "--channels must be in 1..={}",
+                idmac::axi::MAX_CHANNELS
+            )));
+        }
+        let controllers = args.get_usize("controllers", 4)?;
+        if controllers == 0 || controllers > 16 {
+            return Err(idmac::Error::Cli("--controllers must be in 1..=16".into()));
+        }
+        let granule = args.get_usize("granule-log2", idmac::axi::MIN_GRANULE_LOG2 as usize)?;
+        if !(idmac::axi::MIN_GRANULE_LOG2 as usize..32).contains(&granule) {
+            return Err(idmac::Error::Cli(format!(
+                "--granule-log2 must be in {}..=31 (>= one 64 B line)",
+                idmac::axi::MIN_GRANULE_LOG2
+            )));
+        }
+        let policy = args.policy()?;
+        let weights = args.weights()?.unwrap_or_else(|| vec![1; channels]);
+        if weights.len() != channels {
+            return Err(idmac::Error::Cli(format!(
+                "--weights lists {} entries for {channels} channels",
+                weights.len()
+            )));
+        }
+        vec![xb::run_xbar(
+            &weights,
+            policy,
+            controllers,
+            granule as u32,
+            args.latency()?,
+            transfers,
+            size,
+            naive,
+        )]
+    } else {
+        xb::xbar_grid(transfers, size, naive)
+    };
+    let report = idmac::report::XbarReport::new(points);
+    report.to_table().print();
+    report.write(&out)?;
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -450,12 +529,18 @@ fn sweep(args: &Args) -> idmac::Result<()> {
 fn contention(args: &Args) -> idmac::Result<()> {
     use idmac::report::contention as ct;
 
+    // The shared-bus contention workload slices the SRC/DST windows
+    // into 512 KiB per-channel arenas, so only 8 channels fit the
+    // 16 MiB map even though `axi::MAX_CHANNELS` is 64 — the
+    // 64-channel sweeps live in `idmac xbar`, whose arena slices are
+    // sized for the full channel count.
     let channels = args.get_usize("channels", 4)?;
-    if channels == 0 || channels > idmac::axi::MAX_CHANNELS {
-        return Err(idmac::Error::Cli(format!(
-            "--channels must be in 1..={}",
-            idmac::axi::MAX_CHANNELS
-        )));
+    if channels == 0 || channels > 8 {
+        return Err(idmac::Error::Cli(
+            "--channels must be in 1..=8 (per-channel arena slices; use `idmac xbar` \
+             for 64-channel sweeps)"
+                .into(),
+        ));
     }
     let transfers = args.get_usize("transfers", 48)?;
     let size = args.get_usize("size", 256)? as u32;

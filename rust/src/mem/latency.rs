@@ -369,6 +369,16 @@ impl Memory {
         self.r_out.pop_ready(now)
     }
 
+    /// Front R beat that [`pop_read_beat`](Self::pop_read_beat) would
+    /// return at `now`, without consuming it.  The crossbar uses this
+    /// to hold a beat in the memory's delivery queue when the
+    /// destination link queue is full (per-link backpressure); the
+    /// blocked front keeps `next_event() <= now`, so the stall is
+    /// fast-forward-safe.
+    pub fn peek_read_beat(&self, now: Cycle) -> Option<&RBeat> {
+        self.r_out.peek_ready(now)
+    }
+
     /// Accept a write beat (fused AW+W) at cycle `now`.  One beat per
     /// cycle; debug-asserted because the system arbiter enforces it.
     ///
@@ -377,7 +387,11 @@ impl Memory {
     /// per-burst worst response is accumulated across interleaved
     /// bursts by `(port, tag)` and folded into the single B emitted at
     /// the last beat.
-    pub fn push_write(&mut self, now: Cycle, w: WriteBeat) {
+    ///
+    /// Returns this beat's resolved response.  An errored beat never
+    /// reaches the array, so the crossbar mirrors only `Okay` beats
+    /// into its other controllers' byte images (`axi::crossbar`).
+    pub fn push_write(&mut self, now: Cycle, w: WriteBeat) -> Resp {
         debug_assert!(
             self.last_w_cycle != Some(now),
             "W channel accepts one beat per cycle"
@@ -440,6 +454,7 @@ impl Memory {
             Some(d) => d.push_write_beat(now + self.latency, sched),
             None => self.w_queue.push_at(now + self.latency, sched),
         }
+        resp
     }
 
     /// Pop a write response (B) deliverable this cycle, if any.

@@ -14,6 +14,7 @@ pub mod rings;
 pub mod throughput;
 pub mod timer;
 pub mod translation;
+pub mod xbar;
 
 pub use contention::{ContentionPoint, MultiChannelReport};
 pub use dram::{DramPoint, DramReport, DramWorkload};
@@ -25,6 +26,7 @@ pub use rings::{RingPoint, RingsReport};
 pub use throughput::{ThroughputEntry, ThroughputReport};
 pub use timer::{Clock, NullClock, WallClock};
 pub use translation::{AccessPattern, TranslationPoint, TranslationReport};
+pub use xbar::{XbarPoint, XbarReport};
 
 /// A paper-style table.
 #[derive(Debug, Clone, Default)]

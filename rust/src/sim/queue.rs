@@ -54,6 +54,16 @@ impl<T> MonotonicQueue<T> {
         self.q.front().map(|(_, item)| item)
     }
 
+    /// Front item iff it is due at `now` — the non-mutating twin of
+    /// [`pop_ready`](Self::pop_ready), so a router can inspect what the
+    /// pop *would* return before committing to it.
+    pub fn peek_ready(&self, now: Cycle) -> Option<&T> {
+        match self.q.front() {
+            Some(&(at, ref item)) if at <= now => Some(item),
+            _ => None,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -98,6 +108,16 @@ mod tests {
         q.push_at(2, 20);
         assert_eq!(q.len(), 2);
         assert_eq!(q.front(), Some(&10));
+    }
+
+    #[test]
+    fn peek_ready_mirrors_pop_ready() {
+        let mut q = MonotonicQueue::new();
+        q.push_at(5, 'a');
+        assert_eq!(q.peek_ready(4), None);
+        assert_eq!(q.peek_ready(5), Some(&'a'));
+        assert_eq!(q.pop_ready(5), Some('a'));
+        assert_eq!(q.peek_ready(5), None);
     }
 
     #[test]

@@ -68,9 +68,10 @@ pub fn error_irq_source(ch: usize) -> u32 {
 // Each bank is MAX_CHANNELS wide; banks must be pairwise disjoint,
 // stay clear of source 0 (reserved by the PLIC spec) and of the CPU
 // peripheral sources below DMAC_IRQ_SOURCE, and the top bank must fit
-// under Plic::MAX_SOURCES.  ROADMAP item 2 plans MAX_CHANNELS = 64:
-// 5 + 4*64 = 261 > 256 will trip the capacity assert, forcing the
-// PLIC to grow *with* the map instead of overflowing silently.
+// under Plic::MAX_SOURCES.  Plic::MAX_SOURCES is now *derived* from
+// this map (next power of two above the top bank, see soc/plic.rs), so
+// the capacity assert can no longer overflow — it stays as a pin that
+// the derivation itself keeps covering the map.
 const _: () = {
     const W: u32 = crate::axi::MAX_CHANNELS as u32;
     assert!(DMAC_IRQ_SOURCE >= 1);

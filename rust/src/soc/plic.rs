@@ -14,12 +14,19 @@ pub struct Plic {
 
 impl Plic {
     /// Gateway-table capacity of the modeled PLIC (sources
-    /// `1..MAX_SOURCES`; source 0 is reserved by the spec).  The SoC
-    /// IRQ map (`soc::mod.rs`) const-asserts that its highest bank
-    /// fits below this, so growing `MAX_CHANNELS` (ROADMAP item 2)
-    /// forces a conscious PLIC-capacity decision instead of a silent
-    /// overflow.
-    pub const MAX_SOURCES: u32 = 256;
+    /// `1..MAX_SOURCES`; source 0 is reserved by the spec).  Derived
+    /// from the IRQ map: the four banked source ranges end at
+    /// `soc::ERROR_IRQ_SOURCE + MAX_CHANNELS`, and the gateway table is
+    /// sized to the next power of two above that (hardware interrupt
+    /// controllers are generated at power-of-two capacities; SiFive's
+    /// PLIC tops out at 1024).  At `MAX_CHANNELS = 64` the map needs
+    /// 5 + 4*64 = 261 sources and this resolves to 512.  The SoC IRQ
+    /// map (`soc/mod.rs`) still const-asserts that its highest bank
+    /// fits below this, so the capacity grows *with* the map instead
+    /// of overflowing silently — the 8-channel literal `256` this
+    /// replaced tripped that assert by design at 64 channels.
+    pub const MAX_SOURCES: u32 =
+        (crate::soc::ERROR_IRQ_SOURCE + crate::axi::MAX_CHANNELS as u32).next_power_of_two();
 
     pub fn new() -> Self {
         Self::default()

@@ -4,9 +4,10 @@
 //! — {multi-channel × IOMMU translation × ND-affine descriptors ×
 //! submission/completion rings × AXI fault injection × arbitration
 //! policy × memory latency × memory timing backend (pipe or banked
-//! DRAM)} — builds the identical system twice from one deterministic
-//! plan, runs it under both schedulers, and asserts on every sampled
-//! point:
+//! DRAM) × interconnect topology (shared bus, or an N×M crossbar into
+//! 1/2/4 interleaved memory controllers at a random granule)} — builds
+//! the identical system twice from one deterministic plan, runs it
+//! under both schedulers, and asserts on every sampled point:
 //!
 //! * **byte conservation** — every expected row (including hardware-
 //!   expanded ND rows) landed byte-exact at its destination, and the
@@ -37,7 +38,7 @@
 //! profile runs under `IDMAC_STRESS_FULL=1` (the bench-regression CI
 //! job sets it).
 
-use idmac::axi::ArbPolicy;
+use idmac::axi::{ArbPolicy, XbarConfig, MIN_GRANULE_LOG2};
 use idmac::dmac::{
     descriptor, ChainBuilder, Descriptor, DmacConfig, IommuParams, NdExt, RingParams,
 };
@@ -94,6 +95,9 @@ struct Plan {
     work: Vec<ChannelWork>,
     policy: ArbPolicy,
     profile: LatencyProfile,
+    /// `None` = the legacy shared-bus arbiter; `Some((m, g))` = an N×M
+    /// crossbar into `m` controllers interleaved at granule `1 << g`.
+    topology: Option<(usize, u32)>,
     seed: u32,
     /// Expected `(src, dst, len)` rows, ND expansion included.
     expected: Vec<(u64, u64, u32)>,
@@ -128,6 +132,16 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
         ArbPolicy::StrictPriority,
     ]);
     let profile = LatencyProfile::Custom(rng.range(1, 80) as u32);
+    // Half the cases swap the shared bus for the crossbar — including
+    // 1×1, which must be cycle-identical to the shared bus and so
+    // exercises the identity property under every feature mix.
+    let topology = if rng.chance(0.5) {
+        let controllers = *rng.pick(&[1usize, 2, 4]);
+        let granule_log2 = rng.range(MIN_GRANULE_LOG2 as u64, MIN_GRANULE_LOG2 as u64 + 2) as u32;
+        Some((controllers, granule_log2))
+    } else {
+        None
+    };
     let seed = rng.next_u64() as u32;
     // Half the cases arm the fault injector (low rates: most faulted
     // plans fire a handful of faults or none, exercising both the
@@ -163,6 +177,7 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
         work: Vec::new(),
         policy,
         profile,
+        topology,
         seed,
         expected: Vec::new(),
         total_descs: 0,
@@ -280,8 +295,16 @@ fn gen_plan(rng: &mut SplitMix64) -> Plan {
 
 /// Deterministically materialize a plan into a ready-to-run system.
 fn build(plan: &Plan) -> System<IommuDmac> {
-    let mut sys =
-        System::new(plan.profile, IommuDmac::new(&plan.cfgs)).with_arbitration(plan.policy);
+    let ctrl = IommuDmac::new(&plan.cfgs);
+    let mut sys = match plan.topology {
+        None => System::new(plan.profile, ctrl),
+        Some((controllers, granule_log2)) => System::with_crossbar(
+            plan.profile,
+            ctrl,
+            XbarConfig::new(controllers, granule_log2),
+        ),
+    }
+    .with_arbitration(plan.policy);
     if plan.cfgs.iter().any(|c| c.iommu.enabled) {
         let mut mapper =
             DmaMapper::new(&mut sys.mem, map::PT_BASE, map::PT_SIZE, map::IOVA_BASE).unwrap();

@@ -1,0 +1,238 @@
+//! Crossbar interconnect properties.
+//!
+//! Three contracts, each sampled over randomized multi-channel
+//! workloads (`testutil::forall`, deterministic seeds):
+//!
+//! * **1×1 identity** — a single-controller crossbar must be
+//!   cycle-identical to the legacy shared-bus `Arbiter` path: same
+//!   `RunStats`, same final clock, same memory image, same first-AR /
+//!   first-payload observables, under all three QoS policies and both
+//!   schedulers.  This is the property that lets every pre-crossbar
+//!   BENCH baseline survive the interconnect rework unchanged.
+//! * **scheduler identity under random topologies** — for random
+//!   controller counts and interleave granules, the event-horizon
+//!   fast-forward run is bit-identical to the naive per-cycle loop.
+//! * **byte conservation across interleaved controllers** — every
+//!   planned row lands byte-exact, and (the mirror-coherence
+//!   approximation, DESIGN.md §15) all controllers agree on the final
+//!   byte image of the destination window.
+
+use idmac::axi::{ArbPolicy, XbarConfig, MIN_GRANULE_LOG2};
+use idmac::dmac::{ChainBuilder, Descriptor, DmacConfig, MultiChannel, DESC_BYTES};
+use idmac::mem::backdoor::fill_pattern;
+use idmac::mem::LatencyProfile;
+use idmac::sim::Cycle;
+use idmac::tb::System;
+use idmac::testutil::{forall, SplitMix64};
+use idmac::workload::map;
+
+/// Per-channel destination slots (4 KiB each), disjoint across
+/// channels so sampled workloads are race-free by construction.
+const SLOTS_PER_CHANNEL: u64 = 16;
+
+#[derive(Clone)]
+struct Plan {
+    cfgs: Vec<DmacConfig>,
+    policy: ArbPolicy,
+    profile: LatencyProfile,
+    seed: u32,
+    /// Per-channel (launch cycle, chain).
+    chains: Vec<(Cycle, ChainBuilder)>,
+    /// Expected `(src, dst, len)` rows.
+    expected: Vec<(u64, u64, u32)>,
+}
+
+fn gen_plan(rng: &mut SplitMix64) -> Plan {
+    let nch = rng.range(1, 3) as usize;
+    let policy = *rng.pick(&[
+        ArbPolicy::RoundRobin,
+        ArbPolicy::WeightedRoundRobin,
+        ArbPolicy::StrictPriority,
+    ]);
+    let profile = *rng.pick(&[
+        LatencyProfile::Ideal,
+        LatencyProfile::Ddr3,
+        LatencyProfile::Custom(17),
+    ]);
+    let mut plan = Plan {
+        cfgs: Vec::new(),
+        policy,
+        profile,
+        seed: rng.next_u64() as u32,
+        chains: Vec::new(),
+        expected: Vec::new(),
+    };
+    for c in 0..nch {
+        let cfg = DmacConfig::custom(rng.range(1, 8) as usize, rng.range(0, 6) as usize)
+            .with_weight(rng.range(1, 4) as u32);
+        let mut slots: Vec<u64> = (0..SLOTS_PER_CHANNEL).collect();
+        rng.shuffle(&mut slots);
+        let n = rng.range(2, 6) as usize;
+        let mut cb = ChainBuilder::new();
+        let desc_base = map::DESC_BASE + c as u64 * 0x1_0000;
+        for (k, &slot) in slots[..n].iter().enumerate() {
+            // Sizes deliberately include sub-beat and non-granule-
+            // aligned lengths: segmentation must keep straddling beats
+            // with their start address.
+            let len = *rng.pick(&[1u32, 8, 64, 100, 256, 1024]);
+            let src = map::SRC_BASE + rng.below(32) * 4096;
+            let dst = map::DST_BASE + (c as u64 * SLOTS_PER_CHANNEL + slot) * 4096;
+            let mut d = Descriptor::new(src, dst, len);
+            if k + 1 == n {
+                d = d.with_irq();
+            }
+            cb.push_at(desc_base + k as u64 * DESC_BYTES, d);
+            plan.expected.push((src, dst, len));
+        }
+        plan.chains.push((rng.below(20), cb));
+        plan.cfgs.push(cfg);
+    }
+    plan
+}
+
+/// Materialize a plan on the legacy shared bus (`topology == None`) or
+/// through an N×M crossbar.
+fn build(plan: &Plan, topology: Option<XbarConfig>) -> System<MultiChannel> {
+    let ctrl = MultiChannel::new(&plan.cfgs);
+    let mut sys = match topology {
+        None => System::new(plan.profile, ctrl),
+        Some(cfg) => System::with_crossbar(plan.profile, ctrl, cfg),
+    }
+    .with_arbitration(plan.policy);
+    fill_pattern(&mut sys.mem, map::SRC_BASE, 33 * 4096, plan.seed);
+    for (c, (at, cb)) in plan.chains.iter().enumerate() {
+        sys.load_and_launch_on(*at, c, cb);
+    }
+    sys
+}
+
+fn dst_extent() -> usize {
+    (3 * SLOTS_PER_CHANNEL * 4096) as usize
+}
+
+/// Every cycle-visible observable the shared-bus path exposes, for
+/// exact comparison against the 1×1 crossbar path.
+fn observables(sys: &System<MultiChannel>) -> (Cycle, Vec<u8>, Vec<(idmac::axi::Port, Cycle)>, Option<Cycle>, Option<Cycle>)
+{
+    (
+        sys.now(),
+        sys.mem.backdoor_read(map::DST_BASE, dst_extent()).to_vec(),
+        sys.first_ar.clone(),
+        sys.first_payload_r,
+        sys.first_payload_w,
+    )
+}
+
+#[test]
+fn one_by_one_crossbar_is_cycle_identical_to_shared_bus() {
+    forall(24, |rng| {
+        let plan = gen_plan(rng);
+        let granule = rng.range(MIN_GRANULE_LOG2 as u64, MIN_GRANULE_LOG2 as u64 + 4) as u32;
+
+        let mut shared = build(&plan, None);
+        let mut xbar = build(&plan, Some(XbarConfig::new(1, granule)));
+        let s = shared.run_until_idle().unwrap();
+        let x = xbar.run_until_idle().unwrap();
+        assert_eq!(s, x, "RunStats diverged at {:?}/{:?}", plan.policy, plan.profile);
+        assert_eq!(observables(&shared), observables(&xbar), "observables diverged");
+
+        // Same property under the naive per-cycle loop.
+        let mut shared_n = build(&plan, None);
+        let mut xbar_n = build(&plan, Some(XbarConfig::new(1, granule)));
+        let sn = shared_n.run_until_idle_naive().unwrap();
+        let xn = xbar_n.run_until_idle_naive().unwrap();
+        assert_eq!(sn, xn, "naive RunStats diverged");
+        assert_eq!(sn, s, "naive shared-bus diverged from fast-forward");
+        assert_eq!(observables(&shared_n), observables(&xbar_n));
+    });
+}
+
+#[test]
+fn random_topologies_match_naive_and_conserve_bytes() {
+    forall(24, |rng| {
+        let plan = gen_plan(rng);
+        let controllers = *rng.pick(&[1usize, 2, 4]);
+        let granule = rng.range(MIN_GRANULE_LOG2 as u64, MIN_GRANULE_LOG2 as u64 + 2) as u32;
+        let cfg = XbarConfig::new(controllers, granule);
+
+        let mut fast = build(&plan, Some(cfg));
+        let mut naive = build(&plan, Some(cfg));
+        let f = fast.run_until_idle().unwrap();
+        let n = naive.run_until_idle_naive().unwrap();
+
+        // Scheduler identity: stats, clock, and the full image.
+        assert_eq!(f, n, "RunStats diverged at {controllers} controllers, granule {granule}");
+        assert_eq!(fast.now(), naive.now(), "clock diverged");
+        assert_eq!(
+            fast.mem.backdoor_read(map::DST_BASE, dst_extent()),
+            naive.mem.backdoor_read(map::DST_BASE, dst_extent()),
+            "memory image diverged"
+        );
+
+        // Byte conservation: every planned row landed byte-exact.
+        for &(src, dst, len) in &plan.expected {
+            assert_eq!(
+                fast.mem.backdoor_read(src, len as usize).to_vec(),
+                fast.mem.backdoor_read(dst, len as usize).to_vec(),
+                "row src={src:#x} dst={dst:#x} len={len}"
+            );
+        }
+        let planned: u64 = plan.expected.iter().map(|&(_, _, l)| l as u64).sum();
+        assert_eq!(f.total_bytes(), planned, "completion log lost payload");
+
+        // Mirror coherence: all controllers agree on the final byte
+        // image of the destination window.
+        let image = fast.mem.backdoor_read(map::DST_BASE, dst_extent());
+        for (i, m) in fast.extra_mems().iter().enumerate() {
+            assert_eq!(
+                m.backdoor_read(map::DST_BASE, dst_extent()),
+                image,
+                "controller {} image diverged from controller 0",
+                i + 1
+            );
+        }
+        assert_eq!(fast.controllers(), controllers);
+    });
+}
+
+#[test]
+fn sixty_four_channels_drain_through_four_controllers() {
+    // MAX_CHANNELS end-to-end: 64 chains, four interleaved controllers,
+    // every byte lands and every channel's traffic crossed the xbar.
+    let channels = idmac::axi::MAX_CHANNELS;
+    let cfgs: Vec<DmacConfig> = (0..channels).map(|_| DmacConfig::speculation()).collect();
+    let mut sys = System::with_crossbar(
+        LatencyProfile::Ddr3,
+        MultiChannel::new(&cfgs),
+        XbarConfig::new(4, MIN_GRANULE_LOG2),
+    );
+    let size = 256u32;
+    let transfers = 4usize;
+    for ch in 0..channels {
+        let src_base = map::SRC_BASE + ch as u64 * 0x1_0000;
+        let dst_base = map::DST_BASE + ch as u64 * 0x1_0000;
+        let desc_base = map::DESC_BASE + ch as u64 * 0x8000;
+        fill_pattern(&mut sys.mem, src_base, (transfers * size as usize) as usize, ch as u32 + 1);
+        let mut cb = ChainBuilder::new();
+        for i in 0..transfers as u64 {
+            let d = Descriptor::new(src_base + i * 256, dst_base + i * 256, size);
+            let d = if i + 1 == transfers as u64 { d.with_irq() } else { d };
+            cb.push_at(desc_base + i * DESC_BYTES, d);
+        }
+        sys.load_and_launch_on(0, ch, &cb);
+    }
+    let stats = sys.run_until_idle_cross_checked().unwrap();
+    assert_eq!(stats.completions.len(), channels * transfers);
+    assert_eq!(stats.total_bytes(), channels as u64 * transfers as u64 * size as u64);
+    for ch in 0..channels {
+        let src_base = map::SRC_BASE + ch as u64 * 0x1_0000;
+        let dst_base = map::DST_BASE + ch as u64 * 0x1_0000;
+        assert_eq!(
+            sys.mem.backdoor_read(src_base, transfers * size as usize),
+            sys.mem.backdoor_read(dst_base, transfers * size as usize),
+            "channel {ch} payload"
+        );
+    }
+    let x = sys.xbar().unwrap();
+    assert!((0..4).all(|m| x.ar_grants(m) > 0), "all controllers saw traffic");
+}
